@@ -1,0 +1,8 @@
+"""Root conftest: make `pytest python/tests/` work from the workspace root
+(the test modules import the build-time `compile` package that lives under
+python/)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,41 @@
+//! The paper's headline comparison (Fig. 1 right column / Table 3):
+//! AsySVRG's linear convergence vs Hogwild!'s sublinear convergence at
+//! equal effective passes, 10 simulated cores, all three datasets.
+//!
+//!     cargo run --release --example hogwild_vs_asysvrg
+
+use asysvrg::bench::{fig1_convergence, BenchEnv};
+use asysvrg::data::PaperDataset;
+
+fn main() {
+    let env = BenchEnv { scale: 0.05, max_epochs: 30, ..Default::default() };
+    for which in [PaperDataset::Rcv1, PaperDataset::RealSim] {
+        println!("=== {} (scale {}) ===", which.name(), env.scale);
+        let series = fig1_convergence(&env, which, 10);
+        // print log10(gap) at a few pass milestones for each method
+        println!("{:>16} | {:>9} | {:>9} | {:>9}", "method", "~10 pass", "~30 pass", "final");
+        for s in &series {
+            let at = |target: f64| {
+                s.passes
+                    .iter()
+                    .position(|&p| p >= target)
+                    .map(|i| s.gap[i].log10())
+                    .unwrap_or_else(|| *s.gap.last().unwrap() as f64)
+            };
+            println!(
+                "{:>16} | {:>9.2} | {:>9.2} | {:>9.2}",
+                s.label,
+                at(10.0),
+                at(30.0),
+                s.gap.last().unwrap().log10()
+            );
+        }
+        let asy = series.iter().find(|s| s.label == "AsySVRG-unlock").unwrap();
+        let hog = series.iter().find(|s| s.label == "Hogwild-unlock").unwrap();
+        println!(
+            "final gap ratio (hogwild/asysvrg): {:.1}x\n",
+            hog.gap.last().unwrap() / asy.gap.last().unwrap()
+        );
+    }
+    println!("(values are log10 of the suboptimality gap; lower = better)");
+}

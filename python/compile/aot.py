@@ -1,0 +1,124 @@
+"""AOT bridge: lower the L2 model to HLO *text* artifacts for the rust L3.
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published `xla` 0.1.6 crate links) rejects (`proto.id() <= INT_MAX`). The
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Run once per source change (`make artifacts`):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs one ``<entry>.hlo.txt`` per manifest entry plus ``manifest.json``
+describing name → file, input shapes/dtypes, output arity. The rust
+`runtime::artifact` module reads the manifest and refuses shape mismatches
+at load time instead of at execute time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Frozen artifact shapes. These are the dense-workload shapes the rust e2e
+# driver uses (examples/e2e_pipeline.rs). B and D tile the kernel defaults.
+# ---------------------------------------------------------------------------
+DIM = 256          # feature dim of the dense e2e workload
+BATCH = 128        # minibatch rows per stochastic gradient
+CHUNK = 256        # rows per full-gradient / loss streaming chunk
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def entries():
+    """(name, fn, example_args) for every artifact we ship."""
+    return [
+        (
+            "minibatch_grad",
+            lambda x, y, w, lam: (model.minibatch_grad(x, y, w, lam[0]),),
+            (_spec(BATCH, DIM), _spec(BATCH), _spec(DIM), _spec(1)),
+        ),
+        (
+            "grad_contrib",
+            lambda x, y, w: (model.grad_contrib(x, y, w),),
+            (_spec(CHUNK, DIM), _spec(CHUNK), _spec(DIM)),
+        ),
+        (
+            "loss_sum",
+            lambda x, y, w: (model.loss_sum(x, y, w).reshape((1,)),),
+            (_spec(CHUNK, DIM), _spec(CHUNK), _spec(DIM)),
+        ),
+        (
+            "svrg_step",
+            lambda u, g, g0, mu, eta: model.svrg_step(u, g, g0, mu, eta),
+            (_spec(DIM), _spec(DIM), _spec(DIM), _spec(DIM), _spec(1)),
+        ),
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "dim": DIM,
+        "batch": BATCH,
+        "chunk": CHUNK,
+        "dtype": "f32",
+        "entries": {},
+    }
+    for name, fn, example_args in entries():
+        text = lower_entry(fn, example_args)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        n_out = len(fn(*[jnp.zeros(s.shape, s.dtype) for s in example_args]))
+        manifest["entries"][name] = {
+            "file": fname,
+            "inputs": [list(s.shape) for s in example_args],
+            "outputs": n_out,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"  {name}: {len(text)} chars -> {fname}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    print(f"lowering AOT artifacts (D={DIM}, B={BATCH}, chunk={CHUNK})")
+    build(args.out_dir)
+    print(f"manifest -> {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,237 @@
+"""L1 Pallas kernels for the logistic-regression compute hot-spot.
+
+The paper's inner loop evaluates per-instance gradients ∇f_i(u); the batched
+form (a (B, D) slab of instances) is the hot-spot we put on the MXU:
+
+    z = X w                (B,)   — forward matmul
+    r = -y · σ(-y z)       (B,)   — elementwise residual (VPU)
+    g = Xᵀ r / B + λ w     (D,)   — backward matmul + epilogue
+
+TPU schedule (DESIGN.md §3): the grid walks batch tiles; each step streams an
+(Bt, D) block of X HBM→VMEM via BlockSpec, does both matmuls against the
+resident w, and accumulates the partial gradient into the (D,) output block —
+the TPU analogue of the paper's per-thread partial gradients φ_a. `w` and the
+accumulator stay VMEM-resident across the whole grid (index_map pinned to 0).
+
+Everything is lowered with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU efficiency is estimated analytically in
+EXPERIMENTS.md §Perf from the block shapes chosen here.
+
+Kernels:
+  * logreg_grad(x, y, w, lam)        -> (D,) gradient   [batch-tiled]
+  * logreg_loss(x, y, w, lam)        -> () mean loss + L2 [batch-tiled]
+  * logreg_grad_bigd(x, y, w, lam)   -> (D,) gradient   [two-pass, feature-
+        tiled backward; the large-D schedule for D ≫ VMEM, e.g. news20's
+        1.36M features]
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. Bt*D floats of X per grid step must fit VMEM (~16 MiB
+# per TPU core): 128 * 1024 * 4 B = 512 KiB — comfortably double-bufferable.
+DEFAULT_BLOCK_B = 128
+DEFAULT_BLOCK_D = 512
+
+
+from .losses import residual as _loss_residual
+
+
+def _residual(y, z):
+    """r = -y · σ(-y z), stable tanh form (matches ref.sigmoid)."""
+    m = y * z
+    return -y * (0.5 * (jnp.tanh(-0.5 * m) + 1.0))
+
+
+# --------------------------------------------------------------------------
+# Batch-tiled gradient: grid over batch; w + accumulator VMEM-resident.
+# One kernel template serves every margin loss (losses.LOSS_KINDS) — the
+# loss is baked at trace time, so each artifact stays a single fused kernel.
+# --------------------------------------------------------------------------
+
+
+def _make_grad_kernel(kind: str):
+    def _grad_kernel(x_ref, y_ref, w_ref, g_ref):
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            g_ref[...] = jnp.zeros_like(g_ref)
+
+        x = x_ref[...]  # (Bt, D)
+        w = w_ref[...]  # (D,)
+        z = x @ w  # MXU: (Bt, D) x (D,)
+        r = _loss_residual(kind, y_ref[...], z)  # VPU elementwise
+        g_ref[...] += r @ x  # MXU: (Bt,) x (Bt, D) — the Xᵀr partial
+
+    return _grad_kernel
+
+
+def margin_grad(x, y, w, lam, *, kind: str = "logistic", block_b: int = DEFAULT_BLOCK_B):
+    """Batched margin-loss gradient, batch-tiled Pallas kernel + epilogue.
+
+    Requires B % block_b == 0 (the AOT artifacts use fixed shapes; the L2
+    model pads odd batches before calling).
+    """
+    b, d = x.shape
+    block_b = min(block_b, b)
+    assert b % block_b == 0, f"batch {b} not divisible by block {block_b}"
+    grid = (b // block_b,)
+    g = pl.pallas_call(
+        _make_grad_kernel(kind),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=True,
+    )(x, y, w)
+    # epilogue: mean over batch + ridge term (elementwise, XLA fuses it)
+    return g / b + lam * w
+
+
+def logreg_grad(x, y, w, lam, *, block_b: int = DEFAULT_BLOCK_B):
+    """The paper's objective: logistic margin loss (see `margin_grad`)."""
+    return margin_grad(x, y, w, lam, kind="logistic", block_b=block_b)
+
+
+# --------------------------------------------------------------------------
+# Batch-tiled loss: scalar accumulator kept as a (1,) block.
+# --------------------------------------------------------------------------
+
+
+def _loss_kernel(x_ref, y_ref, w_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    z = x_ref[...] @ w_ref[...]
+    m = y_ref[...] * z
+    # softplus-stable log(1 + e^{-m})
+    losses = jnp.maximum(-m, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(m)))
+    acc_ref[...] += jnp.sum(losses)[None]
+
+
+def logreg_loss(x, y, w, lam, *, block_b: int = DEFAULT_BLOCK_B):
+    """Mean logistic loss + (λ/2)||w||², batch-tiled."""
+    b, d = x.shape
+    block_b = min(block_b, b)
+    assert b % block_b == 0
+    grid = (b // block_b,)
+    acc = pl.pallas_call(
+        _loss_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=True,
+    )(x, y, w)
+    return acc[0] / b + 0.5 * lam * jnp.sum(w * w)
+
+
+# --------------------------------------------------------------------------
+# Two-pass large-D schedule: pass 1 accumulates z over feature tiles,
+# pass 2 walks a (batch, feature) grid for the backward matmul so only a
+# (Bt, Dt) block of X is ever VMEM-resident. This is the schedule that
+# scales to news20-sized D; on this CPU host it is exercised at small shapes.
+# --------------------------------------------------------------------------
+
+
+def _z_kernel(x_ref, w_ref, z_ref):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    z_ref[...] += x_ref[...] @ w_ref[...]
+
+
+def _bwd_kernel(x_ref, r_ref, g_ref):
+    i = pl.program_id(1)  # batch tile index (minor: accumulate over it)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    g_ref[...] += r_ref[...] @ x_ref[...]
+
+
+def logreg_grad_bigd(
+    x, y, w, lam, *, block_b: int = DEFAULT_BLOCK_B, block_d: int = DEFAULT_BLOCK_D
+):
+    """Feature-tiled two-pass gradient for D that exceeds VMEM."""
+    b, d = x.shape
+    block_b = min(block_b, b)
+    block_d = min(block_d, d)
+    assert b % block_b == 0 and d % block_d == 0
+    # pass 1: z = X w, accumulating over feature tiles
+    z = pl.pallas_call(
+        _z_kernel,
+        grid=(d // block_d,),
+        in_specs=[
+            pl.BlockSpec((b, block_d), lambda j: (0, j)),
+            pl.BlockSpec((block_d,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((b,), x.dtype),
+        interpret=True,
+    )(x, w)
+    r = _residual(y, z)
+    # pass 2: g = Xᵀ r over a (feature, batch) grid; batch is the minor
+    # (fastest-varying) axis so each g block accumulates then retires.
+    g = pl.pallas_call(
+        _bwd_kernel,
+        grid=(d // block_d, b // block_b),
+        in_specs=[
+            pl.BlockSpec((block_b, block_d), lambda j, i: (i, j)),
+            pl.BlockSpec((block_b,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_d,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=True,
+    )(x, r)
+    return g / b + lam * w
+
+
+def vmem_bytes(block_b: int, d_or_block_d: int, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of one grad grid step (X tile + w + g acc).
+
+    Used by the §Perf analysis and by tests that pin the footprint budget.
+    """
+    x_tile = block_b * d_or_block_d * dtype_bytes
+    w_res = d_or_block_d * dtype_bytes
+    g_acc = d_or_block_d * dtype_bytes
+    z_r = 2 * block_b * dtype_bytes
+    return x_tile + w_res + g_acc + z_r
+
+
+def mxu_flops(block_b: int, d: int) -> int:
+    """MACs*2 per grid step (fwd + bwd matmul) — roofline numerator."""
+    return 2 * 2 * block_b * d
+
+
+__all__ = [
+    "logreg_grad",
+    "margin_grad",
+    "logreg_loss",
+    "logreg_grad_bigd",
+    "vmem_bytes",
+    "mxu_flops",
+    "DEFAULT_BLOCK_B",
+    "DEFAULT_BLOCK_D",
+]

@@ -1,0 +1,52 @@
+"""Margin-loss family for the L1 kernels — mirrors rust `objective::LossKind`.
+
+Each loss supplies the per-example residual r = φ′(m)·y and the loss value
+φ(m) as traceable jnp functions, so one Pallas kernel template serves
+logistic regression, smoothed-hinge SVM, and least squares (the problem
+family the paper's eq. (1) covers).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LOSS_KINDS = ("logistic", "squared_hinge", "squared")
+
+
+def phi(kind: str, m):
+    """Loss value at margin m (softplus-stable for logistic)."""
+    if kind == "logistic":
+        return jnp.maximum(-m, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(m)))
+    if kind == "squared_hinge":
+        t = jnp.maximum(1.0 - m, 0.0)
+        return t * t
+    if kind == "squared":
+        return 0.5 * (1.0 - m) * (1.0 - m)
+    raise ValueError(f"unknown loss kind {kind!r}")
+
+
+def dphi(kind: str, m):
+    """dφ/dm (stable tanh form for logistic)."""
+    if kind == "logistic":
+        return -(0.5 * (1.0 - jnp.tanh(0.5 * m)))
+    if kind == "squared_hinge":
+        return -2.0 * jnp.maximum(1.0 - m, 0.0)
+    if kind == "squared":
+        return m - 1.0
+    raise ValueError(f"unknown loss kind {kind!r}")
+
+
+def residual(kind: str, y, z):
+    """r = φ′(y·z)·y — the scalar with ∇f_i = r·x_i + λw."""
+    return dphi(kind, y * z) * y
+
+
+def grad_ref(kind: str, x, y, w, lam):
+    """Oracle batched gradient for any loss kind."""
+    r = residual(kind, y, x @ w)
+    return x.T @ r / x.shape[0] + lam * w
+
+
+def loss_ref(kind: str, x, y, w, lam):
+    """Oracle mean loss + ridge for any loss kind."""
+    return jnp.mean(phi(kind, y * (x @ w)))+ 0.5 * lam * jnp.sum(w * w)

@@ -1,0 +1,91 @@
+"""L2: the JAX compute graph for AsySVRG's logistic-regression objective.
+
+This is the build-time model layer. It composes the L1 Pallas kernels into
+the exact entry points the rust coordinator executes via PJRT:
+
+  * ``minibatch_grad(x, y, w, lam)`` — scaled stochastic gradient of a
+    (B, D) slab; the inner-loop hot-spot.
+  * ``grad_contrib(x, y, w)``       — *unscaled* Σᵢ xᵢ rᵢ contribution; the
+    full-gradient pass streams the dataset through this in fixed-size chunks
+    and the rust side does the final /n + λw (padding rows carry y = 0,
+    which contributes exactly zero — see `logistic_residual_ref`).
+  * ``loss_sum(x, y, w)``           — unscaled Σ losses for the convergence
+    monitor (rust adds /n and the ridge term).
+  * ``svrg_step(u, g, g0, mu, eta)``— fused variance-reduced update
+    (paper eq. 2); returns (u⁺, v).
+
+Every function is shape-polymorphic at trace time; `aot.py` freezes the
+shapes listed in its manifest. Fallback paths use the pure-jnp oracle when a
+shape doesn't tile (only reachable in tests — artifacts always tile).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.logreg_grad import (
+    DEFAULT_BLOCK_B,
+    logreg_grad,
+    logreg_loss,
+)
+from .kernels.svrg_update import DEFAULT_BLOCK_D, svrg_update
+
+
+def _tiles(b: int, block: int) -> bool:
+    return b % min(block, b) == 0
+
+
+def minibatch_grad(x, y, w, lam):
+    """Scaled stochastic gradient over a (B, D) minibatch: (1/B)Xᵀr + λw."""
+    lam = jnp.asarray(lam, dtype=x.dtype).reshape(())
+    if _tiles(x.shape[0], DEFAULT_BLOCK_B):
+        return logreg_grad(x, y, w, lam)
+    return ref.logistic_grad_ref(x, y, w, lam)
+
+
+def grad_contrib(x, y, w):
+    """Unscaled Σᵢ xᵢ rᵢ over a chunk — building block of ∇f(w_t).
+
+    The epoch-boundary full gradient (Alg. 1 line 3) is
+        ∇f(w) = (1/n) Σ chunks grad_contrib + λ w,
+    assembled by the rust coordinator across its thread partition φ_a.
+    """
+    if _tiles(x.shape[0], DEFAULT_BLOCK_B):
+        # reuse the batch-tiled kernel with λ=0 and undo its 1/B scaling
+        g = logreg_grad(x, y, w, jnp.asarray(0.0, dtype=x.dtype))
+        return g * x.shape[0]
+    r = ref.logistic_residual_ref(x, y, w)
+    return x.T @ r
+
+
+def loss_sum(x, y, w):
+    """Unscaled Σ logistic losses over a chunk (no mean, no ridge)."""
+    if _tiles(x.shape[0], DEFAULT_BLOCK_B):
+        zero = jnp.asarray(0.0, dtype=x.dtype)
+        # kernel returns mean + reg(0); undo the mean
+        return logreg_loss(x, y, w, zero) * x.shape[0]
+    m = y * (x @ w)
+    return jnp.sum(jnp.maximum(-m, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(m))))
+
+
+def svrg_step(u, g, g0, mu, eta):
+    """One fused SVRG inner update. Returns (u_new, v)."""
+    if _tiles(u.shape[0], DEFAULT_BLOCK_D):
+        return svrg_update(u, g, g0, mu, eta)
+    return ref.svrg_update_ref(u, g, g0, mu, eta)
+
+
+def loss(x, y, w, lam):
+    """Mean loss + ridge — convenience for tests and the AOT loss entry."""
+    lam = jnp.asarray(lam, dtype=x.dtype).reshape(())
+    return loss_sum(x, y, w) / x.shape[0] + 0.5 * lam * jnp.sum(w * w)
+
+
+__all__ = [
+    "minibatch_grad",
+    "grad_contrib",
+    "loss_sum",
+    "svrg_step",
+    "loss",
+]

@@ -1,0 +1,86 @@
+"""Multi-loss kernel coverage: the margin-loss family (losses.py) through
+the batch-tiled Pallas kernel vs oracle and autodiff, plus dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import losses
+from compile.kernels.logreg_grad import margin_grad
+
+HSET = settings(max_examples=12, deadline=None)
+
+
+def _data(seed, b, d, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((b, d)), dtype)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=b), dtype)
+    w = jnp.asarray(rng.standard_normal(d) * 0.2, dtype)
+    return x, y, w
+
+
+@HSET
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    kind=st.sampled_from(losses.LOSS_KINDS),
+    b=st.sampled_from([8, 64, 128]),
+    d=st.sampled_from([4, 32, 128]),
+)
+def test_margin_grad_matches_oracle(seed, kind, b, d):
+    x, y, w = _data(seed, b, d)
+    got = margin_grad(x, y, w, 1e-3, kind=kind, block_b=min(b, 64))
+    want = losses.grad_ref(kind, x, y, w, 1e-3)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-6)
+
+
+@HSET
+@given(seed=st.integers(0, 2**31 - 1), kind=st.sampled_from(losses.LOSS_KINDS))
+def test_margin_grad_is_autodiff_gradient(seed, kind):
+    x, y, w = _data(seed, 32, 16)
+    want = jax.grad(lambda w_: losses.loss_ref(kind, x, y, w_, 1e-3))(w)
+    got = margin_grad(x, y, w, 1e-3, kind=kind, block_b=32)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=2e-5)
+
+
+@HSET
+@given(kind=st.sampled_from(losses.LOSS_KINDS), m=st.floats(-5.0, 5.0))
+def test_dphi_is_derivative_of_phi(kind, m):
+    eps = 1e-3
+    m = jnp.float32(m)
+    fd = (losses.phi(kind, m + eps) - losses.phi(kind, m - eps)) / (2 * eps)
+    np.testing.assert_allclose(losses.dphi(kind, m), fd, rtol=2e-2, atol=2e-3)
+
+
+def test_squared_hinge_zero_past_margin():
+    """Correct hinge behaviour: no gradient once the margin exceeds 1."""
+    d = 8
+    x = jnp.ones((4, d)) / d
+    y = jnp.ones(4)
+    w = jnp.ones(d) * 3.0  # margins = 3 > 1
+    g = margin_grad(x, y, w, 0.0, kind="squared_hinge", block_b=4)
+    np.testing.assert_allclose(g, jnp.zeros(d), atol=1e-7)
+
+
+def test_squared_loss_closed_form():
+    """Least squares: ∇ = Xᵀ(Xw − y)/B + λw exactly."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=16), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(8), jnp.float32)
+    got = margin_grad(x, y, w, 1e-2, kind="squared", block_b=16)
+    want = x.T @ (x @ w - y) / 16 + 1e-2 * w
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_bfloat16_kernel_runs_with_loose_tolerance():
+    """dtype sweep: the kernel template must trace and stay sane in bf16."""
+    x, y, w = _data(3, 64, 32, dtype=jnp.bfloat16)
+    got = margin_grad(x, y, w, jnp.bfloat16(1e-2), kind="logistic", block_b=64)
+    want = losses.grad_ref(
+        "logistic", x.astype(jnp.float32), y.astype(jnp.float32), w.astype(jnp.float32), 1e-2
+    )
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want, rtol=0.15, atol=0.05
+    )

@@ -1,0 +1,105 @@
+"""L2 correctness: model-layer functions vs autodiff and the oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+HSET = settings(max_examples=10, deadline=None)
+
+
+def _data(seed, b, d):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((b, d)), jnp.float32)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=b), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(d) * 0.1, jnp.float32)
+    return x, y, w
+
+
+@HSET
+@given(seed=st.integers(0, 2**31 - 1), b=st.sampled_from([16, 128]), d=st.sampled_from([8, 64]))
+def test_minibatch_grad_is_autodiff_gradient(seed, b, d):
+    """model.minibatch_grad == jax.grad of the reference loss — ties the
+    hand-derived kernel math to autodiff ground truth."""
+    x, y, w = _data(seed, b, d)
+    lam = 1e-4
+    want = jax.grad(lambda w_: ref.logistic_loss_ref(x, y, w_, lam))(w)
+    got = model.minibatch_grad(x, y, w, lam)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=1e-5)
+
+
+@HSET
+@given(seed=st.integers(0, 2**31 - 1))
+def test_grad_contrib_assembles_full_gradient(seed):
+    """Chunked contributions, assembled the way the rust epoch pass does
+    ((1/n)Σ chunks + λw), must equal the one-shot full gradient."""
+    x, y, w = _data(seed, 256, 32)
+    lam = 1e-4
+    chunks = [x[i : i + 64] for i in range(0, 256, 64)]
+    ychunks = [y[i : i + 64] for i in range(0, 256, 64)]
+    acc = sum(model.grad_contrib(cx, cy, w) for cx, cy in zip(chunks, ychunks))
+    got = acc / 256 + lam * w
+    want = ref.full_grad_ref(x, y, w, lam)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-6)
+
+
+@HSET
+@given(seed=st.integers(0, 2**31 - 1))
+def test_loss_sum_assembles_mean_loss(seed):
+    x, y, w = _data(seed, 128, 16)
+    lam = 1e-4
+    got = model.loss_sum(x, y, w) / 128 + 0.5 * lam * jnp.sum(w * w)
+    want = ref.logistic_loss_ref(x, y, w, lam)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-6)
+
+
+def test_loss_decreases_along_negative_gradient():
+    """Sanity: a small step along -∇f decreases f (convexity smoke)."""
+    x, y, w = _data(11, 128, 32)
+    lam = 1e-4
+    g = model.minibatch_grad(x, y, w, lam)
+    f0 = model.loss(x, y, w, lam)
+    f1 = model.loss(x, y, w - 0.1 * g, lam)
+    assert float(f1) < float(f0)
+
+
+@HSET
+@given(seed=st.integers(0, 2**31 - 1), d=st.sampled_from([32, 256]))
+def test_svrg_step_matches_oracle(seed, d):
+    rng = np.random.default_rng(seed)
+    u, g, g0, mu = (jnp.asarray(rng.standard_normal(d), jnp.float32) for _ in range(4))
+    got = model.svrg_step(u, g, g0, mu, 0.05)
+    want = ref.svrg_update_ref(u, g, g0, mu, 0.05)
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-6, atol=1e-6)
+
+
+def test_svrg_variance_reduction_near_snapshot():
+    """The defining property (paper §1): near u₀ the variance-reduced
+    direction v has (much) lower variance across instance choices than the
+    plain SGD direction."""
+    rng = np.random.default_rng(42)
+    n, d = 256, 16
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=n), jnp.float32)
+    w0 = jnp.asarray(rng.standard_normal(d) * 0.1, jnp.float32)
+    lam = 1e-4
+    mu = ref.full_grad_ref(x, y, w0, lam)
+    u = w0 + 0.01 * jnp.asarray(rng.standard_normal(d), jnp.float32)
+
+    def inst_grad(i, w):
+        return ref.logistic_grad_ref(x[i : i + 1], y[i : i + 1], w, lam)
+
+    v_svrg, v_sgd = [], []
+    for i in range(n):
+        gi_u = inst_grad(i, u)
+        gi_0 = inst_grad(i, w0)
+        v_svrg.append(gi_u - gi_0 + mu)
+        v_sgd.append(gi_u)
+    v_svrg = jnp.stack(v_svrg)
+    v_sgd = jnp.stack(v_sgd)
+    var = lambda v: float(jnp.mean(jnp.sum((v - jnp.mean(v, 0)) ** 2, axis=1)))
+    assert var(v_svrg) < 0.05 * var(v_sgd)

@@ -1,0 +1,44 @@
+//! `cargo bench` target for the design-choice ablations (DESIGN.md §7):
+//! η sweep, M-factor sweep, read-model comparison, Assumption-3 stress.
+//! Knobs: REPRO_BENCH_SCALE (default 0.03), REPRO_BENCH_EPOCHS (default 20).
+
+use asysvrg::bench::ablation;
+use asysvrg::coordinator::asysvrg::solve_fstar;
+use asysvrg::data;
+use asysvrg::objective::Objective;
+use asysvrg::util::Stopwatch;
+
+fn envf(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let scale = envf("REPRO_BENCH_SCALE", 0.03);
+    let epochs = envf("REPRO_BENCH_EPOCHS", 20.0) as usize;
+    let sw = Stopwatch::start();
+    let ds = data::resolve("rcv1", scale, 42).expect("dataset");
+    eprintln!("bench_ablation: {}", ds.describe());
+    let obj = Objective::paper(ds);
+    let (_, fstar) = solve_fstar(&obj, 0.4, 150, 7);
+
+    let eta = ablation::sweep_eta(&obj, fstar, &[0.05, 0.1, 0.2, 0.4, 0.8], 10, epochs);
+    print!("{}", ablation::render("step size eta", &eta));
+    // larger steps (within stability) should converge further at equal budget
+    assert!(eta.last().unwrap().final_gap < eta[0].final_gap, "eta sweep inverted");
+
+    let m = ablation::sweep_m_factor(&obj, fstar, &[0.5, 2.0, 8.0], 10, 3.0 * epochs as f64);
+    print!("{}", ablation::render("M factor at fixed passes", &m));
+    assert!(m.iter().all(|p| !p.diverged));
+
+    let rm = ablation::sweep_read_model(&obj, fstar, 10, epochs);
+    print!("{}", ablation::render("read model (eq. 10 window vs point)", &rm));
+    // the paper's convergence claims hold under the faithful read model too
+    let ratio = rm[1].final_gap / rm[0].final_gap.max(1e-16);
+    assert!((0.1..10.0).contains(&ratio), "read models diverged wildly: {ratio}");
+
+    let cs = ablation::sweep_core_speeds(&obj, fstar, 10, epochs);
+    print!("{}", ablation::render("core speeds (Assumption 3)", &cs));
+    assert!(cs.iter().all(|p| !p.diverged), "hetero cores broke convergence");
+
+    eprintln!("bench_ablation done in {:.1}s", sw.seconds());
+}

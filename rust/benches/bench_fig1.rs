@@ -1,0 +1,70 @@
+//! `cargo bench` target regenerating **Figure 1** (both columns): speedup
+//! vs #threads and objective-gap vs effective passes, for every dataset.
+//!
+//! Knobs: REPRO_BENCH_SCALE (default 0.05), REPRO_BENCH_EPOCHS (default 30),
+//! REPRO_BENCH_DATASETS (default all three).
+
+use asysvrg::bench::{fig1_convergence, fig1_speedup, report, BenchEnv};
+use asysvrg::data::PaperDataset;
+use asysvrg::util::Stopwatch;
+
+fn envf(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let env = BenchEnv {
+        scale: envf("REPRO_BENCH_SCALE", 0.05),
+        max_epochs: envf("REPRO_BENCH_EPOCHS", 30.0) as usize,
+        ..Default::default()
+    };
+    let datasets: Vec<PaperDataset> = match std::env::var("REPRO_BENCH_DATASETS") {
+        Ok(s) => s
+            .split(',')
+            .filter_map(|t| match t.trim() {
+                "rcv1" => Some(PaperDataset::Rcv1),
+                "real-sim" => Some(PaperDataset::RealSim),
+                "news20" => Some(PaperDataset::News20),
+                _ => None,
+            })
+            .collect(),
+        Err(_) => PaperDataset::all().to_vec(),
+    };
+    let sw = Stopwatch::start();
+    let threads = [1usize, 2, 4, 6, 8, 10];
+
+    for which in datasets {
+        eprintln!("fig1[{}]: speedup sweep ...", which.name());
+        let sp = fig1_speedup(&env, which, &threads);
+        print!("{}", report::render_speedup(which.name(), &sp));
+        let _ = report::write_json(
+            &format!("fig1_speedup_{}", which.name()),
+            &report::speedup_json(&sp),
+        );
+        // shape: AsySVRG-unlock speedup grows with threads
+        let asy = sp.iter().find(|s| s.label == "AsySVRG-unlock").unwrap();
+        assert!(
+            asy.speedup.last().unwrap() > &asy.speedup[0],
+            "{}: AsySVRG-unlock speedup not increasing",
+            which.name()
+        );
+
+        eprintln!("fig1[{}]: convergence curves ...", which.name());
+        let cv = fig1_convergence(&env, which, 10);
+        print!("{}", report::render_convergence(which.name(), &cv));
+        let _ = report::write_json(
+            &format!("fig1_convergence_{}", which.name()),
+            &report::convergence_json(&cv),
+        );
+        // shape: at the end of the budget AsySVRG's gap beats Hogwild!'s
+        let asy = cv.iter().find(|s| s.label == "AsySVRG-unlock").unwrap();
+        let hog = cv.iter().find(|s| s.label == "Hogwild-unlock").unwrap();
+        assert!(
+            asy.gap.last().unwrap() < hog.gap.last().unwrap(),
+            "{}: AsySVRG did not out-converge Hogwild per pass",
+            which.name()
+        );
+        println!();
+    }
+    eprintln!("bench_fig1 done in {:.1}s", sw.seconds());
+}

@@ -1,0 +1,130 @@
+//! Microbenchmarks of the L3 hot path — the §Perf measurement tool.
+//!
+//! Reports per-op timings for: dense BLAS-1 kernels, sparse row ops,
+//! shared-vector access under every scheme, one full AsySVRG inner update
+//! (the end-to-end hot-path unit), and simulator event throughput.
+//! Output feeds the CostModel calibration and EXPERIMENTS.md §Perf.
+
+use asysvrg::config::Scheme;
+use asysvrg::coordinator::delay::DelayStats;
+use asysvrg::coordinator::epoch::parallel_full_grad;
+use asysvrg::coordinator::shared::SharedParams;
+use asysvrg::coordinator::worker::{run_inner_loop, WorkerScratch};
+use asysvrg::data::synthetic::SyntheticSpec;
+use asysvrg::linalg::{dense, AtomicF32Vec};
+use asysvrg::objective::Objective;
+use asysvrg::simcore::{simulate_inner, CostModel, SimTask};
+use asysvrg::util::rng::Pcg32;
+use asysvrg::util::Stopwatch;
+use std::sync::Arc;
+
+fn time_per<F: FnMut()>(label: &str, units: usize, reps: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let sw = Stopwatch::start();
+    for _ in 0..reps {
+        f();
+    }
+    let ns = sw.seconds() * 1e9 / (reps * units) as f64;
+    println!("{label:<44} {ns:>10.3} ns/unit");
+    ns
+}
+
+fn main() {
+    println!("== micro: dense BLAS-1 (d = 4096) ==");
+    let d = 4096;
+    let a: Vec<f32> = (0..d).map(|i| (i as f32).sin()).collect();
+    let b: Vec<f32> = (0..d).map(|i| (i as f32).cos()).collect();
+    let mut c = vec![0.0f32; d];
+    time_per("dot (4-acc unrolled)", d, 2000, || {
+        std::hint::black_box(dense::dot(&a, &b));
+    });
+    time_per("axpy", d, 2000, || {
+        dense::axpy(0.5, &a, &mut c);
+        std::hint::black_box(&c);
+    });
+    let g0: Vec<f32> = a.iter().map(|x| x * 0.5).collect();
+    let mu: Vec<f32> = b.iter().map(|x| x * 0.25).collect();
+    time_per("fused_svrg_step (4 streams)", d, 2000, || {
+        dense::fused_svrg_step(&mut c, &a, &g0, &mu, 0.01);
+        std::hint::black_box(&c);
+    });
+
+    println!("\n== micro: shared-vector apply_step per scheme (d = 4096) ==");
+    let v = vec![0.01f32; d];
+    for scheme in [
+        Scheme::Consistent,
+        Scheme::Inconsistent,
+        Scheme::Unlock,
+        Scheme::Seqlock,
+        Scheme::AtomicCas,
+    ] {
+        let shared = SharedParams::new(&vec![0.0f32; d], scheme);
+        time_per(&format!("apply_step [{}]", scheme.name()), d, 500, || {
+            shared.apply_step(&v, 1e-3);
+        });
+    }
+
+    println!("\n== micro: atomic vector primitives (d = 4096) ==");
+    let av = AtomicF32Vec::new(d);
+    let mut buf = vec![0.0f32; d];
+    time_per("relaxed read_into", d, 2000, || {
+        av.read_into(&mut buf);
+        std::hint::black_box(&buf);
+    });
+    time_per("racy add", d, 1000, || {
+        for j in 0..d {
+            av.add_racy(j, 1e-6);
+        }
+    });
+    time_per("cas add", d, 1000, || {
+        for j in 0..d {
+            av.add_cas(j, 1e-6);
+        }
+    });
+
+    println!("\n== hot path: one AsySVRG inner update (rcv1-like @0.05) ==");
+    let ds = SyntheticSpec::new("bench", 1000, 2400, 74, 42).generate();
+    let obj = Objective::paper(Arc::new(ds));
+    let w0 = vec![0.0f32; obj.dim()];
+    let eg = parallel_full_grad(&obj, &w0, 1);
+    for scheme in [Scheme::Inconsistent, Scheme::Unlock] {
+        let shared = SharedParams::new(&w0, scheme);
+        let mut rng = Pcg32::new(7, 1);
+        let mut scratch = WorkerScratch::new(obj.dim());
+        let delays = DelayStats::new();
+        let iters = 2000;
+        let sw = Stopwatch::start();
+        run_inner_loop(&obj, &shared, &w0, &eg, 0.01, iters, &mut rng, &mut scratch, &delays);
+        let us = sw.seconds() * 1e6 / iters as f64;
+        println!("inner update [{:<12}] {us:>10.2} µs/update  (d={})", scheme.name(), obj.dim());
+    }
+
+    println!("\n== simulator: event throughput (4 cores, d=2400) ==");
+    let costs = CostModel::default_host();
+    let task = SimTask::Svrg { u0: &w0, eg: &eg };
+    let mut u = w0.clone();
+    let iters = 500usize;
+    let sw = Stopwatch::start();
+    let r = simulate_inner(&obj, &task, Scheme::Unlock, &costs, &mut u, 0.01, 4, iters, 3);
+    let wall = sw.seconds();
+    println!(
+        "simulated {} updates in {:.3}s wall ({:.0} updates/s wall, sim time {:.3}s)",
+        r.updates,
+        wall,
+        r.updates as f64 / wall,
+        r.elapsed_ns / 1e9
+    );
+
+    println!("\n== calibration vs frozen cost model ==");
+    let m = CostModel::calibrate();
+    let f = CostModel::default_host();
+    println!(
+        "measured : read {:.3} write {:.3} sparse {:.3} dense {:.3} lock {:.1} (ns)",
+        m.read_coord_ns, m.write_coord_ns, m.sparse_nnz_ns, m.dense_coord_ns, m.lock_ns
+    );
+    println!(
+        "frozen   : read {:.3} write {:.3} sparse {:.3} dense {:.3} lock {:.1} (ns)",
+        f.read_coord_ns, f.write_coord_ns, f.sparse_nnz_ns, f.dense_coord_ns, f.lock_ns
+    );
+}

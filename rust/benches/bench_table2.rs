@@ -1,0 +1,36 @@
+//! `cargo bench` target regenerating **Table 2** (lock vs unlock schemes on
+//! rcv1, threads ∈ {2,4,8,10}) on the p-core simulator.
+//!
+//! Environment knobs: REPRO_BENCH_SCALE (default 0.05), REPRO_BENCH_EPOCHS
+//! (default 40). Paper-scale: REPRO_BENCH_SCALE=1.0 (minutes, not seconds).
+
+use asysvrg::bench::{report, table2, BenchEnv};
+use asysvrg::util::Stopwatch;
+
+fn envf(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let env = BenchEnv {
+        scale: envf("REPRO_BENCH_SCALE", 0.05),
+        max_epochs: envf("REPRO_BENCH_EPOCHS", 40.0) as usize,
+        ..Default::default()
+    };
+    eprintln!(
+        "bench_table2: scale={} epochs={} gap={}",
+        env.scale, env.max_epochs, env.target_gap
+    );
+    let sw = Stopwatch::start();
+    let t = table2(&env, &[2, 4, 8, 10]);
+    print!("{}", report::render_table2(&t));
+    let _ = report::write_json("table2", &report::table2_json(&t));
+    // paper shape assertions — fail the bench if the reproduction breaks
+    let last = t.rows.last().unwrap();
+    assert!(
+        last.cells[2].1 > last.cells[1].1 && last.cells[1].1 > last.cells[0].1,
+        "Table 2 ordering (unlock > inconsistent > consistent at 10 threads) violated"
+    );
+    assert!(last.cells[2].1 > 3.0, "unlock speedup at 10 threads should exceed 3x");
+    eprintln!("bench_table2 done in {:.1}s", sw.seconds());
+}

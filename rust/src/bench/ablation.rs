@@ -1,0 +1,298 @@
+//! Ablation studies over the design choices DESIGN.md calls out:
+//!
+//! * **step size η** — convergence speed vs divergence threshold (the
+//!   theory's "η small enough" made quantitative);
+//! * **M factor** — inner updates per epoch (paper fixes 2n/p; we sweep);
+//! * **w_{t+1} rule** — Option 1 (current iterate) vs Option 2 (average,
+//!   what the analysis assumes);
+//! * **read model** — point reads vs the faithful eq. 10 mixed-age window;
+//! * **Assumption 3** — heterogeneous core speeds.
+//!
+//! Exposed through `repro ablation` and asserted (coarsely) in the
+//! integration tests.
+
+use crate::config::{RunConfig, Scheme};
+use crate::coordinator::epoch::parallel_full_grad;
+use crate::objective::Objective;
+use crate::simcore::{simulate_inner_opts, CostModel, EngineOpts, ReadModel, SimTask};
+use crate::util::json::Json;
+
+/// Result of one swept configuration.
+#[derive(Clone, Debug)]
+pub struct AblationPoint {
+    pub label: String,
+    /// Gap after the fixed epoch budget (f(w_T) − f*).
+    pub final_gap: f64,
+    /// Simulated seconds for the budget.
+    pub sim_seconds: f64,
+    pub max_delay: u64,
+    pub diverged: bool,
+}
+
+impl AblationPoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("final_gap", Json::Num(self.final_gap)),
+            ("sim_seconds", Json::Num(self.sim_seconds)),
+            ("max_delay", Json::Num(self.max_delay as f64)),
+            ("diverged", Json::Bool(self.diverged)),
+        ])
+    }
+}
+
+/// Run AsySVRG for `epochs` with full engine options; detects divergence
+/// (NaN/Inf or loss exceeding 10× the initial value).
+#[allow(clippy::too_many_arguments)]
+pub fn run_config(
+    obj: &Objective,
+    cfg: &RunConfig,
+    costs: &CostModel,
+    opts: &EngineOpts,
+    fstar: f64,
+    label: &str,
+) -> AblationPoint {
+    let d = obj.dim();
+    let n = obj.n();
+    let m_per_thread = cfg.inner_iters(n);
+    let mut w = vec![0.0f32; d];
+    let f0 = obj.loss(&w);
+    let mut sim_ns = 0.0;
+    let mut max_delay = 0u64;
+    let mut diverged = false;
+
+    for t in 0..cfg.epochs {
+        let eg = parallel_full_grad(obj, &w, 1);
+        let task = SimTask::Svrg { u0: &w.clone(), eg: &eg };
+        let mut u = w.clone();
+        let r = simulate_inner_opts(
+            obj,
+            &task,
+            cfg.scheme,
+            costs,
+            &mut u,
+            cfg.eta,
+            cfg.threads,
+            m_per_thread,
+            cfg.seed ^ ((t as u64) << 20),
+            opts,
+        );
+        sim_ns += r.elapsed_ns;
+        max_delay = max_delay.max(r.max_delay);
+        w = u;
+        let loss = obj.loss(&w);
+        if !loss.is_finite() || loss > 10.0 * f0 {
+            diverged = true;
+            break;
+        }
+    }
+    let final_gap = if diverged { f64::INFINITY } else { obj.loss(&w) - fstar };
+    AblationPoint {
+        label: label.to_string(),
+        final_gap,
+        sim_seconds: sim_ns / 1e9,
+        max_delay,
+        diverged,
+    }
+}
+
+/// Sweep η over a grid at fixed budget.
+pub fn sweep_eta(
+    obj: &Objective,
+    fstar: f64,
+    etas: &[f32],
+    threads: usize,
+    epochs: usize,
+) -> Vec<AblationPoint> {
+    let costs = CostModel::default_host();
+    etas.iter()
+        .map(|&eta| {
+            let cfg = RunConfig {
+                threads,
+                scheme: Scheme::Unlock,
+                eta,
+                epochs,
+                target_gap: 0.0,
+                ..Default::default()
+            };
+            run_config(obj, &cfg, &costs, &EngineOpts::default(), fstar, &format!("eta={eta}"))
+        })
+        .collect()
+}
+
+/// Sweep the M factor (inner updates per epoch = factor·n/p).
+pub fn sweep_m_factor(
+    obj: &Objective,
+    fstar: f64,
+    factors: &[f64],
+    threads: usize,
+    passes_budget: f64,
+) -> Vec<AblationPoint> {
+    let costs = CostModel::default_host();
+    factors
+        .iter()
+        .map(|&m_factor| {
+            // hold total passes fixed: epochs = budget / (1 + m_factor)
+            let epochs = (passes_budget / (1.0 + m_factor)).round().max(1.0) as usize;
+            let cfg = RunConfig {
+                threads,
+                scheme: Scheme::Unlock,
+                eta: 0.4,
+                epochs,
+                m_factor,
+                target_gap: 0.0,
+                ..Default::default()
+            };
+            run_config(
+                obj,
+                &cfg,
+                &costs,
+                &EngineOpts::default(),
+                fstar,
+                &format!("m_factor={m_factor}"),
+            )
+        })
+        .collect()
+}
+
+/// Point vs window read model at matched budgets.
+pub fn sweep_read_model(
+    obj: &Objective,
+    fstar: f64,
+    threads: usize,
+    epochs: usize,
+) -> Vec<AblationPoint> {
+    let costs = CostModel::default_host();
+    [ReadModel::Point, ReadModel::Window]
+        .into_iter()
+        .map(|rm| {
+            let cfg = RunConfig {
+                threads,
+                scheme: Scheme::Unlock,
+                eta: 0.4,
+                epochs,
+                target_gap: 0.0,
+                ..Default::default()
+            };
+            let opts = EngineOpts { read_model: rm, ..Default::default() };
+            run_config(obj, &cfg, &costs, &opts, fstar, &format!("{rm:?}"))
+        })
+        .collect()
+}
+
+/// Uniform vs skewed core speeds (Assumption 3 stress).
+pub fn sweep_core_speeds(
+    obj: &Objective,
+    fstar: f64,
+    threads: usize,
+    epochs: usize,
+) -> Vec<AblationPoint> {
+    let costs = CostModel::default_host();
+    let variants: Vec<(String, Option<Vec<f64>>)> = vec![
+        ("uniform".into(), None),
+        ("one-2x-laggard".into(), Some({
+            let mut v = vec![1.0; threads];
+            v[threads - 1] = 2.0;
+            v
+        })),
+        ("half-3x-laggards".into(), Some(
+            (0..threads).map(|t| if t % 2 == 0 { 1.0 } else { 3.0 }).collect(),
+        )),
+    ];
+    variants
+        .into_iter()
+        .map(|(label, core_speed)| {
+            let cfg = RunConfig {
+                threads,
+                scheme: Scheme::Unlock,
+                eta: 0.4,
+                epochs,
+                target_gap: 0.0,
+                ..Default::default()
+            };
+            let opts = EngineOpts { core_speed, ..Default::default() };
+            run_config(obj, &cfg, &costs, &opts, fstar, &label)
+        })
+        .collect()
+}
+
+/// Render a sweep as an aligned table.
+pub fn render(title: &str, points: &[AblationPoint]) -> String {
+    let mut s = format!("Ablation: {title}\n");
+    s.push_str(&format!(
+        "{:>20} | {:>12} | {:>10} | {:>8} | {}\n",
+        "config", "final gap", "sim secs", "max tau", "status"
+    ));
+    s.push_str(&"-".repeat(70));
+    s.push('\n');
+    for p in points {
+        s.push_str(&format!(
+            "{:>20} | {:>12.3e} | {:>10.4} | {:>8} | {}\n",
+            p.label,
+            p.final_gap,
+            p.sim_seconds,
+            p.max_delay,
+            if p.diverged { "DIVERGED" } else { "ok" }
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::asysvrg::solve_fstar;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::objective::LossKind;
+    use std::sync::Arc;
+
+    fn setup() -> (Objective, f64) {
+        let ds = SyntheticSpec::new("abl", 300, 64, 10, 31).generate();
+        let o = Objective::new(Arc::new(ds), 1e-2, LossKind::Logistic);
+        let fs = solve_fstar(&o, 0.25, 100, 3).1;
+        (o, fs)
+    }
+
+    #[test]
+    fn eta_sweep_shows_sweet_spot_and_divergence() {
+        let (o, fs) = setup();
+        let pts = sweep_eta(&o, fs, &[0.01, 0.25, 60.0], 4, 12);
+        // tiny step: slow; moderate: good; absurd: diverges
+        assert!(pts[1].final_gap < pts[0].final_gap, "0.25 should beat 0.01");
+        assert!(pts[2].diverged, "eta=60 should diverge");
+    }
+
+    #[test]
+    fn m_factor_tradeoff_at_fixed_passes() {
+        let (o, fs) = setup();
+        let pts = sweep_m_factor(&o, fs, &[0.5, 2.0, 8.0], 4, 36.0);
+        for p in &pts {
+            assert!(!p.diverged);
+            assert!(p.final_gap.is_finite());
+        }
+        // the paper's 2n/p should not be the worst of the grid
+        let worst = pts.iter().map(|p| p.final_gap).fold(0.0, f64::max);
+        assert!(pts[1].final_gap < worst * 1.01);
+    }
+
+    #[test]
+    fn read_models_both_converge() {
+        let (o, fs) = setup();
+        let pts = sweep_read_model(&o, fs, 8, 15);
+        for p in &pts {
+            assert!(!p.diverged, "{}", p.label);
+            assert!(p.final_gap < 0.1, "{}: gap {}", p.label, p.final_gap);
+        }
+    }
+
+    #[test]
+    fn laggard_cores_cost_time_not_correctness() {
+        let (o, fs) = setup();
+        let pts = sweep_core_speeds(&o, fs, 4, 12);
+        assert!(!pts.iter().any(|p| p.diverged));
+        // laggards stretch simulated time
+        assert!(pts[2].sim_seconds > pts[0].sim_seconds);
+        // but the gap stays in the same decade
+        assert!(pts[2].final_gap < pts[0].final_gap * 50.0 + 1e-6);
+    }
+}

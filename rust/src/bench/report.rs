@@ -1,0 +1,242 @@
+//! Report rendering: paper-style text tables + machine-readable JSON.
+
+use super::{ConvergenceSeries, SpeedupSeries, Table2, Table3Row};
+use crate::util::json::Json;
+
+/// Render Table 2 in the paper's layout.
+pub fn render_table2(t: &Table2) -> String {
+    let mut s = String::new();
+    s.push_str("Table 2: Lock versus Unlock (simulated seconds / speedup)\n");
+    s.push_str(&format!(
+        "{:>8} | {:>22} | {:>22} | {:>22}\n",
+        "threads", "consistent reading", "inconsistent reading", "AsySVRG-unlock"
+    ));
+    s.push_str(&"-".repeat(84));
+    s.push('\n');
+    for row in &t.rows {
+        s.push_str(&format!("{:>8} |", row.threads));
+        for &(t2g, sp) in &row.cells {
+            s.push_str(&format!(" {:>13}s/{:>5.2}x |", t2g.format(), sp));
+        }
+        s.pop();
+        s.push('\n');
+    }
+    s.push_str(&format!(
+        "(1-thread baselines: {:.2}s / {:.2}s / {:.2}s)\n",
+        t.baseline[0], t.baseline[1], t.baseline[2]
+    ));
+    s
+}
+
+pub fn table2_json(t: &Table2) -> Json {
+    Json::obj(vec![
+        (
+            "rows",
+            Json::Arr(
+                t.rows
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("threads", Json::Num(r.threads as f64)),
+                            (
+                                "seconds",
+                                Json::Arr(
+                                    r.cells.iter().map(|c| Json::Num(c.0.seconds())).collect(),
+                                ),
+                            ),
+                            (
+                                "speedup",
+                                Json::Arr(r.cells.iter().map(|c| Json::Num(c.1)).collect()),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("baseline", Json::Arr(t.baseline.iter().map(|&b| Json::Num(b)).collect())),
+    ])
+}
+
+/// Render Table 3 in the paper's layout.
+pub fn render_table3(rows: &[Table3Row], gap: f64, threads: usize) -> String {
+    let mut s = format!(
+        "Table 3: simulated seconds, {threads} threads, to gap < {gap:.0e}\n"
+    );
+    s.push_str(&format!(
+        "{:>10} | {:>13} | {:>15} | {:>14} | {:>16}\n",
+        "", "AsySVRG-lock", "AsySVRG-unlock", "Hogwild!-lock", "Hogwild!-unlock"
+    ));
+    s.push_str(&"-".repeat(80));
+    s.push('\n');
+    for r in rows {
+        s.push_str(&format!(
+            "{:>10} | {:>13} | {:>15} | {:>14} | {:>16}\n",
+            r.dataset,
+            r.asy_lock.format(),
+            r.asy_unlock.format(),
+            r.hog_lock.format(),
+            r.hog_unlock.format()
+        ));
+    }
+    s
+}
+
+pub fn table3_json(rows: &[Table3Row]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("dataset", Json::Str(r.dataset.clone())),
+                    ("asysvrg_lock", Json::Num(r.asy_lock.seconds())),
+                    ("asysvrg_unlock", Json::Num(r.asy_unlock.seconds())),
+                    ("hogwild_lock", Json::Num(r.hog_lock.seconds())),
+                    ("hogwild_unlock", Json::Num(r.hog_unlock.seconds())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Render a speedup plot (Fig. 1 left column) as aligned text series.
+pub fn render_speedup(dataset: &str, series: &[SpeedupSeries]) -> String {
+    let mut s = format!("Figure 1 (speedup) — {dataset}\n");
+    if series.is_empty() {
+        return s;
+    }
+    s.push_str(&format!("{:>16}", "threads"));
+    for &p in &series[0].threads {
+        s.push_str(&format!(" {p:>7}"));
+    }
+    s.push('\n');
+    for ser in series {
+        s.push_str(&format!("{:>16}", ser.label));
+        for &v in &ser.speedup {
+            s.push_str(&format!(" {v:>6.2}x"));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Render convergence curves (Fig. 1 right column): gap per pass count.
+pub fn render_convergence(dataset: &str, series: &[ConvergenceSeries]) -> String {
+    let mut s = format!("Figure 1 (convergence) — {dataset}: log10(gap) by effective passes\n");
+    // sample up to 12 evenly spaced pass points from the longest series
+    let longest = series.iter().map(|x| x.passes.len()).max().unwrap_or(0);
+    let idxs: Vec<usize> = if longest <= 12 {
+        (0..longest).collect()
+    } else {
+        (0..12).map(|k| k * (longest - 1) / 11).collect()
+    };
+    s.push_str(&format!("{:>16}", "passes"));
+    if let Some(refser) = series.iter().max_by_key(|x| x.passes.len()) {
+        for &i in &idxs {
+            s.push_str(&format!(" {:>7.0}", refser.passes[i.min(refser.passes.len() - 1)]));
+        }
+    }
+    s.push('\n');
+    for ser in series {
+        s.push_str(&format!("{:>16}", ser.label));
+        for &i in &idxs {
+            let i = i.min(ser.gap.len() - 1);
+            s.push_str(&format!(" {:>7.2}", ser.gap[i].log10()));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+pub fn speedup_json(series: &[SpeedupSeries]) -> Json {
+    Json::Arr(
+        series
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("label", Json::Str(s.label.clone())),
+                    (
+                        "threads",
+                        Json::Arr(s.threads.iter().map(|&p| Json::Num(p as f64)).collect()),
+                    ),
+                    ("speedup", Json::Arr(s.speedup.iter().map(|&v| Json::Num(v)).collect())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+pub fn convergence_json(series: &[ConvergenceSeries]) -> Json {
+    Json::Arr(
+        series
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("label", Json::Str(s.label.clone())),
+                    ("passes", Json::Arr(s.passes.iter().map(|&v| Json::Num(v)).collect())),
+                    ("gap", Json::Arr(s.gap.iter().map(|&v| Json::Num(v)).collect())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Write a JSON report under results/ (created on demand).
+pub fn write_json(name: &str, j: &Json) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all("results")?;
+    let path = std::path::PathBuf::from(format!("results/{name}.json"));
+    std::fs::write(&path, j.pretty())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::TimeToGap;
+
+    #[test]
+    fn table_renderers_produce_rows() {
+        let t2 = Table2 {
+            rows: vec![super::super::Table2Row {
+                threads: 4,
+                cells: [
+                    (TimeToGap::Reached(10.0), 2.0),
+                    (TimeToGap::Reached(8.0), 2.5),
+                    (TimeToGap::Reached(5.0), 4.0),
+                ],
+            }],
+            baseline: [20.0, 20.0, 20.0],
+        };
+        let text = render_table2(&t2);
+        assert!(text.contains("4") && text.contains("4.00x"));
+        let j = table2_json(&t2);
+        assert!(j.get("rows").unwrap().as_arr().unwrap().len() == 1);
+
+        let t3 = vec![Table3Row {
+            dataset: "rcv1".into(),
+            asy_lock: TimeToGap::Reached(55.77),
+            asy_unlock: TimeToGap::Reached(25.33),
+            hog_lock: TimeToGap::Exceeded(500.0),
+            hog_unlock: TimeToGap::Exceeded(200.0),
+        }];
+        let text = render_table3(&t3, 1e-4, 10);
+        assert!(text.contains(">500") && text.contains("25.33"));
+    }
+
+    #[test]
+    fn figure_renderers() {
+        let sp = vec![SpeedupSeries {
+            label: "AsySVRG-unlock".into(),
+            threads: vec![1, 2, 4],
+            speedup: vec![1.0, 1.9, 3.5],
+        }];
+        let text = render_speedup("rcv1", &sp);
+        assert!(text.contains("AsySVRG-unlock") && text.contains("3.50x"));
+
+        let cv = vec![ConvergenceSeries {
+            label: "Hogwild-lock".into(),
+            passes: (1..=20).map(|x| x as f64).collect(),
+            gap: (1..=20).map(|x| 1.0 / x as f64).collect(),
+        }];
+        let text = render_convergence("rcv1", &cv);
+        assert!(text.contains("Hogwild-lock"));
+    }
+}

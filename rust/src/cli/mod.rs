@@ -1,0 +1,221 @@
+//! Command-line parsing substrate (no clap in the vendor set).
+//!
+//! Model: `repro <subcommand> [--flag] [--key value]...`. Flags are
+//! declared up front so `--help` is generated and unknown arguments are
+//! hard errors (silent typos in experiment parameters are how wrong tables
+//! get published).
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Clone, Debug)]
+pub struct Opt {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Declarative command spec.
+#[derive(Clone, Debug)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, takes_value: false, default: None, help });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, takes_value: true, default: Some(default), help });
+        self
+    }
+
+    /// Required option (no default).
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, takes_value: true, default: None, help });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let v = if o.takes_value { " <value>" } else { "" };
+            let d = match o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None if o.takes_value => " [required]".to_string(),
+                None => String::new(),
+            };
+            s.push_str(&format!("  --{}{v}\n      {}{d}\n", o.name, o.help));
+        }
+        s
+    }
+
+    /// Parse `args` (not including the subcommand itself).
+    pub fn parse(&self, args: &[String]) -> Result<Matches, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            let name = a
+                .strip_prefix("--")
+                .ok_or_else(|| format!("unexpected positional argument '{a}'\n\n{}", self.usage()))?;
+            let (name, inline) = match name.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (name, None),
+            };
+            let opt = self
+                .opts
+                .iter()
+                .find(|o| o.name == name)
+                .ok_or_else(|| format!("unknown option '--{name}'\n\n{}", self.usage()))?;
+            if opt.takes_value {
+                let v = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        args.get(i)
+                            .cloned()
+                            .ok_or_else(|| format!("option '--{name}' needs a value"))?
+                    }
+                };
+                values.insert(name.to_string(), v);
+            } else {
+                if inline.is_some() {
+                    return Err(format!("flag '--{name}' takes no value"));
+                }
+                flags.push(name.to_string());
+            }
+            i += 1;
+        }
+        // defaults + required checks
+        for o in &self.opts {
+            if o.takes_value && !values.contains_key(o.name) {
+                match o.default {
+                    Some(d) => {
+                        values.insert(o.name.to_string(), d.to_string());
+                    }
+                    None => return Err(format!("missing required option '--{}'", o.name)),
+                }
+            }
+        }
+        Ok(Matches { values, flags })
+    }
+}
+
+/// Parsed option values with typed accessors.
+#[derive(Debug)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Matches {
+    pub fn str(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or_else(|| {
+            panic!("option '{name}' not declared (internal bug)");
+        })
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        self.str(name).parse().map_err(|_| format!("--{name}: expected integer, got '{}'", self.str(name)))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, String> {
+        self.str(name).parse().map_err(|_| format!("--{name}: expected integer, got '{}'", self.str(name)))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        self.str(name).parse().map_err(|_| format!("--{name}: expected number, got '{}'", self.str(name)))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<f32, String> {
+        self.str(name).parse().map_err(|_| format!("--{name}: expected number, got '{}'", self.str(name)))
+    }
+
+    /// Comma-separated usize list, e.g. `--threads 1,2,4,8,10`.
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, String> {
+        self.str(name)
+            .split(',')
+            .map(|t| t.trim().parse().map_err(|_| format!("--{name}: bad list item '{t}'")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("run", "run an experiment")
+            .opt("dataset", "rcv1", "dataset name")
+            .opt("threads", "10", "thread count")
+            .req("eta", "step size")
+            .flag("verbose", "chatty output")
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let m = cmd().parse(&args(&["--eta", "0.1", "--threads=4"])).unwrap();
+        assert_eq!(m.str("dataset"), "rcv1");
+        assert_eq!(m.usize("threads").unwrap(), 4);
+        assert_eq!(m.f64("eta").unwrap(), 0.1);
+        assert!(!m.flag("verbose"));
+    }
+
+    #[test]
+    fn flags() {
+        let m = cmd().parse(&args(&["--eta", "0.1", "--verbose"])).unwrap();
+        assert!(m.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(cmd().parse(&args(&[])).unwrap_err().contains("eta"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let e = cmd().parse(&args(&["--eta", "0.1", "--bogus", "1"])).unwrap_err();
+        assert!(e.contains("unknown option"));
+    }
+
+    #[test]
+    fn value_missing_rejected() {
+        let e = cmd().parse(&args(&["--eta"])).unwrap_err();
+        assert!(e.contains("needs a value"));
+    }
+
+    #[test]
+    fn lists() {
+        let c = Command::new("x", "y").opt("threads", "1,2,4", "list");
+        let m = c.parse(&args(&[])).unwrap();
+        assert_eq!(m.usize_list("threads").unwrap(), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let e = cmd().parse(&args(&["--help"])).unwrap_err();
+        assert!(e.contains("--dataset") && e.contains("required"));
+    }
+}

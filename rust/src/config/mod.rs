@@ -1,0 +1,206 @@
+//! Experiment configuration shared by the CLI, the drivers, the simulator
+//! and the bench harness. One struct, one source of defaults — the paper's
+//! §5.1 settings.
+
+use crate::objective::LossKind;
+use crate::util::json::Json;
+
+/// Shared-memory access scheme (the paper's §4.1/§4.2/§5.2 variants plus
+/// our seqlock extension — see `linalg::versioned`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// Lock on read AND update (§4.1).
+    Consistent,
+    /// Lock-free read, locked update (§4.2).
+    Inconsistent,
+    /// No locks anywhere (§5.2, "AsySVRG-unlock" / Hogwild! style).
+    Unlock,
+    /// Extension: seqlock — tear-free unlocked reads, serialized writers.
+    Seqlock,
+    /// Extension: PASSCoDe-style per-coordinate CAS updates, no lock.
+    AtomicCas,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Result<Scheme, String> {
+        match s {
+            "consistent" | "lock" => Ok(Scheme::Consistent),
+            "inconsistent" => Ok(Scheme::Inconsistent),
+            "unlock" => Ok(Scheme::Unlock),
+            "seqlock" => Ok(Scheme::Seqlock),
+            "atomic-cas" | "cas" => Ok(Scheme::AtomicCas),
+            _ => Err(format!(
+                "unknown scheme '{s}' (consistent|inconsistent|unlock|seqlock|atomic-cas)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Consistent => "consistent",
+            Scheme::Inconsistent => "inconsistent",
+            Scheme::Unlock => "unlock",
+            Scheme::Seqlock => "seqlock",
+            Scheme::AtomicCas => "atomic-cas",
+        }
+    }
+
+    /// The three schemes the paper itself evaluates (Table 2).
+    pub fn paper_schemes() -> [Scheme; 3] {
+        [Scheme::Consistent, Scheme::Inconsistent, Scheme::Unlock]
+    }
+}
+
+/// Which algorithm drives the inner loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Algorithm 1 of the paper.
+    AsySvrg,
+    /// The Hogwild! baseline (Recht et al. 2011) with the paper's §5.1
+    /// settings: constant step γ decayed ×0.9 per epoch.
+    Hogwild,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Result<Algo, String> {
+        match s {
+            "asysvrg" | "svrg" => Ok(Algo::AsySvrg),
+            "hogwild" | "sgd" => Ok(Algo::Hogwild),
+            _ => Err(format!("unknown algo '{s}' (asysvrg|hogwild)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::AsySvrg => "asysvrg",
+            Algo::Hogwild => "hogwild",
+        }
+    }
+}
+
+/// Full experiment configuration. Defaults reproduce §5.1.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: String,
+    /// Synthetic stand-in scale (1.0 = Table 1 sizes).
+    pub scale: f64,
+    pub seed: u64,
+    pub threads: usize,
+    pub scheme: Scheme,
+    pub algo: Algo,
+    /// Step size η (AsySVRG) or initial γ (Hogwild!).
+    pub eta: f32,
+    /// Outer iterations (epochs). Each AsySVRG epoch = 3 effective passes.
+    pub epochs: usize,
+    /// M = m_factor·n/p inner updates per thread (paper: 2).
+    pub m_factor: f64,
+    /// Hogwild! per-epoch step decay (paper: 0.9).
+    pub gamma_decay: f32,
+    /// Stop when f(w) − f(w*) < target_gap (paper: 1e-4).
+    pub target_gap: f64,
+    pub lambda: f32,
+    pub loss: LossKind,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "rcv1".into(),
+            scale: 0.1,
+            seed: 42,
+            threads: 10,
+            scheme: Scheme::Inconsistent,
+            algo: Algo::AsySvrg,
+            eta: 0.1,
+            epochs: 30,
+            m_factor: 2.0,
+            gamma_decay: 0.9,
+            target_gap: 1e-4,
+            lambda: 1e-4,
+            loss: LossKind::Logistic,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Inner updates per thread for a dataset of n instances: M = ⌈fac·n/p⌉.
+    pub fn inner_iters(&self, n: usize) -> usize {
+        ((self.m_factor * n as f64) / self.threads as f64).ceil() as usize
+    }
+
+    /// Hogwild! iterations per thread per epoch: n/p (§5.1).
+    pub fn hogwild_iters(&self, n: usize) -> usize {
+        (n as f64 / self.threads as f64).ceil() as usize
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("scale", Json::Num(self.scale)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+            ("scheme", Json::Str(self.scheme.name().into())),
+            ("algo", Json::Str(self.algo.name().into())),
+            ("eta", Json::Num(self.eta as f64)),
+            ("epochs", Json::Num(self.epochs as f64)),
+            ("m_factor", Json::Num(self.m_factor)),
+            ("gamma_decay", Json::Num(self.gamma_decay as f64)),
+            ("target_gap", Json::Num(self.target_gap)),
+            ("lambda", Json::Num(self.lambda as f64)),
+            ("loss", Json::Str(self.loss.name().into())),
+        ])
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{}-{} on {} (scale {}): p={} eta={} epochs={} seed={}",
+            self.algo.name(),
+            self.scheme.name(),
+            self.dataset,
+            self.scale,
+            self.threads,
+            self.eta,
+            self.epochs,
+            self.seed
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults() {
+        let c = RunConfig::default();
+        assert_eq!(c.m_factor, 2.0);
+        assert_eq!(c.gamma_decay, 0.9);
+        assert_eq!(c.target_gap, 1e-4);
+        assert_eq!(c.lambda, 1e-4);
+    }
+
+    #[test]
+    fn inner_iters_formula() {
+        let c = RunConfig { threads: 10, ..Default::default() };
+        // M = 2n/p (paper §5.1)
+        assert_eq!(c.inner_iters(20_000), 4_000);
+        assert_eq!(c.hogwild_iters(20_000), 2_000);
+    }
+
+    #[test]
+    fn scheme_parse_roundtrip() {
+        for s in Scheme::paper_schemes() {
+            assert_eq!(Scheme::parse(s.name()).unwrap(), s);
+        }
+        assert!(Scheme::parse("nope").is_err());
+        assert_eq!(Algo::parse("hogwild").unwrap(), Algo::Hogwild);
+    }
+
+    #[test]
+    fn json_has_all_fields() {
+        let j = RunConfig::default().to_json();
+        for k in ["dataset", "threads", "scheme", "algo", "eta", "target_gap"] {
+            assert!(j.get(k).is_some(), "missing {k}");
+        }
+    }
+}

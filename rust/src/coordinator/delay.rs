@@ -1,0 +1,120 @@
+//! Bounded-delay instrumentation (S7).
+//!
+//! The theory (Theorems 1–2) assumes m − k(m) ≤ τ (consistent) and
+//! m − a(m) ≤ τ (inconsistent). Workers record, for every update, the
+//! clock at read time and the clock at apply time; the difference is the
+//! empirical staleness. The harness reports max/mean/histogram so a run
+//! can be checked against the τ its step size was chosen for — and the
+//! simulator's schedules are validated against the same bound.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Lock-free staleness accumulator shared by all workers of a run.
+pub struct DelayStats {
+    max: AtomicU64,
+    sum: AtomicU64,
+    count: AtomicU64,
+    /// histogram buckets: staleness 0, 1, 2-3, 4-7, 8-15, ..., ≥2^14
+    buckets: [AtomicU64; 16],
+}
+
+impl Default for DelayStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DelayStats {
+    pub fn new() -> Self {
+        DelayStats {
+            max: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Record one update: `read_clock` = m observed when the worker read û,
+    /// `apply_clock` = the update's own index (post-apply clock).
+    #[inline]
+    pub fn record(&self, read_clock: u64, apply_clock: u64) {
+        // staleness = number of other updates applied between read and apply
+        let stale = apply_clock.saturating_sub(read_clock + 1);
+        self.max.fetch_max(stale, Ordering::Relaxed);
+        self.sum.fetch_add(stale, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let b = if stale == 0 { 0 } else { (64 - stale.leading_zeros()) as usize };
+        self.buckets[b.min(15)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Empirical τ = max observed staleness.
+    pub fn max_delay(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_delay(&self) -> f64 {
+        let c = self.count.load(Ordering::Relaxed);
+        if c == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn histogram(&self) -> Vec<(String, u64)> {
+        let mut out = Vec::new();
+        for (b, cell) in self.buckets.iter().enumerate() {
+            let c = cell.load(Ordering::Relaxed);
+            if c > 0 {
+                let label = match b {
+                    0 => "0".to_string(),
+                    1 => "1".to_string(),
+                    b => format!("{}-{}", 1u64 << (b - 1), (1u64 << b) - 1),
+                };
+                out.push((label, c));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_updates_have_zero_staleness() {
+        let d = DelayStats::new();
+        for m in 0..100u64 {
+            d.record(m, m + 1); // read right before own apply
+        }
+        assert_eq!(d.max_delay(), 0);
+        assert_eq!(d.mean_delay(), 0.0);
+        assert_eq!(d.count(), 100);
+        assert_eq!(d.histogram(), vec![("0".to_string(), 100)]);
+    }
+
+    #[test]
+    fn staleness_counts_interleaved_updates() {
+        let d = DelayStats::new();
+        // read at clock 5, applied as update #9 → 3 foreign updates between
+        d.record(5, 9);
+        assert_eq!(d.max_delay(), 3);
+        let h = d.histogram();
+        assert_eq!(h, vec![("2-3".to_string(), 1)]);
+    }
+
+    #[test]
+    fn mean_over_mixed() {
+        let d = DelayStats::new();
+        d.record(0, 1); // 0
+        d.record(0, 3); // 2
+        d.record(0, 5); // 4
+        assert_eq!(d.max_delay(), 4);
+        assert!((d.mean_delay() - 2.0).abs() < 1e-12);
+    }
+}

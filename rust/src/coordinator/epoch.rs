@@ -1,0 +1,148 @@
+//! Epoch-boundary full gradient (Alg. 1 line 3): all p threads compute
+//! ∇f(w_t) in parallel over a disjoint partition φ_a of the instances,
+//! caching every residual r_i(w_t) so inner iterations get ∇f_i(u₀) in
+//! O(1) (the ∇f_{i_m}(u₀) term of eq. 2 is r₀_i·x_i + λu₀).
+
+use crate::objective::Objective;
+
+/// Disjoint, covering partition of 0..n into p contiguous ranges — the φ_a
+/// sets of the paper (φ_a ∩ φ_b = ∅, ⋃φ_a = all instances).
+pub fn partition(n: usize, p: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(p > 0);
+    let base = n / p;
+    let extra = n % p;
+    let mut out = Vec::with_capacity(p);
+    let mut start = 0;
+    for a in 0..p {
+        let len = base + usize::from(a < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Output of the epoch pass.
+pub struct EpochGradient {
+    /// μ̄ = ∇f(w_t) (dense, includes the λw term).
+    pub mu: Vec<f32>,
+    /// r_i(w_t) for every instance — the ∇f_i(u₀) cache.
+    pub residuals: Vec<f32>,
+}
+
+/// Compute ∇f(w) with `p` threads (std::thread::scope; each thread owns a
+/// disjoint residual slice and a private accumulator, reduced at the end).
+pub fn parallel_full_grad(obj: &Objective, w: &[f32], p: usize) -> EpochGradient {
+    let n = obj.n();
+    let d = obj.dim();
+    let ranges = partition(n, p);
+    let mut residuals = vec![0.0f32; n];
+    let mut partials: Vec<Vec<f32>> = Vec::with_capacity(p);
+
+    if p == 1 {
+        let mut mu = vec![0.0f32; d];
+        let mut res = Vec::new();
+        obj.full_grad_into(w, &mut mu, &mut res);
+        return EpochGradient { mu, residuals: res };
+    }
+
+    // split the residual buffer along the partition so each worker gets an
+    // exclusive &mut slice (no locks, no false sharing across instances)
+    let mut res_slices: Vec<&mut [f32]> = Vec::with_capacity(p);
+    {
+        let mut rest: &mut [f32] = &mut residuals;
+        for r in &ranges {
+            let (head, tail) = rest.split_at_mut(r.len());
+            res_slices.push(head);
+            rest = tail;
+        }
+    }
+
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(p);
+        for (range, res_slice) in ranges.iter().cloned().zip(res_slices.into_iter()) {
+            let handle = s.spawn(move || {
+                let mut acc = vec![0.0f32; d];
+                let offset = range.start;
+                for i in range {
+                    let r = obj.residual(w, i);
+                    res_slice[i - offset] = r;
+                    obj.data.row(i).axpy_into(r, &mut acc);
+                }
+                acc
+            });
+            handles.push(handle);
+        }
+        for h in handles {
+            partials.push(h.join().expect("epoch worker panicked"));
+        }
+    });
+
+    // reduce: μ = (1/n)Σ partials + λw
+    let mut mu = vec![0.0f32; d];
+    for part in &partials {
+        for j in 0..d {
+            mu[j] += part[j];
+        }
+    }
+    let inv_n = 1.0 / n as f32;
+    for j in 0..d {
+        mu[j] = mu[j] * inv_n + obj.lam * w[j];
+    }
+    EpochGradient { mu, residuals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use std::sync::Arc;
+
+    #[test]
+    fn partition_disjoint_covering() {
+        for (n, p) in [(10, 3), (100, 7), (5, 5), (3, 8), (1, 1)] {
+            let parts = partition(n, p);
+            assert_eq!(parts.len(), p);
+            let mut seen = vec![false; n];
+            for r in &parts {
+                for i in r.clone() {
+                    assert!(!seen[i], "overlap at {i}");
+                    seen[i] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "n={n} p={p} not covering");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let ds = SyntheticSpec::new("t", 200, 64, 10, 5).generate();
+        let obj = Objective::paper(Arc::new(ds));
+        let w: Vec<f32> = (0..obj.dim()).map(|j| ((j % 7) as f32 - 3.0) * 0.02).collect();
+        let seq = parallel_full_grad(&obj, &w, 1);
+        for p in [2, 3, 8] {
+            let par = parallel_full_grad(&obj, &w, p);
+            assert_eq!(par.residuals, seq.residuals, "p={p} residuals");
+            for j in 0..obj.dim() {
+                assert!(
+                    (par.mu[j] - seq.mu[j]).abs() < 2e-6,
+                    "p={p} coord {j}: {} vs {}",
+                    par.mu[j],
+                    seq.mu[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn residuals_complete() {
+        let ds = SyntheticSpec::new("t", 37, 16, 4, 9).generate();
+        let obj = Objective::paper(Arc::new(ds));
+        let w = vec![0.01f32; obj.dim()];
+        let g = parallel_full_grad(&obj, &w, 4);
+        assert_eq!(g.residuals.len(), obj.n());
+        for i in 0..obj.n() {
+            assert_eq!(g.residuals[i], obj.residual(&w, i));
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Hogwild! baseline (Recht et al. 2011) with the paper's §5.1 settings:
+//! each epoch every thread runs n/p plain-SGD updates; the constant step
+//! size γ is decayed ×0.9 after every epoch. "Hogwild!-lock" applies
+//! updates under the update mutex (Scheme::Inconsistent discipline);
+//! "Hogwild!-unlock" is fully lock-free (Scheme::Unlock).
+//!
+//! The update is u ← u − γ∇f_i(û) = u − γ(r·x_i + λû): a sparse scatter
+//! plus the dense ridge-decay stream, applied through
+//! `SharedParams::apply_sgd_step` so the locking discipline matches the
+//! AsySVRG schemes exactly (like-for-like in Table 3).
+
+use crate::config::RunConfig;
+use crate::coordinator::delay::DelayStats;
+use crate::coordinator::monitor::{HistoryPoint, RunResult};
+use crate::coordinator::shared::SharedParams;
+use crate::objective::Objective;
+use crate::util::rng::Pcg32;
+use crate::util::Stopwatch;
+
+/// Run Hogwild!. `fstar` enables the §5 stopping rule.
+pub fn run_hogwild(obj: &Objective, cfg: &RunConfig, fstar: f64) -> RunResult {
+    let d = obj.dim();
+    let n = obj.n();
+    let p = cfg.threads;
+    let iters = cfg.hogwild_iters(n);
+    let delays = DelayStats::new();
+    let sw = Stopwatch::start();
+
+    let mut gamma = cfg.eta;
+    let mut result = RunResult::default();
+    let shared = SharedParams::new(&vec![0.0f32; d], cfg.scheme);
+    let mut passes = 0.0f64;
+
+    for t in 0..cfg.epochs {
+        std::thread::scope(|s| {
+            for a in 0..p {
+                let shared = &shared;
+                let delays = &delays;
+                s.spawn(move || {
+                    let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
+                    let mut local = vec![0.0f32; d];
+                    for _ in 0..iters {
+                        let i = rng.below(n);
+                        let read_clock = shared.read_into(&mut local);
+                        let r = obj.residual(&local, i);
+                        let apply_clock =
+                            shared.apply_sgd_step(obj.data.row(i), r, obj.lam, &local, gamma);
+                        delays.record(read_clock, apply_clock);
+                    }
+                });
+            }
+        });
+        gamma *= cfg.gamma_decay;
+        passes += 1.0; // Hogwild!: one effective pass per epoch (§5.1)
+
+        let w = shared.snapshot();
+        let loss = obj.loss(&w);
+        result.total_updates = shared.clock();
+        result.history.push(HistoryPoint {
+            passes,
+            loss,
+            seconds: sw.seconds(),
+            updates: result.total_updates,
+        });
+        result.epochs_run = t + 1;
+        crate::log!(Debug, "hogwild epoch {t}: f={loss:.6} gap={:.3e}", loss - fstar);
+        if loss - fstar < cfg.target_gap {
+            result.converged = true;
+            break;
+        }
+    }
+
+    result.final_w = shared.snapshot();
+    result.total_seconds = sw.seconds();
+    result.max_delay = delays.max_delay();
+    result.mean_delay = delays.mean_delay();
+    result
+}
+
+/// Sequential SGD with the same schedule — the 1-thread Hogwild! baseline
+/// used as the speedup denominator.
+pub fn run_sgd_sequential(obj: &Objective, cfg: &RunConfig, fstar: f64) -> RunResult {
+    let mut cfg1 = cfg.clone();
+    cfg1.threads = 1;
+    run_hogwild(obj, &cfg1, fstar)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algo, Scheme};
+    use crate::data::synthetic::SyntheticSpec;
+    use std::sync::Arc;
+
+    /// Well-conditioned test instance (see asysvrg::tests::small_obj).
+    fn small_obj() -> Objective {
+        let ds = SyntheticSpec::new("t", 256, 64, 10, 13).generate();
+        Objective::new(Arc::new(ds), 1e-2, crate::objective::LossKind::Logistic)
+    }
+
+    fn cfg(threads: usize, scheme: Scheme) -> RunConfig {
+        RunConfig {
+            algo: Algo::Hogwild,
+            threads,
+            scheme,
+            eta: 0.5,
+            epochs: 60,
+            target_gap: 1e-3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sequential_sgd_decreases_loss() {
+        let obj = small_obj();
+        let r = run_sgd_sequential(&obj, &cfg(1, Scheme::Unlock), f64::NEG_INFINITY);
+        let first = r.history.first().unwrap().loss;
+        let last = r.final_loss();
+        assert!(last < first, "{first} -> {last}");
+        assert!(last < (2f64).ln()); // below the w=0 value
+    }
+
+    #[test]
+    fn hogwild_lock_and_unlock_converge() {
+        let obj = small_obj();
+        let (_, fstar) = crate::coordinator::asysvrg::solve_fstar(&obj, 0.2, 120, 1);
+        for scheme in [Scheme::Inconsistent, Scheme::Unlock] {
+            let r = run_hogwild(&obj, &cfg(4, scheme), f64::NEG_INFINITY);
+            let gap = r.final_loss() - fstar;
+            assert!(gap < 5e-3, "{scheme:?}: gap {gap:.3e}");
+            assert!(r.final_loss() < r.history[0].loss, "{scheme:?} no progress");
+            assert_eq!(r.epochs_run, 60);
+        }
+    }
+
+    #[test]
+    fn update_accounting() {
+        let obj = small_obj();
+        let mut c = cfg(3, Scheme::Unlock);
+        c.epochs = 2;
+        c.target_gap = 0.0;
+        let r = run_hogwild(&obj, &c, f64::NEG_INFINITY);
+        assert_eq!(r.total_updates, (2 * 3 * c.hogwild_iters(obj.n())) as u64);
+        // 1 effective pass per epoch
+        assert!((r.history.last().unwrap().passes - 2.0).abs() < 1e-9);
+    }
+
+    /// SGD with decaying steps stalls at a higher gap than SVRG reaches —
+    /// the sublinear-vs-linear contrast that motivates the paper (Fig. 1
+    /// right column).
+    #[test]
+    fn sgd_converges_slower_than_svrg_per_pass() {
+        let obj = small_obj();
+        let (_, fstar) = crate::coordinator::asysvrg::solve_fstar(&obj, 0.2, 80, 1);
+        let svrg_cfg = RunConfig {
+            threads: 1,
+            eta: 0.2,
+            epochs: 7, // 21 effective passes
+            target_gap: 0.0,
+            ..Default::default()
+        };
+        let svrg = crate::coordinator::asysvrg::run(&obj, &svrg_cfg, f64::NEG_INFINITY);
+        let mut sgd_cfg = cfg(1, Scheme::Unlock);
+        sgd_cfg.epochs = 21; // 21 effective passes
+        sgd_cfg.target_gap = 0.0;
+        let sgd = run_hogwild(&obj, &sgd_cfg, fstar);
+        let svrg_gap = svrg.final_loss() - fstar;
+        let sgd_gap = sgd.final_loss() - fstar;
+        assert!(
+            svrg_gap < sgd_gap * 0.5,
+            "svrg gap {svrg_gap:.3e} not ≪ sgd gap {sgd_gap:.3e}"
+        );
+    }
+}

@@ -1,0 +1,33 @@
+//! L3 coordinator — the paper's system contribution (S1–S7).
+//!
+//! * [`shared`] — the shared parameter vector + the access schemes
+//! * [`epoch`] — parallel full-gradient pass with the φ_a partition
+//! * [`worker`] — the asynchronous inner loop (hot path)
+//! * [`asysvrg`] — Algorithm 1 driver (Options 1 & 2)
+//! * [`hogwild`] — the Hogwild! baseline under identical disciplines
+//! * [`delay`] — bounded-delay (τ) instrumentation
+//! * [`monitor`] — run history / results
+
+pub mod asysvrg;
+pub mod delay;
+pub mod epoch;
+pub mod hogwild;
+pub mod monitor;
+pub mod shared;
+pub mod worker;
+
+pub use asysvrg::{run_asysvrg, SvrgOption};
+pub use hogwild::run_hogwild;
+pub use monitor::{HistoryPoint, RunResult};
+pub use shared::SharedParams;
+
+use crate::config::{Algo, RunConfig};
+use crate::objective::Objective;
+
+/// Dispatch a configured run (threads engine).
+pub fn run(obj: &Objective, cfg: &RunConfig, fstar: f64) -> RunResult {
+    match cfg.algo {
+        Algo::AsySvrg => asysvrg::run(obj, cfg, fstar),
+        Algo::Hogwild => hogwild::run_hogwild(obj, cfg, fstar),
+    }
+}

@@ -1,0 +1,111 @@
+//! Convergence monitoring and run results — what every driver returns and
+//! every bench serializes.
+
+use crate::util::json::Json;
+
+/// One measurement point after an epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct HistoryPoint {
+    /// Cumulative effective passes over the data (paper §5.1: AsySVRG
+    /// spends 3 per epoch, Hogwild! 1).
+    pub passes: f64,
+    /// Objective value f(w).
+    pub loss: f64,
+    /// Wall-clock (threads engine) or simulated (simcore) seconds so far.
+    pub seconds: f64,
+    /// Updates applied so far.
+    pub updates: u64,
+}
+
+/// Result of one optimization run.
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub history: Vec<HistoryPoint>,
+    pub final_w: Vec<f32>,
+    pub total_seconds: f64,
+    pub total_updates: u64,
+    /// Empirical staleness (τ̂): max and mean of m − k(m) − 1.
+    pub max_delay: u64,
+    pub mean_delay: f64,
+    /// Epochs actually run (may stop early at target gap).
+    pub epochs_run: usize,
+    /// True if the run reached the target gap.
+    pub converged: bool,
+}
+
+impl RunResult {
+    /// First time (seconds) at which loss − f* < gap, None if never.
+    pub fn time_to_gap(&self, fstar: f64, gap: f64) -> Option<f64> {
+        self.history.iter().find(|h| h.loss - fstar < gap).map(|h| h.seconds)
+    }
+
+    /// First effective-pass count at which loss − f* < gap.
+    pub fn passes_to_gap(&self, fstar: f64, gap: f64) -> Option<f64> {
+        self.history.iter().find(|h| h.loss - fstar < gap).map(|h| h.passes)
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.history.last().map(|h| h.loss).unwrap_or(f64::INFINITY)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "history",
+                Json::Arr(
+                    self.history
+                        .iter()
+                        .map(|h| {
+                            Json::obj(vec![
+                                ("passes", Json::Num(h.passes)),
+                                ("loss", Json::Num(h.loss)),
+                                ("seconds", Json::Num(h.seconds)),
+                                ("updates", Json::Num(h.updates as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("total_seconds", Json::Num(self.total_seconds)),
+            ("total_updates", Json::Num(self.total_updates as f64)),
+            ("max_delay", Json::Num(self.max_delay as f64)),
+            ("mean_delay", Json::Num(self.mean_delay)),
+            ("epochs_run", Json::Num(self.epochs_run as f64)),
+            ("converged", Json::Bool(self.converged)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result() -> RunResult {
+        RunResult {
+            history: vec![
+                HistoryPoint { passes: 3.0, loss: 0.5, seconds: 1.0, updates: 100 },
+                HistoryPoint { passes: 6.0, loss: 0.1, seconds: 2.0, updates: 200 },
+                HistoryPoint { passes: 9.0, loss: 0.05, seconds: 3.0, updates: 300 },
+            ],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn gap_queries() {
+        let r = result();
+        // f* = 0.04: gaps are 0.46, 0.06, 0.01
+        assert_eq!(r.time_to_gap(0.04, 0.05), Some(3.0));
+        assert_eq!(r.passes_to_gap(0.04, 0.1), Some(6.0));
+        assert_eq!(r.time_to_gap(0.04, 1e-9), None);
+        assert_eq!(r.final_loss(), 0.05);
+    }
+
+    #[test]
+    fn json_round_trip_shape() {
+        let j = result().to_json();
+        let hist = j.get("history").unwrap().as_arr().unwrap();
+        assert_eq!(hist.len(), 3);
+        assert_eq!(hist[1].get("loss").unwrap().as_f64(), Some(0.1));
+    }
+}

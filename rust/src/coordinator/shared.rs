@@ -1,0 +1,350 @@
+//! The shared parameter vector `u` and the paper's access schemes.
+//!
+//! Everything the paper calls "scheme" lives here: how a worker reads the
+//! current `u` from shared memory and how it applies `u ← u − η v`.
+//!
+//! | scheme        | read              | update            | paper |
+//! |---------------|-------------------|-------------------|-------|
+//! | Consistent    | under the lock    | under the lock    | §4.1  |
+//! | Inconsistent  | lock-free (torn)  | under the lock    | §4.2  |
+//! | Unlock        | lock-free (torn)  | lock-free (racy)  | §5.2  |
+//! | Seqlock       | retry-until-clean | serialized        | ext.  |
+//! | AtomicCas     | lock-free (torn)  | per-coord CAS     | ext. (PASSCoDe [3]) |
+//!
+//! The `Ordering::Relaxed` atomics + optional mutex reproduce the x86
+//! shared-memory semantics the paper assumes (word-atomic loads/stores,
+//! eq. 10's mixed-age reads).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::config::Scheme;
+use crate::linalg::AtomicF32Vec;
+
+/// Shared state for one inner loop: the vector `u`, the scheme's lock, and
+/// the global update clock `m` used for staleness instrumentation.
+pub struct SharedParams {
+    data: AtomicF32Vec,
+    lock: Mutex<()>,
+    /// Seqlock version (used by Scheme::Seqlock only).
+    version: AtomicU64,
+    /// Total updates applied — the paper's `m` counter.
+    clock: AtomicU64,
+    scheme: Scheme,
+}
+
+impl SharedParams {
+    pub fn new(init: &[f32], scheme: Scheme) -> Self {
+        SharedParams {
+            data: AtomicF32Vec::from_slice(init),
+            lock: Mutex::new(()),
+            version: AtomicU64::new(0),
+            clock: AtomicU64::new(0),
+            scheme,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn scheme(&self) -> Scheme {
+        self.scheme
+    }
+
+    /// Current update clock m (relaxed: instrumentation only).
+    #[inline]
+    pub fn clock(&self) -> u64 {
+        self.clock.load(Ordering::Relaxed)
+    }
+
+    /// Read û into `out` under the scheme's discipline. Returns the clock
+    /// value observed at the start of the read — the worker reports it so
+    /// `delay::DelayStats` can bound a(m)/k(m) empirically.
+    pub fn read_into(&self, out: &mut [f32]) -> u64 {
+        match self.scheme {
+            Scheme::Consistent => {
+                let _g = self.lock.lock().unwrap();
+                let at = self.clock();
+                self.data.read_into(out);
+                at
+            }
+            Scheme::Inconsistent | Scheme::Unlock | Scheme::AtomicCas => {
+                let at = self.clock();
+                self.data.read_into(out);
+                at
+            }
+            Scheme::Seqlock => loop {
+                let v1 = self.version.load(Ordering::Acquire);
+                if v1 % 2 == 0 {
+                    let at = self.clock();
+                    self.data.read_into(out);
+                    std::sync::atomic::fence(Ordering::Acquire);
+                    if self.version.load(Ordering::Acquire) == v1 {
+                        return at;
+                    }
+                }
+                std::hint::spin_loop();
+            },
+        }
+    }
+
+    /// Fused read + SVRG dense-direction build (perf: one pass over d
+    /// instead of two — see EXPERIMENTS.md §Perf iteration 1):
+    ///   û[j] ← u[j];  v[j] ← λ(û[j] − u₀[j]) + μ̄[j]
+    /// under the scheme's read discipline. Returns the read clock.
+    pub fn read_and_build_svrg(
+        &self,
+        u0: &[f32],
+        mu: &[f32],
+        lam: f32,
+        u_hat: &mut [f32],
+        v: &mut [f32],
+    ) -> u64 {
+        debug_assert!(u_hat.len() == self.dim() && v.len() == self.dim());
+        let build = |data: &AtomicF32Vec, u_hat: &mut [f32], v: &mut [f32]| {
+            for j in 0..u_hat.len() {
+                let uj = data.get(j);
+                u_hat[j] = uj;
+                v[j] = lam * (uj - u0[j]) + mu[j];
+            }
+        };
+        match self.scheme {
+            Scheme::Consistent => {
+                let _g = self.lock.lock().unwrap();
+                let at = self.clock();
+                build(&self.data, u_hat, v);
+                at
+            }
+            Scheme::Inconsistent | Scheme::Unlock | Scheme::AtomicCas => {
+                let at = self.clock();
+                build(&self.data, u_hat, v);
+                at
+            }
+            Scheme::Seqlock => loop {
+                let v1 = self.version.load(Ordering::Acquire);
+                if v1 % 2 == 0 {
+                    let at = self.clock();
+                    build(&self.data, u_hat, v);
+                    std::sync::atomic::fence(Ordering::Acquire);
+                    if self.version.load(Ordering::Acquire) == v1 {
+                        return at;
+                    }
+                }
+                std::hint::spin_loop();
+            },
+        }
+    }
+
+    /// Apply `u ← u − η·v` under the scheme's discipline. Returns the clock
+    /// value *after* this update (the update's own index m+1).
+    pub fn apply_step(&self, v: &[f32], eta: f32) -> u64 {
+        debug_assert_eq!(v.len(), self.dim());
+        match self.scheme {
+            Scheme::Consistent | Scheme::Inconsistent => {
+                let _g = self.lock.lock().unwrap();
+                self.data.axpy_racy_bulk(-eta, v); // safe: under the lock
+                self.clock.fetch_add(1, Ordering::Relaxed) + 1
+            }
+            Scheme::Unlock => {
+                self.data.axpy_racy_bulk(-eta, v); // racy by design
+                self.clock.fetch_add(1, Ordering::Relaxed) + 1
+            }
+            Scheme::AtomicCas => {
+                for (j, &vj) in v.iter().enumerate() {
+                    self.data.add_cas(j, -eta * vj);
+                }
+                self.clock.fetch_add(1, Ordering::Relaxed) + 1
+            }
+            Scheme::Seqlock => {
+                let _g = self.lock.lock().unwrap();
+                let ver = self.version.load(Ordering::Relaxed);
+                self.version.store(ver + 1, Ordering::Release);
+                std::sync::atomic::fence(Ordering::Release);
+                self.data.axpy_racy_bulk(-eta, v);
+                self.version.store(ver + 2, Ordering::Release);
+                self.clock.fetch_add(1, Ordering::Relaxed) + 1
+            }
+        }
+    }
+
+    /// Sparse-plus-dense fused step used by the optimized Hogwild! path:
+    /// u ← (appropriate discipline) u − η·(r·x_i + λ·û_local).
+    /// The dense ridge part comes from the caller's local read; only the
+    /// sparse coordinates and the dense decay stream touch shared memory.
+    pub fn apply_sgd_step(
+        &self,
+        row: crate::linalg::SparseRow<'_>,
+        r: f32,
+        lam: f32,
+        local: &[f32],
+        eta: f32,
+    ) -> u64 {
+        let dense = |data: &AtomicF32Vec| {
+            // dense ridge decay from the local snapshot (bulk: no per-
+            // element bounds checks — perf iteration 2)
+            data.axpy_racy_bulk(-eta * lam, local);
+            row.axpy_into_atomic_racy(-eta * r, data);
+        };
+        match self.scheme {
+            Scheme::Consistent | Scheme::Inconsistent | Scheme::Seqlock => {
+                let _g = self.lock.lock().unwrap();
+                if self.scheme == Scheme::Seqlock {
+                    let ver = self.version.load(Ordering::Relaxed);
+                    self.version.store(ver + 1, Ordering::Release);
+                    std::sync::atomic::fence(Ordering::Release);
+                    dense(&self.data);
+                    self.version.store(ver + 2, Ordering::Release);
+                } else {
+                    dense(&self.data);
+                }
+                self.clock.fetch_add(1, Ordering::Relaxed) + 1
+            }
+            Scheme::Unlock => {
+                dense(&self.data);
+                self.clock.fetch_add(1, Ordering::Relaxed) + 1
+            }
+            Scheme::AtomicCas => {
+                for (j, &uj) in local.iter().enumerate() {
+                    self.data.add_cas(j, -eta * lam * uj);
+                }
+                for (k, &j) in row.indices.iter().enumerate() {
+                    self.data.add_cas(j as usize, -eta * r * row.values[k]);
+                }
+                self.clock.fetch_add(1, Ordering::Relaxed) + 1
+            }
+        }
+    }
+
+    /// Unconditional snapshot (epoch boundaries: all workers joined).
+    pub fn snapshot(&self) -> Vec<f32> {
+        self.data.to_vec()
+    }
+
+    /// Unconditional store (epoch boundaries).
+    pub fn store(&self, w: &[f32]) {
+        self.data.write_from(w);
+    }
+}
+
+impl crate::linalg::SparseRow<'_> {
+    /// Scatter a·x_i into an atomic vector with racy adds (caller provides
+    /// the discipline).
+    #[inline]
+    pub fn axpy_into_atomic_racy(&self, a: f32, data: &AtomicF32Vec) {
+        for (k, &j) in self.indices.iter().enumerate() {
+            data.add_racy(j as usize, a * self.values[k]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn read_write_all_schemes() {
+        for scheme in [
+            Scheme::Consistent,
+            Scheme::Inconsistent,
+            Scheme::Unlock,
+            Scheme::Seqlock,
+            Scheme::AtomicCas,
+        ] {
+            let p = SharedParams::new(&[1.0, 2.0, 3.0], scheme);
+            let mut buf = vec![0.0; 3];
+            let at = p.read_into(&mut buf);
+            assert_eq!(at, 0);
+            assert_eq!(buf, vec![1.0, 2.0, 3.0]);
+            let m = p.apply_step(&[1.0, 0.0, -1.0], 0.5);
+            assert_eq!(m, 1);
+            p.read_into(&mut buf);
+            assert_eq!(buf, vec![0.5, 2.0, 3.5]);
+            assert_eq!(p.clock(), 1);
+        }
+    }
+
+    #[test]
+    fn locked_schemes_lose_no_updates() {
+        // Consistent/Inconsistent/AtomicCas updates are exact even under
+        // thread interleaving; Unlock may lose updates (not asserted).
+        for scheme in [Scheme::Consistent, Scheme::Inconsistent, Scheme::AtomicCas, Scheme::Seqlock]
+        {
+            let p = Arc::new(SharedParams::new(&[0.0], scheme));
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let p = p.clone();
+                    std::thread::spawn(move || {
+                        for _ in 0..2_500 {
+                            p.apply_step(&[-1.0], 1.0); // u += 1
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(p.snapshot()[0], 10_000.0, "{scheme:?}");
+            assert_eq!(p.clock(), 10_000);
+        }
+    }
+
+    #[test]
+    fn sgd_step_matches_dense_apply() {
+        let ds_idx = [0u32, 2];
+        let ds_val = [2.0f32, -1.0];
+        let row = crate::linalg::SparseRow { indices: &ds_idx, values: &ds_val };
+        let init = [1.0f32, 2.0, 3.0];
+        for scheme in [Scheme::Inconsistent, Scheme::Unlock, Scheme::AtomicCas] {
+            let p = SharedParams::new(&init, scheme);
+            let mut local = vec![0.0; 3];
+            p.read_into(&mut local);
+            p.apply_sgd_step(row, 0.5, 0.1, &local, 0.2);
+            // expected: u -= 0.2*(0.5*x + 0.1*u_local)
+            let want = [
+                1.0 - 0.2 * (0.5 * 2.0 + 0.1 * 1.0),
+                2.0 - 0.2 * (0.1 * 2.0),
+                3.0 - 0.2 * (0.5 * -1.0 + 0.1 * 3.0),
+            ];
+            let got = p.snapshot();
+            for j in 0..3 {
+                assert!((got[j] - want[j]).abs() < 1e-6, "{scheme:?} coord {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_read_build_matches_separate_passes() {
+        // kept for the §Perf record (iteration 1, reverted on the hot path)
+        // — must stay numerically identical to the two-pass form
+        let init = [0.5f32, -1.0, 2.0, 0.25];
+        let u0 = [0.1f32, 0.2, 0.3, 0.4];
+        let mu = [1.0f32, -1.0, 0.5, 0.0];
+        for scheme in [Scheme::Consistent, Scheme::Inconsistent, Scheme::Unlock, Scheme::Seqlock]
+        {
+            let p = SharedParams::new(&init, scheme);
+            let mut u_hat = vec![0.0f32; 4];
+            let mut v = vec![0.0f32; 4];
+            let at = p.read_and_build_svrg(&u0, &mu, 0.01, &mut u_hat, &mut v);
+            assert_eq!(at, 0);
+            assert_eq!(u_hat, init);
+            for j in 0..4 {
+                let want = 0.01 * (init[j] - u0[j]) + mu[j];
+                assert!((v[j] - want).abs() < 1e-7, "{scheme:?} coord {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn clock_monotone_and_read_clock_bounded() {
+        let p = SharedParams::new(&[0.0; 8], Scheme::Inconsistent);
+        let mut buf = vec![0.0; 8];
+        for k in 0..10 {
+            let at = p.read_into(&mut buf);
+            assert!(at <= p.clock());
+            let m = p.apply_step(&vec![0.1; 8], 0.01);
+            assert_eq!(m, k + 1);
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! CSR dataset container for problem (1): instances x_i ∈ R^d (sparse),
+//! labels y_i ∈ {−1, +1}.
+
+use crate::linalg::SparseRow;
+
+/// Immutable CSR training set. `indptr` has n+1 entries; row i occupies
+/// `indices[indptr[i]..indptr[i+1]]` / `values[...]`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub indptr: Vec<u64>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+    pub labels: Vec<f32>,
+    pub dim: usize,
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of non-zeros: nnz / (n·d).
+    pub fn density(&self) -> f64 {
+        if self.n() == 0 || self.dim == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.n() as f64 * self.dim as f64)
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> SparseRow<'_> {
+        let lo = self.indptr[i] as usize;
+        let hi = self.indptr[i + 1] as usize;
+        SparseRow { indices: &self.indices[lo..hi], values: &self.values[lo..hi] }
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> f32 {
+        self.labels[i]
+    }
+
+    /// Build from per-row (indices, values) + labels, validating invariants.
+    pub fn from_rows(
+        rows: Vec<(Vec<u32>, Vec<f32>)>,
+        labels: Vec<f32>,
+        dim: usize,
+        name: &str,
+    ) -> Result<Self, String> {
+        if rows.len() != labels.len() {
+            return Err(format!("{} rows but {} labels", rows.len(), labels.len()));
+        }
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0u64);
+        for (r, (idx, val)) in rows.into_iter().enumerate() {
+            if idx.len() != val.len() {
+                return Err(format!("row {r}: {} indices vs {} values", idx.len(), val.len()));
+            }
+            // indices must be strictly increasing and < dim
+            for k in 0..idx.len() {
+                if idx[k] as usize >= dim {
+                    return Err(format!("row {r}: index {} >= dim {dim}", idx[k]));
+                }
+                if k > 0 && idx[k] <= idx[k - 1] {
+                    return Err(format!("row {r}: indices not strictly increasing"));
+                }
+            }
+            indices.extend_from_slice(&idx);
+            values.extend_from_slice(&val);
+            indptr.push(indices.len() as u64);
+        }
+        for (i, &y) in labels.iter().enumerate() {
+            if y != 1.0 && y != -1.0 {
+                return Err(format!("label {i} = {y}, want ±1"));
+            }
+        }
+        Ok(Dataset { indptr, indices, values, labels, dim, name: name.to_string() })
+    }
+
+    /// L2-normalize every row in place (standard preprocessing for the
+    /// LibSVM text datasets; bounds the per-instance Lipschitz constant by
+    /// 0.25 + λ — see `objective::lipschitz`).
+    pub fn l2_normalize_rows(&mut self) {
+        for i in 0..self.n() {
+            let lo = self.indptr[i] as usize;
+            let hi = self.indptr[i + 1] as usize;
+            let sq: f32 = self.values[lo..hi].iter().map(|v| v * v).sum();
+            if sq > 0.0 {
+                let inv = 1.0 / sq.sqrt();
+                for v in &mut self.values[lo..hi] {
+                    *v *= inv;
+                }
+            }
+        }
+    }
+
+    /// Max row ‖x_i‖² — the data term in the Lipschitz bound.
+    pub fn max_row_sq_norm(&self) -> f32 {
+        (0..self.n()).map(|i| self.row(i).sq_norm()).fold(0.0, f32::max)
+    }
+
+    /// Densify (tests / XLA dense-path bridging only — O(n·d)).
+    pub fn to_dense(&self) -> Vec<Vec<f32>> {
+        (0..self.n()).map(|i| self.row(i).to_dense(self.dim)).collect()
+    }
+
+    /// One-line Table-1-style description.
+    pub fn describe(&self) -> String {
+        format!(
+            "{}: n={} d={} nnz={} density={:.4}%",
+            self.name,
+            self.n(),
+            self.dim,
+            self.nnz(),
+            self.density() * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::from_rows(
+            vec![
+                (vec![0, 2], vec![1.0, 2.0]),
+                (vec![1], vec![-3.0]),
+                (vec![], vec![]),
+            ],
+            vec![1.0, -1.0, 1.0],
+            4,
+            "tiny",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn shape_accessors() {
+        let d = tiny();
+        assert_eq!(d.n(), 3);
+        assert_eq!(d.nnz(), 3);
+        assert_eq!(d.dim, 4);
+        assert_eq!(d.row(0).nnz(), 2);
+        assert_eq!(d.row(2).nnz(), 0);
+        assert!((d.density() - 3.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_rows() {
+        assert!(Dataset::from_rows(
+            vec![(vec![5], vec![1.0])],
+            vec![1.0],
+            4,
+            "bad"
+        )
+        .is_err());
+        assert!(Dataset::from_rows(
+            vec![(vec![1, 1], vec![1.0, 2.0])],
+            vec![1.0],
+            4,
+            "dup"
+        )
+        .is_err());
+        assert!(Dataset::from_rows(vec![(vec![0], vec![1.0])], vec![0.5], 4, "lbl").is_err());
+        assert!(Dataset::from_rows(vec![], vec![1.0], 4, "count").is_err());
+    }
+
+    #[test]
+    fn normalize_rows() {
+        let mut d = tiny();
+        d.l2_normalize_rows();
+        assert!((d.row(0).sq_norm() - 1.0).abs() < 1e-6);
+        assert!((d.row(1).sq_norm() - 1.0).abs() < 1e-6);
+        assert_eq!(d.row(2).sq_norm(), 0.0); // empty row untouched
+        assert!((d.max_row_sq_norm() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn densify_matches_rows() {
+        let d = tiny();
+        let m = d.to_dense();
+        assert_eq!(m[0], vec![1.0, 0.0, 2.0, 0.0]);
+        assert_eq!(m[1], vec![0.0, -3.0, 0.0, 0.0]);
+        assert_eq!(m[2], vec![0.0; 4]);
+    }
+}

@@ -1,0 +1,159 @@
+//! LibSVM text-format parser/writer.
+//!
+//! The paper's datasets (rcv1, real-sim, news20) ship in this format from
+//! the LibSVM site. The host has no network, so real files are optional:
+//! if `data/<name>` exists we use it; otherwise `synthetic::paper_dataset`
+//! provides a statistically matched stand-in (DESIGN.md §2).
+//!
+//! Format, one instance per line:  `<label> <idx>:<val> <idx>:<val> ...`
+//! with 1-based, strictly increasing indices. Labels accepted: ±1, 0/1
+//! (mapped to ∓1), or 2-class {1,2} style (mapped 1→+1, 2→−1).
+
+use std::io::{BufRead, BufReader, Read, Write};
+
+use super::dataset::Dataset;
+
+/// Parse from any reader. `dim_hint` lets callers force a feature count
+/// (Table 1 dims include trailing all-zero features the file never names).
+pub fn parse<R: Read>(r: R, name: &str, dim_hint: Option<usize>) -> Result<Dataset, String> {
+    let reader = BufReader::new(r);
+    let mut rows: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
+    let mut labels = Vec::new();
+    let mut max_idx = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let lbl_tok = parts.next().ok_or_else(|| format!("line {}: empty", lineno + 1))?;
+        let raw: f32 = lbl_tok
+            .parse()
+            .map_err(|_| format!("line {}: bad label '{lbl_tok}'", lineno + 1))?;
+        let label = normalize_label(raw)
+            .ok_or_else(|| format!("line {}: unsupported label {raw}", lineno + 1))?;
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for tok in parts {
+            let (i_s, v_s) = tok
+                .split_once(':')
+                .ok_or_else(|| format!("line {}: bad pair '{tok}'", lineno + 1))?;
+            let i: usize = i_s
+                .parse()
+                .map_err(|_| format!("line {}: bad index '{i_s}'", lineno + 1))?;
+            if i == 0 {
+                return Err(format!("line {}: libsvm indices are 1-based", lineno + 1));
+            }
+            let v: f32 = v_s
+                .parse()
+                .map_err(|_| format!("line {}: bad value '{v_s}'", lineno + 1))?;
+            let zero_based = (i - 1) as u32;
+            if let Some(&last) = idx.last() {
+                if zero_based <= last {
+                    return Err(format!("line {}: indices not increasing", lineno + 1));
+                }
+            }
+            max_idx = max_idx.max(i - 1);
+            idx.push(zero_based);
+            val.push(v);
+        }
+        rows.push((idx, val));
+        labels.push(label);
+    }
+    if rows.is_empty() {
+        return Err("no instances".into());
+    }
+    let dim = match dim_hint {
+        Some(d) if d > max_idx => d,
+        Some(d) => {
+            return Err(format!("dim_hint {d} <= max index {max_idx}"));
+        }
+        None => max_idx + 1,
+    };
+    Dataset::from_rows(rows, labels, dim, name)
+}
+
+fn normalize_label(raw: f32) -> Option<f32> {
+    match raw {
+        r if r == 1.0 => Some(1.0),
+        r if r == -1.0 => Some(-1.0),
+        r if r == 0.0 => Some(-1.0), // {0,1} convention
+        r if r == 2.0 => Some(-1.0), // {1,2} convention
+        _ => None,
+    }
+}
+
+/// Load from a filesystem path.
+pub fn load_file(path: &str, dim_hint: Option<usize>) -> Result<Dataset, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("{path}: {e}"))?;
+    let name = std::path::Path::new(path)
+        .file_name()
+        .and_then(|s| s.to_str())
+        .unwrap_or("dataset");
+    parse(f, name, dim_hint)
+}
+
+/// Serialize back to LibSVM text (round-trip tests, dataset export).
+pub fn write<W: Write>(ds: &Dataset, w: &mut W) -> std::io::Result<()> {
+    for i in 0..ds.n() {
+        let row = ds.row(i);
+        write!(w, "{}", if ds.label(i) > 0.0 { "+1" } else { "-1" })?;
+        for k in 0..row.nnz() {
+            write!(w, " {}:{}", row.indices[k] + 1, row.values[k])?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "+1 1:0.5 3:1.25\n-1 2:2.0\n# comment line\n\n+1 1:1.0 # trailing\n";
+
+    #[test]
+    fn parses_sample() {
+        let ds = parse(SAMPLE.as_bytes(), "sample", None).unwrap();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.dim, 3);
+        assert_eq!(ds.labels, vec![1.0, -1.0, 1.0]);
+        assert_eq!(ds.row(0).indices, &[0, 2]);
+        assert_eq!(ds.row(0).values, &[0.5, 1.25]);
+        assert_eq!(ds.row(1).indices, &[1]);
+    }
+
+    #[test]
+    fn dim_hint_expands_but_never_shrinks() {
+        let ds = parse(SAMPLE.as_bytes(), "s", Some(10)).unwrap();
+        assert_eq!(ds.dim, 10);
+        assert!(parse(SAMPLE.as_bytes(), "s", Some(2)).is_err());
+    }
+
+    #[test]
+    fn label_conventions() {
+        let ds = parse("0 1:1\n1 1:1\n2 1:1\n".as_bytes(), "s", None).unwrap();
+        assert_eq!(ds.labels, vec![-1.0, 1.0, -1.0]);
+        assert!(parse("3 1:1\n".as_bytes(), "s", None).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in ["+1 0:1.0\n", "+1 2:1 1:1\n", "+1 x:1\n", "+1 1:y\n", "+1 11\n", ""] {
+            assert!(parse(bad.as_bytes(), "s", None).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        let ds = parse(SAMPLE.as_bytes(), "sample", None).unwrap();
+        let mut buf = Vec::new();
+        write(&ds, &mut buf).unwrap();
+        let ds2 = parse(buf.as_slice(), "sample", Some(ds.dim)).unwrap();
+        assert_eq!(ds.labels, ds2.labels);
+        assert_eq!(ds.indices, ds2.indices);
+        assert_eq!(ds.values, ds2.values);
+        assert_eq!(ds.indptr, ds2.indptr);
+    }
+}

@@ -1,0 +1,42 @@
+//! # AsySVRG — Fast Asynchronous Parallel Stochastic Gradient Descent
+//!
+//! Production-grade reproduction of Zhao & Li (2015), built as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the asynchronous multicore coordinator: the
+//!   paper's consistent / inconsistent / unlock access schemes
+//!   ([`coordinator`]), the Hogwild! baseline, a deterministic p-core
+//!   discrete-event simulator ([`simcore`]) standing in for the paper's
+//!   12-core testbed, the executable convergence theory ([`theory`]), and
+//!   the harness regenerating every table and figure ([`bench`]).
+//! * **L2/L1 (python/, build-time only)** — the JAX model and Pallas
+//!   kernels, AOT-lowered to HLO text and executed from rust through PJRT
+//!   ([`runtime`]); python never runs on the request path.
+//!
+//! Substrates built from scratch (the offline vendor set carries only the
+//! xla closure): RNG ([`util::rng`]), JSON ([`util::json`]), CLI ([`cli`]),
+//! property testing ([`propcheck`]), datasets ([`data`]), linear algebra +
+//! shared-memory vectors ([`linalg`]), objectives ([`objective`]).
+//!
+//! Quickstart:
+//! ```no_run
+//! use asysvrg::{config::RunConfig, coordinator, data, objective::Objective};
+//! let ds = data::resolve("rcv1", 0.05, 42).unwrap();
+//! let obj = Objective::paper(ds);
+//! let r = coordinator::run(&obj, &RunConfig::default(), f64::NEG_INFINITY);
+//! println!("final loss {:.6}", r.final_loss());
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod objective;
+pub mod optim;
+pub mod propcheck;
+pub mod runtime;
+pub mod simcore;
+pub mod theory;
+pub mod util;

@@ -1,0 +1,187 @@
+//! The shared-memory parameter vector substrate.
+//!
+//! The paper's three access schemes all store `u` in shared memory and
+//! differ only in the locking discipline around reads/updates (§4.1, §4.2,
+//! §5.2). Rust's aliasing rules make a plain `Vec<f32>` unusable for the
+//! lock-free schemes, so the canonical representation is a vector of
+//! `AtomicU32` holding f32 bit patterns, with relaxed loads/stores: that is
+//! exactly the memory model Hogwild!-style code assumes on x86 (word-sized
+//! reads/writes are atomic; no ordering guarantees across words — "mixed
+//! age" reads, eq. 10, happen by design).
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Dense f32 vector with per-coordinate atomic access.
+pub struct AtomicF32Vec {
+    data: Vec<AtomicU32>,
+}
+
+impl AtomicF32Vec {
+    pub fn new(dim: usize) -> Self {
+        Self::from_value(dim, 0.0)
+    }
+
+    pub fn from_value(dim: usize, v: f32) -> Self {
+        AtomicF32Vec { data: (0..dim).map(|_| AtomicU32::new(v.to_bits())).collect() }
+    }
+
+    pub fn from_slice(xs: &[f32]) -> Self {
+        AtomicF32Vec { data: xs.iter().map(|v| AtomicU32::new(v.to_bits())).collect() }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Relaxed per-coordinate read — the lock-free read of the
+    /// inconsistent/unlock schemes.
+    #[inline]
+    pub fn get(&self, i: usize) -> f32 {
+        f32::from_bits(self.data[i].load(Ordering::Relaxed))
+    }
+
+    /// Relaxed per-coordinate write.
+    #[inline]
+    pub fn set(&self, i: usize, v: f32) {
+        self.data[i].store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Racy read-modify-write: load, add, store as three separate relaxed
+    /// operations. Concurrent adds may LOSE updates — this is precisely the
+    /// unlock / Hogwild! semantics the paper benchmarks, kept deliberately.
+    #[inline]
+    pub fn add_racy(&self, i: usize, delta: f32) {
+        let cur = f32::from_bits(self.data[i].load(Ordering::Relaxed));
+        self.data[i].store((cur + delta).to_bits(), Ordering::Relaxed);
+    }
+
+    /// Linearizable per-coordinate add via a CAS loop (the atomic-update
+    /// strategy of PASSCoDe [3], provided for the ablation bench).
+    #[inline]
+    pub fn add_cas(&self, i: usize, delta: f32) {
+        let cell = &self.data[i];
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            let next = (f32::from_bits(cur) + delta).to_bits();
+            match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Bulk unlocked snapshot — coordinates may have mixed ages.
+    /// (zip, not indexing: saves a bounds check per element on the hot path)
+    pub fn read_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.len());
+        for (o, cell) in out.iter_mut().zip(self.data.iter()) {
+            *o = f32::from_bits(cell.load(Ordering::Relaxed));
+        }
+    }
+
+    /// Bulk unlocked write.
+    pub fn write_from(&self, src: &[f32]) {
+        debug_assert_eq!(src.len(), self.len());
+        for (&v, cell) in src.iter().zip(self.data.iter()) {
+            cell.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Bulk racy axpy: u[j] += a·v[j] for all j, as relaxed load/store
+    /// pairs (the unlock-scheme dense update — perf iteration 2: zip keeps
+    /// the loop free of bounds checks; each element is still word-atomic).
+    /// Bulk racy axpy: u[j] += a·v[j], relaxed word-atomic per element.
+    /// NOTE (perf iteration 3, EXPERIMENTS.md §Perf): a 4-way manual unroll
+    /// was tried and REVERTED — no measurable gain (the CPU already
+    /// overlaps the independent load/store pairs) and the zip form is what
+    /// LLVM handles best.
+    #[inline]
+    pub fn axpy_racy_bulk(&self, a: f32, v: &[f32]) {
+        debug_assert_eq!(v.len(), self.len());
+        for (&vj, cell) in v.iter().zip(self.data.iter()) {
+            let cur = f32::from_bits(cell.load(Ordering::Relaxed));
+            cell.store((cur + a * vj).to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Owned snapshot.
+    pub fn to_vec(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.len()];
+        self.read_into(&mut out);
+        out
+    }
+}
+
+impl std::fmt::Debug for AtomicF32Vec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AtomicF32Vec(len={})", self.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn get_set_roundtrip() {
+        let v = AtomicF32Vec::from_slice(&[1.0, -2.5, 3.25]);
+        assert_eq!(v.get(1), -2.5);
+        v.set(1, 7.5);
+        assert_eq!(v.get(1), 7.5);
+        assert_eq!(v.to_vec(), vec![1.0, 7.5, 3.25]);
+    }
+
+    #[test]
+    fn cas_add_exact_under_contention() {
+        let v = Arc::new(AtomicF32Vec::new(1));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let v = v.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        v.add_cas(0, 1.0);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        // CAS adds are linearizable: no lost updates even on 1 core.
+        assert_eq!(v.get(0), 40_000.0);
+    }
+
+    #[test]
+    fn racy_add_single_thread_exact() {
+        let v = AtomicF32Vec::new(2);
+        for _ in 0..100 {
+            v.add_racy(0, 0.5);
+        }
+        assert_eq!(v.get(0), 50.0);
+        assert_eq!(v.get(1), 0.0);
+    }
+
+    #[test]
+    fn bulk_ops() {
+        let v = AtomicF32Vec::new(5);
+        v.write_from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        let mut out = vec![0.0; 5];
+        v.read_into(&mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn nan_bits_roundtrip() {
+        let v = AtomicF32Vec::new(1);
+        v.set(0, f32::NAN);
+        assert!(v.get(0).is_nan());
+        v.set(0, f32::NEG_INFINITY);
+        assert_eq!(v.get(0), f32::NEG_INFINITY);
+    }
+}

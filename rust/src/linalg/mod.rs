@@ -1,0 +1,12 @@
+//! Linear-algebra substrate: dense BLAS-1 kernels, sparse CSR rows, and the
+//! shared-memory parameter-vector representations the paper's access
+//! schemes are built on (S9/S10 in DESIGN.md).
+
+pub mod atomic_vec;
+pub mod dense;
+pub mod sparse;
+pub mod versioned;
+
+pub use atomic_vec::AtomicF32Vec;
+pub use sparse::SparseRow;
+pub use versioned::SeqlockVec;

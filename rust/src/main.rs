@@ -1,0 +1,383 @@
+//! `repro` — the AsySVRG leader binary.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation (DESIGN.md §5):
+//!
+//! * `datasets`          — Table 1 (dataset statistics)
+//! * `run`               — one configured run (threads or simulated engine)
+//! * `table2`            — Table 2: lock vs unlock schemes on rcv1
+//! * `table3`            — Table 3: time-to-gap, 4 methods × 3 datasets
+//! * `fig1-speedup`      — Figure 1 left column
+//! * `fig1-convergence`  — Figure 1 right column
+//! * `theory`            — Theorem 1/2 rate table for the run constants
+//! * `calibrate`         — measure this host's simulator cost model
+//! * `e2e`               — XLA-backed dense end-to-end training driver
+
+use asysvrg::bench::{self, report, BenchEnv};
+use asysvrg::cli::Command;
+use asysvrg::config::{Algo, RunConfig, Scheme};
+use asysvrg::coordinator;
+use asysvrg::data::{self, PaperDataset};
+use asysvrg::objective::Objective;
+use asysvrg::simcore::{self, CostModel};
+use asysvrg::theory;
+use asysvrg::util;
+
+fn main() {
+    util::init_logging_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(msg) => {
+            eprintln!("{msg}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn top_usage() -> String {
+    "repro — AsySVRG (Zhao & Li 2015) reproduction\n\n\
+     subcommands:\n\
+     \x20 datasets           print Table 1 dataset statistics\n\
+     \x20 run                run one experiment (threads or sim engine)\n\
+     \x20 table2             regenerate Table 2 (lock vs unlock, rcv1)\n\
+     \x20 table3             regenerate Table 3 (time to gap, 10 threads)\n\
+     \x20 fig1-speedup       regenerate Figure 1 left column\n\
+     \x20 fig1-convergence   regenerate Figure 1 right column\n\
+     \x20 theory             Theorem 1/2 contraction factors\n\
+     \x20 ablation           sweep eta / M / read-model / core-speeds\n\
+     \x20 calibrate          measure simulator cost model on this host\n\
+     \x20 e2e                XLA-backed dense end-to-end training\n\n\
+     `repro <subcommand> --help` for options."
+        .to_string()
+}
+
+fn dispatch(args: &[String]) -> Result<(), String> {
+    let Some(sub) = args.first() else {
+        return Err(top_usage());
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "datasets" => cmd_datasets(rest),
+        "run" => cmd_run(rest),
+        "table2" => cmd_table2(rest),
+        "table3" => cmd_table3(rest),
+        "fig1-speedup" => cmd_fig1_speedup(rest),
+        "fig1-convergence" => cmd_fig1_convergence(rest),
+        "theory" => cmd_theory(rest),
+        "ablation" => cmd_ablation(rest),
+        "calibrate" => cmd_calibrate(rest),
+        "e2e" => cmd_e2e(rest),
+        "--help" | "-h" | "help" => Err(top_usage()),
+        other => Err(format!("unknown subcommand '{other}'\n\n{}", top_usage())),
+    }
+}
+
+fn env_opts(c: Command) -> Command {
+    c.opt("scale", "0.1", "synthetic dataset scale (1.0 = Table 1 sizes)")
+        .opt("seed", "42", "root RNG seed")
+        .opt("eta", "0.4", "AsySVRG step size η")
+        .opt("eta-sgd", "0.4", "Hogwild! initial step γ")
+        .opt("epochs", "60", "epoch budget per run")
+        .opt("gap", "1e-4", "target suboptimality gap")
+        .flag("measured-costs", "calibrate the sim cost model on this host")
+}
+
+fn bench_env(m: &asysvrg::cli::Matches) -> Result<BenchEnv, String> {
+    Ok(BenchEnv {
+        scale: m.f64("scale")?,
+        seed: m.u64("seed")?,
+        costs: if m.flag("measured-costs") {
+            CostModel::calibrate()
+        } else {
+            CostModel::default_host()
+        },
+        eta_svrg: m.f32("eta")?,
+        eta_sgd: m.f32("eta-sgd")?,
+        max_epochs: m.usize("epochs")?,
+        target_gap: m.f64("gap")?,
+    })
+}
+
+fn cmd_datasets(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("datasets", "Table 1: dataset statistics")
+        .opt("scale", "0.1", "synthetic scale")
+        .opt("seed", "42", "seed");
+    let m = cmd.parse(args)?;
+    println!("Table 1 (synthetic stand-ins at scale {}):", m.str("scale"));
+    println!("{:>10} | {:>9} | {:>9} | {:>9} | {:>8}", "dataset", "instances", "features", "nnz", "lambda");
+    for which in PaperDataset::all() {
+        let ds = data::resolve(which.name(), m.f64("scale")?, m.u64("seed")?)?;
+        println!(
+            "{:>10} | {:>9} | {:>9} | {:>9} | {:>8}",
+            which.name(),
+            ds.n(),
+            ds.dim,
+            ds.nnz(),
+            which.lambda()
+        );
+    }
+    println!("\npaper sizes: rcv1 20242x47236, real-sim 72309x20958, news20 19996x1355191");
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<(), String> {
+    let cmd = env_opts(
+        Command::new("run", "run one experiment")
+            .opt("dataset", "rcv1", "rcv1|real-sim|news20|<libsvm path>")
+            .opt("algo", "asysvrg", "asysvrg|hogwild")
+            .opt("scheme", "inconsistent", "consistent|inconsistent|unlock|seqlock|atomic-cas")
+            .opt("threads", "10", "worker threads / simulated cores")
+            .opt("engine", "sim", "sim (simulated p cores) | threads (real OS threads)"),
+    );
+    let m = cmd.parse(args)?;
+    let env = bench_env(&m)?;
+    let ds = data::resolve(m.str("dataset"), env.scale, env.seed)?;
+    println!("{}", ds.describe());
+    let obj = Objective::paper(ds);
+    let cfg = RunConfig {
+        dataset: m.str("dataset").into(),
+        algo: Algo::parse(m.str("algo"))?,
+        scheme: Scheme::parse(m.str("scheme"))?,
+        threads: m.usize("threads")?,
+        eta: if Algo::parse(m.str("algo"))? == Algo::Hogwild { env.eta_sgd } else { env.eta_svrg },
+        epochs: env.max_epochs,
+        target_gap: env.target_gap,
+        seed: env.seed,
+        scale: env.scale,
+        ..Default::default()
+    };
+    println!("{}", cfg.describe());
+    let (_, fstar) = coordinator::asysvrg::solve_fstar(&obj, env.eta_svrg, env.max_epochs * 3, 7);
+    println!("f* = {fstar:.8} (long sequential SVRG)");
+    let r = match m.str("engine") {
+        "threads" => coordinator::run(&obj, &cfg, fstar),
+        "sim" => simcore::sim_run(&obj, &cfg, &env.costs, fstar),
+        e => return Err(format!("unknown engine '{e}'")),
+    };
+    println!("{:>7} {:>12} {:>12} {:>10}", "passes", "loss", "gap", "seconds");
+    for h in &r.history {
+        println!("{:>7.0} {:>12.6} {:>12.3e} {:>10.3}", h.passes, h.loss, h.loss - fstar, h.seconds);
+    }
+    println!(
+        "converged={} epochs={} updates={} max_delay={} mean_delay={:.2}",
+        r.converged, r.epochs_run, r.total_updates, r.max_delay, r.mean_delay
+    );
+    Ok(())
+}
+
+fn cmd_table2(args: &[String]) -> Result<(), String> {
+    let cmd = env_opts(Command::new("table2", "Table 2: lock vs unlock on rcv1"))
+        .opt("threads", "2,4,8,10", "thread counts");
+    let m = cmd.parse(args)?;
+    let env = bench_env(&m)?;
+    let threads = m.usize_list("threads")?;
+    let t = bench::table2(&env, &threads);
+    print!("{}", report::render_table2(&t));
+    let path = report::write_json("table2", &report::table2_json(&t)).map_err(|e| e.to_string())?;
+    println!("json -> {}", path.display());
+    Ok(())
+}
+
+fn cmd_table3(args: &[String]) -> Result<(), String> {
+    let cmd = env_opts(Command::new("table3", "Table 3: time to gap, 4 methods x 3 datasets"))
+        .opt("threads", "10", "thread count")
+        .opt("datasets", "rcv1,real-sim,news20", "comma list");
+    let m = cmd.parse(args)?;
+    let env = bench_env(&m)?;
+    let datasets: Vec<PaperDataset> = m
+        .str("datasets")
+        .split(',')
+        .map(|s| match s.trim() {
+            "rcv1" => Ok(PaperDataset::Rcv1),
+            "real-sim" => Ok(PaperDataset::RealSim),
+            "news20" => Ok(PaperDataset::News20),
+            o => Err(format!("unknown dataset '{o}'")),
+        })
+        .collect::<Result<_, _>>()?;
+    let threads = m.usize("threads")?;
+    let rows = bench::table3(&env, &datasets, threads);
+    print!("{}", report::render_table3(&rows, env.target_gap, threads));
+    let path = report::write_json("table3", &report::table3_json(&rows)).map_err(|e| e.to_string())?;
+    println!("json -> {}", path.display());
+    Ok(())
+}
+
+fn cmd_fig1_speedup(args: &[String]) -> Result<(), String> {
+    let cmd = env_opts(Command::new("fig1-speedup", "Figure 1 left column"))
+        .opt("dataset", "rcv1", "rcv1|real-sim|news20")
+        .opt("threads", "1,2,4,6,8,10", "thread counts");
+    let m = cmd.parse(args)?;
+    let env = bench_env(&m)?;
+    let which = parse_paper_dataset(m.str("dataset"))?;
+    let threads = m.usize_list("threads")?;
+    let series = bench::fig1_speedup(&env, which, &threads);
+    print!("{}", report::render_speedup(which.name(), &series));
+    let path = report::write_json(
+        &format!("fig1_speedup_{}", which.name()),
+        &report::speedup_json(&series),
+    )
+    .map_err(|e| e.to_string())?;
+    println!("json -> {}", path.display());
+    Ok(())
+}
+
+fn cmd_fig1_convergence(args: &[String]) -> Result<(), String> {
+    let cmd = env_opts(Command::new("fig1-convergence", "Figure 1 right column"))
+        .opt("dataset", "rcv1", "rcv1|real-sim|news20")
+        .opt("threads", "10", "thread count");
+    let m = cmd.parse(args)?;
+    let env = bench_env(&m)?;
+    let which = parse_paper_dataset(m.str("dataset"))?;
+    let series = bench::fig1_convergence(&env, which, m.usize("threads")?);
+    print!("{}", report::render_convergence(which.name(), &series));
+    let path = report::write_json(
+        &format!("fig1_convergence_{}", which.name()),
+        &report::convergence_json(&series),
+    )
+    .map_err(|e| e.to_string())?;
+    println!("json -> {}", path.display());
+    Ok(())
+}
+
+fn parse_paper_dataset(s: &str) -> Result<PaperDataset, String> {
+    match s {
+        "rcv1" => Ok(PaperDataset::Rcv1),
+        "real-sim" => Ok(PaperDataset::RealSim),
+        "news20" => Ok(PaperDataset::News20),
+        o => Err(format!("unknown dataset '{o}'")),
+    }
+}
+
+fn cmd_theory(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("theory", "Theorem 1/2 contraction factors")
+        .opt("mu", "1e-4", "strong convexity (= lambda)")
+        .opt("l", "0.2501", "smoothness L")
+        .opt("m-tilde", "40000", "total inner updates per epoch")
+        .opt("taus", "0,1,2,4,8", "delay bounds to tabulate")
+        .opt("etas", "0.4,0.2,0.1,0.05,0.02,0.01", "step sizes to tabulate");
+    let m = cmd.parse(args)?;
+    let mu = m.f64("mu")?;
+    let l = m.f64("l")?;
+    let m_tilde = m.u64("m-tilde")?;
+    let taus = m.usize_list("taus")?;
+    let etas: Vec<f64> = m
+        .str("etas")
+        .split(',')
+        .map(|t| t.trim().parse().map_err(|_| format!("bad eta '{t}'")))
+        .collect::<Result<_, _>>()?;
+    println!("contraction factors α (— = infeasible); μ={mu} L={l} M̃={m_tilde}");
+    println!("{:>8} | {:^33} | {:^33}", "", "Theorem 1 (consistent)", "Theorem 2 (inconsistent)");
+    print!("{:>8} |", "eta\\tau");
+    for &t in &taus {
+        print!(" {t:>7}");
+    }
+    print!(" |");
+    for &t in &taus {
+        print!(" {t:>7}");
+    }
+    println!();
+    for &eta in &etas {
+        print!("{eta:>8} |");
+        for &tau in &taus {
+            let p = theory::RateParams { mu, l, eta, tau: tau as u32, m_tilde };
+            match theory::theorem1_alpha(&p) {
+                Some(r) if r.alpha < 1.0 => print!(" {:>7.3}", r.alpha),
+                Some(_) => print!(" {:>7}", ">1"),
+                None => print!(" {:>7}", "—"),
+            }
+        }
+        print!(" |");
+        for &tau in &taus {
+            let p = theory::RateParams { mu, l, eta, tau: tau as u32, m_tilde };
+            match theory::theorem2_alpha(&p) {
+                Some(r) if r.alpha < 1.0 => print!(" {:>7.3}", r.alpha),
+                Some(_) => print!(" {:>7}", ">1"),
+                None => print!(" {:>7}", "—"),
+            }
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_ablation(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("ablation", "design-choice sweeps on the simulator")
+        .opt("dataset", "rcv1", "rcv1|real-sim|news20")
+        .opt("scale", "0.05", "synthetic scale")
+        .opt("seed", "42", "seed")
+        .opt("threads", "10", "simulated cores")
+        .opt("epochs", "25", "epoch budget per point")
+        .opt(
+            "which",
+            "eta,m,read-model,cores",
+            "comma list of sweeps: eta|m|read-model|cores",
+        );
+    let m = cmd.parse(args)?;
+    let ds = data::resolve(m.str("dataset"), m.f64("scale")?, m.u64("seed")?)?;
+    println!("{}", ds.describe());
+    let obj = Objective::paper(ds);
+    let (_, fstar) = coordinator::asysvrg::solve_fstar(&obj, 0.4, 150, 7);
+    let threads = m.usize("threads")?;
+    let epochs = m.usize("epochs")?;
+    use asysvrg::bench::ablation;
+    for which in m.str("which").split(',') {
+        let (title, pts) = match which.trim() {
+            "eta" => (
+                "step size eta (fixed budget)",
+                ablation::sweep_eta(&obj, fstar, &[0.01, 0.05, 0.1, 0.2, 0.4, 0.8, 1.6], threads, epochs),
+            ),
+            "m" => (
+                "M factor (fixed effective passes)",
+                ablation::sweep_m_factor(&obj, fstar, &[0.5, 1.0, 2.0, 4.0, 8.0], threads, 3.0 * epochs as f64),
+            ),
+            "read-model" => (
+                "read model: point vs mixed-age window (eq. 10)",
+                ablation::sweep_read_model(&obj, fstar, threads, epochs),
+            ),
+            "cores" => (
+                "core speeds (Assumption 3 stress)",
+                ablation::sweep_core_speeds(&obj, fstar, threads, epochs),
+            ),
+            o => return Err(format!("unknown sweep '{o}'")),
+        };
+        print!("{}", ablation::render(title, &pts));
+        let j = asysvrg::util::json::Json::Arr(pts.iter().map(|p| p.to_json()).collect());
+        let path = report::write_json(&format!("ablation_{}", which.trim()), &j)
+            .map_err(|e| e.to_string())?;
+        println!("json -> {}\n", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(_args: &[String]) -> Result<(), String> {
+    println!("measuring per-op costs on this host ...");
+    let c = CostModel::calibrate();
+    println!("read_coord_ns   = {:.3}", c.read_coord_ns);
+    println!("write_coord_ns  = {:.3}", c.write_coord_ns);
+    println!("sparse_nnz_ns   = {:.3}", c.sparse_nnz_ns);
+    println!("dense_coord_ns  = {:.3}", c.dense_coord_ns);
+    println!("lock_ns         = {:.1}", c.lock_ns);
+    let d = CostModel::default_host();
+    println!(
+        "frozen default_host(): read {:.3} write {:.3} sparse {:.3} dense {:.3} lock {:.1}",
+        d.read_coord_ns, d.write_coord_ns, d.sparse_nnz_ns, d.dense_coord_ns, d.lock_ns
+    );
+    Ok(())
+}
+
+fn cmd_e2e(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("e2e", "XLA-backed dense end-to-end training")
+        .opt("n", "1024", "dense instances")
+        .opt("epochs", "12", "SVRG epochs")
+        .opt("eta", "0.5", "step size")
+        .opt("seed", "42", "seed");
+    let m = cmd.parse(args)?;
+    asysvrg::bench::e2e::run_e2e(
+        m.usize("n")?,
+        m.usize("epochs")?,
+        m.f32("eta")?,
+        m.u64("seed")?,
+    )
+    .map_err(|e| format!("{e:#}"))
+}

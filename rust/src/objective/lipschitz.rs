@@ -1,0 +1,77 @@
+//! Smoothness/convexity constants for the theory module (Assumptions 1–2).
+//!
+//! For a margin loss φ with |φ″| ≤ c and f_i(w) = φ(y_i x_iᵀ w) + (λ/2)‖w‖²:
+//!   ‖∇f_i(a) − ∇f_i(b)‖ ≤ (c‖x_i‖² + λ)‖a − b‖
+//! so L = c·maxᵢ‖x_i‖² + λ satisfies Assumption 1, and the ridge gives
+//! μ = λ for Assumption 2. With L2-normalized rows (our preprocessing),
+//! L = c + λ — e.g. the paper's logistic setup has L ≈ 0.2501, μ = 1e-4,
+//! condition number L/μ ≈ 2.5e3.
+
+use super::Objective;
+
+/// Upper bound on the per-instance gradient Lipschitz constant L.
+pub fn lipschitz_bound(obj: &Objective) -> f32 {
+    obj.kind.curvature() * obj.data.max_row_sq_norm() + obj.lam
+}
+
+/// Condition number κ = L/μ.
+pub fn condition_number(obj: &Objective) -> f64 {
+    lipschitz_bound(obj) as f64 / obj.strong_convexity() as f64
+}
+
+/// Empirical check of Assumption 1 along random coordinate pairs:
+/// returns max over trials of ‖∇f_i(a)−∇f_i(b)‖ / ‖a−b‖ (must be ≤ L).
+pub fn empirical_lipschitz(obj: &Objective, trials: usize, seed: u64) -> f32 {
+    use crate::util::rng::Pcg32;
+    let mut rng = Pcg32::new(seed, 0x11b);
+    let d = obj.dim();
+    let mut worst = 0.0f32;
+    let mut ga = vec![0.0f32; d];
+    let mut gb = vec![0.0f32; d];
+    for _ in 0..trials {
+        let i = rng.below(obj.n());
+        let a: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32 * 0.5).collect();
+        let b: Vec<f32> = a.iter().map(|&x| x + rng.gaussian() as f32 * 0.1).collect();
+        obj.grad_i_into(&a, i, &mut ga);
+        obj.grad_i_into(&b, i, &mut gb);
+        let num = crate::linalg::dense::dist2(&ga, &gb);
+        let den = crate::linalg::dense::dist2(&a, &b);
+        if den > 1e-12 {
+            worst = worst.max((num / den) as f32);
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::objective::LossKind;
+    use std::sync::Arc;
+
+    #[test]
+    fn normalized_logistic_constants() {
+        let ds = SyntheticSpec::new("t", 128, 64, 8, 1).generate();
+        let o = Objective::paper(Arc::new(ds));
+        let l = lipschitz_bound(&o);
+        assert!((l - (0.25 + 1e-4)).abs() < 1e-3, "L={l}");
+        assert_eq!(o.strong_convexity(), 1e-4);
+        assert!((condition_number(&o) - l as f64 / 1e-4).abs() < 1.0);
+    }
+
+    #[test]
+    fn empirical_never_exceeds_bound() {
+        let ds = SyntheticSpec::new("t", 64, 32, 6, 2).generate();
+        for kind in [LossKind::Logistic, LossKind::SquaredHinge, LossKind::Squared] {
+            let o = Objective::new(Arc::new(ds.clone()), 1e-3, kind);
+            let emp = empirical_lipschitz(&o, 200, 3);
+            let bound = lipschitz_bound(&o);
+            assert!(
+                emp <= bound * 1.02,
+                "{}: empirical {emp} > bound {bound}",
+                kind.name()
+            );
+        }
+    }
+}

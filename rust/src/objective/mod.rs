@@ -1,0 +1,326 @@
+//! Objectives (S12): regularized empirical risk over linear models,
+//! problem (1) of the paper:
+//!
+//!   f(w) = (1/n) Σ φ(y_i · x_iᵀ w) + (λ/2)‖w‖²,   f_i(w) = φ(m_i) + (λ/2)‖w‖²
+//!
+//! The paper evaluates the logistic loss; smoothed (squared) hinge and
+//! squared loss are included because the paper's intro motivates both SVMs
+//! and general ERM, and they exercise the same code paths with different
+//! (L, μ) constants.
+//!
+//! The decomposition every optimizer here exploits:
+//!   ∇f_i(w) = r_i(w) · x_i + λ w,   r_i(w) = φ′(y_i x_iᵀ w) · y_i
+//! — an O(nnz) sparse dot for the margin, a scalar residual, and a dense
+//! ridge term. The SVRG direction then needs only (r − r₀)·x_i sparse work
+//! plus dense λ(u−u₀)+μ̄ streams (see `coordinator::worker`).
+
+pub mod lipschitz;
+
+use std::sync::Arc;
+
+use crate::data::Dataset;
+use crate::linalg::sparse;
+
+/// Margin-loss family φ.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossKind {
+    /// φ(m) = log(1 + e^{−m}) — the paper's experimental objective.
+    Logistic,
+    /// φ(m) = max(0, 1−m)² — smoothed hinge (SVM, differentiable).
+    SquaredHinge,
+    /// φ(m) = ½(1−m)² — least squares on the margin (ridge regression).
+    Squared,
+}
+
+impl LossKind {
+    /// Loss value at margin m (f64: summed over up to ~10⁵ instances).
+    #[inline]
+    pub fn phi(&self, m: f64) -> f64 {
+        match self {
+            LossKind::Logistic => m.max(0.0) - m + (-m.abs()).exp().ln_1p(),
+            LossKind::SquaredHinge => {
+                let t = (1.0 - m).max(0.0);
+                t * t
+            }
+            LossKind::Squared => 0.5 * (1.0 - m) * (1.0 - m),
+        }
+    }
+
+    /// Derivative dφ/dm at margin m.
+    #[inline]
+    pub fn dphi(&self, m: f32) -> f32 {
+        match self {
+            // −σ(−m), computed via the stable tanh form
+            LossKind::Logistic => -(0.5 * (1.0 - (0.5 * m).tanh())),
+            LossKind::SquaredHinge => -2.0 * (1.0 - m).max(0.0),
+            LossKind::Squared => m - 1.0,
+        }
+    }
+
+    /// Smoothness constant of φ (max |φ″|), entering L = c·max‖x‖² + λ.
+    pub fn curvature(&self) -> f32 {
+        match self {
+            LossKind::Logistic => 0.25,
+            LossKind::SquaredHinge => 2.0,
+            LossKind::Squared => 1.0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LossKind::Logistic => "logistic",
+            LossKind::SquaredHinge => "squared-hinge",
+            LossKind::Squared => "squared",
+        }
+    }
+}
+
+/// f(w) over a CSR dataset with an L2 ridge — the paper's problem instance.
+#[derive(Clone)]
+pub struct Objective {
+    pub data: Arc<Dataset>,
+    pub lam: f32,
+    pub kind: LossKind,
+}
+
+impl Objective {
+    pub fn new(data: Arc<Dataset>, lam: f32, kind: LossKind) -> Self {
+        Objective { data, lam, kind }
+    }
+
+    /// The paper's setup: logistic loss, λ = 1e-4.
+    pub fn paper(data: Arc<Dataset>) -> Self {
+        Objective::new(data, 1e-4, LossKind::Logistic)
+    }
+
+    pub fn n(&self) -> usize {
+        self.data.n()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.data.dim
+    }
+
+    /// Margin m_i = y_i x_iᵀ w.
+    #[inline]
+    pub fn margin(&self, w: &[f32], i: usize) -> f32 {
+        self.data.label(i) * self.data.row(i).dot_dense(w)
+    }
+
+    /// Residual r_i(w): the scalar such that ∇f_i = r_i x_i + λw.
+    #[inline]
+    pub fn residual(&self, w: &[f32], i: usize) -> f32 {
+        self.kind.dphi(self.margin(w, i)) * self.data.label(i)
+    }
+
+    /// Residual with an arbitrary coordinate reader (lock-free shared reads).
+    #[inline]
+    pub fn residual_with<F: FnMut(usize) -> f32>(&self, read: F, i: usize) -> f32 {
+        let row = self.data.row(i);
+        let m = self.data.label(i) * sparse::dot_with(&row, read);
+        self.kind.dphi(m) * self.data.label(i)
+    }
+
+    /// Full objective value f(w), f64-accumulated.
+    pub fn loss(&self, w: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for i in 0..self.n() {
+            acc += self.kind.phi(self.margin(w, i) as f64);
+        }
+        let reg: f64 = w.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        acc / self.n() as f64 + 0.5 * self.lam as f64 * reg
+    }
+
+    /// Dense ∇f_i(w) into `out` (test/reference path — O(d)).
+    pub fn grad_i_into(&self, w: &[f32], i: usize, out: &mut [f32]) {
+        let r = self.residual(w, i);
+        for (o, &wj) in out.iter_mut().zip(w.iter()) {
+            *o = self.lam * wj;
+        }
+        self.data.row(i).axpy_into(r, out);
+    }
+
+    /// Full gradient ∇f(w) into `out`. Also returns all residuals r_i(w) —
+    /// the epoch pass caches them so inner iterations get ∇f_i(u₀) in O(1)
+    /// (the "compute the full gradient in parallel" step, Alg. 1).
+    pub fn full_grad_into(&self, w: &[f32], out: &mut [f32], residuals: &mut Vec<f32>) {
+        residuals.clear();
+        residuals.reserve(self.n());
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        for i in 0..self.n() {
+            let r = self.residual(w, i);
+            residuals.push(r);
+            self.data.row(i).axpy_into(r, out);
+        }
+        let inv_n = 1.0 / self.n() as f32;
+        for (o, &wj) in out.iter_mut().zip(w.iter()) {
+            *o = *o * inv_n + self.lam * wj;
+        }
+    }
+
+    /// Range-restricted unnormalized gradient accumulation: Σ_{i∈range} r_i x_i
+    /// into `out`, residuals recorded at their global index. This is one
+    /// thread's share φ_a of the parallel full-gradient pass.
+    pub fn grad_contrib_range(
+        &self,
+        w: &[f32],
+        range: std::ops::Range<usize>,
+        out: &mut [f32],
+        residuals: &mut [f32],
+    ) {
+        for i in range {
+            let r = self.residual(w, i);
+            residuals[i] = r;
+            self.data.row(i).axpy_into(r, out);
+        }
+    }
+
+    /// μ-strong convexity modulus: the ridge guarantees μ = λ.
+    pub fn strong_convexity(&self) -> f32 {
+        self.lam
+    }
+
+    /// Smoothness bound L (see `lipschitz`).
+    pub fn lipschitz(&self) -> f32 {
+        lipschitz::lipschitz_bound(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+
+    fn obj() -> Objective {
+        let ds = SyntheticSpec::new("t", 64, 32, 8, 42).generate();
+        Objective::paper(Arc::new(ds))
+    }
+
+    /// Finite-difference check of grad_i_into.
+    #[test]
+    fn grad_i_matches_finite_difference() {
+        let o = obj();
+        let mut w: Vec<f32> = (0..o.dim()).map(|j| ((j * 7 % 13) as f32 - 6.0) * 0.05).collect();
+        let i = 5;
+        let mut g = vec![0.0; o.dim()];
+        o.grad_i_into(&w, i, &mut g);
+        let f_i = |o: &Objective, w: &[f32]| -> f64 {
+            let m = o.margin(w, i) as f64;
+            let reg: f64 = w.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            o.kind.phi(m) + 0.5 * o.lam as f64 * reg
+        };
+        let eps = 1e-3f32;
+        for j in (0..o.dim()).step_by(5) {
+            let orig = w[j];
+            w[j] = orig + eps;
+            let fp = f_i(&o, &w);
+            w[j] = orig - eps;
+            let fm = f_i(&o, &w);
+            w[j] = orig;
+            let fd = ((fp - fm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (fd - g[j]).abs() < 5e-3,
+                "coord {j}: fd {fd} vs analytic {}",
+                g[j]
+            );
+        }
+    }
+
+    #[test]
+    fn full_grad_is_mean_of_instance_grads() {
+        let o = obj();
+        let w: Vec<f32> = (0..o.dim()).map(|j| (j as f32 * 0.01) - 0.1).collect();
+        let mut full = vec![0.0; o.dim()];
+        let mut res = Vec::new();
+        o.full_grad_into(&w, &mut full, &mut res);
+        let mut acc = vec![0.0f32; o.dim()];
+        let mut gi = vec![0.0f32; o.dim()];
+        for i in 0..o.n() {
+            o.grad_i_into(&w, i, &mut gi);
+            for j in 0..o.dim() {
+                acc[j] += gi[j] / o.n() as f32;
+            }
+        }
+        for j in 0..o.dim() {
+            assert!((acc[j] - full[j]).abs() < 1e-5, "coord {j}");
+        }
+        assert_eq!(res.len(), o.n());
+    }
+
+    #[test]
+    fn residual_cache_consistent() {
+        let o = obj();
+        let w: Vec<f32> = vec![0.05; o.dim()];
+        let mut full = vec![0.0; o.dim()];
+        let mut res = Vec::new();
+        o.full_grad_into(&w, &mut full, &mut res);
+        for i in 0..o.n() {
+            assert_eq!(res[i], o.residual(&w, i));
+        }
+    }
+
+    #[test]
+    fn contrib_ranges_assemble_full_gradient() {
+        let o = obj();
+        let w: Vec<f32> = (0..o.dim()).map(|j| (j as f32).sin() * 0.1).collect();
+        let mut want = vec![0.0; o.dim()];
+        let mut res_want = Vec::new();
+        o.full_grad_into(&w, &mut want, &mut res_want);
+
+        // assemble from 3 disjoint ranges, as the parallel epoch pass does
+        let mut acc = vec![0.0f32; o.dim()];
+        let mut res = vec![0.0f32; o.n()];
+        let n = o.n();
+        for r in [0..n / 3, n / 3..2 * n / 3, 2 * n / 3..n] {
+            let mut part = vec![0.0f32; o.dim()];
+            o.grad_contrib_range(&w, r, &mut part, &mut res);
+            for j in 0..o.dim() {
+                acc[j] += part[j];
+            }
+        }
+        let inv_n = 1.0 / n as f32;
+        for j in 0..o.dim() {
+            let assembled = acc[j] * inv_n + o.lam * w[j];
+            assert!((assembled - want[j]).abs() < 1e-5);
+        }
+        assert_eq!(res, res_want);
+    }
+
+    #[test]
+    fn loss_decreases_along_negative_full_gradient() {
+        let o = obj();
+        let w: Vec<f32> = vec![0.1; o.dim()];
+        let mut g = vec![0.0; o.dim()];
+        let mut res = Vec::new();
+        o.full_grad_into(&w, &mut g, &mut res);
+        let f0 = o.loss(&w);
+        let w1: Vec<f32> = w.iter().zip(&g).map(|(&wj, &gj)| wj - 0.5 * gj).collect();
+        assert!(o.loss(&w1) < f0);
+    }
+
+    #[test]
+    fn all_loss_kinds_differentiable_consistency() {
+        // dphi must be the derivative of phi for each kind (finite diff)
+        for kind in [LossKind::Logistic, LossKind::SquaredHinge, LossKind::Squared] {
+            for &m in &[-3.0f32, -0.5, 0.0, 0.9, 1.0, 1.1, 4.0] {
+                let eps = 1e-3f64;
+                let fd = (kind.phi(m as f64 + eps) - kind.phi(m as f64 - eps)) / (2.0 * eps);
+                let an = kind.dphi(m) as f64;
+                assert!(
+                    (fd - an).abs() < 5e-3,
+                    "{}: m={m} fd={fd} analytic={an}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn logistic_loss_at_zero_is_log2() {
+        let o = obj();
+        let w = vec![0.0; o.dim()];
+        assert!((o.loss(&w) - (2.0f64).ln()).abs() < 1e-9);
+    }
+}

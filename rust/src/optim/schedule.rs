@@ -1,0 +1,71 @@
+//! Step-size schedules for sequential SGD (the standard menu the SGD
+//! literature in §1's citations uses).
+
+/// γ_t as a function of epoch and/or iteration.
+#[derive(Clone, Copy, Debug)]
+pub enum StepSchedule {
+    /// Constant γ.
+    Constant(f32),
+    /// γ₀ · rate^epoch — the Hogwild!/paper §5.1 schedule.
+    Decay { gamma0: f32, rate: f32 },
+    /// γ₀ / (1 + t/t0) over global iterations — the classic Robbins–Monro
+    /// 1/t schedule that guarantees (sublinear) convergence.
+    InverseT { gamma0: f32, t0: f64 },
+    /// γ₀ / √(1 + t/t0) — the smoothed variant common for non-strongly-
+    /// convex problems.
+    InverseSqrtT { gamma0: f32, t0: f64 },
+}
+
+impl StepSchedule {
+    /// Step size at (epoch, global iteration).
+    #[inline]
+    pub fn at(&self, epoch: usize, iter: u64) -> f32 {
+        match *self {
+            StepSchedule::Constant(g) => g,
+            StepSchedule::Decay { gamma0, rate } => gamma0 * rate.powi(epoch as i32),
+            StepSchedule::InverseT { gamma0, t0 } => {
+                (gamma0 as f64 / (1.0 + iter as f64 / t0)) as f32
+            }
+            StepSchedule::InverseSqrtT { gamma0, t0 } => {
+                (gamma0 as f64 / (1.0 + iter as f64 / t0).sqrt()) as f32
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepSchedule::Constant(_) => "constant",
+            StepSchedule::Decay { .. } => "decay",
+            StepSchedule::InverseT { .. } => "1/t",
+            StepSchedule::InverseSqrtT { .. } => "1/sqrt(t)",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_decrease() {
+        let ss = [
+            StepSchedule::Decay { gamma0: 1.0, rate: 0.9 },
+            StepSchedule::InverseT { gamma0: 1.0, t0: 10.0 },
+            StepSchedule::InverseSqrtT { gamma0: 1.0, t0: 10.0 },
+        ];
+        for s in ss {
+            let early = s.at(0, 0);
+            let late = s.at(50, 5_000);
+            assert!(late < early, "{}: {early} -> {late}", s.name());
+            assert!(late > 0.0);
+        }
+        assert_eq!(StepSchedule::Constant(0.3).at(99, 99_999), 0.3);
+    }
+
+    #[test]
+    fn decay_matches_paper_setting() {
+        let s = StepSchedule::Decay { gamma0: 0.4, rate: 0.9 };
+        assert!((s.at(1, 0) - 0.36).abs() < 1e-7);
+        assert!((s.at(2, 0) - 0.324).abs() < 1e-7);
+    }
+}

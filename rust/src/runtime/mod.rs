@@ -1,0 +1,23 @@
+//! PJRT runtime (S13): loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the L3 coordinator.
+//! Python never runs at request time — the rust binary is self-contained
+//! once `make artifacts` has produced `artifacts/`.
+
+pub mod artifact;
+pub mod backend;
+
+pub use artifact::{EntrySpec, Manifest, Runtime};
+pub use backend::{full_grad_streamed, loss_streamed, DenseBackend, NativeDense, XlaDense};
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$REPRO_ARTIFACTS` or `artifacts/` relative
+/// to the workspace root (which is also the cargo run cwd).
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("REPRO_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// True if artifacts appear to be built (manifest exists).
+pub fn artifacts_available() -> bool {
+    default_artifact_dir().join("manifest.json").exists()
+}

@@ -1,0 +1,613 @@
+//! Deterministic discrete-event engine for a p-core shared-memory machine
+//! running one asynchronous inner loop (S8).
+//!
+//! Each simulated core advances through the phases of Alg. 1's inner
+//! iteration — read û, compute v, apply update — with durations billed by
+//! the `CostModel` and mutual exclusion simulated exactly (FIFO lock wait
+//! queue). Events are processed in simulated-time order and all parameter
+//! arithmetic is performed *for real* at event time, so:
+//!
+//! * convergence is the true trajectory of the algorithm under the
+//!   simulated interleaving (staleness k(m)/a(m) emerges from the schedule,
+//!   never injected), and
+//! * "simulated seconds" is an honest extrapolation of p-core wall-clock
+//!   from measured 1-core per-op costs — the quantity Tables 2–3 and
+//!   Fig. 1(a,c,e) report.
+//!
+//! Two read models (`ReadModel`):
+//!
+//! * `Point` (default) — a read observes the shared vector at its
+//!   completion instant; û has a single age. Fast, and sufficient for all
+//!   timing results.
+//! * `Window` — the faithful eq. 10 semantics: the read spans its full
+//!   simulated duration and coordinate j is sampled at the j/d fraction of
+//!   the window, so updates landing mid-read leave û with genuinely mixed
+//!   ages (the paper's P_{g_{m,1}} u_{a(m)} + P_{g_{m,2}} u_{a(m)+1}
+//!   decomposition, generalized to multiple overlapping updates). Used by
+//!   the read-model ablation.
+//!
+//! `EngineOpts::core_speed` assigns per-core slowdown factors, deliberately
+//! violating the paper's Assumption 3 (equal thread speeds) to test the
+//! algorithm's robustness beyond its analysis.
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::config::Scheme;
+use crate::coordinator::delay::DelayStats;
+use crate::coordinator::epoch::EpochGradient;
+use crate::objective::Objective;
+use crate::util::rng::Pcg32;
+
+use super::cost::CostModel;
+
+/// What the inner loop computes (the two algorithms share the engine).
+pub enum SimTask<'a> {
+    /// AsySVRG inner loop: v = (r−r₀)x_i + λ(û−u₀) + μ̄, step −η·v.
+    Svrg { u0: &'a [f32], eg: &'a EpochGradient },
+    /// Hogwild! step: v = r·x_i + λû, step −γ·v.
+    Sgd,
+}
+
+/// How lock-free reads observe concurrent updates (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ReadModel {
+    #[default]
+    Point,
+    Window,
+}
+
+/// Optional engine behaviours beyond the paper's baseline machine.
+#[derive(Clone, Debug, Default)]
+pub struct EngineOpts {
+    pub read_model: ReadModel,
+    /// Per-core duration multipliers (1.0 = nominal). Length must be ≥ p
+    /// when set. Violates Assumption 3 when non-uniform.
+    pub core_speed: Option<Vec<f64>>,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Phase {
+    ReadDone,
+    ComputeDone,
+    UpdateDone,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    time: f64,
+    seq: u64,
+    tid: usize,
+    phase: Phase,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // min-heap via reverse: earlier time (then lower seq) = greater
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum LockIntent {
+    Read,
+    Update,
+}
+
+struct SimLock {
+    held_by: Option<usize>,
+    queue: VecDeque<(usize, LockIntent)>,
+}
+
+struct ThreadState {
+    rng: Pcg32,
+    iters_done: usize,
+    u_hat: Vec<f32>,
+    v: Vec<f32>,
+    cur_i: usize,
+    read_clock: u64,
+    /// When the in-flight unlocked read began (Window model bookkeeping).
+    read_start: f64,
+    reading: bool,
+    holds_lock: bool,
+}
+
+/// Outcome of one simulated inner phase.
+pub struct SimPhaseResult {
+    /// Simulated nanoseconds the phase took (start → last update).
+    pub elapsed_ns: f64,
+    /// Updates applied (= p · iters).
+    pub updates: u64,
+    pub max_delay: u64,
+    pub mean_delay: f64,
+    /// Window model: reads that observed genuinely mixed ages.
+    pub mixed_age_reads: u64,
+}
+
+/// Baseline-machine wrapper (Point reads, uniform cores).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_inner(
+    obj: &Objective,
+    task: &SimTask<'_>,
+    scheme: Scheme,
+    costs: &CostModel,
+    u: &mut [f32],
+    eta: f32,
+    p: usize,
+    iters_per_thread: usize,
+    seed: u64,
+) -> SimPhaseResult {
+    simulate_inner_opts(
+        obj,
+        task,
+        scheme,
+        costs,
+        u,
+        eta,
+        p,
+        iters_per_thread,
+        seed,
+        &EngineOpts::default(),
+    )
+}
+
+/// Simulate `iters_per_thread` inner iterations on each of `p` cores,
+/// mutating `u` in simulated-time order. Returns timing + staleness.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_inner_opts(
+    obj: &Objective,
+    task: &SimTask<'_>,
+    scheme: Scheme,
+    costs: &CostModel,
+    u: &mut [f32],
+    eta: f32,
+    p: usize,
+    iters_per_thread: usize,
+    seed: u64,
+    opts: &EngineOpts,
+) -> SimPhaseResult {
+    let d = obj.dim();
+    let n = obj.n();
+    let speed = |tid: usize| -> f64 {
+        opts.core_speed.as_ref().map(|s| s[tid]).unwrap_or(1.0)
+    };
+    let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut lock = SimLock { held_by: None, queue: VecDeque::new() };
+    let mut clock = 0u64;
+    let delays = DelayStats::new();
+    let mut active_updaters = 0usize;
+    let mut mixed_age_reads = 0u64;
+    // Window model: recent update deltas (apply_time, −η·v applied to u)
+    let mut recent: VecDeque<(f64, Vec<f32>)> = VecDeque::new();
+    let mut threads: Vec<ThreadState> = (0..p)
+        .map(|t| ThreadState {
+            rng: Pcg32::for_thread(seed, t),
+            iters_done: 0,
+            u_hat: vec![0.0; d],
+            v: vec![0.0; d],
+            cur_i: 0,
+            read_clock: 0,
+            read_start: 0.0,
+            reading: false,
+            holds_lock: false,
+        })
+        .collect();
+
+    let read_locked = scheme == Scheme::Consistent;
+    let update_locked = matches!(
+        scheme,
+        Scheme::Consistent | Scheme::Inconsistent | Scheme::Seqlock
+    );
+    let cas = scheme == Scheme::AtomicCas;
+    let window = opts.read_model == ReadModel::Window && !read_locked;
+
+    let push = |heap: &mut BinaryHeap<Event>, seq: &mut u64, time: f64, tid: usize, phase: Phase| {
+        *seq += 1;
+        heap.push(Event { time, seq: *seq, tid, phase });
+    };
+
+    let mut finished = 0usize;
+    let mut last_update_time = 0.0f64;
+
+    // start_iteration: schedules the read completion (or enqueues on lock)
+    macro_rules! start_iteration {
+        ($tid:expr, $now:expr) => {{
+            let tid = $tid;
+            let now = $now;
+            if threads[tid].iters_done == iters_per_thread {
+                finished += 1;
+            } else {
+                threads[tid].cur_i = threads[tid].rng.below(n);
+                let dur = costs.read_cost(d, p) * speed(tid);
+                if read_locked {
+                    if lock.held_by.is_none() {
+                        lock.held_by = Some(tid);
+                        threads[tid].holds_lock = true;
+                        push(&mut heap, &mut seq, now + costs.lock_ns + dur, tid, Phase::ReadDone);
+                    } else {
+                        lock.queue.push_back((tid, LockIntent::Read));
+                    }
+                } else {
+                    threads[tid].read_start = now;
+                    threads[tid].reading = true;
+                    if window {
+                        // a(m): age at the START of the window
+                        threads[tid].read_clock = clock;
+                    }
+                    push(&mut heap, &mut seq, now + dur, tid, Phase::ReadDone);
+                }
+            }
+        }};
+    }
+
+    // release_lock: grant to the next FIFO waiter and schedule its phase end
+    macro_rules! release_lock {
+        ($now:expr) => {{
+            let now = $now;
+            lock.held_by = None;
+            if let Some((tid2, intent)) = lock.queue.pop_front() {
+                lock.held_by = Some(tid2);
+                threads[tid2].holds_lock = true;
+                match intent {
+                    LockIntent::Read => {
+                        let dur = costs.read_cost(d, p) * speed(tid2);
+                        push(&mut heap, &mut seq, now + costs.lock_ns + dur, tid2, Phase::ReadDone);
+                    }
+                    LockIntent::Update => {
+                        active_updaters += 1;
+                        let dur = costs.update_cost(d, p, active_updaters, cas) * speed(tid2);
+                        push(&mut heap, &mut seq, now + costs.lock_ns + dur, tid2, Phase::UpdateDone);
+                    }
+                }
+            }
+        }};
+    }
+
+    for t in 0..p {
+        start_iteration!(t, 0.0);
+    }
+
+    while finished < p {
+        let ev = heap.pop().expect("deadlock: no events but threads unfinished");
+        let now = ev.time;
+        let tid = ev.tid;
+        match ev.phase {
+            Phase::ReadDone => {
+                threads[tid].u_hat.copy_from_slice(u);
+                if window {
+                    // reconstruct the mixed-age snapshot: coordinate j was
+                    // sampled at read_start + (j/d)·window; updates applied
+                    // AFTER that instant must be backed out of u_hat[j]
+                    let th = &mut threads[tid];
+                    let t0 = th.read_start;
+                    let span = (now - t0).max(1e-12);
+                    let mut mixed = false;
+                    for (t_upd, delta) in recent.iter() {
+                        if *t_upd > t0 && *t_upd <= now {
+                            // coordinates with sample time > t_upd already
+                            // saw the update; earlier ones must not
+                            let cut = ((*t_upd - t0) / span * d as f64).ceil() as usize;
+                            // j read at fraction j/d: j/d*span + t0 < t_upd
+                            // ⇔ j < cut  ⇒ those j did NOT see the update
+                            for j in 0..cut.min(d) {
+                                th.u_hat[j] -= delta[j];
+                            }
+                            if cut > 0 && cut < d {
+                                mixed = true;
+                            }
+                        }
+                    }
+                    if mixed {
+                        mixed_age_reads += 1;
+                    }
+                    th.reading = false;
+                } else {
+                    threads[tid].read_clock = clock;
+                    threads[tid].reading = false;
+                }
+                if threads[tid].holds_lock {
+                    threads[tid].holds_lock = false;
+                    release_lock!(now);
+                }
+                let i = threads[tid].cur_i;
+                let nnz = obj.data.row(i).nnz();
+                let dur = match task {
+                    SimTask::Svrg { .. } => costs.svrg_compute_cost(nnz, d, p),
+                    SimTask::Sgd => costs.sgd_compute_cost(nnz),
+                } * speed(tid);
+                push(&mut heap, &mut seq, now + dur, tid, Phase::ComputeDone);
+            }
+            Phase::ComputeDone => {
+                // real math: build v from the û snapshot
+                let th = &mut threads[tid];
+                let i = th.cur_i;
+                match task {
+                    SimTask::Svrg { u0, eg } => {
+                        let r = obj.residual(&th.u_hat, i);
+                        let dr = r - eg.residuals[i];
+                        for j in 0..d {
+                            th.v[j] = obj.lam * (th.u_hat[j] - u0[j]) + eg.mu[j];
+                        }
+                        obj.data.row(i).axpy_into(dr, &mut th.v);
+                    }
+                    SimTask::Sgd => {
+                        let r = obj.residual(&th.u_hat, i);
+                        for j in 0..d {
+                            th.v[j] = obj.lam * th.u_hat[j];
+                        }
+                        obj.data.row(i).axpy_into(r, &mut th.v);
+                    }
+                }
+                if update_locked {
+                    if lock.held_by.is_none() {
+                        lock.held_by = Some(tid);
+                        threads[tid].holds_lock = true;
+                        active_updaters += 1;
+                        let dur = costs.update_cost(d, p, active_updaters, cas) * speed(tid);
+                        push(&mut heap, &mut seq, now + costs.lock_ns + dur, tid, Phase::UpdateDone);
+                    } else {
+                        lock.queue.push_back((tid, LockIntent::Update));
+                    }
+                } else {
+                    active_updaters += 1;
+                    let dur = costs.update_cost(d, p, active_updaters, cas) * speed(tid);
+                    push(&mut heap, &mut seq, now + dur, tid, Phase::UpdateDone);
+                }
+            }
+            Phase::UpdateDone => {
+                {
+                    let th = &threads[tid];
+                    for j in 0..d {
+                        u[j] -= eta * th.v[j];
+                    }
+                    if window {
+                        let delta: Vec<f32> = th.v.iter().map(|&vj| -eta * vj).collect();
+                        recent.push_back((now, delta));
+                        // retain only entries some in-flight read may still
+                        // need: those applied after the oldest active
+                        // read's start
+                        let oldest = threads
+                            .iter()
+                            .filter(|t| t.reading)
+                            .map(|t| t.read_start)
+                            .fold(f64::INFINITY, f64::min);
+                        while recent.front().map(|(t, _)| *t <= oldest).unwrap_or(false) {
+                            recent.pop_front();
+                        }
+                        if oldest == f64::INFINITY {
+                            recent.clear();
+                        }
+                    }
+                }
+                clock += 1;
+                delays.record(threads[tid].read_clock, clock);
+                active_updaters -= 1;
+                last_update_time = last_update_time.max(now);
+                if threads[tid].holds_lock {
+                    threads[tid].holds_lock = false;
+                    release_lock!(now);
+                }
+                threads[tid].iters_done += 1;
+                start_iteration!(tid, now);
+            }
+        }
+    }
+
+    SimPhaseResult {
+        elapsed_ns: last_update_time,
+        updates: clock,
+        max_delay: delays.max_delay(),
+        mean_delay: delays.mean_delay(),
+        mixed_age_reads,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::epoch::parallel_full_grad;
+    use crate::data::synthetic::SyntheticSpec;
+    use std::sync::Arc;
+
+    fn obj() -> Objective {
+        let ds = SyntheticSpec::new("t", 128, 32, 8, 3).generate();
+        Objective::new(Arc::new(ds), 1e-2, crate::objective::LossKind::Logistic)
+    }
+
+    #[test]
+    fn deterministic_trace() {
+        let o = obj();
+        let w0 = vec![0.0f32; o.dim()];
+        let eg = parallel_full_grad(&o, &w0, 1);
+        let costs = CostModel::default_host();
+        let task = SimTask::Svrg { u0: &w0, eg: &eg };
+        let mut u1 = w0.clone();
+        let r1 = simulate_inner(&o, &task, Scheme::Inconsistent, &costs, &mut u1, 0.1, 4, 50, 7);
+        let mut u2 = w0.clone();
+        let r2 = simulate_inner(&o, &task, Scheme::Inconsistent, &costs, &mut u2, 0.1, 4, 50, 7);
+        assert_eq!(u1, u2);
+        assert_eq!(r1.elapsed_ns, r2.elapsed_ns);
+        assert_eq!(r1.updates, 200);
+    }
+
+    #[test]
+    fn single_core_has_zero_staleness_and_matches_sequential_math() {
+        let o = obj();
+        let w0 = vec![0.0f32; o.dim()];
+        let eg = parallel_full_grad(&o, &w0, 1);
+        let costs = CostModel::default_host();
+        let task = SimTask::Svrg { u0: &w0, eg: &eg };
+        let mut u = w0.clone();
+        let r = simulate_inner(&o, &task, Scheme::Consistent, &costs, &mut u, 0.05, 1, 50, 7);
+        assert_eq!(r.max_delay, 0);
+
+        // identical to the real single-thread worker with the same rng stream
+        use crate::coordinator::delay::DelayStats;
+        use crate::coordinator::shared::SharedParams;
+        use crate::coordinator::worker::{run_inner_loop, WorkerScratch};
+        let shared = SharedParams::new(&w0, Scheme::Consistent);
+        let mut rng = Pcg32::for_thread(7, 0);
+        let mut scratch = WorkerScratch::new(o.dim());
+        let dl = DelayStats::new();
+        run_inner_loop(&o, &shared, &w0, &eg, 0.05, 50, &mut rng, &mut scratch, &dl);
+        let real = shared.snapshot();
+        for j in 0..o.dim() {
+            assert!((u[j] - real[j]).abs() < 1e-6, "coord {j}: sim {} real {}", u[j], real[j]);
+        }
+    }
+
+    #[test]
+    fn staleness_grows_with_cores() {
+        let o = obj();
+        let w0 = vec![0.0f32; o.dim()];
+        let eg = parallel_full_grad(&o, &w0, 1);
+        let costs = CostModel::default_host();
+        let task = SimTask::Svrg { u0: &w0, eg: &eg };
+        let mut u2 = w0.clone();
+        let r2 = simulate_inner(&o, &task, Scheme::Unlock, &costs, &mut u2, 0.05, 2, 100, 7);
+        let mut u8 = w0.clone();
+        let r8 = simulate_inner(&o, &task, Scheme::Unlock, &costs, &mut u8, 0.05, 8, 100, 7);
+        assert!(r2.max_delay >= 1, "2 cores should overlap");
+        assert!(r8.max_delay > r2.max_delay, "8-core staleness {} <= 2-core {}", r8.max_delay, r2.max_delay);
+        // bounded delay: with p cores, at most p-1 foreign updates can land
+        // between a read and the corresponding apply in this engine
+        assert!(r8.max_delay <= 8, "delay {} exceeds p", r8.max_delay);
+    }
+
+    #[test]
+    fn lock_schemes_scale_worse_than_unlock() {
+        let o = obj();
+        let w0 = vec![0.0f32; o.dim()];
+        let eg = parallel_full_grad(&o, &w0, 1);
+        let costs = CostModel::default_host();
+        let task = SimTask::Svrg { u0: &w0, eg: &eg };
+        let time = |scheme, p| {
+            let mut u = w0.clone();
+            let r = simulate_inner(&o, &task, scheme, &costs, &mut u, 0.05, p, 200, 7);
+            r.elapsed_ns
+        };
+        // throughput at 8 cores: unlock must beat inconsistent must beat consistent
+        let tc = time(Scheme::Consistent, 8);
+        let ti = time(Scheme::Inconsistent, 8);
+        let tu = time(Scheme::Unlock, 8);
+        assert!(tu < ti && ti < tc, "unlock {tu:.0} < inconsistent {ti:.0} < consistent {tc:.0} violated");
+    }
+
+    #[test]
+    fn sim_converges_like_real_engine() {
+        let o = obj();
+        let w0 = vec![0.0f32; o.dim()];
+        let f0 = o.loss(&w0);
+        let eg = parallel_full_grad(&o, &w0, 1);
+        let costs = CostModel::default_host();
+        let task = SimTask::Svrg { u0: &w0, eg: &eg };
+        let mut u = w0.clone();
+        simulate_inner(&o, &task, Scheme::Unlock, &costs, &mut u, 0.2, 8, 200, 11);
+        assert!(o.loss(&u) < f0);
+    }
+
+    #[test]
+    fn sgd_task_works() {
+        let o = obj();
+        let w0 = vec![0.0f32; o.dim()];
+        let f0 = o.loss(&w0);
+        let costs = CostModel::default_host();
+        let mut u = w0.clone();
+        let r = simulate_inner(&o, &SimTask::Sgd, Scheme::Unlock, &costs, &mut u, 0.5, 4, 100, 5);
+        assert_eq!(r.updates, 400);
+        assert!(o.loss(&u) < f0);
+    }
+
+    // ------------------------------------------------------ window model
+
+    #[test]
+    fn window_model_observes_mixed_ages_and_still_converges() {
+        let o = obj();
+        let w0 = vec![0.0f32; o.dim()];
+        let f0 = o.loss(&w0);
+        let eg = parallel_full_grad(&o, &w0, 1);
+        let costs = CostModel::default_host();
+        let task = SimTask::Svrg { u0: &w0, eg: &eg };
+        let opts = EngineOpts { read_model: ReadModel::Window, ..Default::default() };
+        let mut u = w0.clone();
+        let r = simulate_inner_opts(
+            &o, &task, Scheme::Unlock, &costs, &mut u, 0.1, 8, 200, 7, &opts,
+        );
+        assert!(
+            r.mixed_age_reads > 0,
+            "8 overlapping cores must produce mixed-age reads"
+        );
+        assert!(o.loss(&u) < f0, "window model broke convergence");
+        assert!(r.max_delay <= 8);
+    }
+
+    #[test]
+    fn window_and_point_agree_when_single_core() {
+        let o = obj();
+        let w0 = vec![0.0f32; o.dim()];
+        let eg = parallel_full_grad(&o, &w0, 1);
+        let costs = CostModel::default_host();
+        let task = SimTask::Svrg { u0: &w0, eg: &eg };
+        let opts = EngineOpts { read_model: ReadModel::Window, ..Default::default() };
+        let mut ua = w0.clone();
+        let ra = simulate_inner_opts(&o, &task, Scheme::Unlock, &costs, &mut ua, 0.05, 1, 60, 7, &opts);
+        let mut ub = w0.clone();
+        simulate_inner(&o, &task, Scheme::Unlock, &costs, &mut ub, 0.05, 1, 60, 7);
+        assert_eq!(ra.mixed_age_reads, 0, "no concurrency, no tearing");
+        assert_eq!(ua, ub);
+    }
+
+    // -------------------------------------------------- heterogeneous cores
+
+    #[test]
+    fn hetero_cores_violating_assumption3_still_converge() {
+        let o = obj();
+        let w0 = vec![0.0f32; o.dim()];
+        let f0 = o.loss(&w0);
+        let eg = parallel_full_grad(&o, &w0, 1);
+        let costs = CostModel::default_host();
+        let task = SimTask::Svrg { u0: &w0, eg: &eg };
+        let opts = EngineOpts {
+            core_speed: Some(vec![1.0, 1.0, 3.0, 5.0]), // two laggards
+            ..Default::default()
+        };
+        let mut u = w0.clone();
+        let r = simulate_inner_opts(
+            &o, &task, Scheme::Unlock, &costs, &mut u, 0.1, 4, 150, 7, &opts,
+        );
+        assert_eq!(r.updates, 600);
+        assert!(o.loss(&u) < f0);
+    }
+
+    #[test]
+    fn hetero_cores_extend_elapsed_time() {
+        let o = obj();
+        let w0 = vec![0.0f32; o.dim()];
+        let eg = parallel_full_grad(&o, &w0, 1);
+        let costs = CostModel::default_host();
+        let task = SimTask::Svrg { u0: &w0, eg: &eg };
+        let run = |speeds: Option<Vec<f64>>| {
+            let opts = EngineOpts { core_speed: speeds, ..Default::default() };
+            let mut u = w0.clone();
+            simulate_inner_opts(&o, &task, Scheme::Unlock, &costs, &mut u, 0.05, 4, 100, 7, &opts)
+                .elapsed_ns
+        };
+        let uniform = run(None);
+        let skewed = run(Some(vec![1.0, 1.0, 1.0, 4.0]));
+        assert!(skewed > uniform * 2.0, "laggard core should dominate: {skewed} vs {uniform}");
+    }
+}

@@ -1,0 +1,258 @@
+//! S8: deterministic p-core simulator — the substitution for the paper's
+//! 12-core testbed on this 1-core host (DESIGN.md §2).
+//!
+//! `sim_run` mirrors `coordinator::run` exactly (same algorithms, same
+//! epoch structure, same stopping rule) but executes on simulated cores:
+//! wall-clock in the returned `RunResult` is *simulated seconds* derived
+//! from the calibrated `CostModel`, and convergence is the genuine float
+//! trajectory under the simulated interleaving.
+
+pub mod cost;
+pub mod engine;
+
+pub use cost::CostModel;
+pub use engine::{
+    simulate_inner, simulate_inner_opts, EngineOpts, ReadModel, SimPhaseResult, SimTask,
+};
+
+use crate::config::{Algo, RunConfig};
+use crate::coordinator::epoch::{parallel_full_grad, partition};
+use crate::coordinator::monitor::{HistoryPoint, RunResult};
+use crate::objective::Objective;
+
+/// Simulate a full configured run on `cfg.threads` virtual cores.
+pub fn sim_run(obj: &Objective, cfg: &RunConfig, costs: &CostModel, fstar: f64) -> RunResult {
+    match cfg.algo {
+        Algo::AsySvrg => sim_asysvrg(obj, cfg, costs, fstar),
+        Algo::Hogwild => sim_hogwild(obj, cfg, costs, fstar),
+    }
+}
+
+/// Simulated-time cost of the parallel full-gradient phase: the slowest
+/// core's share (rows + nnz) plus the d-sized reduction.
+fn full_grad_phase_ns(obj: &Objective, p: usize, costs: &CostModel) -> f64 {
+    let n = obj.n();
+    let mut worst = 0.0f64;
+    for range in partition(n, p) {
+        let rows = range.len();
+        let nnz: usize = range.map(|i| obj.data.row(i).nnz()).sum();
+        worst = worst.max(costs.full_grad_cost(rows, nnz, obj.dim(), p));
+    }
+    worst
+}
+
+fn sim_asysvrg(obj: &Objective, cfg: &RunConfig, costs: &CostModel, fstar: f64) -> RunResult {
+    let d = obj.dim();
+    let n = obj.n();
+    let p = cfg.threads;
+    let m_per_thread = cfg.inner_iters(n);
+    let passes_per_epoch = 1.0 + cfg.m_factor;
+
+    let mut w = vec![0.0f32; d];
+    let mut result = RunResult::default();
+    let mut sim_ns = 0.0f64;
+    let mut passes = 0.0f64;
+    let mut max_delay = 0u64;
+    let mut delay_weighted = 0.0f64;
+
+    for t in 0..cfg.epochs {
+        // epoch phase: full gradient (computed for real, billed simulated)
+        let eg = parallel_full_grad(obj, &w, 1);
+        sim_ns += full_grad_phase_ns(obj, p, costs);
+
+        // inner phase on simulated cores
+        let task = SimTask::Svrg { u0: &w.clone(), eg: &eg };
+        let mut u = w.clone();
+        let r = simulate_inner(
+            obj,
+            &task,
+            cfg.scheme,
+            costs,
+            &mut u,
+            cfg.eta,
+            p,
+            m_per_thread,
+            cfg.seed ^ ((t as u64) << 20),
+        );
+        sim_ns += r.elapsed_ns;
+        w = u;
+
+        max_delay = max_delay.max(r.max_delay);
+        delay_weighted += r.mean_delay * r.updates as f64;
+        result.total_updates += r.updates;
+        passes += passes_per_epoch;
+        let loss = obj.loss(&w);
+        result.history.push(HistoryPoint {
+            passes,
+            loss,
+            seconds: sim_ns / 1e9,
+            updates: result.total_updates,
+        });
+        result.epochs_run = t + 1;
+        if loss - fstar < cfg.target_gap {
+            result.converged = true;
+            break;
+        }
+    }
+
+    result.final_w = w;
+    result.total_seconds = sim_ns / 1e9;
+    result.max_delay = max_delay;
+    result.mean_delay = if result.total_updates > 0 {
+        delay_weighted / result.total_updates as f64
+    } else {
+        0.0
+    };
+    result
+}
+
+fn sim_hogwild(obj: &Objective, cfg: &RunConfig, costs: &CostModel, fstar: f64) -> RunResult {
+    let d = obj.dim();
+    let n = obj.n();
+    let p = cfg.threads;
+    let iters = cfg.hogwild_iters(n);
+
+    let mut w = vec![0.0f32; d];
+    let mut gamma = cfg.eta;
+    let mut result = RunResult::default();
+    let mut sim_ns = 0.0f64;
+    let mut passes = 0.0f64;
+    let mut max_delay = 0u64;
+    let mut delay_weighted = 0.0f64;
+
+    for t in 0..cfg.epochs {
+        let r = simulate_inner(
+            obj,
+            &SimTask::Sgd,
+            cfg.scheme,
+            costs,
+            &mut w,
+            gamma,
+            p,
+            iters,
+            cfg.seed ^ ((t as u64) << 20),
+        );
+        sim_ns += r.elapsed_ns;
+        gamma *= cfg.gamma_decay;
+
+        max_delay = max_delay.max(r.max_delay);
+        delay_weighted += r.mean_delay * r.updates as f64;
+        result.total_updates += r.updates;
+        passes += 1.0;
+        let loss = obj.loss(&w);
+        result.history.push(HistoryPoint {
+            passes,
+            loss,
+            seconds: sim_ns / 1e9,
+            updates: result.total_updates,
+        });
+        result.epochs_run = t + 1;
+        if loss - fstar < cfg.target_gap {
+            result.converged = true;
+            break;
+        }
+    }
+
+    result.final_w = w;
+    result.total_seconds = sim_ns / 1e9;
+    result.max_delay = max_delay;
+    result.mean_delay = if result.total_updates > 0 {
+        delay_weighted / result.total_updates as f64
+    } else {
+        0.0
+    };
+    result
+}
+
+/// Speedup of a p-core simulated run over the 1-core simulated run, by the
+/// paper's definition (§5.1): time-to-suboptimality ratio.
+pub fn speedup(obj: &Objective, cfg: &RunConfig, costs: &CostModel, fstar: f64) -> Option<f64> {
+    let mut c1 = cfg.clone();
+    c1.threads = 1;
+    let base = sim_run(obj, &c1, costs, fstar);
+    let par = sim_run(obj, cfg, costs, fstar);
+    match (base.converged, par.converged) {
+        (true, true) => Some(base.total_seconds / par.total_seconds),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scheme;
+    use crate::data::synthetic::SyntheticSpec;
+    use std::sync::Arc;
+
+    fn obj() -> Objective {
+        let ds = SyntheticSpec::new("t", 256, 64, 10, 13).generate();
+        Objective::new(Arc::new(ds), 1e-2, crate::objective::LossKind::Logistic)
+    }
+
+    fn cfg(threads: usize, scheme: Scheme) -> RunConfig {
+        RunConfig {
+            threads,
+            scheme,
+            eta: 0.2,
+            epochs: 40,
+            target_gap: 1e-5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sim_converges_and_is_deterministic() {
+        let o = obj();
+        let (_, fstar) = crate::coordinator::asysvrg::solve_fstar(&o, 0.2, 80, 1);
+        let costs = CostModel::default_host();
+        let a = sim_run(&o, &cfg(4, Scheme::Inconsistent), &costs, fstar);
+        let b = sim_run(&o, &cfg(4, Scheme::Inconsistent), &costs, fstar);
+        assert!(a.converged, "gap {:.3e}", a.final_loss() - fstar);
+        assert_eq!(a.final_w, b.final_w);
+        assert_eq!(a.total_seconds, b.total_seconds);
+    }
+
+    #[test]
+    fn unlock_speedup_beats_consistent_at_8_cores() {
+        let o = obj();
+        let (_, fstar) = crate::coordinator::asysvrg::solve_fstar(&o, 0.2, 80, 1);
+        let costs = CostModel::default_host();
+        let su = speedup(&o, &cfg(8, Scheme::Unlock), &costs, fstar).unwrap();
+        let sc = speedup(&o, &cfg(8, Scheme::Consistent), &costs, fstar).unwrap();
+        assert!(su > sc, "unlock {su:.2} <= consistent {sc:.2}");
+        assert!(su > 2.0, "unlock speedup only {su:.2}");
+    }
+
+    #[test]
+    fn simulated_seconds_scale_with_problem_size() {
+        let o = obj();
+        let costs = CostModel::default_host();
+        let mut c = cfg(2, Scheme::Unlock);
+        c.epochs = 1;
+        c.target_gap = 0.0;
+        let t1 = sim_run(&o, &c, &costs, f64::NEG_INFINITY).total_seconds;
+        let big = SyntheticSpec::new("t2", 512, 128, 10, 13).generate();
+        let o2 = Objective::new(Arc::new(big), 1e-2, crate::objective::LossKind::Logistic);
+        let t2 = sim_run(&o2, &c, &costs, f64::NEG_INFINITY).total_seconds;
+        assert!(t2 > t1 * 2.0, "{t2} vs {t1}");
+    }
+
+    #[test]
+    fn sim_hogwild_runs() {
+        let o = obj();
+        let costs = CostModel::default_host();
+        let c = RunConfig {
+            algo: crate::config::Algo::Hogwild,
+            threads: 4,
+            scheme: Scheme::Unlock,
+            eta: 0.5,
+            epochs: 10,
+            target_gap: 0.0,
+            ..Default::default()
+        };
+        let r = sim_run(&o, &c, &costs, f64::NEG_INFINITY);
+        assert_eq!(r.epochs_run, 10);
+        assert!(r.final_loss() < (2f64).ln());
+        assert!(r.total_seconds > 0.0);
+    }
+}

@@ -1,0 +1,248 @@
+//! S16: the paper's convergence theory, made executable.
+//!
+//! Given problem constants (μ, L) and run parameters (η, τ, M̃), this
+//! module computes the Lemma 1/2 variance-ratio constant ρ and the
+//! Theorem 1/2 contraction factors α, and searches the feasible step-size
+//! region. `repro theory` prints the resulting rate table and the tests
+//! assert the qualitative claims (linear rate for small η, feasibility
+//! shrinking with τ, AsySVRG's per-epoch contraction < 1).
+//!
+//! Conventions follow the paper exactly; where the Remark suggests r = 1/η
+//! we adopt it (consistent scheme uses the tighter r = 1/(ηL) that
+//! minimizes c = 2·max{1/r, rη²L²}).
+
+/// Problem + schedule constants.
+#[derive(Clone, Copy, Debug)]
+pub struct RateParams {
+    /// Strong convexity μ (Assumption 2); = λ for our ridge objectives.
+    pub mu: f64,
+    /// Smoothness L (Assumption 1).
+    pub l: f64,
+    /// Step size η.
+    pub eta: f64,
+    /// Bounded delay τ.
+    pub tau: u32,
+    /// Total inner updates M̃ per outer iteration.
+    pub m_tilde: u64,
+}
+
+/// Computed rate report for one scheme.
+#[derive(Clone, Copy, Debug)]
+pub struct RateReport {
+    /// Lemma 1/2 constant (ρ > 1).
+    pub rho: f64,
+    /// Per-outer-iteration contraction α (< 1 ⇔ linear convergence).
+    pub alpha: f64,
+}
+
+/// Lemma 1 (consistent): find the smallest ρ satisfying
+///   ρ > 1/(1−c)  and  ρ(1 − c/2·(1+ρ^τ)) ≥ 1,
+/// with c = 2·max{1/r, rη²L²} minimized at r = 1/(ηL) ⇒ c = 2ηL.
+/// Returns None when no feasible ρ exists (step too large).
+pub fn lemma1_rho(p: &RateParams) -> Option<f64> {
+    let c = 2.0 * p.eta * p.l;
+    if !(0.0 < c && c < 1.0) {
+        return None;
+    }
+    let lo = 1.0 / (1.0 - c);
+    smallest_rho(lo, c, p.tau)
+}
+
+/// Scan upward from the Lemma lower bound for the first ρ satisfying the
+/// fixed-point condition ρ(1 − c/2·(1+ρ^τ)) ≥ 1.
+fn smallest_rho(lo: f64, c: f64, tau: u32) -> Option<f64> {
+    let cond = |rho: f64| rho * (1.0 - 0.5 * c * (1.0 + rho.powi(tau as i32))) >= 1.0;
+    // The condition can hold on an interval starting just above `lo` and
+    // fail again for huge ρ (the ρ^τ term); scan multiplicatively.
+    let mut rho = lo * (1.0 + 1e-9);
+    for _ in 0..20_000 {
+        if cond(rho) {
+            return Some(rho);
+        }
+        rho *= 1.001;
+        if rho > 1e6 {
+            break;
+        }
+    }
+    None
+}
+
+/// Theorem 1 (consistent reading): α for the averaged iterate, or None if
+/// the feasibility condition 1 − 2(τ+1)ρ^{2τ}ηL > 0 fails.
+pub fn theorem1_alpha(p: &RateParams) -> Option<RateReport> {
+    let rho = lemma1_rho(p)?;
+    let k = 2.0 * (p.tau as f64 + 1.0) * rho.powi(2 * p.tau as i32) * p.eta * p.l;
+    if k >= 1.0 {
+        return None;
+    }
+    let alpha = 1.0 / (p.mu * p.m_tilde as f64 * p.eta * (1.0 - k)) + k / (1.0 - k);
+    Some(RateReport { rho, alpha })
+}
+
+/// Lemma 2 (inconsistent): smallest ρ with r = 1/η satisfying
+///   ρ ≥ (1+4rη²L)/(1 − 1/r − 4rη²L²)  and
+///   ρ(1 − 1/r − 4rη²L²(τ+1)ρ^τ) > 1 + 4rη²L².
+pub fn lemma2_rho(p: &RateParams) -> Option<f64> {
+    let r = 1.0 / p.eta;
+    let denom0 = 1.0 - 1.0 / r - 4.0 * r * p.eta * p.eta * p.l * p.l;
+    if denom0 <= 0.0 {
+        return None;
+    }
+    let lo = (1.0 + 4.0 * r * p.eta * p.eta * p.l) / denom0;
+    let rhs = 1.0 + 4.0 * r * p.eta * p.eta * p.l * p.l;
+    let cond = |rho: f64| {
+        let inner =
+            1.0 - 1.0 / r - 4.0 * r * p.eta * p.eta * p.l * p.l * (p.tau as f64 + 1.0) * rho.powi(p.tau as i32);
+        rho * inner > rhs
+    };
+    let mut rho = lo.max(1.0 + 1e-12) * (1.0 + 1e-9);
+    for _ in 0..20_000 {
+        if cond(rho) {
+            return Some(rho);
+        }
+        rho *= 1.001;
+        if rho > 1e6 {
+            break;
+        }
+    }
+    None
+}
+
+/// Lemma 3 constant c₁ = 1/(1 − 1/r − 4rτρ^τ η²L²) (> 1), r = 1/η.
+pub fn lemma3_c1(p: &RateParams, rho: f64) -> Option<f64> {
+    let r = 1.0 / p.eta;
+    let denom =
+        1.0 - 1.0 / r - 4.0 * r * (p.tau as f64) * rho.powi(p.tau as i32) * p.eta * p.eta * p.l * p.l;
+    (denom > 0.0).then(|| 1.0 / denom)
+}
+
+/// Theorem 2 (inconsistent reading): α, or None when c₂ ≥ 2η (infeasible).
+pub fn theorem2_alpha(p: &RateParams) -> Option<RateReport> {
+    let rho = lemma2_rho(p)?;
+    let r = 1.0 / p.eta;
+    let tau = p.tau as f64;
+    let denom = 1.0 - 1.0 / r - 4.0 * r * tau * rho.powi(p.tau as i32) * p.eta * p.eta * p.l * p.l;
+    if denom <= 0.0 {
+        return None;
+    }
+    let c2 = (4.0 * p.l * p.eta * p.eta
+        + 16.0 * tau * rho.powi(p.tau as i32) * p.l * p.l * p.eta.powi(3))
+        / denom;
+    if c2 >= 2.0 * p.eta {
+        return None;
+    }
+    let alpha = 2.0 / (p.mu * p.m_tilde as f64 * (2.0 * p.eta - c2)) + c2 / (2.0 * p.eta - c2);
+    Some(RateReport { rho, alpha })
+}
+
+/// Largest η (by grid search over a log scale) for which the given
+/// theorem's α < 1 — "choosing a small step size" made concrete.
+pub fn max_feasible_eta(
+    mu: f64,
+    l: f64,
+    tau: u32,
+    m_tilde: u64,
+    theorem: fn(&RateParams) -> Option<RateReport>,
+) -> Option<f64> {
+    let mut best = None;
+    let mut eta = 1.0 / l; // start at the smoothness limit
+    for _ in 0..200 {
+        let p = RateParams { mu, l, eta, tau, m_tilde };
+        if let Some(rep) = theorem(&p) {
+            if rep.alpha < 1.0 {
+                best = Some(eta);
+                break;
+            }
+        }
+        eta *= 0.9;
+        if eta < 1e-12 {
+            break;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's experimental regime, scaled: μ = 1e-2 (our conditioned
+    /// tests) or 1e-4 (paper λ); L ≈ 0.25.
+    fn params(eta: f64, tau: u32) -> RateParams {
+        RateParams { mu: 1e-2, l: 0.2501, eta, tau, m_tilde: 40_000 }
+    }
+
+    #[test]
+    fn lemma1_rho_exists_and_exceeds_one() {
+        let rho = lemma1_rho(&params(0.1, 4)).unwrap();
+        assert!(rho > 1.0);
+        // τ=0 ⇒ condition is ρ(1−c) ≥ 1 at ρ = 1/(1−c): tight
+        let rho0 = lemma1_rho(&params(0.1, 0)).unwrap();
+        assert!(rho0 >= 1.0 / (1.0 - 2.0 * 0.1 * 0.2501) - 1e-6);
+        assert!(rho0 <= rho, "rho should grow with tau");
+    }
+
+    #[test]
+    fn lemma1_infeasible_for_large_step() {
+        // c = 2ηL ≥ 1 ⇔ η ≥ 1/(2L): no ρ exists
+        assert!(lemma1_rho(&params(2.1, 2)).is_none());
+    }
+
+    #[test]
+    fn theorem1_linear_rate_for_small_eta() {
+        let rep = theorem1_alpha(&params(0.05, 4)).unwrap();
+        assert!(rep.alpha < 1.0, "alpha = {}", rep.alpha);
+        assert!(rep.rho > 1.0);
+    }
+
+    #[test]
+    fn theorem1_alpha_grows_with_tau() {
+        let a2 = theorem1_alpha(&params(0.05, 2)).unwrap().alpha;
+        let a8 = theorem1_alpha(&params(0.05, 8)).unwrap().alpha;
+        assert!(a8 > a2, "alpha(tau=8)={a8} <= alpha(tau=2)={a2}");
+    }
+
+    #[test]
+    fn theorem2_linear_rate_for_small_eta() {
+        let rep = theorem2_alpha(&params(0.02, 4)).unwrap();
+        assert!(rep.alpha < 1.0, "alpha = {}", rep.alpha);
+    }
+
+    #[test]
+    fn theorem2_infeasible_for_large_eta() {
+        assert!(theorem2_alpha(&params(3.9, 4)).is_none());
+    }
+
+    #[test]
+    fn feasible_eta_shrinks_with_tau() {
+        let e1 = max_feasible_eta(1e-2, 0.2501, 1, 40_000, theorem1_alpha).unwrap();
+        let e16 = max_feasible_eta(1e-2, 0.2501, 16, 40_000, theorem1_alpha).unwrap();
+        assert!(e16 <= e1, "eta(tau=16)={e16} > eta(tau=1)={e1}");
+    }
+
+    #[test]
+    fn lemma3_c1_exceeds_one() {
+        let p = params(0.02, 4);
+        let rho = lemma2_rho(&p).unwrap();
+        let c1 = lemma3_c1(&p, rho).unwrap();
+        assert!(c1 > 1.0);
+    }
+
+    #[test]
+    fn paper_scale_lambda_needs_large_m_tilde() {
+        // With μ = 1e-4 (paper λ) and the rcv1-sized M̃ = 2n = 40k,
+        // the 1/(μM̃η) term alone dictates a sizeable η; verify the rate
+        // machinery finds the regime where α < 1.
+        let p = RateParams { mu: 1e-4, l: 0.2501, eta: 0.5, tau: 4, m_tilde: 40_000 };
+        let rep = theorem1_alpha(&p);
+        // η = 0.5 is infeasible (2ηL = 0.25 fine, but (τ+1)ρ^{2τ}ηL ≥ 1/2)
+        // — exactly why the paper says "small step size, large M".
+        if let Some(r) = rep {
+            assert!(r.alpha >= 1.0, "unexpectedly feasible: {}", r.alpha);
+        }
+        // a small η with bigger M̃ is feasible
+        let p2 = RateParams { mu: 1e-4, l: 0.2501, eta: 0.05, tau: 4, m_tilde: 4_000_000 };
+        let rep2 = theorem1_alpha(&p2).unwrap();
+        assert!(rep2.alpha < 1.0, "alpha = {}", rep2.alpha);
+    }
+}

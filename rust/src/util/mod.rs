@@ -1,0 +1,120 @@
+//! Foundation substrates built in-tree (the offline vendor set has no
+//! rand/serde/log crates): RNG, JSON, stats, timing, logging.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+/// Wall-clock stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.seconds() * 1e3
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Log levels, coarsest first.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(2); // Info
+
+/// Set the global log threshold.
+pub fn set_log_level(level: Level) {
+    LOG_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn log_enabled(level: Level) -> bool {
+    (level as u8) <= LOG_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Initialise the log threshold from REPRO_LOG (error|warn|info|debug).
+pub fn init_logging_from_env() {
+    if let Ok(v) = std::env::var("REPRO_LOG") {
+        let lvl = match v.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            _ => Level::Info,
+        };
+        set_log_level(lvl);
+    }
+}
+
+/// Leveled logging macro: `log!(Info, "epoch {e}: gap {g:.3e}")`.
+#[macro_export]
+macro_rules! log {
+    ($lvl:ident, $($arg:tt)*) => {
+        if $crate::util::log_enabled($crate::util::Level::$lvl) {
+            eprintln!("[{}] {}", stringify!($lvl).to_ascii_lowercase(), format!($($arg)*));
+        }
+    };
+}
+
+/// Format a duration in seconds adaptively (ns/µs/ms/s).
+pub fn fmt_seconds(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.seconds();
+        let b = sw.seconds();
+        assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn level_filtering() {
+        set_log_level(Level::Warn);
+        assert!(log_enabled(Level::Error));
+        assert!(log_enabled(Level::Warn));
+        assert!(!log_enabled(Level::Info));
+        set_log_level(Level::Info);
+    }
+
+    #[test]
+    fn fmt_adaptive() {
+        assert!(fmt_seconds(2.5e-9).ends_with("ns"));
+        assert!(fmt_seconds(2.5e-5).ends_with("µs"));
+        assert!(fmt_seconds(2.5e-2).ends_with("ms"));
+        assert!(fmt_seconds(2.5).ends_with('s'));
+    }
+}

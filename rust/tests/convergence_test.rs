@@ -1,0 +1,183 @@
+//! Integration: end-to-end convergence of every algorithm × scheme × engine
+//! combination on a conditioned synthetic problem, plus the linear-rate
+//! claims of Theorems 1–2 checked empirically.
+
+use asysvrg::config::{Algo, RunConfig, Scheme};
+use asysvrg::coordinator::{self, asysvrg::solve_fstar};
+use asysvrg::data::synthetic::SyntheticSpec;
+use asysvrg::objective::{LossKind, Objective};
+use asysvrg::simcore::{sim_run, CostModel};
+use std::sync::Arc;
+
+fn obj() -> Objective {
+    let ds = SyntheticSpec::new("conv", 400, 96, 12, 99).generate();
+    Objective::new(Arc::new(ds), 1e-2, LossKind::Logistic)
+}
+
+fn fstar(o: &Objective) -> f64 {
+    solve_fstar(o, 0.25, 100, 5).1
+}
+
+#[test]
+fn all_schemes_converge_on_both_engines() {
+    let o = obj();
+    let fs = fstar(&o);
+    let costs = CostModel::default_host();
+    for scheme in [
+        Scheme::Consistent,
+        Scheme::Inconsistent,
+        Scheme::Unlock,
+        Scheme::Seqlock,
+        Scheme::AtomicCas,
+    ] {
+        let cfg = RunConfig {
+            threads: 4,
+            scheme,
+            eta: 0.25,
+            epochs: 50,
+            target_gap: 1e-5,
+            ..Default::default()
+        };
+        let rt = coordinator::run(&o, &cfg, fs);
+        assert!(
+            rt.converged,
+            "threads engine {scheme:?}: gap {:.3e}",
+            rt.final_loss() - fs
+        );
+        let rs = sim_run(&o, &cfg, &costs, fs);
+        assert!(
+            rs.converged,
+            "sim engine {scheme:?}: gap {:.3e}",
+            rs.final_loss() - fs
+        );
+    }
+}
+
+#[test]
+fn linear_rate_contraction_is_roughly_geometric() {
+    let o = obj();
+    let fs = fstar(&o);
+    let cfg = RunConfig {
+        threads: 1,
+        eta: 0.25,
+        epochs: 14,
+        target_gap: 0.0,
+        ..Default::default()
+    };
+    let r = coordinator::run(&o, &cfg, f64::NEG_INFINITY);
+    // geometric-mean contraction over the epochs above the f* noise floor
+    // must be well below 1 (linear rate); the tail where gap ≈ f*-estimate
+    // precision is excluded.
+    let mut ratios = Vec::new();
+    let mut prev = r.history[0].loss - fs;
+    for h in &r.history[1..] {
+        let gap = h.loss - fs;
+        if prev > 1e-9 && gap > 0.0 {
+            ratios.push(gap / prev);
+        }
+        prev = gap;
+    }
+    assert!(ratios.len() >= 3, "too few epochs above noise floor: {ratios:?}");
+    let gmean = (ratios.iter().map(|x| x.ln()).sum::<f64>() / ratios.len() as f64).exp();
+    assert!(gmean < 0.85, "geo-mean contraction {gmean:.3} not linear-looking");
+}
+
+#[test]
+fn hogwild_is_sublinear_svrg_is_linear_at_equal_passes() {
+    let o = obj();
+    let fs = fstar(&o);
+    let costs = CostModel::default_host();
+    let svrg = sim_run(
+        &o,
+        &RunConfig { threads: 10, eta: 0.25, epochs: 10, target_gap: 0.0, ..Default::default() },
+        &costs,
+        fs,
+    );
+    let hog = sim_run(
+        &o,
+        &RunConfig {
+            algo: Algo::Hogwild,
+            threads: 10,
+            scheme: Scheme::Unlock,
+            eta: 0.5,
+            epochs: 30, // same 30 effective passes as 10 SVRG epochs
+            target_gap: 0.0,
+            ..Default::default()
+        },
+        &costs,
+        fs,
+    );
+    let svrg_gap = svrg.final_loss() - fs;
+    let hog_gap = hog.final_loss() - fs;
+    assert!(
+        svrg_gap < hog_gap * 0.2,
+        "svrg {svrg_gap:.3e} should be ≪ hogwild {hog_gap:.3e} at equal passes"
+    );
+}
+
+#[test]
+fn option2_averaging_converges_multithreaded() {
+    let o = obj();
+    let fs = fstar(&o);
+    let cfg = RunConfig {
+        threads: 4,
+        eta: 0.25,
+        epochs: 60,
+        target_gap: 1e-4,
+        ..Default::default()
+    };
+    let r = coordinator::asysvrg::run_asysvrg(
+        &o,
+        &cfg,
+        coordinator::asysvrg::SvrgOption::Average,
+        fs,
+    );
+    assert!(r.converged, "gap {:.3e}", r.final_loss() - fs);
+}
+
+#[test]
+fn other_losses_converge_too() {
+    // the paper's framework covers general L-smooth losses: exercise the
+    // smoothed hinge and squared losses through the full coordinator
+    for kind in [LossKind::SquaredHinge, LossKind::Squared] {
+        let ds = SyntheticSpec::new("loss", 300, 64, 10, 5).generate();
+        let o = Objective::new(Arc::new(ds), 1e-2, kind);
+        // step below 1/(2L) to satisfy the analysis
+        let eta = 0.9 / (2.0 * o.lipschitz());
+        let cfg = RunConfig {
+            threads: 4,
+            scheme: Scheme::Unlock,
+            eta,
+            epochs: 25,
+            target_gap: 0.0,
+            ..Default::default()
+        };
+        let r = coordinator::run(&o, &cfg, f64::NEG_INFINITY);
+        let f0 = o.loss(&vec![0.0f32; o.dim()]); // true starting point
+        let last = r.final_loss();
+        assert!(last < f0 * 0.7, "{}: f(0)={f0} -> {last}", kind.name());
+    }
+}
+
+#[test]
+fn stopping_rule_respects_target_gap() {
+    let o = obj();
+    let fs = fstar(&o);
+    let cfg = RunConfig {
+        threads: 2,
+        eta: 0.25,
+        epochs: 80,
+        target_gap: 1e-3,
+        ..Default::default()
+    };
+    let r = coordinator::run(&o, &cfg, fs);
+    assert!(r.converged);
+    // it must have stopped at the FIRST epoch under the gap
+    let prefix_above: usize = r
+        .history
+        .iter()
+        .take(r.history.len() - 1)
+        .filter(|h| h.loss - fs >= 1e-3)
+        .count();
+    assert_eq!(prefix_above, r.history.len() - 1);
+}

@@ -1,0 +1,56 @@
+//! Integration: the full three-layer pipeline (Pallas → JAX → HLO text →
+//! PJRT → rust SVRG loop) trains a real dense workload and reduces the
+//! loss, with XLA numerics staying glued to the native twin throughout.
+//! Requires `make artifacts`.
+
+use asysvrg::bench::e2e;
+
+fn artifacts_present() -> bool {
+    if asysvrg::runtime::artifacts_available() {
+        true
+    } else {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        false
+    }
+}
+
+#[test]
+fn e2e_training_reduces_loss_through_xla() {
+    if !artifacts_present() {
+        return;
+    }
+    let rep = e2e::train(512, 6, 0.8, 7).expect("e2e training");
+    assert!(
+        rep.final_loss < rep.initial_loss,
+        "loss {} -> {}",
+        rep.initial_loss,
+        rep.final_loss
+    );
+    assert_eq!(rep.epochs, 6);
+    assert!(rep.updates > 0 && rep.xla_grad_calls == 2 * rep.updates);
+    assert!(
+        rep.max_native_loss_divergence < 1e-4,
+        "xla/native diverged by {:.3e}",
+        rep.max_native_loss_divergence
+    );
+}
+
+#[test]
+fn e2e_is_deterministic_given_seed() {
+    if !artifacts_present() {
+        return;
+    }
+    let a = e2e::train(256, 2, 0.5, 3).unwrap();
+    let b = e2e::train(256, 2, 0.5, 3).unwrap();
+    assert_eq!(a.final_loss, b.final_loss);
+    let c = e2e::train(256, 2, 0.5, 4).unwrap();
+    assert_ne!(a.final_loss, c.final_loss);
+}
+
+#[test]
+fn e2e_rejects_undersized_workload() {
+    if !artifacts_present() {
+        return;
+    }
+    assert!(e2e::train(8, 1, 0.5, 1).is_err(), "n < batch must error");
+}

@@ -1,0 +1,202 @@
+//! Property-based tests (via the in-tree `propcheck` framework) over the
+//! system's core invariants.
+
+use asysvrg::coordinator::epoch::partition;
+use asysvrg::data::{libsvm, Dataset};
+use asysvrg::linalg::{dense, SparseRow};
+use asysvrg::objective::{LossKind, Objective};
+use asysvrg::propcheck::{forall, forall_res, Gen};
+use asysvrg::util::json::{self, Json};
+use std::sync::Arc;
+
+fn gen_dataset(g: &mut Gen) -> Dataset {
+    let n = g.usize_in(1..30);
+    let dim = g.usize_in(1..40);
+    let rows: Vec<(Vec<u32>, Vec<f32>)> = (0..n)
+        .map(|_| {
+            let pat = g.sparse_pattern(dim, 8);
+            let vals: Vec<f32> = pat.iter().map(|_| g.f32_in(-3.0..3.0)).collect();
+            (pat, vals)
+        })
+        .collect();
+    let labels: Vec<f32> = (0..n).map(|_| if g.bool() { 1.0 } else { -1.0 }).collect();
+    Dataset::from_rows(rows, labels, dim, "prop").unwrap()
+}
+
+#[test]
+fn prop_partition_disjoint_covering_balanced() {
+    forall("partition", 300, |g| {
+        let n = g.usize_in(0..500);
+        let p = g.usize_in(1..20);
+        let parts = partition(n, p);
+        let mut seen = vec![false; n];
+        let mut sizes = Vec::new();
+        for r in &parts {
+            sizes.push(r.len());
+            for i in r.clone() {
+                if seen[i] {
+                    return false;
+                }
+                seen[i] = true;
+            }
+        }
+        let covering = seen.iter().all(|&s| s);
+        let balanced = sizes.iter().max().unwrap_or(&0) - sizes.iter().min().unwrap_or(&0) <= 1;
+        covering && balanced && parts.len() == p
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { 0 } else { g.usize_in(0..6) } {
+            0 => Json::Num(g.f64_in(-1e6..1e6)),
+            1 => Json::Bool(g.bool()),
+            2 => Json::Null,
+            3 => Json::Str(
+                (0..g.usize_in(0..12))
+                    .map(|_| char::from_u32(g.usize_in(32..1000) as u32).unwrap_or('x'))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..g.usize_in(0..4)).map(|_| gen_json(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize_in(0..4))
+                    .map(|k| (format!("k{k}"), gen_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall_res("json roundtrip", 300, |g| {
+        let j = gen_json(g, 3);
+        let parsed = json::parse(&j.to_string()).map_err(|e| e.to_string())?;
+        let pretty = json::parse(&j.pretty()).map_err(|e| e.to_string())?;
+        if parsed != j || pretty != j {
+            return Err(format!("mismatch for {j}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_libsvm_roundtrip() {
+    forall_res("libsvm roundtrip", 150, |g| {
+        let ds = gen_dataset(g);
+        let mut buf = Vec::new();
+        libsvm::write(&ds, &mut buf).map_err(|e| e.to_string())?;
+        let back = libsvm::parse(buf.as_slice(), "prop", Some(ds.dim)).map_err(|e| e)?;
+        if back.labels != ds.labels || back.indices != ds.indices || back.indptr != ds.indptr {
+            return Err("structure mismatch".into());
+        }
+        for (a, b) in back.values.iter().zip(ds.values.iter()) {
+            if (a - b).abs() > 1e-5 * (1.0 + b.abs()) {
+                return Err(format!("value drift {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_dot_matches_dense_dot() {
+    forall("sparse dot", 300, |g| {
+        let dim = g.usize_in(1..64);
+        let pat = g.sparse_pattern(dim, 16);
+        let vals: Vec<f32> = pat.iter().map(|_| g.f32_in(-2.0..2.0)).collect();
+        let row = SparseRow { indices: &pat, values: &vals };
+        let w: Vec<f32> = (0..dim).map(|_| g.f32_in(-2.0..2.0)).collect();
+        let sparse = row.dot_dense(&w);
+        let densified = row.to_dense(dim);
+        let full = dense::dot(&densified, &w);
+        (sparse - full).abs() <= 1e-4 * (1.0 + full.abs())
+    });
+}
+
+#[test]
+fn prop_svrg_direction_unbiased_over_instances() {
+    // E_i[v] = ∇f(u) exactly (the SVRG identity): averaging the direction
+    // over ALL instances equals the full gradient at u.
+    forall_res("svrg unbiased", 40, |g| {
+        let ds = gen_dataset(g);
+        let n = ds.n();
+        let obj = Objective::new(Arc::new(ds), g.f32_in(0.0..0.1), LossKind::Logistic);
+        let d = obj.dim();
+        let u0: Vec<f32> = (0..d).map(|_| g.f32_in(-0.5..0.5)).collect();
+        let u: Vec<f32> = u0.iter().map(|&x| x + g.f32_in(-0.2..0.2)).collect();
+        let mut mu = vec![0.0f32; d];
+        let mut res0 = Vec::new();
+        obj.full_grad_into(&u0, &mut mu, &mut res0);
+        let mut want = vec![0.0f32; d];
+        let mut res_u = Vec::new();
+        obj.full_grad_into(&u, &mut want, &mut res_u);
+
+        let mut mean_v = vec![0.0f64; d];
+        let mut gi = vec![0.0f32; d];
+        let mut gi0 = vec![0.0f32; d];
+        for i in 0..n {
+            obj.grad_i_into(&u, i, &mut gi);
+            obj.grad_i_into(&u0, i, &mut gi0);
+            for j in 0..d {
+                mean_v[j] += (gi[j] - gi0[j] + mu[j]) as f64 / n as f64;
+            }
+        }
+        for j in 0..d {
+            if (mean_v[j] - want[j] as f64).abs() > 1e-4 {
+                return Err(format!("coord {j}: E[v]={} ∇f={}", mean_v[j], want[j]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grad_lipschitz_bound_holds() {
+    forall_res("lipschitz", 60, |g| {
+        let ds = gen_dataset(g);
+        let obj = Objective::new(Arc::new(ds), g.f32_in(0.0..0.1), LossKind::Logistic);
+        let l = obj.lipschitz();
+        let d = obj.dim();
+        let i = g.usize_in(0..obj.n());
+        let a: Vec<f32> = (0..d).map(|_| g.f32_in(-1.0..1.0)).collect();
+        let b: Vec<f32> = a.iter().map(|&x| x + g.f32_in(-0.3..0.3)).collect();
+        let mut ga = vec![0.0f32; d];
+        let mut gb = vec![0.0f32; d];
+        obj.grad_i_into(&a, i, &mut ga);
+        obj.grad_i_into(&b, i, &mut gb);
+        let num = dense::dist2(&ga, &gb);
+        let den = dense::dist2(&a, &b);
+        if den > 1e-9 && num > l as f64 * den * 1.02 {
+            return Err(format!("ratio {} > L {}", num / den, l));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_loss_convexity_along_segments() {
+    // f(θa + (1−θ)b) ≤ θf(a) + (1−θ)f(b) for the convex objectives
+    forall_res("convexity", 60, |g| {
+        let ds = gen_dataset(g);
+        let obj = Objective::new(Arc::new(ds), 1e-3, LossKind::Logistic);
+        let d = obj.dim();
+        let a: Vec<f32> = (0..d).map(|_| g.f32_in(-1.0..1.0)).collect();
+        let b: Vec<f32> = (0..d).map(|_| g.f32_in(-1.0..1.0)).collect();
+        let theta = g.f64_in(0.0..1.0) as f32;
+        let mid: Vec<f32> =
+            a.iter().zip(&b).map(|(&x, &y)| theta * x + (1.0 - theta) * y).collect();
+        let lhs = obj.loss(&mid);
+        let rhs = theta as f64 * obj.loss(&a) + (1.0 - theta as f64) * obj.loss(&b);
+        if lhs > rhs + 1e-7 {
+            return Err(format!("convexity violated: {lhs} > {rhs}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rng_below_in_range_and_shuffle_permutes() {
+    forall("rng bounds", 500, |g| {
+        let n = g.usize_in(1..10_000);
+        let x = g.rng().below(n);
+        x < n
+    });
+}

@@ -1,0 +1,114 @@
+//! Integration: load the AOT artifacts through the PJRT runtime and check
+//! their numerics against the native rust backend — the rust half of the
+//! L1/L2 ⇄ L3 contract. Requires `make artifacts` (skips cleanly if absent,
+//! but the Makefile always builds artifacts before `cargo test`).
+
+use asysvrg::runtime::{full_grad_streamed, loss_streamed, DenseBackend, XlaDense};
+use asysvrg::util::rng::Pcg32;
+
+fn artifacts() -> Option<XlaDense> {
+    let dir = asysvrg::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {} — run `make artifacts`", dir.display());
+        return None;
+    }
+    Some(XlaDense::load(&dir).expect("loading artifacts"))
+}
+
+fn rand_data(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg32::new(seed, 77);
+    let x: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32 * 0.2).collect();
+    let y: Vec<f32> = (0..n).map(|_| if rng.uniform() < 0.5 { 1.0 } else { -1.0 }).collect();
+    let w: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32 * 0.1).collect();
+    (x, y, w)
+}
+
+#[test]
+fn minibatch_grad_matches_native() {
+    let Some(xla) = artifacts() else { return };
+    let native = xla.native_twin();
+    let (b, d) = (xla.batch(), xla.dim());
+    let (x, y, w) = rand_data(b, d, 1);
+    let got = xla.minibatch_grad(&x, &y, &w, 1e-4).unwrap();
+    let want = native.minibatch_grad(&x, &y, &w, 1e-4).unwrap();
+    assert_eq!(got.len(), d);
+    for j in 0..d {
+        assert!(
+            (got[j] - want[j]).abs() < 3e-5 + 1e-4 * want[j].abs(),
+            "coord {j}: xla {} vs native {}",
+            got[j],
+            want[j]
+        );
+    }
+}
+
+#[test]
+fn grad_contrib_matches_native() {
+    let Some(xla) = artifacts() else { return };
+    let native = xla.native_twin();
+    let (c, d) = (xla.chunk(), xla.dim());
+    let (x, y, w) = rand_data(c, d, 2);
+    let got = xla.grad_contrib(&x, &y, &w).unwrap();
+    let want = native.grad_contrib(&x, &y, &w).unwrap();
+    for j in 0..d {
+        assert!((got[j] - want[j]).abs() < 1e-3 + 1e-4 * want[j].abs(), "coord {j}");
+    }
+}
+
+#[test]
+fn loss_sum_matches_native() {
+    let Some(xla) = artifacts() else { return };
+    let native = xla.native_twin();
+    let (c, d) = (xla.chunk(), xla.dim());
+    let (x, y, w) = rand_data(c, d, 3);
+    let got = xla.loss_sum(&x, &y, &w).unwrap();
+    let want = native.loss_sum(&x, &y, &w).unwrap();
+    assert!((got - want).abs() < 1e-2, "xla {got} vs native {want}");
+}
+
+#[test]
+fn svrg_step_matches_native() {
+    let Some(xla) = artifacts() else { return };
+    let native = xla.native_twin();
+    let d = xla.dim();
+    let mut rng = Pcg32::new(4, 8);
+    let u: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+    let g: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+    let g0: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+    let mu: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+    let (got_u, got_v) = xla.svrg_step(&u, &g, &g0, &mu, 0.05).unwrap();
+    let (want_u, want_v) = native.svrg_step(&u, &g, &g0, &mu, 0.05).unwrap();
+    for j in 0..d {
+        assert!((got_u[j] - want_u[j]).abs() < 1e-6, "u coord {j}");
+        assert!((got_v[j] - want_v[j]).abs() < 1e-6, "v coord {j}");
+    }
+}
+
+#[test]
+fn streamed_helpers_work_over_xla() {
+    let Some(xla) = artifacts() else { return };
+    let native = xla.native_twin();
+    let d = xla.dim();
+    let n = xla.chunk() + 17; // forces a padded tail chunk
+    let (x, y, w) = rand_data(n, d, 5);
+    let got = full_grad_streamed(&xla, &x, &y, n, &w, 1e-4).unwrap();
+    let want = full_grad_streamed(&native, &x, &y, n, &w, 1e-4).unwrap();
+    for j in 0..d {
+        assert!((got[j] - want[j]).abs() < 1e-4, "coord {j}");
+    }
+    let gl = loss_streamed(&xla, &x, &y, n, &w, 1e-4).unwrap();
+    let wl = loss_streamed(&native, &x, &y, n, &w, 1e-4).unwrap();
+    assert!((gl - wl).abs() < 1e-4, "{gl} vs {wl}");
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let Some(xla) = artifacts() else { return };
+    let d = xla.dim();
+    let bad = vec![0.0f32; d - 1];
+    let y = vec![0.0f32; xla.batch()];
+    let x = vec![0.0f32; xla.batch() * d];
+    let lam = [1e-4f32];
+    assert!(xla.runtime().execute("minibatch_grad", &[&x, &y, &bad, &lam]).is_err());
+    assert!(xla.runtime().execute("no_such_entry", &[&x]).is_err());
+}

@@ -1,0 +1,162 @@
+//! Integration: semantics of the access schemes under real OS threads —
+//! exactness of locked updates, lost-update behaviour of unlock, seqlock
+//! tear-freedom, CAS linearizability, and staleness instrumentation.
+
+use asysvrg::config::Scheme;
+use asysvrg::coordinator::delay::DelayStats;
+use asysvrg::coordinator::shared::SharedParams;
+use asysvrg::linalg::SparseRow;
+use std::sync::Arc;
+
+const D: usize = 256;
+const THREADS: usize = 8;
+const UPDATES: usize = 2_000;
+
+/// Apply `UPDATES` unit adds from each of `THREADS` threads.
+fn hammer(scheme: Scheme) -> (Vec<f32>, u64) {
+    let p = Arc::new(SharedParams::new(&vec![0.0f32; D], scheme));
+    let v = vec![-1.0f32; D]; // apply_step does u -= eta*v → u += eta
+    std::thread::scope(|s| {
+        for _ in 0..THREADS {
+            let p = p.clone();
+            let v = v.clone();
+            s.spawn(move || {
+                for _ in 0..UPDATES {
+                    p.apply_step(&v, 1.0);
+                }
+            });
+        }
+    });
+    (p.snapshot(), p.clock())
+}
+
+#[test]
+fn locked_schemes_are_exact() {
+    for scheme in [Scheme::Consistent, Scheme::Inconsistent, Scheme::Seqlock, Scheme::AtomicCas] {
+        let (u, clock) = hammer(scheme);
+        let want = (THREADS * UPDATES) as f32;
+        assert_eq!(clock, THREADS as u64 * UPDATES as u64);
+        for (j, &x) in u.iter().enumerate() {
+            assert_eq!(x, want, "{scheme:?} coord {j}");
+        }
+    }
+}
+
+#[test]
+fn unlock_may_lose_updates_but_clock_is_exact() {
+    let (u, clock) = hammer(Scheme::Unlock);
+    let want = (THREADS * UPDATES) as f32;
+    assert_eq!(clock, THREADS as u64 * UPDATES as u64);
+    // On a 1-core host preemption makes lost updates rare but possible;
+    // the invariant that must ALWAYS hold is u ≤ exact count (adds only).
+    for (j, &x) in u.iter().enumerate() {
+        assert!(x <= want, "coord {j} overshot: {x} > {want}");
+        assert!(x > 0.0, "coord {j} lost everything");
+    }
+}
+
+#[test]
+fn consistent_reads_see_uniform_age_under_writers() {
+    // With Consistent, a read must never observe a half-applied update:
+    // every coordinate carries the same value in this uniform-update test.
+    let p = Arc::new(SharedParams::new(&vec![0.0f32; D], Scheme::Consistent));
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let writer = {
+        let p = p.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let v = vec![-1.0f32; D];
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                p.apply_step(&v, 1.0);
+            }
+        })
+    };
+    let mut buf = vec![0.0f32; D];
+    for _ in 0..500 {
+        p.read_into(&mut buf);
+        let first = buf[0];
+        assert!(buf.iter().all(|&x| x == first), "torn consistent read: {buf:?}");
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    writer.join().unwrap();
+}
+
+#[test]
+fn seqlock_reads_see_uniform_age_without_read_lock() {
+    let p = Arc::new(SharedParams::new(&vec![0.0f32; D], Scheme::Seqlock));
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let writer = {
+        let p = p.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let v = vec![-1.0f32; D];
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                p.apply_step(&v, 1.0);
+            }
+        })
+    };
+    let mut buf = vec![0.0f32; D];
+    for _ in 0..500 {
+        p.read_into(&mut buf);
+        let first = buf[0];
+        assert!(buf.iter().all(|&x| x == first), "torn seqlock read: {buf:?}");
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    writer.join().unwrap();
+}
+
+#[test]
+fn sgd_step_is_exact_under_lock_discipline() {
+    let idx: Vec<u32> = vec![3, 100, 200];
+    let val: Vec<f32> = vec![1.0, 2.0, -1.0];
+    let p = Arc::new(SharedParams::new(&vec![0.0f32; D], Scheme::Inconsistent));
+    let iterations = 500usize;
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let p = p.clone();
+            let idx = idx.clone();
+            let val = val.clone();
+            s.spawn(move || {
+                let local = vec![0.0f32; D]; // λ·0 dense part: no-op
+                let row = SparseRow { indices: &idx, values: &val };
+                for _ in 0..iterations {
+                    p.apply_sgd_step(row, 1.0, 0.0, &local, -1.0); // u += r·x
+                }
+            });
+        }
+    });
+    let u = p.snapshot();
+    let total = (4 * iterations) as f32;
+    assert_eq!(u[3], total);
+    assert_eq!(u[100], 2.0 * total);
+    assert_eq!(u[200], -total);
+    assert_eq!(u[0], 0.0);
+}
+
+#[test]
+fn delay_stats_bounded_by_concurrency() {
+    // Staleness recorded by real threads: each read-then-update window can
+    // contain at most (others' updates during the window); sanity: mean ≥ 0,
+    // max < total updates.
+    let p = Arc::new(SharedParams::new(&vec![0.0f32; 64], Scheme::Unlock));
+    let delays = Arc::new(DelayStats::new());
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let p = p.clone();
+            let delays = delays.clone();
+            s.spawn(move || {
+                let mut buf = vec![0.0f32; 64];
+                let v = vec![0.001f32; 64];
+                for _ in 0..500 {
+                    let rc = p.read_into(&mut buf);
+                    let ac = p.apply_step(&v, 0.01);
+                    delays.record(rc, ac);
+                }
+            });
+        }
+    });
+    assert_eq!(delays.count(), 2_000);
+    assert!(delays.max_delay() < 2_000);
+    assert!(delays.mean_delay() >= 0.0);
+    assert!(!delays.histogram().is_empty());
+}

@@ -1,0 +1,147 @@
+//! Integration: the p-core simulator's contract — determinism, bounded
+//! delay, Amdahl-style scheme ordering, and the Table-2/3 shape assertions
+//! at tiny scale (the full-budget versions live in rust/benches/).
+
+use asysvrg::bench::{table2, table3, BenchEnv, TimeToGap};
+use asysvrg::config::{Algo, RunConfig, Scheme};
+use asysvrg::coordinator::asysvrg::solve_fstar;
+use asysvrg::data::synthetic::SyntheticSpec;
+use asysvrg::data::PaperDataset;
+use asysvrg::objective::{LossKind, Objective};
+use asysvrg::simcore::{sim_run, speedup, CostModel};
+use std::sync::Arc;
+
+fn obj() -> Objective {
+    let ds = SyntheticSpec::new("sim", 400, 96, 12, 21).generate();
+    Objective::new(Arc::new(ds), 1e-2, LossKind::Logistic)
+}
+
+fn cfg(threads: usize, scheme: Scheme) -> RunConfig {
+    RunConfig { threads, scheme, eta: 0.25, epochs: 40, target_gap: 1e-4, ..Default::default() }
+}
+
+#[test]
+fn bit_identical_across_runs() {
+    let o = obj();
+    let costs = CostModel::default_host();
+    let a = sim_run(&o, &cfg(8, Scheme::Unlock), &costs, f64::NEG_INFINITY);
+    let b = sim_run(&o, &cfg(8, Scheme::Unlock), &costs, f64::NEG_INFINITY);
+    assert_eq!(a.final_w, b.final_w);
+    assert_eq!(a.total_seconds, b.total_seconds);
+    assert_eq!(a.max_delay, b.max_delay);
+}
+
+#[test]
+fn staleness_bounded_by_core_count() {
+    let o = obj();
+    let costs = CostModel::default_host();
+    for p in [1usize, 2, 4, 10] {
+        let r = sim_run(&o, &cfg(p, Scheme::Unlock), &costs, f64::NEG_INFINITY);
+        assert!(
+            r.max_delay <= p as u64,
+            "p={p}: max delay {} exceeds bound",
+            r.max_delay
+        );
+        if p == 1 {
+            assert_eq!(r.max_delay, 0, "sequential run must have zero staleness");
+        }
+    }
+}
+
+#[test]
+fn speedup_ordering_matches_paper_table2() {
+    let o = obj();
+    let fs = solve_fstar(&o, 0.25, 100, 5).1;
+    let costs = CostModel::default_host();
+    let su = speedup(&o, &cfg(10, Scheme::Unlock), &costs, fs).expect("unlock converged");
+    let si = speedup(&o, &cfg(10, Scheme::Inconsistent), &costs, fs).expect("inconsistent");
+    let sc = speedup(&o, &cfg(10, Scheme::Consistent), &costs, fs).expect("consistent");
+    assert!(su > si && si > sc, "ordering violated: {su:.2} / {si:.2} / {sc:.2}");
+    assert!(su > 3.0, "unlock at 10 cores only {su:.2}x");
+    assert!(sc < 3.0, "consistent should plateau, got {sc:.2}x");
+}
+
+#[test]
+fn more_cores_never_slow_the_unlock_scheme_much() {
+    let o = obj();
+    let costs = CostModel::default_host();
+    let mut prev = f64::INFINITY;
+    for p in [1usize, 2, 4, 8] {
+        let mut c = cfg(p, Scheme::Unlock);
+        c.epochs = 3;
+        c.target_gap = 0.0;
+        let t = sim_run(&o, &c, &costs, f64::NEG_INFINITY).total_seconds;
+        assert!(t < prev * 1.05, "p={p}: {t} vs prev {prev}");
+        prev = t;
+    }
+}
+
+#[test]
+fn tiny_table2_has_paper_shape() {
+    let env = BenchEnv { scale: 0.02, max_epochs: 30, ..Default::default() };
+    let t = table2(&env, &[2, 10]);
+    let r10 = &t.rows[1];
+    assert!(
+        r10.cells[2].1 > r10.cells[0].1,
+        "unlock {:.2}x <= consistent {:.2}x at 10 threads",
+        r10.cells[2].1,
+        r10.cells[0].1
+    );
+}
+
+#[test]
+fn tiny_table3_asysvrg_beats_hogwild() {
+    // scale 0.05 is the smallest at which the λ=1e-4 conditioning still
+    // reaches the 1e-4 gap inside a small epoch budget (M̃ = 2n shrinks
+    // with the dataset, weakening the per-epoch contraction)
+    let env = BenchEnv { scale: 0.05, max_epochs: 40, ..Default::default() };
+    let rows = table3(&env, &[PaperDataset::Rcv1], 10);
+    let r = &rows[0];
+    assert!(matches!(r.asy_unlock, TimeToGap::Reached(_)), "asysvrg didn't converge");
+    assert!(
+        r.hog_unlock.seconds() > r.asy_unlock.seconds(),
+        "hogwild {:.3}s faster than asysvrg {:.3}s?!",
+        r.hog_unlock.seconds(),
+        r.asy_unlock.seconds()
+    );
+}
+
+#[test]
+fn sim_and_threads_engines_agree_statistically() {
+    // Same config, both engines, single thread: identical math ⇒ identical
+    // trajectories (the rng streams match by construction).
+    let o = obj();
+    let costs = CostModel::default_host();
+    let c = cfg(1, Scheme::Consistent);
+    let rs = sim_run(&o, &c, &costs, f64::NEG_INFINITY);
+    let rt = asysvrg::coordinator::run(&o, &c, f64::NEG_INFINITY);
+    assert_eq!(rs.epochs_run, rt.epochs_run);
+    for (a, b) in rs.history.iter().zip(rt.history.iter()) {
+        assert!(
+            (a.loss - b.loss).abs() < 1e-9,
+            "engines diverged: {} vs {}",
+            a.loss,
+            b.loss
+        );
+    }
+}
+
+#[test]
+fn hogwild_sim_decays_gamma() {
+    let o = obj();
+    let costs = CostModel::default_host();
+    let c = RunConfig {
+        algo: Algo::Hogwild,
+        threads: 4,
+        scheme: Scheme::Unlock,
+        eta: 0.5,
+        epochs: 25,
+        target_gap: 0.0,
+        ..Default::default()
+    };
+    let r = sim_run(&o, &c, &costs, f64::NEG_INFINITY);
+    // movement per epoch shrinks as gamma decays: compare early vs late
+    let d_early = (r.history[1].loss - r.history[0].loss).abs();
+    let d_late = (r.history[24].loss - r.history[23].loss).abs();
+    assert!(d_late < d_early, "no visible decay: early {d_early} late {d_late}");
+}
