@@ -5,15 +5,18 @@
 //! (the end-to-end hot-path unit), and simulator event throughput.
 //! Output feeds the CostModel calibration and EXPERIMENTS.md §Perf.
 
+use asysvrg::bench::report;
 use asysvrg::config::Scheme;
 use asysvrg::coordinator::delay::DelayStats;
 use asysvrg::coordinator::epoch::parallel_full_grad;
 use asysvrg::coordinator::shared::SharedParams;
+use asysvrg::coordinator::sparse::{run_inner_loop_sparse, LazyState};
 use asysvrg::coordinator::worker::{run_inner_loop, WorkerScratch};
 use asysvrg::data::synthetic::SyntheticSpec;
 use asysvrg::linalg::{dense, AtomicF32Vec};
 use asysvrg::objective::Objective;
 use asysvrg::simcore::{simulate_inner, CostModel, SimTask};
+use asysvrg::util::json::Json;
 use asysvrg::util::rng::Pcg32;
 use asysvrg::util::Stopwatch;
 use std::sync::Arc;
@@ -99,6 +102,68 @@ fn main() {
         let us = sw.seconds() * 1e6 / iters as f64;
         println!("inner update [{:<12}] {us:>10.2} µs/update  (d={})", scheme.name(), obj.dim());
     }
+
+    // ------------------------------------------------------------------
+    // dense vs sparse inner-iteration throughput at rcv1-class density
+    // (d = 10_000, ~50 nnz/row ⇒ ~0.5% dense). The CI bench smoke gates on
+    // the emitted JSON showing the sparse fast path ≥ 5x the dense loop.
+    // ------------------------------------------------------------------
+    println!("\n== hot path: dense vs sparse storage (density <= 1%) ==");
+    let ds = SyntheticSpec::new("bench-sparse", 2000, 10_000, 50, 42).generate();
+    let density = ds.density();
+    let avg_nnz = ds.nnz() as f64 / ds.n() as f64;
+    let obj = Objective::paper(Arc::new(ds));
+    let w0 = vec![0.0f32; obj.dim()];
+    let eg = parallel_full_grad(&obj, &w0, 1);
+    let iters = 3000usize;
+
+    let shared = SharedParams::new(&w0, Scheme::Unlock);
+    let mut rng = Pcg32::new(7, 1);
+    let mut scratch = WorkerScratch::new(obj.dim());
+    let delays = DelayStats::new();
+    let sw = Stopwatch::start();
+    run_inner_loop(&obj, &shared, &w0, &eg, 0.01, iters, &mut rng, &mut scratch, &delays);
+    let dense_us = sw.seconds() * 1e6 / iters as f64;
+
+    let shared = SharedParams::new(&w0, Scheme::Unlock);
+    let lazy = LazyState::new(&w0, &eg.mu, obj.lam, 0.01, 0);
+    let mut rng = Pcg32::new(7, 1);
+    let delays = DelayStats::new();
+    let sw = Stopwatch::start();
+    run_inner_loop_sparse(&obj, &shared, &lazy, &eg, iters, &mut rng, &delays);
+    let sparse_us = sw.seconds() * 1e6 / iters as f64;
+    lazy.flush(&shared);
+
+    let speedup = dense_us / sparse_us;
+    println!(
+        "inner update [dense  ] {dense_us:>10.2} µs/update  (d={}, density {:.3}%)",
+        obj.dim(),
+        density * 100.0
+    );
+    println!("inner update [sparse ] {sparse_us:>10.2} µs/update  (~{avg_nnz:.0} nnz/row)");
+    println!("sparse speedup: {speedup:.1}x (target: >= 5x at <= 1% density)");
+    let bench_json = Json::obj(vec![
+        ("bench", Json::Str("inner_iteration_throughput".into())),
+        ("n", Json::Num(obj.n() as f64)),
+        ("d", Json::Num(obj.dim() as f64)),
+        ("avg_nnz", Json::Num(avg_nnz)),
+        ("density", Json::Num(density)),
+        ("iters", Json::Num(iters as f64)),
+        ("dense_us_per_update", Json::Num(dense_us)),
+        ("sparse_us_per_update", Json::Num(sparse_us)),
+        ("sparse_speedup", Json::Num(speedup)),
+        ("target_speedup", Json::Num(5.0)),
+        ("pass", Json::Bool(speedup >= 5.0)),
+    ]);
+    match report::write_json("BENCH_sparse_vs_dense", &bench_json) {
+        Ok(path) => println!("json -> {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+
+    let ds = SyntheticSpec::new("bench", 1000, 2400, 74, 42).generate();
+    let obj = Objective::paper(Arc::new(ds));
+    let w0 = vec![0.0f32; obj.dim()];
+    let eg = parallel_full_grad(&obj, &w0, 1);
 
     println!("\n== simulator: event throughput (4 cores, d=2400) ==");
     let costs = CostModel::default_host();

@@ -11,7 +11,7 @@
 //! Exposed through `repro ablation` and asserted (coarsely) in the
 //! integration tests.
 
-use crate::config::{RunConfig, Scheme};
+use crate::config::{RunConfig, Scheme, Storage};
 use crate::coordinator::epoch::parallel_full_grad;
 use crate::objective::Objective;
 use crate::simcore::{simulate_inner_opts, CostModel, EngineOpts, ReadModel, SimTask};
@@ -180,6 +180,34 @@ pub fn sweep_read_model(
         .collect()
 }
 
+/// Dense O(d) vs sparse O(nnz) inner iterations at matched budgets — the
+/// storage ablation: same algorithm, same schedule parameters, only the
+/// per-update coordinate footprint (and hence simulated time) differs.
+pub fn sweep_storage(
+    obj: &Objective,
+    fstar: f64,
+    threads: usize,
+    epochs: usize,
+) -> Vec<AblationPoint> {
+    let costs = CostModel::default_host();
+    Storage::all()
+        .into_iter()
+        .map(|storage| {
+            let cfg = RunConfig {
+                threads,
+                scheme: Scheme::Unlock,
+                eta: 0.4,
+                epochs,
+                target_gap: 0.0,
+                storage,
+                ..Default::default()
+            };
+            let opts = EngineOpts { storage, ..Default::default() };
+            run_config(obj, &cfg, &costs, &opts, fstar, storage.name())
+        })
+        .collect()
+}
+
 /// Uniform vs skewed core speeds (Assumption 3 stress).
 pub fn sweep_core_speeds(
     obj: &Objective,
@@ -283,6 +311,23 @@ mod tests {
             assert!(!p.diverged, "{}", p.label);
             assert!(p.final_gap < 0.1, "{}: gap {}", p.label, p.final_gap);
         }
+    }
+
+    #[test]
+    fn storage_sweep_sparse_is_faster_same_quality() {
+        let (o, fs) = setup();
+        let pts = sweep_storage(&o, fs, 4, 10);
+        assert_eq!(pts.len(), 2);
+        let (dense, sparse) = (&pts[0], &pts[1]);
+        assert!(!dense.diverged && !sparse.diverged);
+        assert!(
+            sparse.sim_seconds < dense.sim_seconds,
+            "sparse {} !< dense {}",
+            sparse.sim_seconds,
+            dense.sim_seconds
+        );
+        // same algorithm: final gaps land in the same decade
+        assert!(sparse.final_gap < dense.final_gap * 50.0 + 1e-6);
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! Every epoch cross-checks loss and gradient against the native rust twin
 //! — a live numerics audit of the XLA path — and reports per-call latency.
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::data::synthetic::small_dense;
 use crate::runtime::{full_grad_streamed, loss_streamed, DenseBackend, XlaDense};
@@ -58,7 +58,7 @@ pub fn train(n: usize, epochs: usize, eta: f32, seed: u64) -> Result<E2eReport> 
     let native = xla.native_twin();
     let (b, d) = (xla.batch(), xla.dim());
     if n < b {
-        bail!("need n >= batch ({b})");
+        crate::bail!("need n >= batch ({b})");
     }
     let lam = 1e-3f32;
 

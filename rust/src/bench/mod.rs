@@ -12,7 +12,7 @@ pub mod ablation;
 pub mod e2e;
 pub mod report;
 
-use crate::config::{Algo, RunConfig, Scheme};
+use crate::config::{Algo, RunConfig, Scheme, Storage};
 use crate::coordinator::monitor::RunResult;
 use crate::data::{self, PaperDataset};
 use crate::objective::Objective;
@@ -35,6 +35,8 @@ pub struct BenchEnv {
     pub max_epochs: usize,
     /// The paper's suboptimality target.
     pub target_gap: f64,
+    /// Inner-iteration coordinate footprint (dense O(d) / sparse O(nnz)).
+    pub storage: Storage,
 }
 
 impl Default for BenchEnv {
@@ -47,6 +49,7 @@ impl Default for BenchEnv {
             eta_sgd: 0.4,
             max_epochs: 60,
             target_gap: 1e-4,
+            storage: Storage::Dense,
         }
     }
 }
@@ -88,6 +91,7 @@ impl BenchEnv {
             target_gap: self.target_gap,
             seed: self.seed,
             scale: self.scale,
+            storage: self.storage,
             ..Default::default()
         }
     }

@@ -51,6 +51,42 @@ impl Scheme {
     }
 }
 
+/// How the inner loop touches the parameter vector per update.
+///
+/// `Dense` is the literal Alg. 1 transcription: every inner iteration
+/// streams all d coordinates (read û, build v, apply). `Sparse` touches
+/// only the nonzero coordinates of the sampled instance and applies the
+/// dense `λ(û−u₀)+μ̄` correction lazily via per-coordinate clocks
+/// (`coordinator::sparse`), making an iteration O(nnz_i) — the cost model
+/// the paper's sparse text corpora (Table 1) are actually run under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Storage {
+    #[default]
+    Dense,
+    Sparse,
+}
+
+impl Storage {
+    pub fn parse(s: &str) -> Result<Storage, String> {
+        match s {
+            "dense" => Ok(Storage::Dense),
+            "sparse" => Ok(Storage::Sparse),
+            _ => Err(format!("unknown storage '{s}' (dense|sparse)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Storage::Dense => "dense",
+            Storage::Sparse => "sparse",
+        }
+    }
+
+    pub fn all() -> [Storage; 2] {
+        [Storage::Dense, Storage::Sparse]
+    }
+}
+
 /// Which algorithm drives the inner loop.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algo {
@@ -100,6 +136,8 @@ pub struct RunConfig {
     pub target_gap: f64,
     pub lambda: f32,
     pub loss: LossKind,
+    /// Per-update coordinate footprint: dense O(d) or sparse O(nnz).
+    pub storage: Storage,
 }
 
 impl Default for RunConfig {
@@ -118,6 +156,7 @@ impl Default for RunConfig {
             target_gap: 1e-4,
             lambda: 1e-4,
             loss: LossKind::Logistic,
+            storage: Storage::Dense,
         }
     }
 }
@@ -148,12 +187,13 @@ impl RunConfig {
             ("target_gap", Json::Num(self.target_gap)),
             ("lambda", Json::Num(self.lambda as f64)),
             ("loss", Json::Str(self.loss.name().into())),
+            ("storage", Json::Str(self.storage.name().into())),
         ])
     }
 
     pub fn describe(&self) -> String {
         format!(
-            "{}-{} on {} (scale {}): p={} eta={} epochs={} seed={}",
+            "{}-{} on {} (scale {}): p={} eta={} epochs={} seed={} storage={}",
             self.algo.name(),
             self.scheme.name(),
             self.dataset,
@@ -161,7 +201,8 @@ impl RunConfig {
             self.threads,
             self.eta,
             self.epochs,
-            self.seed
+            self.seed,
+            self.storage.name()
         )
     }
 }
@@ -199,8 +240,18 @@ mod tests {
     #[test]
     fn json_has_all_fields() {
         let j = RunConfig::default().to_json();
-        for k in ["dataset", "threads", "scheme", "algo", "eta", "target_gap"] {
+        for k in ["dataset", "threads", "scheme", "algo", "eta", "target_gap", "storage"] {
             assert!(j.get(k).is_some(), "missing {k}");
         }
+    }
+
+    #[test]
+    fn storage_parse_roundtrip_and_default() {
+        for s in Storage::all() {
+            assert_eq!(Storage::parse(s.name()).unwrap(), s);
+        }
+        assert!(Storage::parse("csc").is_err());
+        assert_eq!(RunConfig::default().storage, Storage::Dense);
+        assert!(RunConfig::default().describe().contains("storage=dense"));
     }
 }

@@ -13,11 +13,12 @@
 
 use std::sync::Arc;
 
-use crate::config::RunConfig;
+use crate::config::{RunConfig, Storage};
 use crate::coordinator::delay::DelayStats;
 use crate::coordinator::epoch::parallel_full_grad;
 use crate::coordinator::monitor::{HistoryPoint, RunResult};
 use crate::coordinator::shared::SharedParams;
+use crate::coordinator::sparse::{run_inner_loop_sparse, LazyState};
 use crate::coordinator::worker::{run_inner_loop, run_inner_loop_averaging, WorkerScratch};
 use crate::objective::Objective;
 use crate::util::rng::Pcg32;
@@ -50,6 +51,14 @@ pub fn run_asysvrg(
     let mut result = RunResult::default();
     let mut passes = 0.0f64;
 
+    if option == SvrgOption::Average && cfg.storage == Storage::Sparse {
+        crate::log!(
+            Warn,
+            "storage=sparse with Option 2 (average): the Σû accumulation is inherently \
+             O(d) per update, so the dense inner loop is used for this run"
+        );
+    }
+
     for t in 0..cfg.epochs {
         // (1) parallel full gradient at w_t
         let eg = parallel_full_grad(obj, &w, p);
@@ -57,6 +66,33 @@ pub fn run_asysvrg(
         let shared = SharedParams::new(&w, cfg.scheme);
         let clock_before = shared.clock();
         let avg: Option<Vec<f32>> = match option {
+            SvrgOption::CurrentIterate if cfg.storage == Storage::Sparse => {
+                // O(nnz) fast path: lazy dense corrections, flushed at the
+                // epoch boundary so the snapshot matches the dense iterate
+                let lazy = LazyState::new(&w, &eg.mu, obj.lam, cfg.eta, shared.clock());
+                std::thread::scope(|s| {
+                    for a in 0..p {
+                        let shared = &shared;
+                        let eg = &eg;
+                        let lazy = &lazy;
+                        let delays = &delays;
+                        s.spawn(move || {
+                            let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
+                            run_inner_loop_sparse(
+                                obj,
+                                shared,
+                                lazy,
+                                eg,
+                                m_per_thread,
+                                &mut rng,
+                                delays,
+                            );
+                        });
+                    }
+                });
+                lazy.flush(&shared);
+                None
+            }
             SvrgOption::CurrentIterate => {
                 std::thread::scope(|s| {
                     for a in 0..p {
@@ -275,6 +311,52 @@ mod tests {
         assert_eq!(r.epochs_run, 2);
         // passes: 3 per epoch with m_factor = 2
         assert!((r.history.last().unwrap().passes - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sparse_storage_matches_dense_single_thread() {
+        let obj = small_obj();
+        let base = RunConfig { threads: 1, eta: 0.2, epochs: 4, target_gap: 0.0, ..Default::default() };
+        let dense = run(&obj, &base, f64::NEG_INFINITY);
+        let sparse_cfg = RunConfig { storage: crate::config::Storage::Sparse, ..base };
+        let sparse = run(&obj, &sparse_cfg, f64::NEG_INFINITY);
+        assert_eq!(dense.total_updates, sparse.total_updates);
+        for (a, b) in dense.history.iter().zip(sparse.history.iter()) {
+            assert!(
+                (a.loss - b.loss).abs() < 5e-4 * (1.0 + a.loss.abs()),
+                "loss diverged: dense {} vs sparse {}",
+                a.loss,
+                b.loss
+            );
+        }
+        for j in 0..obj.dim() {
+            let (a, b) = (dense.final_w[j], sparse.final_w[j]);
+            assert!((a - b).abs() < 5e-3 * (1.0 + a.abs()), "coord {j}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sparse_storage_converges_multithreaded() {
+        let obj = small_obj();
+        let (_, fstar) = solve_fstar(&obj, 0.2, 80, 1);
+        for scheme in [Scheme::Inconsistent, Scheme::Unlock, Scheme::AtomicCas] {
+            let cfg = RunConfig {
+                threads: 4,
+                scheme,
+                eta: 0.2,
+                epochs: 40,
+                target_gap: 1e-5,
+                storage: crate::config::Storage::Sparse,
+                ..Default::default()
+            };
+            let r = run(&obj, &cfg, fstar);
+            assert!(
+                r.converged,
+                "{scheme:?} sparse gap {:.3e} after {} epochs",
+                r.final_loss() - fstar,
+                r.epochs_run
+            );
+        }
     }
 
     #[test]

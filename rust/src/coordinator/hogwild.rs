@@ -9,10 +9,11 @@
 //! `SharedParams::apply_sgd_step` so the locking discipline matches the
 //! AsySVRG schemes exactly (like-for-like in Table 3).
 
-use crate::config::RunConfig;
+use crate::config::{RunConfig, Storage};
 use crate::coordinator::delay::DelayStats;
 use crate::coordinator::monitor::{HistoryPoint, RunResult};
 use crate::coordinator::shared::SharedParams;
+use crate::coordinator::sparse::{run_hogwild_inner_sparse, LazyState};
 use crate::objective::Objective;
 use crate::util::rng::Pcg32;
 use crate::util::Stopwatch;
@@ -32,24 +33,46 @@ pub fn run_hogwild(obj: &Objective, cfg: &RunConfig, fstar: f64) -> RunResult {
     let mut passes = 0.0f64;
 
     for t in 0..cfg.epochs {
-        std::thread::scope(|s| {
-            for a in 0..p {
-                let shared = &shared;
-                let delays = &delays;
-                s.spawn(move || {
-                    let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
-                    let mut local = vec![0.0f32; d];
-                    for _ in 0..iters {
-                        let i = rng.below(n);
-                        let read_clock = shared.read_into(&mut local);
-                        let r = obj.residual(&local, i);
-                        let apply_clock =
-                            shared.apply_sgd_step(obj.data.row(i), r, obj.lam, &local, gamma);
-                        delays.record(read_clock, apply_clock);
+        match cfg.storage {
+            Storage::Sparse => {
+                // O(nnz) fast path: the λû ridge decay is applied lazily;
+                // γ changes per epoch, so the lazy state is rebuilt at the
+                // running clock each time
+                let lazy = LazyState::for_hogwild(d, obj.lam, gamma, shared.clock());
+                std::thread::scope(|s| {
+                    for a in 0..p {
+                        let shared = &shared;
+                        let lazy = &lazy;
+                        let delays = &delays;
+                        s.spawn(move || {
+                            let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
+                            run_hogwild_inner_sparse(obj, shared, lazy, iters, &mut rng, delays);
+                        });
+                    }
+                });
+                lazy.flush(&shared);
+            }
+            Storage::Dense => {
+                std::thread::scope(|s| {
+                    for a in 0..p {
+                        let shared = &shared;
+                        let delays = &delays;
+                        s.spawn(move || {
+                            let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
+                            let mut local = vec![0.0f32; d];
+                            for _ in 0..iters {
+                                let i = rng.below(n);
+                                let read_clock = shared.read_into(&mut local);
+                                let r = obj.residual(&local, i);
+                                let apply_clock = shared
+                                    .apply_sgd_step(obj.data.row(i), r, obj.lam, &local, gamma);
+                                delays.record(read_clock, apply_clock);
+                            }
+                        });
                     }
                 });
             }
-        });
+        }
         gamma *= cfg.gamma_decay;
         passes += 1.0; // Hogwild!: one effective pass per epoch (§5.1)
 
@@ -131,6 +154,38 @@ mod tests {
             assert!(r.final_loss() < r.history[0].loss, "{scheme:?} no progress");
             assert_eq!(r.epochs_run, 60);
         }
+    }
+
+    #[test]
+    fn sparse_storage_matches_dense_single_thread() {
+        let obj = small_obj();
+        let mut base = cfg(1, Scheme::Unlock);
+        base.epochs = 5;
+        base.target_gap = 0.0;
+        let dense = run_hogwild(&obj, &base, f64::NEG_INFINITY);
+        let mut sp = base.clone();
+        sp.storage = crate::config::Storage::Sparse;
+        let sparse = run_hogwild(&obj, &sp, f64::NEG_INFINITY);
+        assert_eq!(dense.total_updates, sparse.total_updates);
+        for (a, b) in dense.history.iter().zip(sparse.history.iter()) {
+            assert!(
+                (a.loss - b.loss).abs() < 5e-4 * (1.0 + a.loss.abs()),
+                "loss diverged: dense {} vs sparse {}",
+                a.loss,
+                b.loss
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_storage_converges_multithreaded() {
+        let obj = small_obj();
+        let (_, fstar) = crate::coordinator::asysvrg::solve_fstar(&obj, 0.2, 120, 1);
+        let mut c = cfg(4, Scheme::Unlock);
+        c.storage = crate::config::Storage::Sparse;
+        let r = run_hogwild(&obj, &c, f64::NEG_INFINITY);
+        let gap = r.final_loss() - fstar;
+        assert!(gap < 5e-3, "sparse hogwild gap {gap:.3e}");
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //!
 //! * [`shared`] — the shared parameter vector + the access schemes
 //! * [`epoch`] — parallel full-gradient pass with the φ_a partition
-//! * [`worker`] — the asynchronous inner loop (hot path)
+//! * [`worker`] — the asynchronous dense inner loop (O(d) per update)
+//! * [`sparse`] — the sparse fast path (O(nnz) per update, lazy dense
+//!   corrections via per-coordinate clocks)
 //! * [`asysvrg`] — Algorithm 1 driver (Options 1 & 2)
 //! * [`hogwild`] — the Hogwild! baseline under identical disciplines
 //! * [`delay`] — bounded-delay (τ) instrumentation
@@ -14,12 +16,14 @@ pub mod epoch;
 pub mod hogwild;
 pub mod monitor;
 pub mod shared;
+pub mod sparse;
 pub mod worker;
 
 pub use asysvrg::{run_asysvrg, SvrgOption};
 pub use hogwild::run_hogwild;
 pub use monitor::{HistoryPoint, RunResult};
 pub use shared::SharedParams;
+pub use sparse::LazyState;
 
 use crate::config::{Algo, RunConfig};
 use crate::objective::Objective;

@@ -141,10 +141,11 @@ impl SharedParams {
     pub fn apply_step(&self, v: &[f32], eta: f32) -> u64 {
         debug_assert_eq!(v.len(), self.dim());
         match self.scheme {
-            Scheme::Consistent | Scheme::Inconsistent => {
-                let _g = self.lock.lock().unwrap();
-                self.data.axpy_racy_bulk(-eta, v); // safe: under the lock
-                self.clock.fetch_add(1, Ordering::Relaxed) + 1
+            Scheme::Consistent | Scheme::Inconsistent | Scheme::Seqlock => {
+                self.with_write_lock(|| {
+                    self.data.axpy_racy_bulk(-eta, v); // safe: under the lock
+                    self.clock.fetch_add(1, Ordering::Relaxed) + 1
+                })
             }
             Scheme::Unlock => {
                 self.data.axpy_racy_bulk(-eta, v); // racy by design
@@ -154,15 +155,6 @@ impl SharedParams {
                 for (j, &vj) in v.iter().enumerate() {
                     self.data.add_cas(j, -eta * vj);
                 }
-                self.clock.fetch_add(1, Ordering::Relaxed) + 1
-            }
-            Scheme::Seqlock => {
-                let _g = self.lock.lock().unwrap();
-                let ver = self.version.load(Ordering::Relaxed);
-                self.version.store(ver + 1, Ordering::Release);
-                std::sync::atomic::fence(Ordering::Release);
-                self.data.axpy_racy_bulk(-eta, v);
-                self.version.store(ver + 2, Ordering::Release);
                 self.clock.fetch_add(1, Ordering::Relaxed) + 1
             }
         }
@@ -188,17 +180,10 @@ impl SharedParams {
         };
         match self.scheme {
             Scheme::Consistent | Scheme::Inconsistent | Scheme::Seqlock => {
-                let _g = self.lock.lock().unwrap();
-                if self.scheme == Scheme::Seqlock {
-                    let ver = self.version.load(Ordering::Relaxed);
-                    self.version.store(ver + 1, Ordering::Release);
-                    std::sync::atomic::fence(Ordering::Release);
+                self.with_write_lock(|| {
                     dense(&self.data);
-                    self.version.store(ver + 2, Ordering::Release);
-                } else {
-                    dense(&self.data);
-                }
-                self.clock.fetch_add(1, Ordering::Relaxed) + 1
+                    self.clock.fetch_add(1, Ordering::Relaxed) + 1
+                })
             }
             Scheme::Unlock => {
                 dense(&self.data);
@@ -214,6 +199,41 @@ impl SharedParams {
                 self.clock.fetch_add(1, Ordering::Relaxed) + 1
             }
         }
+    }
+
+    /// Direct access to the underlying atomic vector — the O(nnz) sparse
+    /// fast path (`coordinator::sparse`) reads/writes individual
+    /// coordinates instead of streaming all d through the bulk helpers.
+    #[inline]
+    pub fn data(&self) -> &AtomicF32Vec {
+        &self.data
+    }
+
+    /// Run `f` under this scheme's writer discipline: the mutex, plus the
+    /// seqlock version bump when the scheme is Seqlock. The sparse path
+    /// wraps its whole O(nnz) iteration in this for the locking schemes —
+    /// at nnz-sized critical sections the read-lock/update-lock distinction
+    /// the dense path preserves is dominated by the lock cost itself.
+    pub fn with_write_lock<R>(&self, f: impl FnOnce() -> R) -> R {
+        let _g = self.lock.lock().unwrap();
+        if self.scheme == Scheme::Seqlock {
+            let ver = self.version.load(Ordering::Relaxed);
+            self.version.store(ver + 1, Ordering::Release);
+            std::sync::atomic::fence(Ordering::Release);
+            let r = f();
+            self.version.store(ver + 2, Ordering::Release);
+            r
+        } else {
+            f()
+        }
+    }
+
+    /// Count one applied update; returns the update's own clock index m+1.
+    /// (The bulk helpers bump internally; sparse-path callers bump once per
+    /// logical update after scattering their nnz coordinates.)
+    #[inline]
+    pub fn bump_clock(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
     }
 
     /// Unconditional snapshot (epoch boundaries: all workers joined).

@@ -75,6 +75,28 @@ impl AtomicF32Vec {
         }
     }
 
+    /// Linearizable read-modify-write via a CAS loop: coordinate i becomes
+    /// f(current). The sparse fast path's lazy catch-up needs this because
+    /// its new value is a function of the current one, not a fixed delta.
+    /// Returns the value written so callers can reuse it without re-loading.
+    #[inline]
+    pub fn update_cas(&self, i: usize, f: impl Fn(f32) -> f32) -> f32 {
+        let cell = &self.data[i];
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            let next = f(f32::from_bits(cur));
+            match cell.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return next,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
     /// Bulk unlocked snapshot — coordinates may have mixed ages.
     /// (zip, not indexing: saves a bounds check per element on the hot path)
     pub fn read_into(&self, out: &mut [f32]) {

@@ -14,7 +14,7 @@
 
 use asysvrg::bench::{self, report, BenchEnv};
 use asysvrg::cli::Command;
-use asysvrg::config::{Algo, RunConfig, Scheme};
+use asysvrg::config::{Algo, RunConfig, Scheme, Storage};
 use asysvrg::coordinator;
 use asysvrg::data::{self, PaperDataset};
 use asysvrg::objective::Objective;
@@ -80,6 +80,7 @@ fn env_opts(c: Command) -> Command {
         .opt("eta-sgd", "0.4", "Hogwild! initial step γ")
         .opt("epochs", "60", "epoch budget per run")
         .opt("gap", "1e-4", "target suboptimality gap")
+        .opt("storage", "dense", "inner-loop storage: dense (O(d)/update) | sparse (O(nnz)/update)")
         .flag("measured-costs", "calibrate the sim cost model on this host")
 }
 
@@ -96,6 +97,7 @@ fn bench_env(m: &asysvrg::cli::Matches) -> Result<BenchEnv, String> {
         eta_sgd: m.f32("eta-sgd")?,
         max_epochs: m.usize("epochs")?,
         target_gap: m.f64("gap")?,
+        storage: Storage::parse(m.str("storage"))?,
     })
 }
 
@@ -132,6 +134,9 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     );
     let m = cmd.parse(args)?;
     let env = bench_env(&m)?;
+    if m.usize("threads")? == 0 {
+        return Err("--threads must be >= 1".into());
+    }
     let ds = data::resolve(m.str("dataset"), env.scale, env.seed)?;
     println!("{}", ds.describe());
     let obj = Objective::paper(ds);
@@ -145,6 +150,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         target_gap: env.target_gap,
         seed: env.seed,
         scale: env.scale,
+        storage: env.storage,
         ..Default::default()
     };
     println!("{}", cfg.describe());
@@ -310,8 +316,8 @@ fn cmd_ablation(args: &[String]) -> Result<(), String> {
         .opt("epochs", "25", "epoch budget per point")
         .opt(
             "which",
-            "eta,m,read-model,cores",
-            "comma list of sweeps: eta|m|read-model|cores",
+            "eta,m,read-model,cores,storage",
+            "comma list of sweeps: eta|m|read-model|cores|storage",
         );
     let m = cmd.parse(args)?;
     let ds = data::resolve(m.str("dataset"), m.f64("scale")?, m.u64("seed")?)?;
@@ -338,6 +344,10 @@ fn cmd_ablation(args: &[String]) -> Result<(), String> {
             "cores" => (
                 "core speeds (Assumption 3 stress)",
                 ablation::sweep_core_speeds(&obj, fstar, threads, epochs),
+            ),
+            "storage" => (
+                "storage: dense O(d) vs sparse O(nnz) inner iterations",
+                ablation::sweep_storage(&obj, fstar, threads, epochs),
             ),
             o => return Err(format!("unknown sweep '{o}'")),
         };

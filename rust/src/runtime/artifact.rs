@@ -5,12 +5,18 @@
 //! Interchange is HLO *text* — the xla crate's XLA (0.5.1) rejects jax ≥0.5
 //! serialized protos (64-bit instruction ids); the text parser reassigns
 //! ids. See DESIGN.md §1 and /opt/xla-example/README.md.
+//!
+//! The PJRT dependency is feature-gated (`--features xla`): the manifest
+//! parsing and shape bookkeeping below always build, while the
+//! compile/execute half requires the vendored `xla` crate (add it to
+//! `rust/Cargo.toml` alongside the feature on hosts that carry the closure).
+//! Without the feature, [`Runtime::load`] fails with a clear message and
+//! every caller falls back to the native backend or skips.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::json::{self, Json};
 
 /// Declared shape of one AOT entry point.
@@ -48,37 +54,37 @@ impl Manifest {
     }
 
     pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
-        let j = json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let j = json::parse(text).map_err(|e| crate::err!("manifest: {e}"))?;
         let get_usize = |k: &str| -> Result<usize> {
-            j.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("manifest missing '{k}'"))
+            j.get(k).and_then(Json::as_usize).ok_or_else(|| crate::err!("manifest missing '{k}'"))
         };
         let mut entries = BTreeMap::new();
         let eobj = j
             .get("entries")
             .and_then(Json::as_obj)
-            .ok_or_else(|| anyhow!("manifest missing 'entries'"))?;
+            .ok_or_else(|| crate::err!("manifest missing 'entries'"))?;
         for (name, e) in eobj {
             let file = e
                 .get("file")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("entry {name}: missing file"))?
+                .ok_or_else(|| crate::err!("entry {name}: missing file"))?
                 .to_string();
             let inputs = e
                 .get("inputs")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("entry {name}: missing inputs"))?
+                .ok_or_else(|| crate::err!("entry {name}: missing inputs"))?
                 .iter()
                 .map(|shape| {
                     shape
                         .as_arr()
                         .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
-                        .ok_or_else(|| anyhow!("entry {name}: bad shape"))
+                        .ok_or_else(|| crate::err!("entry {name}: bad shape"))
                 })
                 .collect::<Result<Vec<Vec<usize>>>>()?;
             let outputs = e
                 .get("outputs")
                 .and_then(Json::as_usize)
-                .ok_or_else(|| anyhow!("entry {name}: missing outputs"))?;
+                .ok_or_else(|| crate::err!("entry {name}: missing outputs"))?;
             entries.insert(name.clone(), EntrySpec { file, inputs, outputs });
         }
         Ok(Manifest {
@@ -91,98 +97,147 @@ impl Manifest {
     }
 
     pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
-        self.entries.get(name).ok_or_else(|| anyhow!("no artifact entry '{name}'"))
+        self.entries.get(name).ok_or_else(|| crate::err!("no artifact entry '{name}'"))
     }
 }
 
-/// A compiled entry point plus its spec.
-struct LoadedEntry {
-    exe: xla::PjRtLoadedExecutable,
-    spec: EntrySpec,
-}
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::*;
 
-/// PJRT runtime holding the CPU client and every compiled artifact.
-///
-/// Execution is serialized through an internal mutex: the PJRT CPU client's
-/// concurrent-execute behaviour is undocumented in the 0.1.6 binding, and
-/// on this 1-core host serialization costs nothing.
-pub struct Runtime {
-    manifest: Manifest,
-    entries: BTreeMap<String, LoadedEntry>,
-    exec_lock: std::sync::Mutex<()>,
-    pub platform: String,
-}
+    /// A compiled entry point plus its spec.
+    struct LoadedEntry {
+        exe: xla::PjRtLoadedExecutable,
+        spec: EntrySpec,
+    }
 
-impl Runtime {
-    /// Load and compile every artifact in `dir`.
-    pub fn load(dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        let platform = client.platform_name();
-        let mut entries = BTreeMap::new();
-        for (name, spec) in &manifest.entries {
-            let path = dir.join(&spec.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-            )
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-            entries.insert(name.clone(), LoadedEntry { exe, spec: spec.clone() });
+    /// PJRT runtime holding the CPU client and every compiled artifact.
+    ///
+    /// Execution is serialized through an internal mutex: the PJRT CPU
+    /// client's concurrent-execute behaviour is undocumented in the 0.1.6
+    /// binding, and on this 1-core host serialization costs nothing.
+    pub struct Runtime {
+        manifest: Manifest,
+        entries: BTreeMap<String, LoadedEntry>,
+        exec_lock: std::sync::Mutex<()>,
+        pub platform: String,
+    }
+
+    impl Runtime {
+        /// Load and compile every artifact in `dir`.
+        pub fn load(dir: &Path) -> Result<Runtime> {
+            let manifest = Manifest::load(dir)?;
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| crate::err!("pjrt cpu client: {e:?}"))?;
+            let platform = client.platform_name();
+            let mut entries = BTreeMap::new();
+            for (name, spec) in &manifest.entries {
+                let path = dir.join(&spec.file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| crate::err!("bad path"))?,
+                )
+                .map_err(|e| crate::err!("parsing {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe =
+                    client.compile(&comp).map_err(|e| crate::err!("compiling {name}: {e:?}"))?;
+                entries.insert(name.clone(), LoadedEntry { exe, spec: spec.clone() });
+            }
+            Ok(Runtime { manifest, entries, exec_lock: std::sync::Mutex::new(()), platform })
         }
-        Ok(Runtime { manifest, entries, exec_lock: std::sync::Mutex::new(()), platform })
-    }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Execute entry `name` on flat f32 buffers (shapes validated against
-    /// the manifest). Returns the flattened outputs in tuple order.
-    pub fn execute(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
-        let entry = self
-            .entries
-            .get(name)
-            .ok_or_else(|| anyhow!("no compiled entry '{name}'"))?;
-        let spec = &entry.spec;
-        if inputs.len() != spec.inputs.len() {
-            bail!("{name}: {} inputs given, {} declared", inputs.len(), spec.inputs.len());
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (k, buf) in inputs.iter().enumerate() {
-            if buf.len() != spec.input_len(k) {
-                bail!(
-                    "{name} input {k}: {} elements given, shape {:?} needs {}",
-                    buf.len(),
-                    spec.inputs[k],
-                    spec.input_len(k)
+
+        /// Execute entry `name` on flat f32 buffers (shapes validated
+        /// against the manifest). Returns flattened outputs in tuple order.
+        pub fn execute(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+            let entry = self
+                .entries
+                .get(name)
+                .ok_or_else(|| crate::err!("no compiled entry '{name}'"))?;
+            let spec = &entry.spec;
+            if inputs.len() != spec.inputs.len() {
+                crate::bail!(
+                    "{name}: {} inputs given, {} declared",
+                    inputs.len(),
+                    spec.inputs.len()
                 );
             }
-            let lit = xla::Literal::vec1(buf);
-            let shaped = if spec.inputs[k].len() > 1 {
-                let dims: Vec<i64> = spec.inputs[k].iter().map(|&d| d as i64).collect();
-                lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?
-            } else {
-                lit
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (k, buf) in inputs.iter().enumerate() {
+                if buf.len() != spec.input_len(k) {
+                    crate::bail!(
+                        "{name} input {k}: {} elements given, shape {:?} needs {}",
+                        buf.len(),
+                        spec.inputs[k],
+                        spec.input_len(k)
+                    );
+                }
+                let lit = xla::Literal::vec1(buf);
+                let shaped = if spec.inputs[k].len() > 1 {
+                    let dims: Vec<i64> = spec.inputs[k].iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims).map_err(|e| crate::err!("reshape: {e:?}"))?
+                } else {
+                    lit
+                };
+                literals.push(shaped);
+            }
+            let result = {
+                let _g = self.exec_lock.lock().unwrap();
+                let bufs = entry
+                    .exe
+                    .execute::<xla::Literal>(&literals)
+                    .map_err(|e| crate::err!("execute {name}: {e:?}"))?;
+                bufs[0][0].to_literal_sync().map_err(|e| crate::err!("fetch {name}: {e:?}"))?
             };
-            literals.push(shaped);
+            // aot.py lowers with return_tuple=True: always a tuple
+            let parts = result.to_tuple().map_err(|e| crate::err!("untuple {name}: {e:?}"))?;
+            if parts.len() != spec.outputs {
+                crate::bail!("{name}: {} outputs, {} declared", parts.len(), spec.outputs);
+            }
+            parts
+                .into_iter()
+                .map(|p| p.to_vec::<f32>().map_err(|e| crate::err!("output fetch: {e:?}")))
+                .collect()
         }
-        let result = {
-            let _g = self.exec_lock.lock().unwrap();
-            let bufs = entry.exe.execute::<xla::Literal>(&literals).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-            bufs[0][0].to_literal_sync().map_err(|e| anyhow!("fetch {name}: {e:?}"))?
-        };
-        // aot.py lowers with return_tuple=True: always a tuple
-        let parts = result.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
-        if parts.len() != spec.outputs {
-            bail!("{name}: {} outputs, {} declared", parts.len(), spec.outputs);
-        }
-        parts
-            .into_iter()
-            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("output fetch: {e:?}")))
-            .collect()
     }
 }
+
+#[cfg(not(feature = "xla"))]
+mod pjrt {
+    use super::*;
+
+    /// Stub runtime compiled when the `xla` feature is off: loading always
+    /// fails with an actionable message, so callers (the e2e driver, the
+    /// XLA integration tests) fall back to the native backend or skip.
+    pub struct Runtime {
+        manifest: Manifest,
+        pub platform: String,
+    }
+
+    impl Runtime {
+        pub fn load(dir: &Path) -> Result<Runtime> {
+            // Validate the manifest anyway so configuration errors surface
+            // even on builds without the PJRT closure.
+            let _ = Manifest::load(dir)?;
+            Err(crate::err!(
+                "PJRT runtime unavailable: built without the `xla` feature \
+                 (rebuild with `--features xla` on a host with the vendored xla crate)"
+            ))
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn execute(&self, name: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+            Err(crate::err!("cannot execute '{name}': built without the `xla` feature"))
+        }
+    }
+}
+
+pub use pjrt::Runtime;
 
 #[cfg(test)]
 mod tests {
@@ -216,5 +271,14 @@ mod tests {
         let missing_outputs = r#"{"batch":1,"chunk":1,"dim":1,
           "entries":{"x":{"file":"f","inputs":[[1]]}}}"#;
         assert!(Manifest::parse(missing_outputs, Path::new("/tmp")).is_err());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_runtime_load_fails_cleanly() {
+        let e = Runtime::load(Path::new("/no/such/dir")).unwrap_err();
+        // missing manifest reported first; with a manifest present the
+        // feature-gate message would surface instead
+        assert!(e.to_string().contains("manifest.json"), "{e}");
     }
 }

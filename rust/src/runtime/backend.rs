@@ -12,7 +12,7 @@
 //! the last chunk with zero-label rows (which contribute exactly zero — see
 //! `python/compile/kernels/ref.py`).
 
-use anyhow::Result;
+use crate::util::error::Result;
 use std::path::Path;
 
 use super::artifact::Runtime;
@@ -86,7 +86,7 @@ impl DenseBackend for NativeDense {
     fn minibatch_grad(&self, x: &[f32], y: &[f32], w: &[f32], lam: f32) -> Result<Vec<f32>> {
         let b = self.batch;
         let d = self.dim;
-        anyhow::ensure!(x.len() == b * d && y.len() == b && w.len() == d, "shape mismatch");
+        crate::ensure!(x.len() == b * d && y.len() == b && w.len() == d, "shape mismatch");
         let mut g = vec![0.0f32; d];
         for i in 0..b {
             let row = &x[i * d..(i + 1) * d];
@@ -104,7 +104,7 @@ impl DenseBackend for NativeDense {
     fn grad_contrib(&self, x: &[f32], y: &[f32], w: &[f32]) -> Result<Vec<f32>> {
         let c = self.chunk;
         let d = self.dim;
-        anyhow::ensure!(x.len() == c * d && y.len() == c && w.len() == d, "shape mismatch");
+        crate::ensure!(x.len() == c * d && y.len() == c && w.len() == d, "shape mismatch");
         let mut g = vec![0.0f32; d];
         for i in 0..c {
             let row = &x[i * d..(i + 1) * d];
@@ -118,7 +118,7 @@ impl DenseBackend for NativeDense {
     fn loss_sum(&self, x: &[f32], y: &[f32], w: &[f32]) -> Result<f64> {
         let c = self.chunk;
         let d = self.dim;
-        anyhow::ensure!(x.len() == c * d && y.len() == c && w.len() == d, "shape mismatch");
+        crate::ensure!(x.len() == c * d && y.len() == c && w.len() == d, "shape mismatch");
         let mut acc = 0.0f64;
         for i in 0..c {
             let row = &x[i * d..(i + 1) * d];
@@ -137,7 +137,7 @@ impl DenseBackend for NativeDense {
         eta: f32,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         let d = self.dim;
-        anyhow::ensure!(u.len() == d && g.len() == d && g0.len() == d && mu.len() == d);
+        crate::ensure!(u.len() == d && g.len() == d && g0.len() == d && mu.len() == d);
         let mut v = vec![0.0f32; d];
         let mut un = vec![0.0f32; d];
         for j in 0..d {
@@ -216,7 +216,7 @@ impl DenseBackend for XlaDense {
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         let eta1 = [eta];
         let mut out = self.rt.execute("svrg_step", &[u, g, g0, mu, &eta1])?;
-        anyhow::ensure!(out.len() == 2, "svrg_step arity");
+        crate::ensure!(out.len() == 2, "svrg_step arity");
         let v = out.remove(1);
         let un = out.remove(0);
         Ok((un, v))
@@ -243,7 +243,7 @@ pub fn full_grad_streamed(
 ) -> Result<Vec<f32>> {
     let c = be.chunk();
     let d = be.dim();
-    anyhow::ensure!(x.len() == n * d && y.len() == n);
+    crate::ensure!(x.len() == n * d && y.len() == n);
     let mut acc = vec![0.0f32; d];
     let mut xpad = vec![0.0f32; c * d];
     let mut ypad = vec![0.0f32; c];

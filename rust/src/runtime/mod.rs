@@ -17,7 +17,9 @@ pub fn default_artifact_dir() -> PathBuf {
     std::env::var("REPRO_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
-/// True if artifacts appear to be built (manifest exists).
+/// True if the XLA path is usable: the crate was built with the `xla`
+/// feature AND artifacts appear to be built (manifest exists). Callers use
+/// this to skip rather than fail on feature-off / artifact-less hosts.
 pub fn artifacts_available() -> bool {
-    default_artifact_dir().join("manifest.json").exists()
+    cfg!(feature = "xla") && default_artifact_dir().join("manifest.json").exists()
 }

@@ -153,6 +153,37 @@ impl CostModel {
         base * contention * cas
     }
 
+    // -------------------------------------------------- sparse fast path
+    //
+    // Under `Storage::Sparse` an inner iteration touches only the nnz(i)
+    // coordinates of the sampled instance (`coordinator::sparse`), so every
+    // phase is billed per-nonzero: reads don't stream d coords, the compute
+    // phase adds the lazy catch-up arithmetic (~one fused multiply-add per
+    // touched coordinate), and the update scatters nnz writes.
+
+    /// Duration of the sparse read phase: nnz coordinate loads.
+    #[inline]
+    pub fn sparse_read_cost(&self, nnz: usize, p: usize) -> f64 {
+        nnz as f64 * self.read_coord_ns * self.bw(p)
+    }
+
+    /// Duration of the sparse compute phase: the margin dot plus the lazy
+    /// dense-correction catch-up on the touched coordinates.
+    #[inline]
+    pub fn sparse_compute_cost(&self, nnz: usize) -> f64 {
+        nnz as f64 * (self.sparse_nnz_ns + self.dense_coord_ns)
+    }
+
+    /// Duration of the sparse update phase: an nnz-sized scatter under the
+    /// same contention/CAS factors as the dense update.
+    #[inline]
+    pub fn sparse_update_cost(&self, nnz: usize, p: usize, writers: usize, cas: bool) -> f64 {
+        let base = nnz as f64 * self.write_coord_ns * self.bw(p);
+        let contention = 1.0 + self.write_contention * writers.saturating_sub(1) as f64;
+        let cas = if cas { self.cas_factor } else { 1.0 };
+        base * contention * cas
+    }
+
     /// Full-gradient epoch phase: p threads each process `rows` rows of
     /// `avg_nnz` average, then a d-sized reduction per thread.
     pub fn full_grad_cost(&self, rows: usize, total_nnz_share: usize, d: usize, p: usize) -> f64 {
@@ -183,6 +214,26 @@ mod tests {
         assert!(c.update_cost(1000, 1, 3, false) > c.update_cost(1000, 1, 1, false));
         assert!(c.update_cost(1000, 1, 1, true) > c.update_cost(1000, 1, 1, false));
         assert!(c.svrg_compute_cost(50, 1000, 1) > c.sgd_compute_cost(50));
+    }
+
+    #[test]
+    fn sparse_costs_beat_dense_at_low_density() {
+        let c = CostModel::default_host();
+        let (d, nnz, p) = (10_000, 50, 8);
+        // every phase must be cheaper than its dense counterpart
+        assert!(c.sparse_read_cost(nnz, p) < c.read_cost(d, p));
+        assert!(c.sparse_compute_cost(nnz) < c.svrg_compute_cost(nnz, d, p));
+        assert!(c.sparse_update_cost(nnz, p, 2, false) < c.update_cost(d, p, 2, false));
+        // whole-iteration ratio at 0.5% density is far beyond the 5x target
+        let sparse = c.sparse_read_cost(nnz, p)
+            + c.sparse_compute_cost(nnz)
+            + c.sparse_update_cost(nnz, p, 1, false);
+        let dense =
+            c.read_cost(d, p) + c.svrg_compute_cost(nnz, d, p) + c.update_cost(d, p, 1, false);
+        assert!(dense / sparse > 5.0, "ratio {:.1}", dense / sparse);
+        // contention/CAS factors still apply on the sparse path
+        assert!(c.sparse_update_cost(nnz, p, 3, false) > c.sparse_update_cost(nnz, p, 1, false));
+        assert!(c.sparse_update_cost(nnz, p, 1, true) > c.sparse_update_cost(nnz, p, 1, false));
     }
 
     #[test]

@@ -32,7 +32,7 @@
 
 use std::collections::{BinaryHeap, VecDeque};
 
-use crate::config::Scheme;
+use crate::config::{Scheme, Storage};
 use crate::coordinator::delay::DelayStats;
 use crate::coordinator::epoch::EpochGradient;
 use crate::objective::Objective;
@@ -63,6 +63,16 @@ pub struct EngineOpts {
     /// Per-core duration multipliers (1.0 = nominal). Length must be ≥ p
     /// when set. Violates Assumption 3 when non-uniform.
     pub core_speed: Option<Vec<f64>>,
+    /// Billing model for the inner iteration: `Dense` streams d coordinates
+    /// per phase, `Sparse` bills only the sampled row's nonzeros (the
+    /// `coordinator::sparse` lazy path). The simulated *arithmetic* is the
+    /// dense trajectory either way — the lazy path is semantically the same
+    /// update — so switching storage changes event timing (and therefore
+    /// interleavings/staleness), not the per-update math. Lock discipline
+    /// follows the real runners too: under `Sparse` the locking schemes
+    /// (consistent/inconsistent/seqlock) serialize reads as well, matching
+    /// the whole-iteration lock of `coordinator::sparse`.
+    pub storage: Storage,
 }
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -207,13 +217,38 @@ pub fn simulate_inner_opts(
         })
         .collect();
 
-    let read_locked = scheme == Scheme::Consistent;
+    let sparse = opts.storage == Storage::Sparse;
+    // Scheme mapping mirrors the real runners: dense keeps the paper's
+    // read-lock/update-lock distinction; the sparse path serializes the
+    // whole O(nnz) iteration for every locking scheme
+    // (`coordinator::sparse` module docs), so its reads are locked for
+    // Inconsistent/Seqlock too. (Approximation: the simulator still
+    // releases the lock between a thread's read and update phases, where
+    // the real sparse path holds it across the iteration.)
+    let read_locked = scheme == Scheme::Consistent
+        || (sparse && matches!(scheme, Scheme::Inconsistent | Scheme::Seqlock));
     let update_locked = matches!(
         scheme,
         Scheme::Consistent | Scheme::Inconsistent | Scheme::Seqlock
     );
     let cas = scheme == Scheme::AtomicCas;
     let window = opts.read_model == ReadModel::Window && !read_locked;
+    // per-phase durations, branched on the storage billing model
+    let row_nnz = |i: usize| obj.data.row(i).nnz();
+    let read_dur = |i: usize| {
+        if sparse {
+            costs.sparse_read_cost(row_nnz(i), p)
+        } else {
+            costs.read_cost(d, p)
+        }
+    };
+    let update_dur = |i: usize, writers: usize| {
+        if sparse {
+            costs.sparse_update_cost(row_nnz(i), p, writers, cas)
+        } else {
+            costs.update_cost(d, p, writers, cas)
+        }
+    };
 
     let push = |heap: &mut BinaryHeap<Event>, seq: &mut u64, time: f64, tid: usize, phase: Phase| {
         *seq += 1;
@@ -232,7 +267,7 @@ pub fn simulate_inner_opts(
                 finished += 1;
             } else {
                 threads[tid].cur_i = threads[tid].rng.below(n);
-                let dur = costs.read_cost(d, p) * speed(tid);
+                let dur = read_dur(threads[tid].cur_i) * speed(tid);
                 if read_locked {
                     if lock.held_by.is_none() {
                         lock.held_by = Some(tid);
@@ -264,12 +299,12 @@ pub fn simulate_inner_opts(
                 threads[tid2].holds_lock = true;
                 match intent {
                     LockIntent::Read => {
-                        let dur = costs.read_cost(d, p) * speed(tid2);
+                        let dur = read_dur(threads[tid2].cur_i) * speed(tid2);
                         push(&mut heap, &mut seq, now + costs.lock_ns + dur, tid2, Phase::ReadDone);
                     }
                     LockIntent::Update => {
                         active_updaters += 1;
-                        let dur = costs.update_cost(d, p, active_updaters, cas) * speed(tid2);
+                        let dur = update_dur(threads[tid2].cur_i, active_updaters) * speed(tid2);
                         push(&mut heap, &mut seq, now + costs.lock_ns + dur, tid2, Phase::UpdateDone);
                     }
                 }
@@ -325,9 +360,14 @@ pub fn simulate_inner_opts(
                 }
                 let i = threads[tid].cur_i;
                 let nnz = obj.data.row(i).nnz();
-                let dur = match task {
-                    SimTask::Svrg { .. } => costs.svrg_compute_cost(nnz, d, p),
-                    SimTask::Sgd => costs.sgd_compute_cost(nnz),
+                let dur = if sparse {
+                    // margin dot + lazy catch-up, both over nnz only
+                    costs.sparse_compute_cost(nnz)
+                } else {
+                    match task {
+                        SimTask::Svrg { .. } => costs.svrg_compute_cost(nnz, d, p),
+                        SimTask::Sgd => costs.sgd_compute_cost(nnz),
+                    }
                 } * speed(tid);
                 push(&mut heap, &mut seq, now + dur, tid, Phase::ComputeDone);
             }
@@ -357,14 +397,14 @@ pub fn simulate_inner_opts(
                         lock.held_by = Some(tid);
                         threads[tid].holds_lock = true;
                         active_updaters += 1;
-                        let dur = costs.update_cost(d, p, active_updaters, cas) * speed(tid);
+                        let dur = update_dur(i, active_updaters) * speed(tid);
                         push(&mut heap, &mut seq, now + costs.lock_ns + dur, tid, Phase::UpdateDone);
                     } else {
                         lock.queue.push_back((tid, LockIntent::Update));
                     }
                 } else {
                     active_updaters += 1;
-                    let dur = costs.update_cost(d, p, active_updaters, cas) * speed(tid);
+                    let dur = update_dur(i, active_updaters) * speed(tid);
                     push(&mut heap, &mut seq, now + dur, tid, Phase::UpdateDone);
                 }
             }
@@ -530,6 +570,40 @@ mod tests {
         let r = simulate_inner(&o, &SimTask::Sgd, Scheme::Unlock, &costs, &mut u, 0.5, 4, 100, 5);
         assert_eq!(r.updates, 400);
         assert!(o.loss(&u) < f0);
+    }
+
+    // ---------------------------------------------------- sparse billing
+
+    #[test]
+    fn sparse_billing_is_deterministic_and_faster() {
+        let o = obj();
+        let w0 = vec![0.0f32; o.dim()];
+        let eg = parallel_full_grad(&o, &w0, 1);
+        let costs = CostModel::default_host();
+        let task = SimTask::Svrg { u0: &w0, eg: &eg };
+        let opts = EngineOpts { storage: Storage::Sparse, ..Default::default() };
+        let mut u1 = w0.clone();
+        let r1 = simulate_inner_opts(
+            &o, &task, Scheme::Unlock, &costs, &mut u1, 0.1, 4, 100, 7, &opts,
+        );
+        let mut u2 = w0.clone();
+        let r2 = simulate_inner_opts(
+            &o, &task, Scheme::Unlock, &costs, &mut u2, 0.1, 4, 100, 7, &opts,
+        );
+        assert_eq!(u1, u2);
+        assert_eq!(r1.elapsed_ns, r2.elapsed_ns);
+        assert_eq!(r1.updates, 400);
+        // dense billing of the same schedule parameters takes longer
+        let mut ud = w0.clone();
+        let rd = simulate_inner(&o, &task, Scheme::Unlock, &costs, &mut ud, 0.1, 4, 100, 7);
+        assert!(
+            r1.elapsed_ns < rd.elapsed_ns,
+            "sparse {} !< dense {}",
+            r1.elapsed_ns,
+            rd.elapsed_ns
+        );
+        // convergence is preserved under the sparse schedule
+        assert!(o.loss(&u1) < o.loss(&w0));
     }
 
     // ------------------------------------------------------ window model

@@ -60,10 +60,11 @@ fn sim_asysvrg(obj: &Objective, cfg: &RunConfig, costs: &CostModel, fstar: f64) 
         let eg = parallel_full_grad(obj, &w, 1);
         sim_ns += full_grad_phase_ns(obj, p, costs);
 
-        // inner phase on simulated cores
+        // inner phase on simulated cores (billed per the storage model)
+        let opts = EngineOpts { storage: cfg.storage, ..Default::default() };
         let task = SimTask::Svrg { u0: &w.clone(), eg: &eg };
         let mut u = w.clone();
-        let r = simulate_inner(
+        let r = simulate_inner_opts(
             obj,
             &task,
             cfg.scheme,
@@ -73,6 +74,7 @@ fn sim_asysvrg(obj: &Objective, cfg: &RunConfig, costs: &CostModel, fstar: f64) 
             p,
             m_per_thread,
             cfg.seed ^ ((t as u64) << 20),
+            &opts,
         );
         sim_ns += r.elapsed_ns;
         w = u;
@@ -120,8 +122,9 @@ fn sim_hogwild(obj: &Objective, cfg: &RunConfig, costs: &CostModel, fstar: f64) 
     let mut max_delay = 0u64;
     let mut delay_weighted = 0.0f64;
 
+    let opts = EngineOpts { storage: cfg.storage, ..Default::default() };
     for t in 0..cfg.epochs {
-        let r = simulate_inner(
+        let r = simulate_inner_opts(
             obj,
             &SimTask::Sgd,
             cfg.scheme,
@@ -131,6 +134,7 @@ fn sim_hogwild(obj: &Objective, cfg: &RunConfig, costs: &CostModel, fstar: f64) 
             p,
             iters,
             cfg.seed ^ ((t as u64) << 20),
+            &opts,
         );
         sim_ns += r.elapsed_ns;
         gamma *= cfg.gamma_decay;
@@ -235,6 +239,27 @@ mod tests {
         let o2 = Objective::new(Arc::new(big), 1e-2, crate::objective::LossKind::Logistic);
         let t2 = sim_run(&o2, &c, &costs, f64::NEG_INFINITY).total_seconds;
         assert!(t2 > t1 * 2.0, "{t2} vs {t1}");
+    }
+
+    #[test]
+    fn sparse_storage_cuts_simulated_time() {
+        let o = obj(); // d = 64, ~10 nnz/row
+        let costs = CostModel::default_host();
+        let mut c = cfg(4, Scheme::Unlock);
+        c.epochs = 2;
+        c.target_gap = 0.0;
+        let dense = sim_run(&o, &c, &costs, f64::NEG_INFINITY);
+        c.storage = crate::config::Storage::Sparse;
+        let sparse = sim_run(&o, &c, &costs, f64::NEG_INFINITY);
+        assert_eq!(dense.total_updates, sparse.total_updates);
+        assert!(
+            sparse.total_seconds < dense.total_seconds,
+            "sparse {} !< dense {}",
+            sparse.total_seconds,
+            dense.total_seconds
+        );
+        // both reach a finite, decreasing loss
+        assert!(sparse.final_loss() < (2f64).ln());
     }
 
     #[test]

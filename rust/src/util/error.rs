@@ -1,0 +1,160 @@
+//! Minimal error substrate (the offline vendor set has no `anyhow`).
+//!
+//! One string-backed error type with context chaining, plus the
+//! `err!`/`bail!`/`ensure!` macros the runtime and e2e layers use. The
+//! alternate formatter (`{e:#}`) prints the same single-line message, so
+//! call sites formatting with either flavor behave identically.
+
+use std::fmt;
+
+/// String-backed error with accumulated context.
+#[derive(Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<S: Into<String>>(s: S) -> Error {
+        Error { msg: s.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error::msg(s)
+    }
+}
+
+/// Crate-wide result alias (mirrors `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context chaining for any displayable error (mirrors `anyhow::Context`).
+pub trait Context<T> {
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T>;
+    fn context<S: Into<String>>(self, msg: S) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f().into())))
+    }
+
+    fn context<S: Into<String>>(self, msg: S) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", msg.into())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().into()))
+    }
+
+    fn context<S: Into<String>>(self, msg: S) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.into()))
+    }
+}
+
+/// Build an [`Error`] from a format string (mirrors `anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] (mirrors `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds (mirrors
+/// `anyhow::ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(err!("base failure {}", 42))
+    }
+
+    #[test]
+    fn display_and_alternate_agree() {
+        let e = fails().unwrap_err();
+        assert_eq!(format!("{e}"), "base failure 42");
+        assert_eq!(format!("{e:#}"), "base failure 42");
+        assert_eq!(format!("{e:?}"), "base failure 42");
+    }
+
+    #[test]
+    fn context_chains() {
+        let e: Result<()> = fails().with_context(|| "loading artifacts".to_string());
+        assert_eq!(e.unwrap_err().to_string(), "loading artifacts: base failure 42");
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            ensure!(x != 3);
+            if x > 100 {
+                bail!("too big: {x}");
+            }
+            Ok(x * 2)
+        }
+        assert_eq!(f(5).unwrap(), 10);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative input -1");
+        assert!(f(3).unwrap_err().to_string().contains("x != 3"));
+        assert!(f(200).unwrap_err().to_string().contains("too big"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+    }
+}

@@ -1,6 +1,7 @@
 //! Foundation substrates built in-tree (the offline vendor set has no
 //! rand/serde/log crates): RNG, JSON, stats, timing, logging.
 
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod stats;

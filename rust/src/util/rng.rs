@@ -78,14 +78,12 @@ impl Pcg32 {
     pub fn below(&mut self, n: usize) -> usize {
         debug_assert!(n > 0 && n <= u32::MAX as usize);
         let n = n as u32;
+        // rejection threshold: 2^32 mod n, computed as (−n) mod n
+        let threshold = n.wrapping_neg() % n;
         loop {
             let x = self.next_u32();
             let m = (x as u64).wrapping_mul(n as u64);
-            let lo = m as u32;
-            if lo >= n && lo < n.wrapping_neg() % n + n {
-                // fall through to the cheap acceptance below
-            }
-            if lo >= n.wrapping_neg() % n {
+            if (m as u32) >= threshold {
                 return (m >> 32) as usize;
             }
         }

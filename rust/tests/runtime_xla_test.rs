@@ -8,8 +8,12 @@ use asysvrg::util::rng::Pcg32;
 
 fn artifacts() -> Option<XlaDense> {
     let dir = asysvrg::runtime::default_artifact_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP: no artifacts at {} — run `make artifacts`", dir.display());
+    if !asysvrg::runtime::artifacts_available() {
+        eprintln!(
+            "SKIP: xla feature off or no artifacts at {} — build with --features xla \
+             and run `make artifacts`",
+            dir.display()
+        );
         return None;
     }
     Some(XlaDense::load(&dir).expect("loading artifacts"))

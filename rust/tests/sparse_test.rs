@@ -1,0 +1,240 @@
+//! Integration + property tests for the sparse O(nnz) fast path: dense-vs-
+//! sparse gradient and full-epoch trajectory parity (same seed ⇒ same
+//! iterates within fp tolerance), sparse LIBSVM round-trips at low density,
+//! and multi-thread convergence under every access scheme.
+
+use asysvrg::config::{Algo, RunConfig, Scheme, Storage};
+use asysvrg::coordinator::delay::DelayStats;
+use asysvrg::coordinator::epoch::parallel_full_grad;
+use asysvrg::coordinator::shared::SharedParams;
+use asysvrg::coordinator::sparse::{run_inner_loop_sparse, LazyState};
+use asysvrg::coordinator::worker::{run_inner_loop, WorkerScratch};
+use asysvrg::coordinator::{self, run_asysvrg, SvrgOption};
+use asysvrg::data::{libsvm, synthetic::SyntheticSpec, Dataset};
+use asysvrg::objective::{LossKind, Objective};
+use asysvrg::propcheck::{forall_res, Gen};
+use asysvrg::util::rng::Pcg32;
+use std::sync::Arc;
+
+/// Random sparse dataset with propcheck-drawn shape (density kept low so
+/// the lazy path actually exercises deferred corrections).
+fn gen_sparse_dataset(g: &mut Gen) -> Dataset {
+    let n = g.usize_in(8..40);
+    let dim = g.usize_in(32..160);
+    let max_nnz = g.usize_in(1..8);
+    let rows: Vec<(Vec<u32>, Vec<f32>)> = (0..n)
+        .map(|_| {
+            let pat = g.sparse_pattern(dim, max_nnz);
+            let vals: Vec<f32> = pat.iter().map(|_| g.f32_in(-1.5..1.5)).collect();
+            (pat, vals)
+        })
+        .collect();
+    let labels: Vec<f32> = (0..n).map(|_| if g.bool() { 1.0 } else { -1.0 }).collect();
+    Dataset::from_rows(rows, labels, dim, "prop-sparse").unwrap()
+}
+
+/// Property: a burst of sparse inner updates matches the dense worker's
+/// iterates coordinate-by-coordinate (single thread, same rng stream) —
+/// i.e. the lazily corrected per-example gradient step is the dense
+/// gradient step.
+#[test]
+fn prop_sparse_updates_match_dense_updates() {
+    forall_res("sparse/dense update parity", 60, |g| {
+        let ds = gen_sparse_dataset(g);
+        let lam = *g.choose(&[0.0f32, 1e-4, 1e-2, 0.1]);
+        let eta = g.f32_in(0.01..0.3);
+        let iters = g.usize_in(1..60);
+        let seed = g.u64();
+        let obj = Objective::new(Arc::new(ds), lam, LossKind::Logistic);
+        let w0: Vec<f32> = (0..obj.dim()).map(|_| g.f32_in(-0.4..0.4)).collect();
+        let eg = parallel_full_grad(&obj, &w0, 1);
+
+        let dense_shared = SharedParams::new(&w0, Scheme::Consistent);
+        let mut rng = Pcg32::new(seed, 1);
+        let mut scratch = WorkerScratch::new(obj.dim());
+        let delays = DelayStats::new();
+        run_inner_loop(
+            &obj, &dense_shared, &w0, &eg, eta, iters, &mut rng, &mut scratch, &delays,
+        );
+        let dense = dense_shared.snapshot();
+
+        let sparse_shared = SharedParams::new(&w0, Scheme::Consistent);
+        let lazy = LazyState::new(&w0, &eg.mu, lam, eta, 0);
+        let mut rng = Pcg32::new(seed, 1);
+        let delays = DelayStats::new();
+        run_inner_loop_sparse(&obj, &sparse_shared, &lazy, &eg, iters, &mut rng, &delays);
+        lazy.flush(&sparse_shared);
+        let sparse = sparse_shared.snapshot();
+
+        for j in 0..obj.dim() {
+            let (a, b) = (dense[j], sparse[j]);
+            if (a - b).abs() > 2e-3 * (1.0 + a.abs()) {
+                return Err(format!(
+                    "coord {j} diverged after {iters} iters (lam {lam}, eta {eta}): \
+                     dense {a} vs sparse {b}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property: full multi-epoch AsySVRG trajectories (losses AND final
+/// iterates) agree between storage modes at matched seeds, single thread.
+#[test]
+fn prop_full_epoch_trajectory_parity() {
+    forall_res("epoch trajectory parity", 25, |g| {
+        let ds = gen_sparse_dataset(g);
+        let obj = Objective::new(Arc::new(ds), 1e-2, LossKind::Logistic);
+        let seed = g.u64();
+        let base = RunConfig {
+            threads: 1,
+            eta: 0.15,
+            epochs: 3,
+            target_gap: 0.0,
+            seed,
+            ..Default::default()
+        };
+        let dense = run_asysvrg(&obj, &base, SvrgOption::CurrentIterate, f64::NEG_INFINITY);
+        let sp = RunConfig { storage: Storage::Sparse, ..base };
+        let sparse = run_asysvrg(&obj, &sp, SvrgOption::CurrentIterate, f64::NEG_INFINITY);
+        if dense.total_updates != sparse.total_updates {
+            return Err(format!(
+                "update counts differ: {} vs {}",
+                dense.total_updates, sparse.total_updates
+            ));
+        }
+        for (a, b) in dense.history.iter().zip(sparse.history.iter()) {
+            if (a.loss - b.loss).abs() > 5e-4 * (1.0 + a.loss.abs()) {
+                return Err(format!("epoch loss diverged: {} vs {}", a.loss, b.loss));
+            }
+        }
+        for j in 0..obj.dim() {
+            let (a, b) = (dense.final_w[j], sparse.final_w[j]);
+            if (a - b).abs() > 5e-3 * (1.0 + a.abs()) {
+                return Err(format!("final w[{j}]: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property: LIBSVM text round-trip preserves low-density CSR structure
+/// exactly and values within print/parse precision.
+#[test]
+fn prop_sparse_libsvm_roundtrip_low_density() {
+    forall_res("sparse libsvm roundtrip", 40, |g| {
+        // generator-produced corpora (normalized rows, Zipf-ish patterns)
+        let n = g.usize_in(5..40);
+        let dim = g.usize_in(50..400);
+        let nnz = g.usize_in(1..6);
+        let ds = SyntheticSpec::new("rt", n, dim, nnz, g.u64()).generate();
+        if ds.density() > 0.2 {
+            return Err(format!("generator density {:.3} unexpectedly high", ds.density()));
+        }
+        let mut buf = Vec::new();
+        libsvm::write(&ds, &mut buf).map_err(|e| e.to_string())?;
+        let back = libsvm::parse(buf.as_slice(), "rt", Some(ds.dim))?;
+        if back.indptr != ds.indptr || back.indices != ds.indices || back.labels != ds.labels {
+            return Err("CSR structure changed across round-trip".into());
+        }
+        for (a, b) in back.values.iter().zip(ds.values.iter()) {
+            if (a - b).abs() > 1e-5 * (1.0 + b.abs()) {
+                return Err(format!("value drift {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Sparse Hogwild! trajectory parity with the dense baseline, single thread.
+#[test]
+fn hogwild_storage_parity_over_epochs() {
+    let ds = SyntheticSpec::new("hw", 300, 800, 8, 17).generate();
+    let obj = Objective::new(Arc::new(ds), 1e-2, LossKind::Logistic);
+    let base = RunConfig {
+        algo: Algo::Hogwild,
+        threads: 1,
+        scheme: Scheme::Unlock,
+        eta: 0.4,
+        epochs: 6,
+        target_gap: 0.0,
+        ..Default::default()
+    };
+    let dense = coordinator::run(&obj, &base, f64::NEG_INFINITY);
+    let sp = RunConfig { storage: Storage::Sparse, ..base };
+    let sparse = coordinator::run(&obj, &sp, f64::NEG_INFINITY);
+    assert_eq!(dense.total_updates, sparse.total_updates);
+    for (a, b) in dense.history.iter().zip(sparse.history.iter()) {
+        assert!(
+            (a.loss - b.loss).abs() < 5e-4 * (1.0 + a.loss.abs()),
+            "hogwild loss diverged: {} vs {}",
+            a.loss,
+            b.loss
+        );
+    }
+}
+
+/// The sparse path converges under real threads for every scheme, and the
+/// accounting (updates, staleness) stays consistent.
+#[test]
+fn sparse_multithreaded_all_schemes_converge() {
+    let ds = SyntheticSpec::new("mt", 256, 512, 8, 23).generate();
+    let obj = Objective::new(Arc::new(ds), 1e-2, LossKind::Logistic);
+    let (_, fstar) = coordinator::asysvrg::solve_fstar(&obj, 0.2, 80, 1);
+    for scheme in [
+        Scheme::Consistent,
+        Scheme::Inconsistent,
+        Scheme::Unlock,
+        Scheme::Seqlock,
+        Scheme::AtomicCas,
+    ] {
+        let cfg = RunConfig {
+            threads: 4,
+            scheme,
+            eta: 0.2,
+            epochs: 40,
+            target_gap: 1e-5,
+            storage: Storage::Sparse,
+            ..Default::default()
+        };
+        let r = coordinator::run(&obj, &cfg, fstar);
+        assert!(
+            r.converged,
+            "{scheme:?} sparse: gap {:.3e} after {} epochs",
+            r.final_loss() - fstar,
+            r.epochs_run
+        );
+        let m = cfg.inner_iters(obj.n());
+        assert_eq!(r.total_updates, (r.epochs_run * 4 * m) as u64, "{scheme:?} accounting");
+    }
+}
+
+/// The simulated engine's sparse billing reaches the same gap in less
+/// simulated time on a genuinely sparse problem (the Table 2/3 premise).
+#[test]
+fn sim_sparse_time_to_gap_beats_dense() {
+    use asysvrg::simcore::{sim_run, CostModel};
+    let ds = SyntheticSpec::new("simsp", 400, 2000, 10, 31).generate();
+    let obj = Objective::new(Arc::new(ds), 1e-2, LossKind::Logistic);
+    let (_, fstar) = coordinator::asysvrg::solve_fstar(&obj, 0.25, 100, 5);
+    let costs = CostModel::default_host();
+    let base = RunConfig {
+        threads: 8,
+        scheme: Scheme::Unlock,
+        eta: 0.25,
+        epochs: 40,
+        target_gap: 1e-4,
+        ..Default::default()
+    };
+    let dense = sim_run(&obj, &base, &costs, fstar);
+    let sp = RunConfig { storage: Storage::Sparse, ..base };
+    let sparse = sim_run(&obj, &sp, &costs, fstar);
+    assert!(dense.converged && sparse.converged, "both engines must reach the gap");
+    assert!(
+        sparse.total_seconds < dense.total_seconds / 5.0,
+        "sparse sim {}s not >=5x faster than dense {}s at 0.5% density",
+        sparse.total_seconds,
+        dense.total_seconds
+    );
+}
