@@ -8,7 +8,7 @@
 use asysvrg::bench::report;
 use asysvrg::config::Scheme;
 use asysvrg::coordinator::delay::DelayStats;
-use asysvrg::coordinator::epoch::parallel_full_grad;
+use asysvrg::coordinator::epoch::{parallel_full_grad, parallel_full_grad_sparse};
 use asysvrg::coordinator::shared::SharedParams;
 use asysvrg::coordinator::sparse::{run_inner_loop_sparse, LazyState};
 use asysvrg::coordinator::worker::{run_inner_loop, WorkerScratch};
@@ -156,6 +156,75 @@ fn main() {
         ("pass", Json::Bool(speedup >= 5.0)),
     ]);
     match report::write_json("BENCH_sparse_vs_dense", &bench_json) {
+        Ok(path) => println!("json -> {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+
+    // ------------------------------------------------------------------
+    // epoch pass (Alg. 1 line 3): dense per-thread d-vector reduction vs
+    // sparse touched-coordinate accumulators, at a news20-like shape
+    // (d ≫ total nnz). The dense barrier pays p·d regardless of the data;
+    // the sparse one pays O(nnz share) per thread plus ONE d-sized μ̄
+    // finalize. The CI bench smoke gates on ≥5× from the emitted JSON.
+    // ------------------------------------------------------------------
+    println!("\n== epoch pass: dense vs sparse accumulators (d >> nnz) ==");
+    let p = 8usize;
+    let ds = SyntheticSpec::new("bench-epoch", 250, 1_000_000, 20, 42).generate();
+    let density = ds.density();
+    let total_nnz = ds.nnz();
+    let obj = Objective::paper(Arc::new(ds));
+    let w: Vec<f32> = (0..obj.dim()).map(|j| ((j % 13) as f32 - 6.0) * 0.01).collect();
+    let reps = 8usize;
+
+    let mut sink = 0.0f32;
+    parallel_full_grad(&obj, &w, p); // warmup
+    let sw = Stopwatch::start();
+    for _ in 0..reps {
+        let eg = parallel_full_grad(&obj, &w, p);
+        sink += eg.mu[1];
+    }
+    let dense_epoch_us = sw.seconds() * 1e6 / reps as f64;
+
+    parallel_full_grad_sparse(&obj, &w, p); // warmup
+    let sw = Stopwatch::start();
+    for _ in 0..reps {
+        let eg = parallel_full_grad_sparse(&obj, &w, p);
+        sink += eg.mu[1];
+    }
+    let sparse_epoch_us = sw.seconds() * 1e6 / reps as f64;
+    std::hint::black_box(sink);
+
+    // sanity: both passes agree before we trust the timing
+    let d_ref = parallel_full_grad(&obj, &w, p);
+    let s_ref = parallel_full_grad_sparse(&obj, &w, p);
+    let max_diff = (0..obj.dim())
+        .map(|j| (d_ref.mu[j] - s_ref.mu[j]).abs() as f64)
+        .fold(0.0f64, f64::max);
+    assert!(max_diff < 1e-4, "epoch passes disagree: max |Δμ| = {max_diff}");
+
+    let epoch_speedup = dense_epoch_us / sparse_epoch_us;
+    println!(
+        "epoch pass [dense  ] {dense_epoch_us:>10.1} µs/epoch  (d={}, p={p}, density {:.4}%)",
+        obj.dim(),
+        density * 100.0
+    );
+    println!("epoch pass [sparse ] {sparse_epoch_us:>10.1} µs/epoch  ({total_nnz} nnz total)");
+    println!("epoch-pass speedup: {epoch_speedup:.1}x (target: >= 5x at <= 1% density)");
+    let epoch_json = Json::obj(vec![
+        ("bench", Json::Str("epoch_pass_throughput".into())),
+        ("n", Json::Num(obj.n() as f64)),
+        ("d", Json::Num(obj.dim() as f64)),
+        ("total_nnz", Json::Num(total_nnz as f64)),
+        ("density", Json::Num(density)),
+        ("threads", Json::Num(p as f64)),
+        ("reps", Json::Num(reps as f64)),
+        ("dense_us_per_epoch", Json::Num(dense_epoch_us)),
+        ("sparse_us_per_epoch", Json::Num(sparse_epoch_us)),
+        ("epoch_speedup", Json::Num(epoch_speedup)),
+        ("target_speedup", Json::Num(5.0)),
+        ("pass", Json::Bool(epoch_speedup >= 5.0)),
+    ]);
+    match report::write_json("BENCH_epoch_pass", &epoch_json) {
         Ok(path) => println!("json -> {}", path.display()),
         Err(e) => eprintln!("could not write bench json: {e}"),
     }

@@ -85,6 +85,19 @@ impl Storage {
     pub fn all() -> [Storage; 2] {
         [Storage::Dense, Storage::Sparse]
     }
+
+    /// Storage selected by the `ASYSVRG_TEST_STORAGE` env var (dense|sparse),
+    /// falling back to `fallback` when the var is unset. Integration tests
+    /// whose storage choice is arbitrary route through this so CI can run
+    /// the whole suite as a {dense, sparse} matrix without duplicating test
+    /// code. A set-but-unparsable value panics rather than silently running
+    /// the fallback — a matrix typo must not green-light an untested leg.
+    pub fn from_test_env(fallback: Storage) -> Storage {
+        match std::env::var("ASYSVRG_TEST_STORAGE") {
+            Err(_) => fallback,
+            Ok(s) => Storage::parse(&s).unwrap_or_else(|e| panic!("ASYSVRG_TEST_STORAGE: {e}")),
+        }
+    }
 }
 
 /// Which algorithm drives the inner loop.
@@ -242,6 +255,19 @@ mod tests {
         let j = RunConfig::default().to_json();
         for k in ["dataset", "threads", "scheme", "algo", "eta", "target_gap", "storage"] {
             assert!(j.get(k).is_some(), "missing {k}");
+        }
+    }
+
+    #[test]
+    fn test_env_storage_fallback() {
+        // the var is process-global, so only exercise the unset/fallback
+        // path here (CI sets it per matrix leg before the process starts)
+        if std::env::var("ASYSVRG_TEST_STORAGE").is_err() {
+            assert_eq!(Storage::from_test_env(Storage::Dense), Storage::Dense);
+            assert_eq!(Storage::from_test_env(Storage::Sparse), Storage::Sparse);
+        } else {
+            let s = Storage::from_test_env(Storage::Dense);
+            assert!(matches!(s, Storage::Dense | Storage::Sparse));
         }
     }
 

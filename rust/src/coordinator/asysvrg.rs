@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use crate::config::{RunConfig, Storage};
 use crate::coordinator::delay::DelayStats;
-use crate::coordinator::epoch::parallel_full_grad;
+use crate::coordinator::epoch::parallel_full_grad_storage;
 use crate::coordinator::monitor::{HistoryPoint, RunResult};
 use crate::coordinator::shared::SharedParams;
 use crate::coordinator::sparse::{run_inner_loop_sparse, LazyState};
@@ -51,25 +51,29 @@ pub fn run_asysvrg(
     let mut result = RunResult::default();
     let mut passes = 0.0f64;
 
-    if option == SvrgOption::Average && cfg.storage == Storage::Sparse {
-        crate::log!(
-            Warn,
-            "storage=sparse with Option 2 (average): the Σû accumulation is inherently \
-             O(d) per update, so the dense inner loop is used for this run"
-        );
-    }
-
     for t in 0..cfg.epochs {
-        // (1) parallel full gradient at w_t
-        let eg = parallel_full_grad(obj, &w, p);
+        // (1) parallel full gradient at w_t — sparse accumulators under
+        // storage=sparse (touched-entry barrier merge, no per-thread
+        // d-vector), the dense reduction otherwise
+        let eg = parallel_full_grad_storage(obj, &w, p, cfg.storage);
         // (2) asynchronous inner loop
         let shared = SharedParams::new(&w, cfg.scheme);
         let clock_before = shared.clock();
         let avg: Option<Vec<f32>> = match option {
-            SvrgOption::CurrentIterate if cfg.storage == Storage::Sparse => {
+            _ if cfg.storage == Storage::Sparse => {
                 // O(nnz) fast path: lazy dense corrections, flushed at the
-                // epoch boundary so the snapshot matches the dense iterate
-                let lazy = LazyState::new(&w, &eg.mu, obj.lam, cfg.eta, shared.clock());
+                // epoch boundary so the snapshot matches the dense iterate.
+                // Option 2 additionally keeps Σû via closed-form geometric
+                // partial sums on the same per-coordinate clocks, so the
+                // Reddi-style averaged iterate costs no O(d) per update.
+                let lazy = match option {
+                    SvrgOption::CurrentIterate => {
+                        LazyState::new(&w, &eg.mu, obj.lam, cfg.eta, shared.clock())
+                    }
+                    SvrgOption::Average => {
+                        LazyState::new_averaging(&w, &eg.mu, obj.lam, cfg.eta, shared.clock())
+                    }
+                };
                 std::thread::scope(|s| {
                     for a in 0..p {
                         let shared = &shared;
@@ -91,7 +95,9 @@ pub fn run_asysvrg(
                     }
                 });
                 lazy.flush(&shared);
-                None
+                debug_assert!(lazy.fully_drained(shared.clock()));
+                // None for Option 1 (state has no sums), Some for Option 2
+                lazy.average_iterate(&shared)
             }
             SvrgOption::CurrentIterate => {
                 std::thread::scope(|s| {
@@ -313,10 +319,62 @@ mod tests {
         assert!((r.history.last().unwrap().passes - 6.0).abs() < 1e-9);
     }
 
+    /// Option 2 no longer falls back to the dense loop under sparse
+    /// storage: the lazy-average path converges with real threads…
+    #[test]
+    fn option2_average_sparse_converges_multithreaded() {
+        let obj = small_obj();
+        let (_, fstar) = solve_fstar(&obj, 0.2, 80, 1);
+        for scheme in [Scheme::Inconsistent, Scheme::Unlock] {
+            let cfg = RunConfig {
+                threads: 4,
+                scheme,
+                eta: 0.2,
+                epochs: 60,
+                target_gap: 1e-4,
+                storage: crate::config::Storage::Sparse,
+                ..Default::default()
+            };
+            let r = run_asysvrg(&obj, &cfg, SvrgOption::Average, fstar);
+            assert!(
+                r.converged,
+                "{scheme:?} sparse average gap {:.3e} after {} epochs",
+                r.final_loss() - fstar,
+                r.epochs_run
+            );
+        }
+    }
+
+    /// …and single-threaded it is the dense Option 2 trajectory within fp
+    /// tolerance, epoch after epoch.
+    #[test]
+    fn option2_average_sparse_matches_dense_single_thread() {
+        let obj = small_obj();
+        let base =
+            RunConfig { threads: 1, eta: 0.2, epochs: 4, target_gap: 0.0, ..Default::default() };
+        let dense = run_asysvrg(&obj, &base, SvrgOption::Average, f64::NEG_INFINITY);
+        let sp = RunConfig { storage: crate::config::Storage::Sparse, ..base };
+        let sparse = run_asysvrg(&obj, &sp, SvrgOption::Average, f64::NEG_INFINITY);
+        assert_eq!(dense.total_updates, sparse.total_updates);
+        for (a, b) in dense.history.iter().zip(sparse.history.iter()) {
+            assert!(
+                (a.loss - b.loss).abs() < 1e-3 * (1.0 + a.loss.abs()),
+                "avg loss diverged: dense {} vs sparse {}",
+                a.loss,
+                b.loss
+            );
+        }
+        for j in 0..obj.dim() {
+            let (a, b) = (dense.final_w[j], sparse.final_w[j]);
+            assert!((a - b).abs() < 5e-3 * (1.0 + a.abs()), "coord {j}: {a} vs {b}");
+        }
+    }
+
     #[test]
     fn sparse_storage_matches_dense_single_thread() {
         let obj = small_obj();
-        let base = RunConfig { threads: 1, eta: 0.2, epochs: 4, target_gap: 0.0, ..Default::default() };
+        let base =
+            RunConfig { threads: 1, eta: 0.2, epochs: 4, target_gap: 0.0, ..Default::default() };
         let dense = run(&obj, &base, f64::NEG_INFINITY);
         let sparse_cfg = RunConfig { storage: crate::config::Storage::Sparse, ..base };
         let sparse = run(&obj, &sparse_cfg, f64::NEG_INFINITY);

@@ -51,6 +51,7 @@ pub fn run_hogwild(obj: &Objective, cfg: &RunConfig, fstar: f64) -> RunResult {
                     }
                 });
                 lazy.flush(&shared);
+                debug_assert!(lazy.fully_drained(shared.clock()));
             }
             Storage::Dense => {
                 std::thread::scope(|s| {

@@ -25,6 +25,25 @@
 //! eq. 10 already models. Hogwild!'s step `u ← u − γ(r·x_i + λû)` is the
 //! μ̄ = 0, u₀ = 0 special case (pure geometric decay toward 0).
 //!
+//! **Lazy average (Option 2).** The analysis-faithful w_{t+1} rule needs
+//! Σ_m û_m — naively O(d) per update, which is why sparse+Average used to
+//! fall back to the dense loop. But coordinate j's value at every clock
+//! tick between touches is the *same* closed-form drift, so the partial sum
+//! over the k missed ticks has a closed form too:
+//!
+//!   λ > 0:  Σ_{i=0}^{k−1} drift^i(u) = k·u*_j + (u − u*_j)·(1−a^k)/(1−a)
+//!   λ = 0:  Σ_{i=0}^{k−1} (u − iημ̄_j) = k·u − ημ̄_j·k(k−1)/2
+//!
+//! A `LazyState` built with `new_averaging` carries one f64 running sum per
+//! coordinate and folds these partial sums in at exactly the clock
+//! boundaries the value catch-up already computes: catch-up from clock
+//! `prev` to `now` accounts ticks [prev, now), the touched coordinate's
+//! fresh value accounts tick `now`, and the epoch flush accounts the tail.
+//! Single-threaded (and under the whole-iteration locks) the accounting is
+//! a perfect partition of [0, M) per coordinate, so Σû equals the dense
+//! `run_inner_loop_averaging` accumulator; under Unlock/AtomicCas the sums
+//! race exactly like the iterate itself does.
+//!
 //! Scheme mapping: the dense path distinguishes read locks from update
 //! locks, which matters when both are O(d) streams. Here an entire
 //! iteration is O(nnz), so the locking schemes (consistent / inconsistent /
@@ -59,6 +78,26 @@ pub struct LazyState {
     /// Step size η (AsySVRG) or γ (Hogwild!) this state was built for.
     eta: f32,
     lam: f32,
+    /// Option 2 only: running Σû per coordinate (f64 bit patterns),
+    /// maintained via the closed-form partial sums at the same clock
+    /// boundaries as the value catch-up. `None` for Option 1 / Hogwild!.
+    sums: Option<Vec<AtomicU64>>,
+    /// Clock at construction: sums span ticks [clock_base, shared.clock()).
+    clock_base: u64,
+}
+
+/// Lock-free f64 add on a bit-pattern cell (CAS loop; the sum is touched
+/// O(nnz) per update, so the loop is off the O(d) axis by construction).
+#[inline]
+fn atomic_f64_add(cell: &AtomicU64, x: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + x).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
 }
 
 impl LazyState {
@@ -83,7 +122,18 @@ impl LazyState {
             decay: 1.0 - eta as f64 * lam as f64,
             eta,
             lam,
+            sums: None,
+            clock_base,
         }
+    }
+
+    /// Averaging state for Option 2: like `new`, plus one Σû accumulator
+    /// per coordinate so `average_iterate` can produce the analysis's
+    /// w_{t+1} without any O(d)-per-update work.
+    pub fn new_averaging(u0: &[f32], mu: &[f32], lam: f32, eta: f32, clock_base: u64) -> Self {
+        let mut s = Self::new(u0, mu, lam, eta, clock_base);
+        s.sums = Some((0..u0.len()).map(|_| AtomicU64::new(0.0f64.to_bits())).collect());
+        s
     }
 
     /// State for one Hogwild! epoch: the dense part of ∇f_i is just λû, so
@@ -123,17 +173,95 @@ impl LazyState {
         self.lam * (u - self.u0[j]) + self.mu[j]
     }
 
+    /// Closed-form Σ_{i=0}^{steps−1} drift^i(u): the values coordinate j
+    /// takes at the `steps` missed clock ticks, summed (module docs).
+    #[inline]
+    fn drift_sum(&self, j: usize, u: f32, steps: u64) -> f64 {
+        let k = steps.min(i32::MAX as u64) as i32;
+        if self.lam == 0.0 {
+            // arithmetic series u, u−ημ̄, u−2ημ̄, …
+            let kf = k as f64;
+            return kf * u as f64 - self.eta as f64 * self.mu[j] as f64 * (kf * (kf - 1.0) * 0.5);
+        }
+        let s = self.ustar[j];
+        let a = self.decay;
+        let geom = if a == 1.0 { k as f64 } else { (1.0 - a.powi(k)) / (1.0 - a) };
+        k as f64 * s + (u as f64 - s) * geom
+    }
+
+    /// Fold the missed ticks [prev, prev+steps) of coordinate j into Σû.
+    /// No-op unless this state is averaging.
+    #[inline]
+    fn record_drift(&self, j: usize, u: f32, steps: u64) {
+        if let Some(sums) = &self.sums {
+            atomic_f64_add(&sums[j], self.drift_sum(j, u, steps));
+        }
+    }
+
+    /// Fused catch-up: advance coordinate j by `steps` ticks from `u` AND
+    /// fold the missed ticks into Σû (when averaging), evaluating the
+    /// geometric factor a^k once instead of once per consumer. Identical
+    /// arithmetic to `record_drift` + `caught_up`.
+    #[inline]
+    fn advance(&self, j: usize, u: f32, steps: u64) -> f32 {
+        if steps == 0 {
+            return u;
+        }
+        if self.lam == 0.0 {
+            self.record_drift(j, u, steps); // no powi to share on the linear path
+            return (u as f64 - steps as f64 * self.eta as f64 * self.mu[j] as f64) as f32;
+        }
+        let k = steps.min(i32::MAX as u64) as i32;
+        let s = self.ustar[j];
+        let a = self.decay;
+        let ak = a.powi(k);
+        if let Some(sums) = &self.sums {
+            let geom = if a == 1.0 { k as f64 } else { (1.0 - ak) / (1.0 - a) };
+            atomic_f64_add(&sums[j], k as f64 * s + (u as f64 - s) * geom);
+        }
+        (s + ak * (u as f64 - s)) as f32
+    }
+
+    /// Record coordinate j's value at the current tick (touched coordinates
+    /// absorb their own tick eagerly). No-op unless averaging.
+    #[inline]
+    fn record_touch(&self, j: usize, u: f32) {
+        if let Some(sums) = &self.sums {
+            atomic_f64_add(&sums[j], u as f64);
+        }
+    }
+
+    /// Option 2's w_{t+1} = Σû / M over the ticks since construction.
+    /// `None` unless built with `new_averaging`; call after `flush` so the
+    /// tail ticks of untouched coordinates are in the sums.
+    pub fn average_iterate(&self, shared: &SharedParams) -> Option<Vec<f32>> {
+        let total = shared.clock().saturating_sub(self.clock_base);
+        self.sums.as_ref().map(|sums| {
+            let inv = if total == 0 { 0.0 } else { 1.0 / total as f64 };
+            sums.iter()
+                .map(|c| (f64::from_bits(c.load(Ordering::Relaxed)) * inv) as f32)
+                .collect()
+        })
+    }
+
+    /// Post-flush invariant: every per-coordinate clock has been advanced
+    /// to `now` — no deferred correction (or Σû tick) is outstanding.
+    pub fn fully_drained(&self, now: u64) -> bool {
+        self.last.iter().all(|c| c.load(Ordering::Relaxed) == now)
+    }
+
     /// Apply all outstanding corrections to every coordinate (epoch
     /// boundary: workers have joined, so plain stores are race-free). After
-    /// this, `shared.snapshot()` is the same iterate the dense path holds.
+    /// this, `shared.snapshot()` is the same iterate the dense path holds,
+    /// and — for an averaging state — Σû covers every tick of every
+    /// coordinate, so `average_iterate` is complete.
     pub fn flush(&self, shared: &SharedParams) {
         let now = shared.clock();
         let data = shared.data();
         for j in 0..self.last.len() {
             let prev = self.last[j].fetch_max(now, Ordering::Relaxed);
             if prev < now {
-                let u = data.get(j);
-                data.set(j, self.caught_up(j, u, now - prev));
+                data.set(j, self.advance(j, data.get(j), now - prev));
             }
         }
     }
@@ -167,15 +295,23 @@ fn sparse_update(
         let u = if prev < now {
             let steps = now - prev;
             if cas {
+                // Σû absorbs the missed ticks from a pre-read of the same
+                // cell (exact single-threaded; racy under contention like
+                // every other Hogwild-style quantity — the CAS retry
+                // closure cannot carry the sum without double-counting)
+                lazy.record_drift(ju, data.get(ju), steps);
                 data.update_cas(ju, |u| lazy.caught_up(ju, u, steps))
             } else {
-                let fresh = lazy.caught_up(ju, data.get(ju), steps);
+                // fused: one a^k evaluation covers both the catch-up and
+                // the Σû partial sum
+                let fresh = lazy.advance(ju, data.get(ju), steps);
                 data.set(ju, fresh);
                 fresh
             }
         } else {
             data.get(ju)
         };
+        lazy.record_touch(ju, u);
         dot += u * row.values[k];
     }
     let y = obj.data.label(i);
@@ -379,6 +515,100 @@ mod tests {
         // flushing twice is a no-op
         lazy.flush(&shared);
         assert_eq!(shared.snapshot(), got);
+    }
+
+    /// Closed-form drift partial sum == the sum of the iterated per-tick
+    /// values, for both the geometric (λ>0) and linear (λ=0) regimes.
+    #[test]
+    fn drift_sum_matches_iterated_values() {
+        for lam in [0.0f32, 1e-2] {
+            let (obj, _) = setup(lam);
+            let w0: Vec<f32> = (0..obj.dim()).map(|j| ((j % 5) as f32 - 2.0) * 0.1).collect();
+            let eg = parallel_full_grad(&obj, &w0, 1);
+            let eta = 0.25f32;
+            let lazy = LazyState::new_averaging(&w0, &eg.mu, lam, eta, 0);
+            for j in [0usize, 5, 77] {
+                for steps in [1u64, 2, 7, 23] {
+                    let u0 = 0.4f32 - j as f32 * 0.003;
+                    let closed = lazy.drift_sum(j, u0, steps);
+                    let mut iterated = 0.0f64;
+                    let mut u = u0;
+                    for _ in 0..steps {
+                        iterated += u as f64;
+                        u -= eta * (lam * (u - w0[j]) + eg.mu[j]);
+                    }
+                    assert!(
+                        (closed - iterated).abs() < 1e-6 * (1.0 + iterated.abs()),
+                        "lam={lam} j={j} steps={steps}: closed {closed} vs iterated {iterated}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Single-thread lazy Σû == the dense averaging worker's accumulator
+    /// (same rng stream), and the post-flush iterate still matches too.
+    #[test]
+    fn lazy_average_matches_dense_averaging_single_thread() {
+        use crate::coordinator::worker::run_inner_loop_averaging;
+        for lam in [0.0f32, 1e-2] {
+            let (obj, _) = setup(lam);
+            let w0: Vec<f32> = (0..obj.dim()).map(|j| ((j % 7) as f32 - 3.0) * 0.05).collect();
+            let eg = parallel_full_grad(&obj, &w0, 1);
+            let eta = 0.2f32;
+            let iters = 70usize;
+
+            let dense_shared = SharedParams::new(&w0, Scheme::Consistent);
+            let mut rng = Pcg32::new(11, 1);
+            let mut scratch = WorkerScratch::new(obj.dim());
+            let delays = DelayStats::new();
+            let mut acc = vec![0.0f32; obj.dim()];
+            run_inner_loop_averaging(
+                &obj, &dense_shared, &w0, &eg, eta, iters, &mut rng, &mut scratch, &delays,
+                &mut acc,
+            );
+            let want_avg: Vec<f32> = acc.iter().map(|&a| a / iters as f32).collect();
+            let want_w = dense_shared.snapshot();
+
+            let shared = SharedParams::new(&w0, Scheme::Consistent);
+            let lazy = LazyState::new_averaging(&w0, &eg.mu, lam, eta, 0);
+            let mut rng = Pcg32::new(11, 1);
+            let delays = DelayStats::new();
+            run_inner_loop_sparse(&obj, &shared, &lazy, &eg, iters, &mut rng, &delays);
+            lazy.flush(&shared);
+            assert!(lazy.fully_drained(shared.clock()), "lam={lam}: clocks not drained");
+            let got_avg = lazy.average_iterate(&shared).expect("averaging state");
+            let got_w = shared.snapshot();
+
+            for j in 0..obj.dim() {
+                assert!(
+                    (got_avg[j] - want_avg[j]).abs() < 1e-3 * (1.0 + want_avg[j].abs()),
+                    "lam={lam} avg coord {j}: lazy {} vs dense {}",
+                    got_avg[j],
+                    want_avg[j]
+                );
+                assert!(
+                    (got_w[j] - want_w[j]).abs() < 1e-3 * (1.0 + want_w[j].abs()),
+                    "lam={lam} w coord {j}: lazy {} vs dense {}",
+                    got_w[j],
+                    want_w[j]
+                );
+            }
+        }
+    }
+
+    /// A non-averaging state exposes no average; an averaging one does even
+    /// before any updates (all-zero sums over zero ticks).
+    #[test]
+    fn average_accessor_gating() {
+        let (obj, w0) = setup(1e-2);
+        let eg = parallel_full_grad(&obj, &w0, 1);
+        let shared = SharedParams::new(&w0, Scheme::Unlock);
+        let plain = LazyState::new(&w0, &eg.mu, obj.lam, 0.1, 0);
+        assert!(plain.average_iterate(&shared).is_none());
+        let avg = LazyState::new_averaging(&w0, &eg.mu, obj.lam, 0.1, 0);
+        let v = avg.average_iterate(&shared).unwrap();
+        assert!(v.iter().all(|&x| x == 0.0));
     }
 
     /// Multi-thread sparse loop converges under every scheme and keeps the

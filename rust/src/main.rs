@@ -45,7 +45,7 @@ fn top_usage() -> String {
      \x20 fig1-speedup       regenerate Figure 1 left column\n\
      \x20 fig1-convergence   regenerate Figure 1 right column\n\
      \x20 theory             Theorem 1/2 contraction factors\n\
-     \x20 ablation           sweep eta / M / read-model / core-speeds\n\
+     \x20 ablation           sweep eta / M / read-model / cores / storage / epoch\n\
      \x20 calibrate          measure simulator cost model on this host\n\
      \x20 e2e                XLA-backed dense end-to-end training\n\n\
      `repro <subcommand> --help` for options."
@@ -316,8 +316,8 @@ fn cmd_ablation(args: &[String]) -> Result<(), String> {
         .opt("epochs", "25", "epoch budget per point")
         .opt(
             "which",
-            "eta,m,read-model,cores,storage",
-            "comma list of sweeps: eta|m|read-model|cores|storage",
+            "eta,m,read-model,cores,storage,epoch",
+            "comma list of sweeps: eta|m|read-model|cores|storage|epoch",
         );
     let m = cmd.parse(args)?;
     let ds = data::resolve(m.str("dataset"), m.f64("scale")?, m.u64("seed")?)?;
@@ -348,6 +348,10 @@ fn cmd_ablation(args: &[String]) -> Result<(), String> {
             "storage" => (
                 "storage: dense O(d) vs sparse O(nnz) inner iterations",
                 ablation::sweep_storage(&obj, fstar, threads, epochs),
+            ),
+            "epoch" => (
+                "epoch pass: dense per-thread reduction vs sparse accumulators",
+                ablation::sweep_epoch_pass(&obj, fstar, threads, epochs),
             ),
             o => return Err(format!("unknown sweep '{o}'")),
         };

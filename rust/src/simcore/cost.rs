@@ -192,6 +192,30 @@ impl CostModel {
             + rows as f64 * per_row_overhead
             + d as f64 * self.write_coord_ns * self.bw(p)
     }
+
+    /// Per-thread share of the sparse full-gradient epoch phase
+    /// (`epoch::parallel_full_grad_sparse`): the partial lives in an
+    /// open-addressed accumulator, so every nonzero pays a hashed
+    /// read-modify-write on top of the margin arithmetic — no d-sized
+    /// buffer exists in the share. The serial barrier merge is billed
+    /// separately via `epoch_merge_cost`.
+    pub fn full_grad_cost_sparse(&self, rows: usize, total_nnz_share: usize, p: usize) -> f64 {
+        let per_row_overhead = 8.0; // residual math + loop bookkeeping
+        total_nnz_share as f64
+            * (self.sparse_nnz_ns + self.read_coord_ns + self.write_coord_ns)
+            * self.bw(p)
+            + rows as f64 * per_row_overhead
+    }
+
+    /// Serial (main-thread, workers joined) portion of the epoch barrier:
+    /// `entries` coordinate writes at single-core bandwidth. Dense passes
+    /// stream p·d partial entries plus the d-sized finalize; the sparse
+    /// pass streams only Σ touched entries plus the one d-sized μ̄ base —
+    /// that single O(d) term per epoch is real and stays billed.
+    #[inline]
+    pub fn epoch_merge_cost(&self, entries: usize) -> f64 {
+        entries as f64 * self.write_coord_ns
+    }
 }
 
 #[cfg(test)]
@@ -234,6 +258,28 @@ mod tests {
         // contention/CAS factors still apply on the sparse path
         assert!(c.sparse_update_cost(nnz, p, 3, false) > c.sparse_update_cost(nnz, p, 1, false));
         assert!(c.sparse_update_cost(nnz, p, 1, true) > c.sparse_update_cost(nnz, p, 1, false));
+    }
+
+    #[test]
+    fn sparse_epoch_cost_beats_dense_when_d_dominates() {
+        let c = CostModel::default_host();
+        // news20-like phase: few rows, tiny nnz, huge d, 10 threads. The
+        // whole phase = worst share + serial merge (see full_grad_phase_ns)
+        let (rows, nnz, d, p) = (50usize, 1_000usize, 1_360_000usize, 10usize);
+        let sparse = c.full_grad_cost_sparse(rows, nnz, p) + c.epoch_merge_cost(p * nnz + d);
+        let dense = c.full_grad_cost(rows, nnz, d, p) + c.epoch_merge_cost(p * d + d);
+        assert!(
+            dense / sparse > 5.0,
+            "epoch-phase ratio only {:.1} (sparse {sparse:.0}ns dense {dense:.0}ns)",
+            dense / sparse
+        );
+        // per-nonzero / per-entry billing is strictly positive work
+        assert!(c.full_grad_cost_sparse(rows, 2 * nnz, p) > c.full_grad_cost_sparse(rows, nnz, p));
+        assert!(c.epoch_merge_cost(2 * d) > c.epoch_merge_cost(d));
+        // dense-ish data (nnz ≫ d): the hashed accumulate must bill MORE
+        // than the dense streaming pass, never less
+        let dd = 1_000;
+        assert!(c.full_grad_cost_sparse(rows, 50 * dd, p) > c.full_grad_cost(rows, 50 * dd, dd, p));
     }
 
     #[test]

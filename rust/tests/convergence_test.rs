@@ -2,12 +2,18 @@
 //! combination on a conditioned synthetic problem, plus the linear-rate
 //! claims of Theorems 1–2 checked empirically.
 
-use asysvrg::config::{Algo, RunConfig, Scheme};
+use asysvrg::config::{Algo, RunConfig, Scheme, Storage};
 use asysvrg::coordinator::{self, asysvrg::solve_fstar};
 use asysvrg::data::synthetic::SyntheticSpec;
 use asysvrg::objective::{LossKind, Objective};
 use asysvrg::simcore::{sim_run, CostModel};
 use std::sync::Arc;
+
+/// Storage under test: CI runs this file as a {dense, sparse} matrix by
+/// exporting ASYSVRG_TEST_STORAGE; locally it defaults to dense.
+fn test_storage() -> Storage {
+    Storage::from_test_env(Storage::Dense)
+}
 
 fn obj() -> Objective {
     let ds = SyntheticSpec::new("conv", 400, 96, 12, 99).generate();
@@ -36,6 +42,7 @@ fn all_schemes_converge_on_both_engines() {
             eta: 0.25,
             epochs: 50,
             target_gap: 1e-5,
+            storage: test_storage(),
             ..Default::default()
         };
         let rt = coordinator::run(&o, &cfg, fs);
@@ -62,6 +69,7 @@ fn linear_rate_contraction_is_roughly_geometric() {
         eta: 0.25,
         epochs: 14,
         target_gap: 0.0,
+        storage: test_storage(),
         ..Default::default()
     };
     let r = coordinator::run(&o, &cfg, f64::NEG_INFINITY);
@@ -89,7 +97,14 @@ fn hogwild_is_sublinear_svrg_is_linear_at_equal_passes() {
     let costs = CostModel::default_host();
     let svrg = sim_run(
         &o,
-        &RunConfig { threads: 10, eta: 0.25, epochs: 10, target_gap: 0.0, ..Default::default() },
+        &RunConfig {
+            threads: 10,
+            eta: 0.25,
+            epochs: 10,
+            target_gap: 0.0,
+            storage: test_storage(),
+            ..Default::default()
+        },
         &costs,
         fs,
     );
@@ -102,6 +117,7 @@ fn hogwild_is_sublinear_svrg_is_linear_at_equal_passes() {
             eta: 0.5,
             epochs: 30, // same 30 effective passes as 10 SVRG epochs
             target_gap: 0.0,
+            storage: test_storage(),
             ..Default::default()
         },
         &costs,
@@ -124,6 +140,7 @@ fn option2_averaging_converges_multithreaded() {
         eta: 0.25,
         epochs: 60,
         target_gap: 1e-4,
+        storage: test_storage(),
         ..Default::default()
     };
     let r = coordinator::asysvrg::run_asysvrg(
@@ -150,6 +167,7 @@ fn other_losses_converge_too() {
             eta,
             epochs: 25,
             target_gap: 0.0,
+            storage: test_storage(),
             ..Default::default()
         };
         let r = coordinator::run(&o, &cfg, f64::NEG_INFINITY);
@@ -168,6 +186,7 @@ fn stopping_rule_respects_target_gap() {
         eta: 0.25,
         epochs: 80,
         target_gap: 1e-3,
+        storage: test_storage(),
         ..Default::default()
     };
     let r = coordinator::run(&o, &cfg, fs);

@@ -8,7 +8,7 @@ use asysvrg::coordinator::delay::DelayStats;
 use asysvrg::coordinator::epoch::parallel_full_grad;
 use asysvrg::coordinator::shared::SharedParams;
 use asysvrg::coordinator::sparse::{run_inner_loop_sparse, LazyState};
-use asysvrg::coordinator::worker::{run_inner_loop, WorkerScratch};
+use asysvrg::coordinator::worker::{run_inner_loop, run_inner_loop_averaging, WorkerScratch};
 use asysvrg::coordinator::{self, run_asysvrg, SvrgOption};
 use asysvrg::data::{libsvm, synthetic::SyntheticSpec, Dataset};
 use asysvrg::objective::{LossKind, Objective};
@@ -141,6 +141,126 @@ fn prop_sparse_libsvm_roundtrip_low_density() {
         for (a, b) in back.values.iter().zip(ds.values.iter()) {
             if (a - b).abs() > 1e-5 * (1.0 + b.abs()) {
                 return Err(format!("value drift {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property (Option 2): single-thread sparse+Average trajectories — epoch
+/// losses, the averaged w_{t+1} chain, and the final iterate — match
+/// dense+Average within fp tolerance across ≥3 epoch boundaries, fuzzed
+/// over density ∈ {0.5%, 5%, 50%} and d ∈ {10, 1_000}.
+#[test]
+fn prop_sparse_average_matches_dense_average() {
+    forall_res("sparse/dense Option-2 average parity", 18, |g| {
+        let d = *g.choose(&[10usize, 1_000]);
+        let density = *g.choose(&[0.005f64, 0.05, 0.5]);
+        let nnz = ((d as f64 * density).round() as usize).clamp(1, d);
+        let n = g.usize_in(20..50);
+        let ds = SyntheticSpec::new("avg", n, d, nnz, g.u64()).generate();
+        let lam = *g.choose(&[0.0f32, 1e-4, 1e-2]);
+        let obj = Objective::new(Arc::new(ds), lam, LossKind::Logistic);
+        let seed = g.u64();
+        let base = RunConfig {
+            threads: 1,
+            eta: 0.15,
+            epochs: 4, // 3 epoch boundaries crossed with lazy state rebuilt
+            target_gap: 0.0,
+            seed,
+            ..Default::default()
+        };
+        let dense = run_asysvrg(&obj, &base, SvrgOption::Average, f64::NEG_INFINITY);
+        let sp = RunConfig { storage: Storage::Sparse, ..base };
+        let sparse = run_asysvrg(&obj, &sp, SvrgOption::Average, f64::NEG_INFINITY);
+        if dense.total_updates != sparse.total_updates {
+            return Err(format!(
+                "update counts differ: {} vs {}",
+                dense.total_updates, sparse.total_updates
+            ));
+        }
+        for (e, (a, b)) in dense.history.iter().zip(sparse.history.iter()).enumerate() {
+            if (a.loss - b.loss).abs() > 1e-3 * (1.0 + a.loss.abs()) {
+                return Err(format!(
+                    "d={d} nnz={nnz} lam={lam}: epoch {e} avg loss diverged: {} vs {}",
+                    a.loss, b.loss
+                ));
+            }
+        }
+        for j in 0..obj.dim() {
+            let (a, b) = (dense.final_w[j], sparse.final_w[j]);
+            if (a - b).abs() > 5e-3 * (1.0 + a.abs()) {
+                return Err(format!("d={d} nnz={nnz} lam={lam}: final w[{j}]: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Invariant: after the epoch-boundary flush every lazy per-coordinate
+/// clock is fully drained, and both the weight vector and Σû read back
+/// equal to an eager dense reference, fuzzed over 1–8 worker streams.
+/// The streams run to completion back-to-back on this thread (identical
+/// clock arithmetic to p OS threads, but a deterministic interleaving, so
+/// an eager reference exists for every p).
+#[test]
+fn prop_flush_drains_clocks_and_matches_eager_reference() {
+    forall_res("post-flush drain invariant", 20, |g| {
+        let ds = gen_sparse_dataset(g);
+        let lam = *g.choose(&[0.0f32, 1e-3, 1e-2]);
+        let eta = g.f32_in(0.05..0.25);
+        let p = g.usize_in(1..9);
+        let iters = g.usize_in(4..30);
+        let seed = g.u64();
+        let obj = Objective::new(Arc::new(ds), lam, LossKind::Logistic);
+        let w0: Vec<f32> = (0..obj.dim()).map(|_| g.f32_in(-0.3..0.3)).collect();
+        let eg = parallel_full_grad(&obj, &w0, 1);
+
+        // lazy sparse run: p streams, sequentially interleaved
+        let shared = SharedParams::new(&w0, Scheme::Unlock);
+        let lazy = LazyState::new_averaging(&w0, &eg.mu, lam, eta, 0);
+        let delays = DelayStats::new();
+        for a in 0..p {
+            let mut rng = Pcg32::for_thread(seed, a);
+            run_inner_loop_sparse(&obj, &shared, &lazy, &eg, iters, &mut rng, &delays);
+        }
+        lazy.flush(&shared);
+        if !lazy.fully_drained(shared.clock()) {
+            return Err(format!("p={p}: clocks not drained to {}", shared.clock()));
+        }
+        let got_w = shared.snapshot();
+        let got_avg = lazy.average_iterate(&shared).expect("averaging state");
+
+        // flushing again must change nothing (already-drained clocks)
+        lazy.flush(&shared);
+        if shared.snapshot() != got_w {
+            return Err(format!("p={p}: second flush moved the iterate"));
+        }
+        if lazy.average_iterate(&shared).unwrap() != got_avg {
+            return Err(format!("p={p}: second flush moved Σû"));
+        }
+
+        // eager dense reference: same streams, same order, O(d) everywhere
+        let dshared = SharedParams::new(&w0, Scheme::Unlock);
+        let ddelays = DelayStats::new();
+        let mut scratch = WorkerScratch::new(obj.dim());
+        let mut acc = vec![0.0f32; obj.dim()];
+        for a in 0..p {
+            let mut rng = Pcg32::for_thread(seed, a);
+            run_inner_loop_averaging(
+                &obj, &dshared, &w0, &eg, eta, iters, &mut rng, &mut scratch, &ddelays, &mut acc,
+            );
+        }
+        let want_w = dshared.snapshot();
+        let total = (p * iters) as f32;
+        for j in 0..obj.dim() {
+            let (a, b) = (want_w[j], got_w[j]);
+            if (a - b).abs() > 2e-3 * (1.0 + a.abs()) {
+                return Err(format!("p={p} w[{j}]: eager {a} vs lazy {b}"));
+            }
+            let (a, b) = (acc[j] / total, got_avg[j]);
+            if (a - b).abs() > 2e-3 * (1.0 + a.abs()) {
+                return Err(format!("p={p} avg[{j}]: eager {a} vs lazy {b}"));
             }
         }
         Ok(())
