@@ -5,7 +5,7 @@
 //! (the end-to-end hot-path unit), and simulator event throughput.
 //! Output feeds the CostModel calibration and EXPERIMENTS.md §Perf.
 
-use asysvrg::bench::report;
+use asysvrg::bench::{contention, report};
 use asysvrg::config::Scheme;
 use asysvrg::coordinator::delay::DelayStats;
 use asysvrg::coordinator::epoch::{parallel_full_grad, parallel_full_grad_sparse};
@@ -225,6 +225,71 @@ fn main() {
         ("pass", Json::Bool(epoch_speedup >= 5.0)),
     ]);
     match report::write_json("BENCH_epoch_pass", &epoch_json) {
+        Ok(path) => println!("json -> {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+
+    // ------------------------------------------------------------------
+    // contention calibration (DESIGN.md §6): real contended sparse runs on
+    // a Zipfian workload, collision telemetry, (kappa, collision_ns) fit,
+    // and the calibrated model's throughput prediction vs measurement.
+    // The CI smoke gates from the emitted JSON: predictions within ±30%
+    // on every genuinely-parallel thread count, measured collision rate
+    // non-decreasing across them, and telemetry overhead < 5%.
+    // ------------------------------------------------------------------
+    println!("\n== contention: telemetry + calibrated collision model (zipf 1.1) ==");
+    let ds = SyntheticSpec::new("bench-zipf", 3000, 20_000, 40, 42).with_zipf(1.1).generate();
+    println!("{}", ds.describe());
+    let obj = Objective::paper(Arc::new(ds));
+
+    // long loops + min-of-5 keep the two wall-clock measurements stable
+    // enough on shared runners for the 5% gate to be meaningful
+    let overhead = contention::telemetry_overhead(&obj, 200_000, 5, 42);
+    println!(
+        "telemetry overhead (1 thread, sampled 1/64): {:+.2}% (limit 5%)",
+        overhead * 100.0
+    );
+
+    let measured_costs = CostModel::calibrate();
+    let rep = contention::calibrate_contention(
+        &obj,
+        &[1, 2, 4, 8],
+        120_000,
+        42,
+        &measured_costs,
+        0.3,
+    );
+    print!("{}", rep.render());
+
+    // measured collision rate must not decrease across the gated (truly
+    // parallel) thread counts; a small epsilon absorbs sampling noise
+    let gated_rates: Vec<f64> = rep
+        .points
+        .iter()
+        .filter(|m| m.threads <= rep.host_cores)
+        .map(|m| m.collision_rate)
+        .collect();
+    let monotone_pass = gated_rates.windows(2).all(|w| w[1] >= w[0] - 0.01);
+    let overhead_pass = overhead < 0.05;
+    let all_pass = rep.pass && monotone_pass && overhead_pass;
+    println!(
+        "contention smoke: predictions {} | rate monotone {} | overhead {} => {}",
+        if rep.pass { "ok" } else { "FAIL" },
+        if monotone_pass { "ok" } else { "FAIL" },
+        if overhead_pass { "ok" } else { "FAIL" },
+        if all_pass { "PASS" } else { "FAIL" },
+    );
+    let mut contention_json = rep.to_json();
+    if let Json::Obj(map) = &mut contention_json {
+        map.insert("bench".into(), Json::Str("contention_calibration".into()));
+        map.insert("telemetry_overhead".into(), Json::Num(overhead));
+        map.insert("overhead_limit".into(), Json::Num(0.05));
+        map.insert("prediction_pass".into(), Json::Bool(rep.pass));
+        map.insert("monotone_pass".into(), Json::Bool(monotone_pass));
+        map.insert("overhead_pass".into(), Json::Bool(overhead_pass));
+        map.insert("pass".into(), Json::Bool(all_pass));
+    }
+    match report::write_json("BENCH_contention", &contention_json) {
         Ok(path) => println!("json -> {}", path.display()),
         Err(e) => eprintln!("could not write bench json: {e}"),
     }

@@ -1,0 +1,472 @@
+//! Contention calibration harness (DESIGN.md §6): drive the REAL sparse
+//! runners on a Zipfian workload across thread counts, measure collision
+//! rates with the sampled telemetry (`coordinator::telemetry`), fit the
+//! simulator's per-nnz collision model (`simcore::SparseContention`), and
+//! check the calibrated model's throughput predictions against what was
+//! measured.
+//!
+//! Used by two entry points:
+//!
+//! * `repro calibrate --contention` — prints the fitted coefficients and
+//!   writes `results/calibration_contention.json`;
+//! * `cargo bench --bench bench_micro` — emits `BENCH_contention.json`,
+//!   whose CI smoke gates (a) prediction error ≤ ±30% on every thread
+//!   count the host can actually run in parallel, (b) measured collision
+//!   rate non-decreasing across those thread counts, and (c) telemetry
+//!   overhead < 5% single-threaded.
+//!
+//! Prediction methodology: per-op microbench costs (`CostModel`) describe
+//! streaming kernels, not the random-access inner loop, so the 1-thread
+//! measurement anchors the base — the per-op sparse phase costs are scaled
+//! by one factor so the model reproduces the measured uncontended
+//! per-update time exactly. Everything the model must then *predict* is
+//! the contended scaling: the collision penalty at p > 1, which comes from
+//! the fitted (κ, collision_ns) and the dataset's measured touch
+//! concentration, never from the p > 1 timings directly. Oversubscribed
+//! points (p > host cores) time-share a core and measure scheduler churn,
+//! not contention, so they are reported but not gated.
+
+use crate::config::Scheme;
+use crate::coordinator::delay::DelayStats;
+use crate::coordinator::epoch::parallel_full_grad;
+use crate::coordinator::shared::SharedParams;
+use crate::coordinator::sparse::{run_inner_loop_sparse_telemetry, LazyState};
+use crate::coordinator::telemetry::ContentionStats;
+use crate::objective::Objective;
+use crate::simcore::{ContentionSample, CostModel, SparseContention};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use crate::util::Stopwatch;
+
+/// Step size for the measurement loops: small enough that hundreds of
+/// thousands of updates stay numerically tame on any workload.
+const MEASURE_ETA: f32 = 0.05;
+
+/// Parallelism this host can genuinely provide for throughput scaling:
+/// distinct **physical** cores (SMT siblings time-share execution units,
+/// so hyperthread counts would let the ±30% gate compare the collision
+/// model against SMT time-sharing it cannot express). Physical topology
+/// comes from /proc/cpuinfo, capped by `available_parallelism` (which is
+/// cgroup/cpuset-aware); hosts without readable topology fall back to
+/// `available_parallelism` alone.
+pub fn host_cores() -> usize {
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    match physical_cores_linux() {
+        Some(phys) if phys >= 1 => phys.min(avail),
+        _ => avail,
+    }
+}
+
+/// Count distinct (physical id, core id) pairs in /proc/cpuinfo.
+fn physical_cores_linux() -> Option<usize> {
+    let txt = std::fs::read_to_string("/proc/cpuinfo").ok()?;
+    let mut pairs = std::collections::BTreeSet::new();
+    let (mut phys, mut core) = (None::<u64>, None::<u64>);
+    for line in txt.lines().chain(std::iter::once("")) {
+        if line.trim().is_empty() {
+            if let (Some(p), Some(c)) = (phys, core) {
+                pairs.insert((p, c));
+            }
+            (phys, core) = (None, None);
+            continue;
+        }
+        if let Some((key, val)) = line.split_once(':') {
+            match key.trim() {
+                "physical id" => phys = val.trim().parse().ok(),
+                "core id" => core = val.trim().parse().ok(),
+                _ => {}
+            }
+        }
+    }
+    (!pairs.is_empty()).then(|| pairs.len())
+}
+
+/// One measured contended run.
+#[derive(Clone, Copy, Debug)]
+pub struct MeasuredPoint {
+    pub threads: usize,
+    pub updates: u64,
+    pub wall_seconds: f64,
+    /// Telemetry: collisions per sampled coordinate write.
+    pub collision_rate: f64,
+    pub lock_conflict_rate: f64,
+    pub head_touch_fraction: f64,
+    /// Aggregate measured throughput (updates / wall second).
+    pub throughput: f64,
+    /// Effective compute ns per update: wall · min(p, cores) / updates —
+    /// the oversubscription-corrected per-update cost.
+    pub eff_ns_per_update: f64,
+}
+
+impl MeasuredPoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("threads", Json::Num(self.threads as f64)),
+            ("updates", Json::Num(self.updates as f64)),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+            ("collision_rate", Json::Num(self.collision_rate)),
+            ("lock_conflict_rate", Json::Num(self.lock_conflict_rate)),
+            ("head_touch_fraction", Json::Num(self.head_touch_fraction)),
+            ("throughput", Json::Num(self.throughput)),
+            ("eff_ns_per_update", Json::Num(self.eff_ns_per_update)),
+        ])
+    }
+}
+
+/// Run `iters_per_thread` REAL sparse inner updates on each of `threads`
+/// OS threads with sampled telemetry, and time the phase.
+pub fn measure_point(
+    obj: &Objective,
+    scheme: Scheme,
+    threads: usize,
+    iters_per_thread: usize,
+    sample_period: u64,
+    seed: u64,
+) -> MeasuredPoint {
+    let d = obj.dim();
+    let w0 = vec![0.0f32; d];
+    let eg = parallel_full_grad(obj, &w0, 1);
+    let shared = SharedParams::new(&w0, scheme);
+    let lazy = LazyState::new(&w0, &eg.mu, obj.lam, MEASURE_ETA, 0);
+    let stats = ContentionStats::with_period(d, sample_period);
+    let delays = DelayStats::new();
+    let sw = Stopwatch::start();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let (shared, lazy, eg, delays, stats) = (&shared, &lazy, &eg, &delays, &stats);
+            s.spawn(move || {
+                let mut rng = Pcg32::for_thread(seed, t);
+                run_inner_loop_sparse_telemetry(
+                    obj,
+                    shared,
+                    lazy,
+                    eg,
+                    iters_per_thread,
+                    &mut rng,
+                    delays,
+                    Some(stats),
+                );
+            });
+        }
+    });
+    let wall_seconds = sw.seconds().max(1e-9);
+    let updates = shared.clock();
+    let summary = stats.summary();
+    let eff_threads = threads.min(host_cores()) as f64;
+    MeasuredPoint {
+        threads,
+        updates,
+        wall_seconds,
+        collision_rate: summary.collision_rate,
+        lock_conflict_rate: summary.lock_conflict_rate,
+        head_touch_fraction: summary.head_touch_fraction,
+        throughput: updates as f64 / wall_seconds,
+        eff_ns_per_update: wall_seconds * 1e9 * eff_threads / updates.max(1) as f64,
+    }
+}
+
+/// Single-thread telemetry overhead: fractional slowdown of the sparse
+/// inner loop with the default-period sampled counters attached, best-of-
+/// `trials` on each side (min wall time is the standard noise filter).
+/// The CI bench smoke gates this below 5%.
+pub fn telemetry_overhead(obj: &Objective, iters: usize, trials: usize, seed: u64) -> f64 {
+    let d = obj.dim();
+    let w0 = vec![0.0f32; d];
+    let eg = parallel_full_grad(obj, &w0, 1);
+    let time_once = |telemetry: bool| {
+        let shared = SharedParams::new(&w0, Scheme::Unlock);
+        let lazy = LazyState::new(&w0, &eg.mu, obj.lam, MEASURE_ETA, 0);
+        let stats = ContentionStats::new(d);
+        let delays = DelayStats::new();
+        let mut rng = Pcg32::for_thread(seed, 0);
+        let sw = Stopwatch::start();
+        run_inner_loop_sparse_telemetry(
+            obj,
+            &shared,
+            &lazy,
+            &eg,
+            iters,
+            &mut rng,
+            &delays,
+            telemetry.then_some(&stats),
+        );
+        sw.seconds()
+    };
+    // warmup both paths once before timing
+    time_once(false);
+    time_once(true);
+    // interleave the trials so a noisy-neighbor burst on a shared runner
+    // hits both sides rather than inflating only one minimum
+    let mut plain = f64::INFINITY;
+    let mut sampled = f64::INFINITY;
+    for _ in 0..trials.max(1) {
+        plain = plain.min(time_once(false));
+        sampled = sampled.min(time_once(true));
+    }
+    (sampled - plain) / plain.max(1e-12)
+}
+
+/// The calibrated model's throughput prediction for one thread count.
+#[derive(Clone, Copy, Debug)]
+pub struct Prediction {
+    pub threads: usize,
+    pub predicted_ns_per_update: f64,
+    /// Aggregate predicted throughput min(p, cores)·1e9 / predicted ns.
+    pub predicted_throughput: f64,
+    pub measured_throughput: f64,
+    /// |predicted − measured| / measured.
+    pub rel_err: f64,
+    /// Gated points (p ≤ host cores) are asserted within tolerance in CI;
+    /// oversubscribed points are informational.
+    pub gated: bool,
+}
+
+impl Prediction {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("threads", Json::Num(self.threads as f64)),
+            ("predicted_ns_per_update", Json::Num(self.predicted_ns_per_update)),
+            ("predicted_throughput", Json::Num(self.predicted_throughput)),
+            ("measured_throughput", Json::Num(self.measured_throughput)),
+            ("rel_err", Json::Num(self.rel_err)),
+            ("gated", Json::Bool(self.gated)),
+        ])
+    }
+}
+
+/// Full calibration outcome: measurements, fit, and prediction check.
+#[derive(Clone, Debug)]
+pub struct CalibrationReport {
+    pub dataset: String,
+    pub overlap: f64,
+    pub avg_nnz: f64,
+    pub host_cores: usize,
+    /// Measured uncontended (1-thread) ns per update — the base anchor.
+    pub base_ns_per_update: f64,
+    /// Per-op → measured base scale factor fitted at p = 1.
+    pub base_scale: f64,
+    pub points: Vec<MeasuredPoint>,
+    pub fitted: SparseContention,
+    pub predictions: Vec<Prediction>,
+    pub tolerance: f64,
+    /// Every gated prediction within tolerance.
+    pub pass: bool,
+}
+
+/// Uncontended per-op model cost of one sparse update at p cores (no
+/// collision term): read + margin/catch-up compute + scatter.
+fn model_base_ns(costs: &CostModel, p: usize, avg_nnz: f64) -> f64 {
+    avg_nnz
+        * (costs.read_coord_ns * costs.bw(p)
+            + costs.sparse_nnz_ns
+            + costs.dense_coord_ns
+            + costs.write_coord_ns * costs.bw(p))
+}
+
+/// Measure, fit, predict: the whole calibration pipeline on one objective
+/// (lock-free scheme — the regime the collision model is about).
+pub fn calibrate_contention(
+    obj: &Objective,
+    thread_counts: &[usize],
+    iters_per_point: usize,
+    seed: u64,
+    costs: &CostModel,
+    tolerance: f64,
+) -> CalibrationReport {
+    assert!(
+        thread_counts.first() == Some(&1),
+        "thread count list must start at 1 (the uncontended anchor)"
+    );
+    let overlap = obj.data.coord_touch_concentration();
+    let avg_nnz = obj.data.avg_nnz();
+    let cores = host_cores();
+
+    // sample every update during calibration: rate estimates want the
+    // statistics, and the overhead guard is a separate measurement
+    let points: Vec<MeasuredPoint> = thread_counts
+        .iter()
+        .map(|&p| {
+            let per_thread = (iters_per_point / p).max(1);
+            measure_point(obj, Scheme::Unlock, p, per_thread, 1, seed)
+        })
+        .collect();
+    let base = points[0];
+
+    // the 1-thread anchor fixes the per-op → measured scale before any
+    // contention fitting (SparseContention never enters model_base_ns)
+    let base_scale = base.eff_ns_per_update / model_base_ns(costs, 1, avg_nnz).max(1e-12);
+
+    // fit only on genuinely parallel points: an oversubscribed run (p >
+    // cores) time-shares a core and its slowdown is scheduler churn, not
+    // write contention — it would pollute the collision_ns regression.
+    // The regression target is the slowdown the base model does NOT
+    // already predict: eff(p) minus the bw(p)-scaled uncontended cost —
+    // subtracting the 1-thread measurement instead would let collision_ns
+    // absorb the bandwidth growth the prediction then re-adds.
+    let samples: Vec<ContentionSample> = points
+        .iter()
+        .filter(|m| m.threads > 1 && m.threads <= cores)
+        .map(|m| ContentionSample {
+            threads: m.threads,
+            overlap,
+            avg_nnz,
+            collision_rate: m.collision_rate,
+            extra_ns_per_update: (m.eff_ns_per_update
+                - base_scale * model_base_ns(costs, m.threads, avg_nnz))
+            .max(0.0),
+        })
+        .collect();
+    let fitted = SparseContention::fit(&samples);
+
+    let mut calibrated = *costs;
+    calibrated.contention = fitted;
+
+    let predictions: Vec<Prediction> = points
+        .iter()
+        .map(|m| {
+            let p = m.threads;
+            let pred_ns = base_scale * model_base_ns(&calibrated, p, avg_nnz)
+                + avg_nnz * fitted.collision_rate(p, overlap, avg_nnz) * fitted.collision_ns;
+            let pred_tput = p.min(cores) as f64 * 1e9 / pred_ns.max(1e-12);
+            Prediction {
+                threads: p,
+                predicted_ns_per_update: pred_ns,
+                predicted_throughput: pred_tput,
+                measured_throughput: m.throughput,
+                rel_err: (pred_tput - m.throughput).abs() / m.throughput.max(1e-12),
+                gated: p <= cores,
+            }
+        })
+        .collect();
+    let pass = predictions.iter().filter(|pr| pr.gated).all(|pr| pr.rel_err <= tolerance);
+
+    CalibrationReport {
+        dataset: obj.data.name.clone(),
+        overlap,
+        avg_nnz,
+        host_cores: cores,
+        base_ns_per_update: base.eff_ns_per_update,
+        base_scale,
+        points,
+        fitted,
+        predictions,
+        tolerance,
+        pass,
+    }
+}
+
+impl CalibrationReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("overlap", Json::Num(self.overlap)),
+            ("avg_nnz", Json::Num(self.avg_nnz)),
+            ("host_cores", Json::Num(self.host_cores as f64)),
+            ("base_ns_per_update", Json::Num(self.base_ns_per_update)),
+            ("base_scale", Json::Num(self.base_scale)),
+            ("points", Json::Arr(self.points.iter().map(|m| m.to_json()).collect())),
+            ("fitted", self.fitted.to_json()),
+            (
+                "predictions",
+                Json::Arr(self.predictions.iter().map(|p| p.to_json()).collect()),
+            ),
+            ("tolerance", Json::Num(self.tolerance)),
+            ("pass", Json::Bool(self.pass)),
+        ])
+    }
+
+    /// Aligned stdout table.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "Contention calibration on {} (S = {:.3e}, nnz̄ = {:.1}, {} host cores)\n\
+             fitted: kappa = {:.4}, collision_ns = {:.2}  (base {:.1} ns/update, scale {:.2})\n",
+            self.dataset,
+            self.overlap,
+            self.avg_nnz,
+            self.host_cores,
+            self.fitted.kappa,
+            self.fitted.collision_ns,
+            self.base_ns_per_update,
+            self.base_scale,
+        );
+        s.push_str(&format!(
+            "{:>7} | {:>10} | {:>10} | {:>12} | {:>12} | {:>7} | {}\n",
+            "threads", "coll rate", "ns/update", "meas tput", "pred tput", "err", "gated"
+        ));
+        s.push_str(&"-".repeat(86));
+        s.push('\n');
+        for (m, pr) in self.points.iter().zip(self.predictions.iter()) {
+            s.push_str(&format!(
+                "{:>7} | {:>10.4} | {:>10.1} | {:>12.3e} | {:>12.3e} | {:>6.1}% | {}\n",
+                m.threads,
+                m.collision_rate,
+                m.eff_ns_per_update,
+                m.throughput,
+                pr.predicted_throughput,
+                pr.rel_err * 100.0,
+                if pr.gated { "yes" } else { "no (oversubscribed)" }
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::objective::LossKind;
+    use std::sync::Arc;
+
+    fn zipf_obj() -> Objective {
+        let ds = SyntheticSpec::new("cal", 500, 2000, 20, 17).with_zipf(1.1).generate();
+        Objective::new(Arc::new(ds), 1e-2, LossKind::Logistic)
+    }
+
+    #[test]
+    fn measure_point_produces_consistent_numbers() {
+        let obj = zipf_obj();
+        let m = measure_point(&obj, Scheme::Unlock, 1, 2_000, 1, 7);
+        assert_eq!(m.threads, 1);
+        assert_eq!(m.updates, 2_000);
+        assert!(m.wall_seconds > 0.0);
+        assert!(m.throughput > 0.0);
+        assert!(m.eff_ns_per_update > 0.0);
+        // single thread cannot collide and takes no locks
+        assert_eq!(m.collision_rate, 0.0);
+        assert_eq!(m.lock_conflict_rate, 0.0);
+        // zipf workload touches the head hard
+        assert!(m.head_touch_fraction > 0.3, "{}", m.head_touch_fraction);
+    }
+
+    #[test]
+    fn calibration_pipeline_end_to_end_smoke() {
+        let obj = zipf_obj();
+        let costs = CostModel::default_host();
+        let rep = calibrate_contention(&obj, &[1, 2], 6_000, 7, &costs, 0.3);
+        assert_eq!(rep.points.len(), 2);
+        assert_eq!(rep.predictions.len(), 2);
+        assert!(rep.fitted.kappa > 0.0 && rep.fitted.kappa.is_finite());
+        assert!(rep.fitted.collision_ns >= 0.0 && rep.fitted.collision_ns.is_finite());
+        assert!(rep.base_scale > 0.0 && rep.base_scale.is_finite());
+        // the 1-thread anchor predicts itself by construction
+        let p1 = &rep.predictions[0];
+        assert!(p1.gated);
+        assert!(p1.rel_err < 0.05, "anchor rel err {}", p1.rel_err);
+        // json shape
+        let j = rep.to_json();
+        assert_eq!(j.get("points").unwrap().as_arr().unwrap().len(), 2);
+        assert!(j.get("fitted").unwrap().get("kappa").is_some());
+        assert!(!rep.render().is_empty());
+    }
+
+    #[test]
+    fn overhead_guard_measures_small_fraction() {
+        let obj = zipf_obj();
+        let frac = telemetry_overhead(&obj, 4_000, 2, 7);
+        // structural only in unit tests (CI gates < 5% in the bench smoke
+        // with bigger iteration counts): finite and far from pathological
+        assert!(frac.is_finite());
+        assert!(frac < 1.0, "telemetry overhead {frac} looks pathological");
+    }
+}

@@ -9,6 +9,7 @@
 //! every timing.
 
 pub mod ablation;
+pub mod contention;
 pub mod e2e;
 pub mod report;
 

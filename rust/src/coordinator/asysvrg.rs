@@ -18,7 +18,8 @@ use crate::coordinator::delay::DelayStats;
 use crate::coordinator::epoch::parallel_full_grad_storage;
 use crate::coordinator::monitor::{HistoryPoint, RunResult};
 use crate::coordinator::shared::SharedParams;
-use crate::coordinator::sparse::{run_inner_loop_sparse, LazyState};
+use crate::coordinator::sparse::{run_inner_loop_sparse_telemetry, LazyState};
+use crate::coordinator::telemetry::ContentionStats;
 use crate::coordinator::worker::{run_inner_loop, run_inner_loop_averaging, WorkerScratch};
 use crate::objective::Objective;
 use crate::util::rng::Pcg32;
@@ -46,6 +47,11 @@ pub fn run_asysvrg(
     let passes_per_epoch = 1.0 + cfg.m_factor;
     let delays = DelayStats::new();
     let sw = Stopwatch::start();
+
+    // sampled collision telemetry rides along on every sparse run (the
+    // dense loop has no per-coordinate write set to observe); aggregated
+    // across epochs and surfaced in RunResult::contention
+    let telem = (cfg.storage == Storage::Sparse).then(|| ContentionStats::new(d));
 
     let mut w = vec![0.0f32; d];
     let mut result = RunResult::default();
@@ -80,9 +86,10 @@ pub fn run_asysvrg(
                         let eg = &eg;
                         let lazy = &lazy;
                         let delays = &delays;
+                        let tm = telem.as_ref();
                         s.spawn(move || {
                             let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
-                            run_inner_loop_sparse(
+                            run_inner_loop_sparse_telemetry(
                                 obj,
                                 shared,
                                 lazy,
@@ -90,6 +97,7 @@ pub fn run_asysvrg(
                                 m_per_thread,
                                 &mut rng,
                                 delays,
+                                tm,
                             );
                         });
                     }
@@ -200,6 +208,7 @@ pub fn run_asysvrg(
     result.total_seconds = sw.seconds();
     result.max_delay = delays.max_delay();
     result.mean_delay = delays.mean_delay();
+    result.contention = telem.map(|t| t.summary());
     result
 }
 
@@ -415,6 +424,28 @@ mod tests {
                 r.epochs_run
             );
         }
+    }
+
+    #[test]
+    fn sparse_runs_surface_contention_telemetry() {
+        let obj = small_obj();
+        let base = RunConfig {
+            threads: 2,
+            scheme: Scheme::Unlock,
+            eta: 0.2,
+            epochs: 2,
+            target_gap: 0.0,
+            ..Default::default()
+        };
+        let dense = run(&obj, &base, f64::NEG_INFINITY);
+        assert!(dense.contention.is_none(), "dense loop has no write-set telemetry");
+        let sp = RunConfig { storage: crate::config::Storage::Sparse, ..base };
+        let sparse = run(&obj, &sp, f64::NEG_INFINITY);
+        let c = sparse.contention.expect("sparse run collects telemetry");
+        assert!(c.sampled_updates > 0);
+        assert!(c.sampled_writes > 0);
+        assert!((0.0..=1.0).contains(&c.collision_rate));
+        assert!(sparse.to_json().get("contention").is_some());
     }
 
     #[test]

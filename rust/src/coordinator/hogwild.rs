@@ -13,7 +13,8 @@ use crate::config::{RunConfig, Storage};
 use crate::coordinator::delay::DelayStats;
 use crate::coordinator::monitor::{HistoryPoint, RunResult};
 use crate::coordinator::shared::SharedParams;
-use crate::coordinator::sparse::{run_hogwild_inner_sparse, LazyState};
+use crate::coordinator::sparse::{run_hogwild_inner_sparse_telemetry, LazyState};
+use crate::coordinator::telemetry::ContentionStats;
 use crate::objective::Objective;
 use crate::util::rng::Pcg32;
 use crate::util::Stopwatch;
@@ -31,6 +32,8 @@ pub fn run_hogwild(obj: &Objective, cfg: &RunConfig, fstar: f64) -> RunResult {
     let mut result = RunResult::default();
     let shared = SharedParams::new(&vec![0.0f32; d], cfg.scheme);
     let mut passes = 0.0f64;
+    // sampled collision telemetry rides along on sparse runs (DESIGN.md §6)
+    let telem = (cfg.storage == Storage::Sparse).then(|| ContentionStats::new(d));
 
     for t in 0..cfg.epochs {
         match cfg.storage {
@@ -44,9 +47,12 @@ pub fn run_hogwild(obj: &Objective, cfg: &RunConfig, fstar: f64) -> RunResult {
                         let shared = &shared;
                         let lazy = &lazy;
                         let delays = &delays;
+                        let tm = telem.as_ref();
                         s.spawn(move || {
                             let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
-                            run_hogwild_inner_sparse(obj, shared, lazy, iters, &mut rng, delays);
+                            run_hogwild_inner_sparse_telemetry(
+                                obj, shared, lazy, iters, &mut rng, delays, tm,
+                            );
                         });
                     }
                 });
@@ -98,6 +104,7 @@ pub fn run_hogwild(obj: &Objective, cfg: &RunConfig, fstar: f64) -> RunResult {
     result.total_seconds = sw.seconds();
     result.max_delay = delays.max_delay();
     result.mean_delay = delays.mean_delay();
+    result.contention = telem.map(|t| t.summary());
     result
 }
 
@@ -187,6 +194,10 @@ mod tests {
         let r = run_hogwild(&obj, &c, f64::NEG_INFINITY);
         let gap = r.final_loss() - fstar;
         assert!(gap < 5e-3, "sparse hogwild gap {gap:.3e}");
+        // sparse hogwild also surfaces contention telemetry
+        let ct = r.contention.expect("sparse hogwild telemetry");
+        assert!(ct.sampled_updates > 0);
+        assert!((0.0..=1.0).contains(&ct.collision_rate));
     }
 
     #[test]

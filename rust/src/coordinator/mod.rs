@@ -8,6 +8,8 @@
 //! * [`asysvrg`] — Algorithm 1 driver (Options 1 & 2)
 //! * [`hogwild`] — the Hogwild! baseline under identical disciplines
 //! * [`delay`] — bounded-delay (τ) instrumentation
+//! * [`telemetry`] — sampled hot-coordinate collision telemetry
+//!   (DESIGN.md §6)
 //! * [`monitor`] — run history / results
 
 pub mod asysvrg;
@@ -17,6 +19,7 @@ pub mod hogwild;
 pub mod monitor;
 pub mod shared;
 pub mod sparse;
+pub mod telemetry;
 pub mod worker;
 
 pub use asysvrg::{run_asysvrg, SvrgOption};
@@ -24,6 +27,7 @@ pub use hogwild::run_hogwild;
 pub use monitor::{HistoryPoint, RunResult};
 pub use shared::SharedParams;
 pub use sparse::LazyState;
+pub use telemetry::{ContentionStats, ContentionSummary};
 
 use crate::config::{Algo, RunConfig};
 use crate::objective::Objective;

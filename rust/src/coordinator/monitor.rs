@@ -1,6 +1,7 @@
 //! Convergence monitoring and run results — what every driver returns and
 //! every bench serializes.
 
+use crate::coordinator::telemetry::ContentionSummary;
 use crate::util::json::Json;
 
 /// One measurement point after an epoch.
@@ -31,6 +32,9 @@ pub struct RunResult {
     pub epochs_run: usize,
     /// True if the run reached the target gap.
     pub converged: bool,
+    /// Sampled hot-coordinate collision telemetry (threads engine, sparse
+    /// storage only — see `coordinator::telemetry`, DESIGN.md §6).
+    pub contention: Option<ContentionSummary>,
 }
 
 impl RunResult {
@@ -49,7 +53,7 @@ impl RunResult {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut j = Json::obj(vec![
             (
                 "history",
                 Json::Arr(
@@ -72,7 +76,11 @@ impl RunResult {
             ("mean_delay", Json::Num(self.mean_delay)),
             ("epochs_run", Json::Num(self.epochs_run as f64)),
             ("converged", Json::Bool(self.converged)),
-        ])
+        ]);
+        if let (Some(c), Json::Obj(map)) = (&self.contention, &mut j) {
+            map.insert("contention".into(), c.to_json());
+        }
+        j
     }
 }
 
@@ -107,5 +115,23 @@ mod tests {
         let hist = j.get("history").unwrap().as_arr().unwrap();
         assert_eq!(hist.len(), 3);
         assert_eq!(hist[1].get("loss").unwrap().as_f64(), Some(0.1));
+        // no telemetry collected → no contention key
+        assert!(j.get("contention").is_none());
+    }
+
+    #[test]
+    fn json_carries_contention_summary_when_present() {
+        let mut r = result();
+        r.contention = Some(ContentionSummary {
+            sample_period: 16,
+            sampled_writes: 100,
+            collisions: 7,
+            collision_rate: 0.07,
+            ..Default::default()
+        });
+        let j = r.to_json();
+        let c = j.get("contention").expect("contention key");
+        assert_eq!(c.get("collision_rate").unwrap().as_f64(), Some(0.07));
+        assert_eq!(c.get("sampled_writes").unwrap().as_f64(), Some(100.0));
     }
 }

@@ -53,12 +53,22 @@
 //! replaces each write with a CAS loop (PASSCoDe-style), exactly as in the
 //! dense path.
 
+//!
+//! **Contention telemetry.** The per-coordinate clocks double as a free
+//! collision detector: observing `last[j] > now` during catch-up means a
+//! concurrent update touched j inside this iteration's window — exactly
+//! the hot-head overlap the calibrated contention model
+//! (`simcore::SparseContention`, DESIGN.md §6) is fitted against. The
+//! `_telemetry` loop variants sample 1-in-period updates into a
+//! [`ContentionStats`] collector; the plain variants pay nothing.
+
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::config::Scheme;
 use crate::coordinator::delay::DelayStats;
 use crate::coordinator::epoch::EpochGradient;
 use crate::coordinator::shared::SharedParams;
+use crate::coordinator::telemetry::ContentionStats;
 use crate::objective::Objective;
 use crate::util::rng::Pcg32;
 
@@ -272,6 +282,11 @@ impl LazyState {
 /// step over the row, and bump the clock. `r0` is the cached residual
 /// r_i(u₀) (0 for Hogwild!, whose direction uses r alone). Returns
 /// (read_clock, apply_clock) for staleness accounting.
+///
+/// `telem = Some(..)` marks this update as telemetry-sampled: touched
+/// coordinates, write collisions (clock overlaps, racy overwrites, CAS
+/// retries) and write counts are accumulated locally and flushed once at
+/// the end — the unsampled path pays only the `Option` branch.
 #[inline]
 fn sparse_update(
     obj: &Objective,
@@ -280,11 +295,17 @@ fn sparse_update(
     i: usize,
     r0: f32,
     cas: bool,
+    telem: Option<&ContentionStats>,
 ) -> (u64, u64) {
     let data = shared.data();
     let row = obj.data.row(i);
     let eta = lazy.eta;
     let now = shared.clock();
+    let mut t_writes = 0u64;
+    let mut t_colls = 0u64;
+    let mut t_retries = 0u64;
+    let mut t_touches = 0u64;
+    let mut t_head = 0u64;
     // fused catch-up + margin pass: each touched coordinate is loaded once,
     // fast-forwarded if stale, and fed straight into the margin dot (one
     // shared-memory pass instead of a write pass plus a re-read pass)
@@ -292,6 +313,20 @@ fn sparse_update(
     for (k, &j) in row.indices.iter().enumerate() {
         let ju = j as usize;
         let prev = lazy.last[ju].fetch_max(now, Ordering::Relaxed);
+        if let Some(tm) = telem {
+            // scalar counters stay in registers; only the histogram pays
+            // an atomic per touch
+            t_touches += 1;
+            if ju < tm.head_boundary() {
+                t_head += 1;
+            }
+            tm.record_touch_hist(ju);
+            // a concurrent update already advanced j past our start clock:
+            // this iteration's window overlaps a foreign write to j
+            if prev > now {
+                t_colls += 1;
+            }
+        }
         let u = if prev < now {
             let steps = now - prev;
             if cas {
@@ -300,12 +335,26 @@ fn sparse_update(
                 // every other Hogwild-style quantity — the CAS retry
                 // closure cannot carry the sum without double-counting)
                 lazy.record_drift(ju, data.get(ju), steps);
-                data.update_cas(ju, |u| lazy.caught_up(ju, u, steps))
+                if telem.is_some() {
+                    t_writes += 1;
+                    let (fresh, retries) =
+                        data.update_cas_counted(ju, |u| lazy.caught_up(ju, u, steps));
+                    t_retries += retries as u64;
+                    if retries > 0 {
+                        t_colls += 1; // this write collided (0/1, not per retry)
+                    }
+                    fresh
+                } else {
+                    data.update_cas(ju, |u| lazy.caught_up(ju, u, steps))
+                }
             } else {
                 // fused: one a^k evaluation covers both the catch-up and
                 // the Σû partial sum
                 let fresh = lazy.advance(ju, data.get(ju), steps);
                 data.set(ju, fresh);
+                if telem.is_some() {
+                    t_writes += 1;
+                }
                 fresh
             }
         } else {
@@ -320,17 +369,42 @@ fn sparse_update(
     for (k, &j) in row.indices.iter().enumerate() {
         let ju = j as usize;
         let xij = row.values[k];
+        if telem.is_some() {
+            t_writes += 1;
+        }
         if cas {
-            data.update_cas(ju, |u| u - eta * (lazy.dense_term(ju, u) + dr * xij));
+            if telem.is_some() {
+                let (_, retries) =
+                    data.update_cas_counted(ju, |u| u - eta * (lazy.dense_term(ju, u) + dr * xij));
+                t_retries += retries as u64;
+                if retries > 0 {
+                    t_colls += 1;
+                }
+            } else {
+                data.update_cas(ju, |u| u - eta * (lazy.dense_term(ju, u) + dr * xij));
+            }
         } else {
             let u = data.get(ju);
-            data.set(ju, u - eta * (lazy.dense_term(ju, u) + dr * xij));
+            let fresh = u - eta * (lazy.dense_term(ju, u) + dr * xij);
+            data.set(ju, fresh);
+            // sampled write-after-write detector: a re-read that does not
+            // see our bits means another writer landed in the store window
+            if telem.is_some() && data.get(ju).to_bits() != fresh.to_bits() {
+                t_colls += 1;
+            }
         }
     }
     let apply = shared.bump_clock();
     // the touched coordinates absorbed their own correction eagerly
     for &j in row.indices {
         lazy.last[j as usize].fetch_max(apply, Ordering::Relaxed);
+    }
+    if let Some(tm) = telem {
+        // the detectors can fire twice for one coordinate (clock overlap in
+        // the catch-up pass + a WAW/retry on its scatter write); clamping
+        // to the write count keeps collision_rate a probability per write
+        tm.record_update(t_writes, t_colls.min(t_writes), t_retries);
+        tm.record_touches(t_touches, t_head);
     }
     (now, apply)
 }
@@ -347,18 +421,33 @@ pub fn run_inner_loop_sparse(
     rng: &mut Pcg32,
     delays: &DelayStats,
 ) -> usize {
+    run_inner_loop_sparse_telemetry(obj, shared, lazy, eg, iters, rng, delays, None)
+}
+
+/// `run_inner_loop_sparse` with optional sampled contention telemetry:
+/// 1-in-period iterations (per worker stream) record touched coordinates,
+/// write collisions and lock conflicts into `telem`. `None` is the plain
+/// fast path.
+#[allow(clippy::too_many_arguments)]
+pub fn run_inner_loop_sparse_telemetry(
+    obj: &Objective,
+    shared: &SharedParams,
+    lazy: &LazyState,
+    eg: &EpochGradient,
+    iters: usize,
+    rng: &mut Pcg32,
+    delays: &DelayStats,
+    telem: Option<&ContentionStats>,
+) -> usize {
     let n = obj.n();
     let scheme = shared.scheme();
     let locked = matches!(scheme, Scheme::Consistent | Scheme::Inconsistent | Scheme::Seqlock);
     let cas = scheme == Scheme::AtomicCas;
-    for _ in 0..iters {
+    for k in 0..iters {
         let i = rng.below(n);
         let r0 = eg.residuals[i];
-        let (read, apply) = if locked {
-            shared.with_write_lock(|| sparse_update(obj, shared, lazy, i, r0, cas))
-        } else {
-            sparse_update(obj, shared, lazy, i, r0, cas)
-        };
+        let sampled = telem.filter(|t| t.should_sample(k as u64));
+        let (read, apply) = locked_or_free_update(obj, shared, lazy, i, r0, cas, locked, sampled);
         delays.record(read, apply);
     }
     iters
@@ -374,20 +463,59 @@ pub fn run_hogwild_inner_sparse(
     rng: &mut Pcg32,
     delays: &DelayStats,
 ) -> usize {
+    run_hogwild_inner_sparse_telemetry(obj, shared, lazy, iters, rng, delays, None)
+}
+
+/// `run_hogwild_inner_sparse` with optional sampled contention telemetry
+/// (see `run_inner_loop_sparse_telemetry`).
+pub fn run_hogwild_inner_sparse_telemetry(
+    obj: &Objective,
+    shared: &SharedParams,
+    lazy: &LazyState,
+    iters: usize,
+    rng: &mut Pcg32,
+    delays: &DelayStats,
+    telem: Option<&ContentionStats>,
+) -> usize {
     let n = obj.n();
     let scheme = shared.scheme();
     let locked = matches!(scheme, Scheme::Consistent | Scheme::Inconsistent | Scheme::Seqlock);
     let cas = scheme == Scheme::AtomicCas;
-    for _ in 0..iters {
+    for k in 0..iters {
         let i = rng.below(n);
-        let (read, apply) = if locked {
-            shared.with_write_lock(|| sparse_update(obj, shared, lazy, i, 0.0, cas))
-        } else {
-            sparse_update(obj, shared, lazy, i, 0.0, cas)
-        };
+        let sampled = telem.filter(|t| t.should_sample(k as u64));
+        let (read, apply) = locked_or_free_update(obj, shared, lazy, i, 0.0, cas, locked, sampled);
         delays.record(read, apply);
     }
     iters
+}
+
+/// Dispatch one update through the scheme's lock discipline, recording the
+/// lock-conflict sample when this iteration is telemetry-sampled.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn locked_or_free_update(
+    obj: &Objective,
+    shared: &SharedParams,
+    lazy: &LazyState,
+    i: usize,
+    r0: f32,
+    cas: bool,
+    locked: bool,
+    sampled: Option<&ContentionStats>,
+) -> (u64, u64) {
+    if !locked {
+        return sparse_update(obj, shared, lazy, i, r0, cas, sampled);
+    }
+    match sampled {
+        Some(tm) => {
+            let (ra, conflicted) = shared
+                .with_write_lock_observed(|| sparse_update(obj, shared, lazy, i, r0, cas, Some(tm)));
+            tm.record_lock(conflicted);
+            ra
+        }
+        None => shared.with_write_lock(|| sparse_update(obj, shared, lazy, i, r0, cas, None)),
+    }
 }
 
 #[cfg(test)]
@@ -644,6 +772,123 @@ mod tests {
             let f1 = obj.loss(&shared.snapshot());
             assert!(f1 < f0, "{scheme:?}: {f0} -> {f1}");
         }
+    }
+
+    /// Telemetry is an observer: the sampled run takes the exact same
+    /// trajectory as the plain run (same rng stream), for the racy and the
+    /// CAS write paths alike.
+    #[test]
+    fn telemetry_does_not_perturb_trajectory() {
+        let (obj, w0) = setup(1e-2);
+        let eg = parallel_full_grad(&obj, &w0, 1);
+        for scheme in [Scheme::Unlock, Scheme::AtomicCas, Scheme::Consistent] {
+            let run = |telem: Option<&ContentionStats>| {
+                let shared = SharedParams::new(&w0, scheme);
+                let lazy = LazyState::new(&w0, &eg.mu, obj.lam, 0.2, 0);
+                let mut rng = Pcg32::new(21, 1);
+                let delays = DelayStats::new();
+                run_inner_loop_sparse_telemetry(
+                    &obj, &shared, &lazy, &eg, 60, &mut rng, &delays, telem,
+                );
+                lazy.flush(&shared);
+                shared.snapshot()
+            };
+            let stats = ContentionStats::with_period(obj.dim(), 1);
+            assert_eq!(run(None), run(Some(&stats)), "{scheme:?}");
+            let s = stats.summary();
+            assert_eq!(s.sampled_updates, 60, "{scheme:?}");
+            assert!(s.sampled_writes >= 60, "{scheme:?}: every update scatters >= 1 write");
+        }
+    }
+
+    /// Single-threaded there is no concurrent writer: zero collisions, zero
+    /// CAS retries, zero lock conflicts — the floor the monotonicity
+    /// property builds on.
+    #[test]
+    fn telemetry_single_thread_measures_zero_collisions() {
+        let (obj, w0) = setup(1e-2);
+        let eg = parallel_full_grad(&obj, &w0, 1);
+        for scheme in [Scheme::Unlock, Scheme::AtomicCas, Scheme::Inconsistent] {
+            let shared = SharedParams::new(&w0, scheme);
+            let lazy = LazyState::new(&w0, &eg.mu, obj.lam, 0.2, 0);
+            let stats = ContentionStats::with_period(obj.dim(), 1);
+            let mut rng = Pcg32::new(5, 1);
+            let delays = DelayStats::new();
+            run_inner_loop_sparse_telemetry(
+                &obj, &shared, &lazy, &eg, 80, &mut rng, &delays, Some(&stats),
+            );
+            let s = stats.summary();
+            assert_eq!(s.collisions, 0, "{scheme:?}");
+            assert_eq!(s.cas_retries, 0, "{scheme:?}");
+            assert_eq!(s.lock_conflicts, 0, "{scheme:?}");
+            assert_eq!(s.collision_rate, 0.0, "{scheme:?}");
+            // the two-tier generator concentrates touches on the √d head
+            assert!(s.head_touch_fraction > 0.3, "{scheme:?}: {}", s.head_touch_fraction);
+        }
+    }
+
+    /// Locked schemes serialize whole iterations: workers may queue on the
+    /// lock (counted), but no write can ever collide.
+    #[test]
+    fn telemetry_locked_schemes_have_conflicts_not_collisions() {
+        let (obj, w0) = setup(1e-2);
+        let eg = parallel_full_grad(&obj, &w0, 2);
+        let shared = SharedParams::new(&w0, Scheme::Consistent);
+        let lazy = LazyState::new(&w0, &eg.mu, obj.lam, 0.15, 0);
+        let stats = ContentionStats::with_period(obj.dim(), 1);
+        let delays = DelayStats::new();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let (shared, lazy, eg, obj, delays, stats) =
+                    (&shared, &lazy, &eg, &obj, &delays, &stats);
+                s.spawn(move || {
+                    let mut rng = Pcg32::for_thread(17, t);
+                    run_inner_loop_sparse_telemetry(
+                        obj, shared, lazy, eg, 100, &mut rng, delays, Some(stats),
+                    );
+                });
+            }
+        });
+        let s = stats.summary();
+        assert_eq!(s.sampled_updates, 400);
+        assert_eq!(s.lock_acquires, 400);
+        assert!(s.lock_conflicts <= s.lock_acquires);
+        // under the whole-iteration lock no concurrent writer exists
+        assert_eq!(s.collisions, 0);
+        assert_eq!(s.cas_retries, 0);
+    }
+
+    /// Lock-free multithreaded telemetry stays structurally sound: rates in
+    /// [0, 1], counters consistent, and at least as many collisions as the
+    /// single-thread floor of exactly zero.
+    #[test]
+    fn telemetry_multithread_unlock_is_consistent() {
+        let (obj, w0) = setup(1e-2);
+        let eg = parallel_full_grad(&obj, &w0, 2);
+        let shared = SharedParams::new(&w0, Scheme::Unlock);
+        let lazy = LazyState::new(&w0, &eg.mu, obj.lam, 0.15, 0);
+        let stats = ContentionStats::with_period(obj.dim(), 2);
+        let delays = DelayStats::new();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let (shared, lazy, eg, obj, delays, stats) =
+                    (&shared, &lazy, &eg, &obj, &delays, &stats);
+                s.spawn(move || {
+                    let mut rng = Pcg32::for_thread(19, t);
+                    run_inner_loop_sparse_telemetry(
+                        obj, shared, lazy, eg, 100, &mut rng, delays, Some(stats),
+                    );
+                });
+            }
+        });
+        let s = stats.summary();
+        // period 2 over 100 iters per worker: 50 sampled each
+        assert_eq!(s.sampled_updates, 200);
+        assert!(s.sampled_writes > 0);
+        assert!((0.0..=1.0).contains(&s.collision_rate), "rate {}", s.collision_rate);
+        // collisions are clamped 0/1 per write, so the rate is a probability
+        assert!(s.collisions <= s.sampled_writes);
+        assert_eq!(s.lock_acquires, 0, "unlock takes no locks");
     }
 
     /// Sparse Hogwild! single-thread == dense apply_sgd_step single-thread.

@@ -1,0 +1,349 @@
+//! Sampled contention telemetry for the lock-free sparse inner loops
+//! (DESIGN.md §6).
+//!
+//! AsySVRG's unlock/atomic-cas write sets on text-corpus-shaped data
+//! collide almost exclusively on the Zipfian head features, and the gap
+//! between simulated and real contended throughput lives exactly there.
+//! This module measures the collision signal on the REAL runners so the
+//! simulator's per-nnz contention model
+//! ([`SparseContention`](crate::simcore::SparseContention)) can be
+//! calibrated instead of guessed.
+//!
+//! Three signals, all gathered on a 1-in-`period` sample of inner updates
+//! (default 1-in-64; touch counters are accumulated locally per update and
+//! flushed in one shot) so the single-thread overhead stays below the
+//! noise floor (gated <5% in the CI bench smoke):
+//!
+//! * **overlap collisions** — the sparse path's per-coordinate lazy clocks
+//!   ([`LazyState`](crate::coordinator::sparse::LazyState)) already compare
+//!   a coordinate's last-touched clock against the update's start clock;
+//!   observing `last[j] > now` means a concurrent update touched j inside
+//!   this iteration's window. Free to detect — the comparison is on the hot
+//!   path anyway. A second detector catches write-after-write races: after
+//!   a racy store, a sampled re-read that does not see our bits means
+//!   another writer landed in between.
+//! * **CAS retries** — under `Scheme::AtomicCas` a retried
+//!   compare-exchange marks its write as collided (0/1 per write, keeping
+//!   the rate a probability); the raw retry total is kept separately as
+//!   an intensity diagnostic.
+//! * **lock conflicts** — under the locking schemes a `try_lock` miss
+//!   before the blocking acquire counts one conflict.
+//!
+//! A coordinate-touch histogram (log₂-bucketed feature ids) plus a
+//! hot-head counter record *where* the touches land, confirming the
+//! Zipfian-head story the contention model is parameterized by.
+//!
+//! All counters are relaxed atomics: the stats are shared by every worker
+//! thread of an epoch and must never serialize them.
+//!
+//! ```
+//! use asysvrg::coordinator::telemetry::ContentionStats;
+//! // period 1 = sample every update (tests); production default is 64
+//! let t = ContentionStats::with_period(1024, 1);
+//! assert!(t.should_sample(0) && !ContentionStats::new(1024).should_sample(3));
+//! t.record_touch(3);          // a head coordinate (head = √1024 = 32)
+//! t.record_update(8, 2, 0);   // 8 coordinate writes, 2 collided, 0 CAS retries
+//! t.record_lock(true);        // one contended lock acquire
+//! let s = t.summary();
+//! assert_eq!((s.sampled_writes, s.collisions), (8, 2));
+//! assert!((s.collision_rate - 0.25).abs() < 1e-12);
+//! assert!((s.head_touch_fraction - 1.0).abs() < 1e-12);
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Number of log₂ feature-id buckets in the touch histogram (2³¹ ≥ any
+/// `u32` feature index).
+pub const TOUCH_BUCKETS: usize = 32;
+
+/// Default sampling period: one inner update in 64 pays the counter cost.
+pub const DEFAULT_SAMPLE_PERIOD: u64 = 64;
+
+/// Shared, thread-safe collector of sampled collision telemetry for one
+/// sparse inner phase (or a whole run — it only ever accumulates).
+pub struct ContentionStats {
+    period: u64,
+    /// Hot-head boundary: feature ids below this count as "head" (√d by
+    /// the generator's convention — `data::synthetic` plants its separator
+    /// and its popularity head on the first √d features).
+    head: usize,
+    sampled_updates: AtomicU64,
+    sampled_writes: AtomicU64,
+    collisions: AtomicU64,
+    cas_retries: AtomicU64,
+    lock_acquires: AtomicU64,
+    lock_conflicts: AtomicU64,
+    touches: AtomicU64,
+    head_touches: AtomicU64,
+    touch_hist: [AtomicU64; TOUCH_BUCKETS],
+}
+
+impl ContentionStats {
+    /// Collector for a d-dimensional problem at the default sample period.
+    pub fn new(dim: usize) -> Self {
+        Self::with_period(dim, DEFAULT_SAMPLE_PERIOD)
+    }
+
+    /// Collector sampling one update in `period` (1 = every update).
+    pub fn with_period(dim: usize, period: u64) -> Self {
+        assert!(period >= 1, "sample period must be >= 1");
+        ContentionStats {
+            period,
+            head: (dim as f64).sqrt().ceil() as usize,
+            sampled_updates: AtomicU64::new(0),
+            sampled_writes: AtomicU64::new(0),
+            collisions: AtomicU64::new(0),
+            cas_retries: AtomicU64::new(0),
+            lock_acquires: AtomicU64::new(0),
+            lock_conflicts: AtomicU64::new(0),
+            touches: AtomicU64::new(0),
+            head_touches: AtomicU64::new(0),
+            touch_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Whether a worker's k-th iteration is in the sample (per-thread
+    /// counters: every worker samples its own 1-in-period stream).
+    #[inline]
+    pub fn should_sample(&self, k: u64) -> bool {
+        k % self.period == 0
+    }
+
+    /// Fold one sampled update's locally-accumulated counts in: coordinate
+    /// `writes`, of which `collisions` showed a concurrent writer
+    /// (0/1 per write — callers clamp, so `collisions <= writes` and the
+    /// derived rate is a probability), plus `cas_retries` failed
+    /// compare-exchanges (a raw intensity diagnostic: one write may retry
+    /// several times).
+    pub fn record_update(&self, writes: u64, collisions: u64, cas_retries: u64) {
+        self.sampled_updates.fetch_add(1, Ordering::Relaxed);
+        self.sampled_writes.fetch_add(writes, Ordering::Relaxed);
+        if collisions > 0 {
+            self.collisions.fetch_add(collisions, Ordering::Relaxed);
+        }
+        if cas_retries > 0 {
+            self.cas_retries.fetch_add(cas_retries, Ordering::Relaxed);
+        }
+    }
+
+    /// Hot-head boundary (feature ids below it count as head): √d.
+    #[inline]
+    pub fn head_boundary(&self) -> usize {
+        self.head
+    }
+
+    /// Record one touched coordinate of a sampled update (histogram + head
+    /// counter). Convenience form; the hot loop accumulates the scalar
+    /// counters locally and flushes via `record_touches` + per-touch
+    /// `record_touch_hist` to keep the atomic traffic at one RMW per
+    /// touch.
+    pub fn record_touch(&self, j: usize) {
+        self.record_touches(1, (j < self.head) as u64);
+        self.record_touch_hist(j);
+    }
+
+    /// Bulk-add locally accumulated touch counts for one sampled update.
+    pub fn record_touches(&self, touches: u64, head_touches: u64) {
+        self.touches.fetch_add(touches, Ordering::Relaxed);
+        if head_touches > 0 {
+            self.head_touches.fetch_add(head_touches, Ordering::Relaxed);
+        }
+    }
+
+    /// Bucket one touched feature id into the log₂ histogram: bucket 0
+    /// holds id 0, bucket b ≥ 1 holds ids in [2^(b−1), 2^b) — so a
+    /// bucket's ids are strictly below the `1 << b` upper bound
+    /// `touch_histogram` reports.
+    #[inline]
+    pub fn record_touch_hist(&self, j: usize) {
+        let bucket = (usize::BITS - j.leading_zeros()) as usize; // bit length; 0 for j = 0
+        self.touch_hist[bucket.min(TOUCH_BUCKETS - 1)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one sampled lock acquisition; `conflicted` = the fast
+    /// `try_lock` missed and the thread had to wait.
+    pub fn record_lock(&self, conflicted: bool) {
+        self.lock_acquires.fetch_add(1, Ordering::Relaxed);
+        if conflicted {
+            self.lock_conflicts.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Probability that a sampled coordinate write collided with a
+    /// concurrent writer (clock overlap, observed overwrite, or a retried
+    /// CAS — at most one collision per write) — the quantity
+    /// [`SparseContention`](crate::simcore::SparseContention) models and
+    /// `repro calibrate --contention` fits against. Always in [0, 1].
+    pub fn collision_rate(&self) -> f64 {
+        let w = self.sampled_writes.load(Ordering::Relaxed);
+        if w == 0 {
+            return 0.0;
+        }
+        (self.collisions.load(Ordering::Relaxed) as f64 / w as f64).min(1.0)
+    }
+
+    /// Contended fraction of sampled lock acquisitions.
+    pub fn lock_conflict_rate(&self) -> f64 {
+        let a = self.lock_acquires.load(Ordering::Relaxed);
+        if a == 0 {
+            return 0.0;
+        }
+        self.lock_conflicts.load(Ordering::Relaxed) as f64 / a as f64
+    }
+
+    /// Fraction of sampled touches landing on the hot head (ids < √d).
+    pub fn head_touch_fraction(&self) -> f64 {
+        let t = self.touches.load(Ordering::Relaxed);
+        if t == 0 {
+            return 0.0;
+        }
+        self.head_touches.load(Ordering::Relaxed) as f64 / t as f64
+    }
+
+    /// Immutable snapshot of every counter plus the derived rates.
+    pub fn summary(&self) -> ContentionSummary {
+        ContentionSummary {
+            sample_period: self.period,
+            sampled_updates: self.sampled_updates.load(Ordering::Relaxed),
+            sampled_writes: self.sampled_writes.load(Ordering::Relaxed),
+            collisions: self.collisions.load(Ordering::Relaxed),
+            cas_retries: self.cas_retries.load(Ordering::Relaxed),
+            lock_acquires: self.lock_acquires.load(Ordering::Relaxed),
+            lock_conflicts: self.lock_conflicts.load(Ordering::Relaxed),
+            collision_rate: self.collision_rate(),
+            lock_conflict_rate: self.lock_conflict_rate(),
+            head_touch_fraction: self.head_touch_fraction(),
+        }
+    }
+
+    /// Touch histogram as (exclusive feature-id upper bound `1 << b`,
+    /// count), empty buckets skipped: every id counted under an entry is
+    /// strictly below its bound.
+    pub fn touch_histogram(&self) -> Vec<(u64, u64)> {
+        self.touch_hist
+            .iter()
+            .enumerate()
+            .filter_map(|(b, c)| {
+                let n = c.load(Ordering::Relaxed);
+                (n > 0).then(|| (1u64 << b.min(63), n))
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = self.summary().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert(
+                "touch_hist".into(),
+                Json::Arr(
+                    self.touch_histogram()
+                        .into_iter()
+                        .map(|(ub, n)| {
+                            Json::obj(vec![
+                                ("lt", Json::Num(ub as f64)),
+                                ("touches", Json::Num(n as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        j
+    }
+}
+
+/// Plain-data summary of a [`ContentionStats`] collector — what
+/// [`RunResult`](crate::coordinator::monitor::RunResult) carries and the
+/// bench JSON serializes.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ContentionSummary {
+    pub sample_period: u64,
+    pub sampled_updates: u64,
+    pub sampled_writes: u64,
+    pub collisions: u64,
+    pub cas_retries: u64,
+    pub lock_acquires: u64,
+    pub lock_conflicts: u64,
+    pub collision_rate: f64,
+    pub lock_conflict_rate: f64,
+    pub head_touch_fraction: f64,
+}
+
+impl ContentionSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sample_period", Json::Num(self.sample_period as f64)),
+            ("sampled_updates", Json::Num(self.sampled_updates as f64)),
+            ("sampled_writes", Json::Num(self.sampled_writes as f64)),
+            ("collisions", Json::Num(self.collisions as f64)),
+            ("cas_retries", Json::Num(self.cas_retries as f64)),
+            ("lock_acquires", Json::Num(self.lock_acquires as f64)),
+            ("lock_conflicts", Json::Num(self.lock_conflicts as f64)),
+            ("collision_rate", Json::Num(self.collision_rate)),
+            ("lock_conflict_rate", Json::Num(self.lock_conflict_rate)),
+            ("head_touch_fraction", Json::Num(self.head_touch_fraction)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_period_gates_updates() {
+        let t = ContentionStats::with_period(64, 4);
+        let sampled: Vec<u64> = (0..10).filter(|&k| t.should_sample(k)).collect();
+        assert_eq!(sampled, vec![0, 4, 8]);
+        // period 1 samples everything
+        let every = ContentionStats::with_period(64, 1);
+        assert!((0..10).all(|k| every.should_sample(k)));
+    }
+
+    #[test]
+    fn rates_derive_from_counters() {
+        let t = ContentionStats::with_period(100, 1);
+        assert_eq!(t.collision_rate(), 0.0);
+        assert_eq!(t.lock_conflict_rate(), 0.0);
+        t.record_update(10, 1, 2); // 1 collided write (2 raw retries) of 10
+        t.record_update(10, 0, 0);
+        // rate counts collided writes, not raw retries
+        assert!((t.collision_rate() - 1.0 / 20.0).abs() < 1e-12);
+        t.record_lock(false);
+        t.record_lock(true);
+        assert!((t.lock_conflict_rate() - 0.5).abs() < 1e-12);
+        let s = t.summary();
+        assert_eq!(s.sampled_updates, 2);
+        assert_eq!((s.collisions, s.cas_retries), (1, 2));
+    }
+
+    #[test]
+    fn head_fraction_and_histogram_bucket_touches() {
+        // d = 100 ⇒ head = 10
+        let t = ContentionStats::with_period(100, 1);
+        for j in [0usize, 1, 2, 9] {
+            t.record_touch(j); // head
+        }
+        t.record_touch(50); // tail
+        assert!((t.head_touch_fraction() - 0.8).abs() < 1e-12);
+        let hist = t.touch_histogram();
+        let total: u64 = hist.iter().map(|&(_, n)| n).sum();
+        assert_eq!(total, 5);
+        // j = 50 lands in the bucket with upper bound 64
+        assert!(hist.iter().any(|&(ub, n)| ub == 64 && n == 1));
+    }
+
+    #[test]
+    fn json_has_rates_and_histogram() {
+        let t = ContentionStats::with_period(64, 1);
+        t.record_touch(3);
+        t.record_update(4, 1, 0);
+        let j = t.to_json();
+        assert_eq!(j.get("collision_rate").unwrap().as_f64(), Some(0.25));
+        assert_eq!(j.get("touch_hist").unwrap().as_arr().unwrap().len(), 1);
+        let s = t.summary().to_json();
+        assert!(s.get("sampled_writes").is_some());
+    }
+}

@@ -1,6 +1,8 @@
 //! CSR dataset container for problem (1): instances x_i ∈ R^d (sparse),
 //! labels y_i ∈ {−1, +1}.
 
+use std::sync::OnceLock;
+
 use crate::linalg::SparseRow;
 
 /// Immutable CSR training set. `indptr` has n+1 entries; row i occupies
@@ -13,6 +15,11 @@ pub struct Dataset {
     pub labels: Vec<f32>,
     pub dim: usize,
     pub name: String,
+    /// Memoized Σ (c_j/nnz)² — the sparsity pattern is immutable after
+    /// construction (`l2_normalize_rows` rescales values only), and the
+    /// simulator prices this once per inner phase, so the O(nnz + d) pass
+    /// must not repeat per epoch.
+    touch_concentration: OnceLock<f64>,
 }
 
 impl Dataset {
@@ -80,7 +87,15 @@ impl Dataset {
                 return Err(format!("label {i} = {y}, want ±1"));
             }
         }
-        Ok(Dataset { indptr, indices, values, labels, dim, name: name.to_string() })
+        Ok(Dataset {
+            indptr,
+            indices,
+            values,
+            labels,
+            dim,
+            name: name.to_string(),
+            touch_concentration: OnceLock::new(),
+        })
     }
 
     /// L2-normalize every row in place (standard preprocessing for the
@@ -98,6 +113,42 @@ impl Dataset {
                 }
             }
         }
+    }
+
+    /// Mean non-zeros per row.
+    pub fn avg_nnz(&self) -> f64 {
+        if self.n() == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / self.n() as f64
+    }
+
+    /// Feature-touch concentration Σ_j (c_j/nnz)², where c_j is how many
+    /// rows carry feature j — the probability that two independently
+    /// sampled coordinate touches land on the same feature (the Simpson
+    /// index of the feature-popularity distribution). A uniform spread
+    /// gives 1/d; a Zipfian head pushes it orders of magnitude higher.
+    /// This is the skew input of the sparse contention model
+    /// (`simcore::SparseContention`, DESIGN.md §6). The O(nnz + d) pass
+    /// runs once per dataset and is memoized.
+    pub fn coord_touch_concentration(&self) -> f64 {
+        *self.touch_concentration.get_or_init(|| {
+            let total = self.nnz() as f64;
+            if total == 0.0 {
+                return 0.0;
+            }
+            let mut counts = vec![0u32; self.dim];
+            for &j in &self.indices {
+                counts[j as usize] += 1;
+            }
+            counts
+                .iter()
+                .map(|&c| {
+                    let f = c as f64 / total;
+                    f * f
+                })
+                .sum()
+        })
     }
 
     /// Max row ‖x_i‖² — the data term in the Lipschitz bound.
@@ -180,6 +231,33 @@ mod tests {
         assert!((d.row(1).sq_norm() - 1.0).abs() < 1e-6);
         assert_eq!(d.row(2).sq_norm(), 0.0); // empty row untouched
         assert!((d.max_row_sq_norm() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn touch_concentration_bounds_and_extremes() {
+        // every row touches the same single feature: concentration = 1
+        let hot = Dataset::from_rows(
+            vec![(vec![0], vec![1.0]), (vec![0], vec![1.0])],
+            vec![1.0, -1.0],
+            4,
+            "hot",
+        )
+        .unwrap();
+        assert!((hot.coord_touch_concentration() - 1.0).abs() < 1e-12);
+        assert_eq!(hot.avg_nnz(), 1.0);
+        // perfectly spread: one touch per feature ⇒ 1/d
+        let spread = Dataset::from_rows(
+            vec![(vec![0, 1], vec![1.0, 1.0]), (vec![2, 3], vec![1.0, 1.0])],
+            vec![1.0, -1.0],
+            4,
+            "spread",
+        )
+        .unwrap();
+        assert!((spread.coord_touch_concentration() - 0.25).abs() < 1e-12);
+        // mixed case sits strictly between
+        let d = tiny();
+        let s = d.coord_touch_concentration();
+        assert!(s > 1.0 / 4.0 - 1e-12 && s < 1.0, "s = {s}");
     }
 
     #[test]

@@ -6,13 +6,46 @@ pub mod libsvm;
 pub mod synthetic;
 
 pub use dataset::Dataset;
-pub use synthetic::{paper_dataset, small_dense, PaperDataset, SyntheticSpec};
+pub use synthetic::{paper_dataset, small_dense, zipf_scenario, PaperDataset, SyntheticSpec};
 
 use std::sync::Arc;
 
 /// Resolve a dataset by name: a real LibSVM file under `data/` if present
 /// (e.g. `data/rcv1`), else the synthetic stand-in at the given scale.
+///
+/// Contended-workload scenarios are first-class names (DESIGN.md §6):
+/// `zipf:<s>` is an rcv1-shaped synthetic whose feature popularity follows
+/// a power law of exponent `s` (e.g. `zipf:1.2`), and
+/// `zipf:<s>:<n>:<d>:<nnz>` pins the shape explicitly (`scale` ignored).
 pub fn resolve(name: &str, scale: f64, seed: u64) -> Result<Arc<Dataset>, String> {
+    if let Some(rest) = name.strip_prefix("zipf:") {
+        let parts: Vec<&str> = rest.split(':').collect();
+        let s: f64 = parts[0]
+            .parse()
+            .map_err(|_| format!("zipf dataset '{name}': bad exponent '{}'", parts[0]))?;
+        if s < 0.0 || !s.is_finite() {
+            return Err(format!("zipf dataset '{name}': exponent must be finite and >= 0"));
+        }
+        return match parts.len() {
+            1 => Ok(Arc::new(zipf_scenario(s, scale, seed))),
+            4 => {
+                let dims: Vec<usize> = parts[1..]
+                    .iter()
+                    .map(|t| t.parse().map_err(|_| format!("zipf dataset '{name}': bad size '{t}'")))
+                    .collect::<Result<_, _>>()?;
+                let (n, d, nnz) = (dims[0], dims[1], dims[2]);
+                if n == 0 || d == 0 || nnz == 0 || nnz > d {
+                    return Err(format!("zipf dataset '{name}': need n,d >= 1 and 1 <= nnz <= d"));
+                }
+                let spec = SyntheticSpec::new(&format!("zipf{s}-{n}x{d}"), n, d, nnz, seed)
+                    .with_zipf(s);
+                Ok(Arc::new(spec.generate()))
+            }
+            _ => Err(format!(
+                "zipf dataset '{name}': want zipf:<s> or zipf:<s>:<n>:<d>:<nnz>"
+            )),
+        };
+    }
     let which = match name {
         "rcv1" => Some(PaperDataset::Rcv1),
         "real-sim" | "realsim" => Some(PaperDataset::RealSim),
@@ -51,5 +84,19 @@ mod tests {
     #[test]
     fn resolve_unknown_errors() {
         assert!(resolve("no-such-dataset", 1.0, 1).is_err());
+    }
+
+    #[test]
+    fn resolve_zipf_scenarios() {
+        let ds = resolve("zipf:1.2", 0.02, 1).unwrap();
+        assert!(ds.name.starts_with("zipf1.2@"));
+        let pinned = resolve("zipf:0.9:300:5000:12", 1.0, 1).unwrap();
+        assert_eq!((pinned.n(), pinned.dim), (300, 5000));
+        // steeper exponent ⇒ hotter head, visible in the concentration stat
+        let flat = resolve("zipf:0.0:300:5000:12", 1.0, 1).unwrap();
+        assert!(pinned.coord_touch_concentration() > flat.coord_touch_concentration());
+        for bad in ["zipf:", "zipf:-1", "zipf:1.0:10", "zipf:1.0:0:5:2", "zipf:1.0:9:5:6"] {
+            assert!(resolve(bad, 1.0, 1).is_err(), "{bad} should be rejected");
+        }
     }
 }

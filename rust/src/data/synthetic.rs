@@ -7,6 +7,16 @@
 //! mixture (head features much hotter than tail) mimics the Zipfian token
 //! distribution of the real text corpora, which matters for the async
 //! schemes: hot coordinates are where lock-free updates collide.
+//!
+//! For contention work the two-tier mixture is too blunt: the collision
+//! rate of a lock-free write set is driven by the full shape of the
+//! feature-popularity tail, not just its head mass. `SyntheticSpec`
+//! therefore carries an optional **power-law axis** (`with_zipf`): feature
+//! j is drawn with probability ∝ 1/(j+1)^s, the classic Zipf form whose
+//! exponent s sweeps continuously from uniform (s = 0) to brutally
+//! head-heavy (s ≥ 1.5). The resulting `Dataset::coord_touch_concentration`
+//! is monotone in s, which is exactly the knob the contention calibration
+//! (`repro calibrate --contention`, DESIGN.md §6) sweeps.
 
 use super::dataset::Dataset;
 use crate::util::rng::Pcg32;
@@ -21,8 +31,12 @@ pub struct SyntheticSpec {
     pub avg_nnz: usize,
     /// Probability that a label is flipped after the planted rule.
     pub label_noise: f64,
-    /// Fraction of nnz drawn from the hot head (√d features).
+    /// Fraction of nnz drawn from the hot head (√d features). Ignored when
+    /// `zipf_exponent` is set — the power law then fixes the head mass.
     pub head_mass: f64,
+    /// Power-law feature popularity: feature j drawn ∝ 1/(j+1)^s. `None`
+    /// keeps the legacy two-tier head/tail mixture.
+    pub zipf_exponent: Option<f64>,
     pub seed: u64,
 }
 
@@ -35,7 +49,33 @@ impl SyntheticSpec {
             avg_nnz,
             label_noise: 0.05,
             head_mass: 0.5,
+            zipf_exponent: None,
             seed,
+        }
+    }
+
+    /// Switch feature popularity to a pure power law with exponent `s ≥ 0`
+    /// (0 = uniform). Exponents much above ~2 make distinct-coordinate rows
+    /// expensive to draw on small dims; the generator falls back to rank
+    /// order to stay O(nnz)-ish and deterministic.
+    pub fn with_zipf(mut self, s: f64) -> Self {
+        assert!(s >= 0.0 && s.is_finite(), "zipf exponent must be finite and >= 0");
+        self.zipf_exponent = Some(s);
+        self
+    }
+
+    /// Mass of the top-√d features under this spec's popularity law — the
+    /// diagnostic matching the two-tier `head_mass` knob.
+    pub fn head_mass_of(&self) -> f64 {
+        let head = ((self.dim as f64).sqrt().ceil() as usize).clamp(1, self.dim);
+        match self.zipf_exponent {
+            None => self.head_mass + (1.0 - self.head_mass) * head as f64 / self.dim as f64,
+            Some(s) => {
+                let w = |j: usize| 1.0 / ((j + 1) as f64).powf(s);
+                let head_w: f64 = (0..head).map(w).sum();
+                let total_w: f64 = (0..self.dim).map(w).sum();
+                head_w / total_w
+            }
         }
     }
 
@@ -57,6 +97,17 @@ impl SyntheticSpec {
             })
             .collect();
 
+        // power-law mode: cumulative weights once, inverse-CDF per draw
+        let zipf_cum: Option<Vec<f64>> = self.zipf_exponent.map(|s| {
+            let mut acc = 0.0f64;
+            (0..self.dim)
+                .map(|j| {
+                    acc += 1.0 / ((j + 1) as f64).powf(s);
+                    acc
+                })
+                .collect()
+        });
+
         let mut rows = Vec::with_capacity(self.n);
         let mut labels = Vec::with_capacity(self.n);
         let mut scratch: Vec<u32> = Vec::new();
@@ -66,11 +117,29 @@ impl SyntheticSpec {
             let hi = (self.avg_nnz * 3 / 2).max(lo + 1).min(self.dim);
             let k = lo + rng.below(hi - lo + 1);
             scratch.clear();
+            let mut attempts = 0usize;
             while scratch.len() < k {
-                let j = if rng.uniform() < self.head_mass {
-                    rng.below(head) as u32
-                } else {
-                    rng.below(self.dim) as u32
+                // a steep power law on a small dim makes distinct draws
+                // rejection-heavy; past the attempt budget, fill the rest
+                // deterministically with the hottest unused ranks
+                attempts += 1;
+                if attempts > 200 * k {
+                    let mut j = 0u32;
+                    while scratch.len() < k {
+                        if let Err(pos) = scratch.binary_search(&j) {
+                            scratch.insert(pos, j);
+                        }
+                        j += 1;
+                    }
+                    break;
+                }
+                let j = match &zipf_cum {
+                    Some(cum) => {
+                        let u = rng.uniform() * cum[self.dim - 1];
+                        (cum.partition_point(|&c| c < u).min(self.dim - 1)) as u32
+                    }
+                    None if rng.uniform() < self.head_mass => rng.below(head) as u32,
+                    None => rng.below(self.dim) as u32,
                 };
                 // insertion keeping sorted-unique; k is small (≲ 1000)
                 match scratch.binary_search(&j) {
@@ -154,6 +223,21 @@ pub fn paper_dataset(which: PaperDataset, scale: f64, seed: u64) -> Dataset {
     SyntheticSpec::new(&name, n, d, nnz, seed).generate()
 }
 
+/// Zipfian contended-update scenario (DESIGN.md §6): rcv1-shaped sizes at
+/// `scale` with power-law feature popularity of exponent `s`. This is the
+/// workload the contention calibration and the `BENCH_contention.json`
+/// smoke run on — hot-head collisions are the point, not an artifact.
+pub fn zipf_scenario(s: f64, scale: f64, seed: u64) -> Dataset {
+    assert!(scale > 0.0 && scale <= 1.0);
+    let (n, d, nnz) = PaperDataset::Rcv1.stats();
+    let n = ((n as f64 * scale) as usize).max(64);
+    let d = ((d as f64 * scale) as usize).max(16);
+    let nnz = nnz.min(d);
+    SyntheticSpec::new(&format!("zipf{s}@{scale}"), n, d, nnz, seed)
+        .with_zipf(s)
+        .generate()
+}
+
 /// Small dense dataset (every feature present in every row) for unit tests
 /// and the XLA dense-path e2e driver — its dim must match the AOT manifest.
 pub fn small_dense(n: usize, dim: usize, seed: u64) -> Dataset {
@@ -219,6 +303,67 @@ mod tests {
         assert_eq!(ds.dim, (47_236.0f64 * 0.05) as usize);
         let avg = ds.nnz() as f64 / ds.n() as f64;
         assert!((37.0..=111.0).contains(&avg), "avg {avg}");
+    }
+
+    #[test]
+    fn zipf_generator_matches_spec_and_is_deterministic() {
+        let spec = SyntheticSpec::new("z", 400, 1000, 20, 7).with_zipf(1.1);
+        let a = spec.generate();
+        assert_eq!(a.n(), 400);
+        assert_eq!(a.dim, 1000);
+        let avg = a.avg_nnz();
+        assert!((10.0..=30.0).contains(&avg), "avg nnz {avg}");
+        assert!((a.max_row_sq_norm() - 1.0).abs() < 1e-4);
+        let b = SyntheticSpec::new("z", 400, 1000, 20, 7).with_zipf(1.1).generate();
+        assert_eq!(a.values, b.values);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn zipf_exponent_raises_touch_concentration_monotonically() {
+        // the contention model's skew axis: steeper exponent ⇒ hotter head
+        let conc = |s: f64| {
+            SyntheticSpec::new("z", 600, 2000, 15, 7)
+                .with_zipf(s)
+                .generate()
+                .coord_touch_concentration()
+        };
+        let uniform = conc(0.0);
+        let mild = conc(0.8);
+        let steep = conc(1.6);
+        assert!(uniform < mild && mild < steep, "{uniform} !< {mild} !< {steep}");
+        // s = 0 is near the uniform floor 1/d (row-size jitter keeps it loose)
+        assert!(uniform < 5.0 / 2000.0, "uniform concentration {uniform}");
+        // the steep head concentrates two orders of magnitude harder
+        assert!(steep > 20.0 * uniform, "steep {steep} vs uniform {uniform}");
+    }
+
+    #[test]
+    fn zipf_head_mass_diagnostic_tracks_exponent() {
+        let spec = |s| SyntheticSpec::new("z", 100, 10_000, 10, 3).with_zipf(s);
+        assert!(spec(0.0).head_mass_of() < 0.05); // √d/d = 1%ish
+        let hm = spec(1.2).head_mass_of();
+        assert!(hm > 0.4, "s=1.2 head mass {hm}");
+        assert!(spec(1.2).head_mass_of() < spec(1.8).head_mass_of());
+    }
+
+    #[test]
+    fn zipf_steep_exponent_still_generates_valid_rows() {
+        // steep law on a tiny dim exercises the deterministic fallback fill
+        let ds = SyntheticSpec::new("z", 50, 12, 8, 9).with_zipf(3.0).generate();
+        assert_eq!(ds.n(), 50);
+        for i in 0..ds.n() {
+            assert!(ds.row(i).nnz() >= 1);
+        }
+        assert!((ds.max_row_sq_norm() - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn zipf_scenario_shapes_like_rcv1() {
+        let ds = zipf_scenario(1.1, 0.02, 5);
+        assert_eq!(ds.n(), (20_242.0f64 * 0.02) as usize);
+        assert_eq!(ds.dim, (47_236.0f64 * 0.02) as usize);
+        assert!(ds.name.starts_with("zipf1.1@"));
     }
 
     #[test]

@@ -27,7 +27,16 @@
 //! the cost model the paper's rcv1/real-sim/news20 corpora (density
 //! 0.02–2%) are actually measured under.
 //!
-//! Quickstart (sparse fast path):
+//! Sparse runs additionally carry **sampled contention telemetry**
+//! ([`coordinator::telemetry`]): lock-free write sets on text-shaped data
+//! collide on the Zipfian head features, and the measured collision rates
+//! calibrate the simulator's per-nnz contention model
+//! ([`simcore::SparseContention`]) via `repro calibrate --contention`.
+//! The architecture document for all of this is `DESIGN.md` at the repo
+//! root (§6 for contention, §2 for the simulator and dataset stand-ins).
+//!
+//! Quickstart (sparse fast path; `no_run` — resolves and trains a
+//! dataset):
 //! ```no_run
 //! use asysvrg::{config::{RunConfig, Storage}, coordinator, data, objective::Objective};
 //! let ds = data::resolve("rcv1", 0.05, 42).unwrap();
@@ -35,7 +44,14 @@
 //! let cfg = RunConfig { storage: Storage::Sparse, ..Default::default() };
 //! let r = coordinator::run(&obj, &cfg, f64::NEG_INFINITY);
 //! println!("final loss {:.6} after {} O(nnz) updates", r.final_loss(), r.total_updates);
+//! if let Some(c) = r.contention {
+//!     println!("collision rate {:.4} on {} sampled writes", c.collision_rate, c.sampled_writes);
+//! }
 //! ```
+//!
+//! A runnable (doctested) example of the telemetry types lives in
+//! [`coordinator::telemetry`]; the contention model's shape is documented
+//! and tested in [`simcore::cost`].
 
 pub mod bench;
 pub mod cli;

@@ -97,6 +97,36 @@ impl AtomicF32Vec {
         }
     }
 
+    /// `update_cas` that also reports how many compare-exchanges failed
+    /// before one stuck — each retry is a write-write collision on this
+    /// coordinate, the raw signal the contention telemetry samples
+    /// (`coordinator::telemetry`, DESIGN.md §6).
+    #[inline]
+    pub fn update_cas_counted(&self, i: usize, f: impl Fn(f32) -> f32) -> (f32, u32) {
+        let cell = &self.data[i];
+        let mut cur = cell.load(Ordering::Relaxed);
+        let mut retries = 0u32;
+        loop {
+            let next = f(f32::from_bits(cur));
+            match cell.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return (next, retries),
+                Err(seen) => {
+                    // compare_exchange_weak may fail spuriously with
+                    // seen == cur; only a changed value is a collision
+                    if seen != cur {
+                        retries = retries.saturating_add(1);
+                    }
+                    cur = seen;
+                }
+            }
+        }
+    }
+
     /// Bulk unlocked snapshot — coordinates may have mixed ages.
     /// (zip, not indexing: saves a bounds check per element on the hot path)
     pub fn read_into(&self, out: &mut [f32]) {
@@ -176,6 +206,36 @@ mod tests {
             t.join().unwrap();
         }
         // CAS adds are linearizable: no lost updates even on 1 core.
+        assert_eq!(v.get(0), 40_000.0);
+    }
+
+    #[test]
+    fn update_cas_counted_matches_update_cas() {
+        let v = AtomicF32Vec::from_slice(&[2.0]);
+        let (got, retries) = v.update_cas_counted(0, |u| u * 3.0);
+        assert_eq!(got, 6.0);
+        assert_eq!(v.get(0), 6.0);
+        // single-threaded: no concurrent writer, so no counted collisions
+        assert_eq!(retries, 0);
+    }
+
+    #[test]
+    fn update_cas_counted_exact_under_contention() {
+        let v = Arc::new(AtomicF32Vec::new(1));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let v = v.clone();
+                std::thread::spawn(move || {
+                    let mut retries = 0u64;
+                    for _ in 0..10_000 {
+                        retries += v.update_cas_counted(0, |u| u + 1.0).1 as u64;
+                    }
+                    retries
+                })
+            })
+            .collect();
+        let _total_retries: u64 = threads.into_iter().map(|t| t.join().unwrap()).sum();
+        // linearizable regardless of how many retries were needed
         assert_eq!(v.get(0), 40_000.0);
     }
 

@@ -9,7 +9,9 @@
 //! * `fig1-speedup`      — Figure 1 left column
 //! * `fig1-convergence`  — Figure 1 right column
 //! * `theory`            — Theorem 1/2 rate table for the run constants
-//! * `calibrate`         — measure this host's simulator cost model
+//! * `calibrate`         — measure this host's simulator cost model; with
+//!   `--contention`, fit the sparse collision model from real contended
+//!   runs on a Zipfian workload (DESIGN.md §6)
 //! * `e2e`               — XLA-backed dense end-to-end training driver
 
 use asysvrg::bench::{self, report, BenchEnv};
@@ -46,7 +48,7 @@ fn top_usage() -> String {
      \x20 fig1-convergence   regenerate Figure 1 right column\n\
      \x20 theory             Theorem 1/2 contraction factors\n\
      \x20 ablation           sweep eta / M / read-model / cores / storage / epoch\n\
-     \x20 calibrate          measure simulator cost model on this host\n\
+     \x20 calibrate          measure cost model; --contention fits the sparse collision model\n\
      \x20 e2e                XLA-backed dense end-to-end training\n\n\
      `repro <subcommand> --help` for options."
         .to_string()
@@ -126,7 +128,11 @@ fn cmd_datasets(args: &[String]) -> Result<(), String> {
 fn cmd_run(args: &[String]) -> Result<(), String> {
     let cmd = env_opts(
         Command::new("run", "run one experiment")
-            .opt("dataset", "rcv1", "rcv1|real-sim|news20|<libsvm path>")
+            .opt(
+                "dataset",
+                "rcv1",
+                "rcv1|real-sim|news20|zipf:<s>[:<n>:<d>:<nnz>]|<libsvm path>",
+            )
             .opt("algo", "asysvrg", "asysvrg|hogwild")
             .opt("scheme", "inconsistent", "consistent|inconsistent|unlock|seqlock|atomic-cas")
             .opt("threads", "10", "worker threads / simulated cores")
@@ -316,8 +322,8 @@ fn cmd_ablation(args: &[String]) -> Result<(), String> {
         .opt("epochs", "25", "epoch budget per point")
         .opt(
             "which",
-            "eta,m,read-model,cores,storage,epoch",
-            "comma list of sweeps: eta|m|read-model|cores|storage|epoch",
+            "eta,m,read-model,cores,storage,epoch,contention",
+            "comma list of sweeps: eta|m|read-model|cores|storage|epoch|contention",
         );
     let m = cmd.parse(args)?;
     let ds = data::resolve(m.str("dataset"), m.f64("scale")?, m.u64("seed")?)?;
@@ -353,6 +359,10 @@ fn cmd_ablation(args: &[String]) -> Result<(), String> {
                 "epoch pass: dense per-thread reduction vs sparse accumulators",
                 ablation::sweep_epoch_pass(&obj, fstar, threads, epochs),
             ),
+            "contention" => (
+                "sparse write contention: flat factor vs calibrated collision model",
+                ablation::sweep_contention(&obj, fstar, threads, epochs),
+            ),
             o => return Err(format!("unknown sweep '{o}'")),
         };
         print!("{}", ablation::render(title, &pts));
@@ -364,7 +374,19 @@ fn cmd_ablation(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_calibrate(_args: &[String]) -> Result<(), String> {
+fn cmd_calibrate(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("calibrate", "measure simulator cost model on this host")
+        .flag(
+            "contention",
+            "also run the contended sparse calibration: real threaded runs on a \
+             Zipfian workload, collision telemetry, and a (kappa, collision_ns) fit",
+        )
+        .opt("threads", "1,2,4,8", "thread counts for --contention (must start at 1)")
+        .opt("zipf", "1.1", "Zipf exponent of the --contention calibration workload")
+        .opt("scale", "0.05", "synthetic scale of the calibration workload")
+        .opt("iters", "60000", "total inner updates per --contention point")
+        .opt("seed", "42", "seed");
+    let m = cmd.parse(args)?;
     println!("measuring per-op costs on this host ...");
     let c = CostModel::calibrate();
     println!("read_coord_ns   = {:.3}", c.read_coord_ns);
@@ -377,6 +399,37 @@ fn cmd_calibrate(_args: &[String]) -> Result<(), String> {
         "frozen default_host(): read {:.3} write {:.3} sparse {:.3} dense {:.3} lock {:.1}",
         d.read_coord_ns, d.write_coord_ns, d.sparse_nnz_ns, d.dense_coord_ns, d.lock_ns
     );
+    if !m.flag("contention") {
+        println!(
+            "frozen contention model: kappa {:.4} collision_ns {:.2} (run with --contention to refit)",
+            d.contention.kappa, d.contention.collision_ns
+        );
+        return Ok(());
+    }
+    let threads = m.usize_list("threads")?;
+    if threads.first() != Some(&1) {
+        return Err("--threads must start at 1 (the uncontended anchor)".into());
+    }
+    let zipf = m.f64("zipf")?;
+    let ds = data::resolve(&format!("zipf:{zipf}"), m.f64("scale")?, m.u64("seed")?)?;
+    println!("\ncontended sparse calibration on {}", ds.describe());
+    let obj = Objective::paper(ds);
+    let rep = bench::contention::calibrate_contention(
+        &obj,
+        &threads,
+        m.usize("iters")?,
+        m.u64("seed")?,
+        &c,
+        0.3,
+    );
+    print!("{}", rep.render());
+    println!(
+        "to pin these coefficients, set CostModel.contention = SparseContention {{ kappa: {:.4}, collision_ns: {:.2} }}",
+        rep.fitted.kappa, rep.fitted.collision_ns
+    );
+    let path = report::write_json("calibration_contention", &rep.to_json())
+        .map_err(|e| e.to_string())?;
+    println!("json -> {}", path.display());
     Ok(())
 }
 

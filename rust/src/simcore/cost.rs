@@ -12,8 +12,122 @@
 //! `bw(p) = 1 + bw_penalty·(p−1)` models shared memory-bandwidth saturation
 //! — the factor that caps real multicore speedups well below p. Lock *wait*
 //! is not a parameter: it emerges from the simulated FIFO mutex.
+//!
+//! **Sparse write contention** (DESIGN.md §6) is NOT billed with the dense
+//! flat factor any more: lock-free sparse write sets collide on the hot
+//! Zipfian head, so the expected penalty depends on thread count, density
+//! and skew. [`SparseContention`] carries the two calibrated coefficients
+//! (κ, collision_ns) of the per-nnz collision model
+//!
+//! ```text
+//! rate(p, S, nnz̄) = 1 − (1 − S)^{κ·(p−1)·nnz̄}
+//! sparse update   = nnz·(write_coord_ns·bw(p)·cas + rate·collision_ns)
+//! ```
+//!
+//! where S = Σ_j f_j² is the dataset's feature-touch concentration
+//! (`data::Dataset::coord_touch_concentration`). The coefficients are
+//! fitted from REAL contended runs by `repro calibrate --contention`
+//! (`bench::contention`), which measures collision rates with the sampled
+//! telemetry of `coordinator::telemetry`.
 
+use crate::util::json::Json;
 use crate::util::Stopwatch;
+
+/// The calibrated per-nnz sparse write-contention model (module docs and
+/// DESIGN.md §6).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SparseContention {
+    /// Window coefficient κ: the effective fraction of a concurrent
+    /// update's coordinate touches that can land inside one of our writes'
+    /// vulnerability windows. Fitted from measured collision rates.
+    pub kappa: f64,
+    /// Extra nanoseconds billed per colliding coordinate write (cache-line
+    /// ping-pong + retry arithmetic). Fitted from measured slowdowns.
+    pub collision_ns: f64,
+}
+
+impl SparseContention {
+    /// Coefficients shipped with the frozen host model: fitted once on this
+    /// repo's reference calibration (see `repro calibrate --contention`)
+    /// and kept bit-stable so simulated tables reproduce exactly.
+    pub fn default_host() -> Self {
+        SparseContention { kappa: 0.25, collision_ns: 8.0 }
+    }
+
+    /// Predicted collision probability for one coordinate write when
+    /// `threads` lock-free inner loops run over a dataset with touch
+    /// concentration `overlap` (= Σ f_j²) and `avg_nnz` nonzeros per row:
+    /// `1 − (1 − S)^{κ·(p−1)·nnz̄}`. Monotone non-decreasing in all three
+    /// arguments; exactly 0 at one thread; always < 1.
+    pub fn collision_rate(&self, threads: usize, overlap: f64, avg_nnz: f64) -> f64 {
+        if threads <= 1 || overlap <= 0.0 || avg_nnz <= 0.0 {
+            return 0.0;
+        }
+        let s = overlap.min(1.0 - 1e-12);
+        let expo = self.kappa * (threads - 1) as f64 * avg_nnz;
+        // (1-s)^expo underflows to exactly 0.0 for expo ≳ 745/-ln(1-s);
+        // clamp so the "always < 1" contract survives extreme regimes
+        (1.0 - (1.0 - s).powf(expo)).min(1.0 - 1e-12)
+    }
+
+    /// Fit (κ, collision_ns) from measured contended runs by two
+    /// through-origin least squares:
+    ///
+    /// 1. linearize the rate model to −ln(1−rate) = κ·x with
+    ///    x = (p−1)·nnz̄·(−ln(1−S)) and regress over the p > 1 samples;
+    /// 2. with κ fixed, regress the measured extra per-update nanoseconds
+    ///    on the modeled expected collisions per update nnz̄·rate(p).
+    ///
+    /// Degenerate inputs (no multi-thread samples, zero rates) fall back to
+    /// the frozen defaults rather than NaN.
+    pub fn fit(samples: &[ContentionSample]) -> SparseContention {
+        let dflt = Self::default_host();
+        let (mut sxy, mut sxx) = (0.0f64, 0.0f64);
+        for smp in samples.iter().filter(|s| s.threads > 1 && s.overlap > 0.0) {
+            let s = smp.overlap.min(1.0 - 1e-12);
+            let x = (smp.threads - 1) as f64 * smp.avg_nnz * -(1.0 - s).ln();
+            let y = -(1.0 - smp.collision_rate.clamp(0.0, 1.0 - 1e-9)).ln();
+            sxy += x * y;
+            sxx += x * x;
+        }
+        let kappa = if sxx > 0.0 && sxy > 0.0 { (sxy / sxx).clamp(1e-4, 8.0) } else { dflt.kappa };
+        let half = SparseContention { kappa, collision_ns: dflt.collision_ns };
+        let (mut sxy, mut sxx) = (0.0f64, 0.0f64);
+        for smp in samples.iter().filter(|s| s.threads > 1) {
+            let x = smp.avg_nnz * half.collision_rate(smp.threads, smp.overlap, smp.avg_nnz);
+            let y = smp.extra_ns_per_update.max(0.0);
+            sxy += x * y;
+            sxx += x * x;
+        }
+        let collision_ns =
+            if sxx > 0.0 { (sxy / sxx).clamp(0.0, 500.0) } else { dflt.collision_ns };
+        SparseContention { kappa, collision_ns }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kappa", Json::Num(self.kappa)),
+            ("collision_ns", Json::Num(self.collision_ns)),
+        ])
+    }
+}
+
+/// One observation for [`SparseContention::fit`], produced by a real
+/// contended sparse run (`bench::contention::measure_point`).
+#[derive(Clone, Copy, Debug)]
+pub struct ContentionSample {
+    pub threads: usize,
+    /// Dataset touch concentration Σ f_j².
+    pub overlap: f64,
+    pub avg_nnz: f64,
+    /// Telemetry collision rate per sampled coordinate write.
+    pub collision_rate: f64,
+    /// Measured per-update time at `threads` minus the *modeled
+    /// uncontended* cost at the same thread count (bandwidth growth
+    /// already excluded, oversubscription already divided out) — the
+    /// slowdown only the collision term can explain.
+    pub extra_ns_per_update: f64,
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
@@ -29,6 +143,9 @@ pub struct CostModel {
     pub write_contention: f64,
     /// Per-extra-core slowdown of dense streaming ops (shared bandwidth).
     pub bw_penalty: f64,
+    /// Calibrated per-nnz sparse write-contention model (DESIGN.md §6);
+    /// replaces the flat `write_contention` factor on the sparse path.
+    pub contention: SparseContention,
 }
 
 impl CostModel {
@@ -47,6 +164,7 @@ impl CostModel {
             cas_factor: 3.0,
             write_contention: 0.15,
             bw_penalty: 0.05,
+            contention: SparseContention::default_host(),
         }
     }
 
@@ -174,14 +292,39 @@ impl CostModel {
         nnz as f64 * (self.sparse_nnz_ns + self.dense_coord_ns)
     }
 
-    /// Duration of the sparse update phase: an nnz-sized scatter under the
-    /// same contention/CAS factors as the dense update.
+    /// Duration of the sparse update phase under the LEGACY flat model: an
+    /// nnz-sized scatter with the dense per-writer factor. Kept for the
+    /// `ablation --which contention` axis; the engine default is
+    /// `sparse_update_cost_contended` (DESIGN.md §6).
     #[inline]
     pub fn sparse_update_cost(&self, nnz: usize, p: usize, writers: usize, cas: bool) -> f64 {
         let base = nnz as f64 * self.write_coord_ns * self.bw(p);
         let contention = 1.0 + self.write_contention * writers.saturating_sub(1) as f64;
         let cas = if cas { self.cas_factor } else { 1.0 };
         base * contention * cas
+    }
+
+    /// Duration of the sparse update phase under the calibrated collision
+    /// model: every write pays the base per-coordinate store (at p-core
+    /// bandwidth, × CAS factor) plus the expected collision penalty
+    /// `rate(writers, S, nnz̄)·collision_ns`. `writers` is the number of
+    /// lock-free concurrent inner loops — pass 1 for the locking schemes
+    /// (a serialized iteration cannot collide) and p otherwise; `overlap`
+    /// is the dataset's `coord_touch_concentration`.
+    #[inline]
+    pub fn sparse_update_cost_contended(
+        &self,
+        nnz: usize,
+        p: usize,
+        writers: usize,
+        cas: bool,
+        overlap: f64,
+        avg_nnz: f64,
+    ) -> f64 {
+        let casf = if cas { self.cas_factor } else { 1.0 };
+        let rate = self.contention.collision_rate(writers, overlap, avg_nnz);
+        nnz as f64
+            * (self.write_coord_ns * self.bw(p) * casf + rate * self.contention.collision_ns)
     }
 
     /// Full-gradient epoch phase: p threads each process `rows` rows of
@@ -292,5 +435,121 @@ mod tests {
         assert!(c.lock_ns > 0.0);
         // contention knobs preserved from defaults
         assert_eq!(c.bw_penalty, CostModel::default_host().bw_penalty);
+        assert_eq!(c.contention, SparseContention::default_host());
+    }
+
+    // ------------------------------------------------- contention model
+
+    #[test]
+    fn collision_rate_monotone_and_bounded() {
+        let m = SparseContention::default_host();
+        // floors: one thread, zero overlap, empty rows
+        assert_eq!(m.collision_rate(1, 0.5, 50.0), 0.0);
+        assert_eq!(m.collision_rate(8, 0.0, 50.0), 0.0);
+        assert_eq!(m.collision_rate(8, 0.5, 0.0), 0.0);
+        // monotone non-decreasing in threads, skew (overlap) and density
+        let mut prev = 0.0;
+        for p in [1usize, 2, 4, 8, 16] {
+            let r = m.collision_rate(p, 0.01, 40.0);
+            assert!(r >= prev, "p={p}: {r} < {prev}");
+            prev = r;
+        }
+        let mut prev = 0.0;
+        for overlap in [1e-5, 1e-4, 1e-3, 1e-2, 0.1, 0.5, 1.0] {
+            let r = m.collision_rate(4, overlap, 40.0);
+            assert!(r >= prev, "S={overlap}: {r} < {prev}");
+            prev = r;
+        }
+        let mut prev = 0.0;
+        for nnz in [1.0, 10.0, 100.0, 1000.0] {
+            let r = m.collision_rate(4, 1e-3, nnz);
+            assert!(r >= prev, "nnz={nnz}: {r} < {prev}");
+            prev = r;
+        }
+        // bounded below 1 even in absurd regimes
+        assert!(m.collision_rate(64, 1.0, 1e6) < 1.0);
+    }
+
+    #[test]
+    fn fit_recovers_known_coefficients() {
+        // forward-generate noise-free samples from a known model and check
+        // the two-stage least squares recovers it
+        // the grid stays away from rate ≈ 1 saturation: a clamped rate is
+        // information-free and would bias the linearized regression
+        let truth = SparseContention { kappa: 0.4, collision_ns: 20.0 };
+        let samples: Vec<ContentionSample> = [2usize, 4, 8]
+            .iter()
+            .flat_map(|&p| {
+                [(0.002f64, 30.0f64), (0.01, 50.0), (0.03, 20.0)].iter().map(move |&(s, nnz)| {
+                    let rate = truth.collision_rate(p, s, nnz);
+                    ContentionSample {
+                        threads: p,
+                        overlap: s,
+                        avg_nnz: nnz,
+                        collision_rate: rate,
+                        extra_ns_per_update: nnz * rate * truth.collision_ns,
+                    }
+                })
+            })
+            .collect();
+        let fitted = SparseContention::fit(&samples);
+        assert!((fitted.kappa - truth.kappa).abs() < 0.05 * truth.kappa, "kappa {fitted:?}");
+        assert!(
+            (fitted.collision_ns - truth.collision_ns).abs() < 0.05 * truth.collision_ns,
+            "collision_ns {fitted:?}"
+        );
+    }
+
+    #[test]
+    fn fit_degenerate_inputs_fall_back_to_defaults() {
+        let dflt = SparseContention::default_host();
+        assert_eq!(SparseContention::fit(&[]), dflt);
+        // single-thread-only samples carry no contention signal
+        let only_p1 = [ContentionSample {
+            threads: 1,
+            overlap: 0.1,
+            avg_nnz: 10.0,
+            collision_rate: 0.0,
+            extra_ns_per_update: 0.0,
+        }];
+        assert_eq!(SparseContention::fit(&only_p1), dflt);
+        // all-zero measured rates: kappa falls back, collision_ns fits 0
+        let zero_rates = [ContentionSample {
+            threads: 4,
+            overlap: 0.1,
+            avg_nnz: 10.0,
+            collision_rate: 0.0,
+            extra_ns_per_update: 5.0,
+        }];
+        let f = SparseContention::fit(&zero_rates);
+        assert_eq!(f.kappa, dflt.kappa);
+        assert!(f.collision_ns.is_finite());
+    }
+
+    #[test]
+    fn contended_cost_replaces_flat_factor_sanely() {
+        let c = CostModel::default_host();
+        let (nnz, p) = (50usize, 8usize);
+        // serialized writers (locking schemes) pay no collision penalty:
+        // identical to the flat model at writers = 1 (up to fp association)
+        let serialized = c.sparse_update_cost_contended(nnz, p, 1, false, 0.05, 50.0);
+        let flat1 = c.sparse_update_cost(nnz, p, 1, false);
+        assert!((serialized - flat1).abs() < 1e-9 * flat1, "{serialized} vs {flat1}");
+        // lock-free writers pay more on a skewed dataset…
+        let contended = c.sparse_update_cost_contended(nnz, p, p, false, 0.05, 50.0);
+        assert!(contended > c.sparse_update_cost_contended(nnz, p, 1, false, 0.05, 50.0));
+        // …monotone in skew…
+        assert!(
+            c.sparse_update_cost_contended(nnz, p, p, false, 0.2, 50.0) > contended,
+            "hotter head must bill more"
+        );
+        // …and the CAS factor still applies multiplicatively to the base
+        assert!(
+            c.sparse_update_cost_contended(nnz, p, p, true, 0.05, 50.0) > contended
+        );
+        // a uniform ultra-sparse dataset (S ≈ 1/d) stays near the base cost
+        let quiet = c.sparse_update_cost_contended(nnz, p, p, false, 1.0 / 1_000_000.0, 50.0);
+        let base = nnz as f64 * c.write_coord_ns * c.bw(p);
+        assert!(quiet < base * 1.05, "quiet {quiet} vs base {base}");
     }
 }

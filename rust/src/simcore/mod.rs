@@ -7,12 +7,19 @@
 //! from the calibrated `CostModel`, and convergence is the genuine float
 //! trajectory under the simulated interleaving.
 
+//!
+//! Sparse updates are billed for write contention by the calibrated
+//! per-nnz collision model ([`SparseContention`], DESIGN.md §6) rather
+//! than the dense flat factor; `repro calibrate --contention` fits its
+//! coefficients from measured collision telemetry.
+
 pub mod cost;
 pub mod engine;
 
-pub use cost::CostModel;
+pub use cost::{ContentionSample, CostModel, SparseContention};
 pub use engine::{
-    simulate_inner, simulate_inner_opts, EngineOpts, ReadModel, SimPhaseResult, SimTask,
+    simulate_inner, simulate_inner_opts, ContentionBilling, EngineOpts, ReadModel, SimPhaseResult,
+    SimTask,
 };
 
 use crate::config::{Algo, RunConfig, Storage};
