@@ -40,6 +40,12 @@ fn main() {
     print!("{}", ablation::render("core speeds (Assumption 3)", &cs));
     assert!(cs.iter().all(|p| !p.diverged), "hetero cores broke convergence");
 
+    let pl = ablation::sweep_pool(&obj, fstar, 10, epochs);
+    print!("{}", ablation::render("worker runtime (spawn vs persistent pool)", &pl));
+    // same seeds, same arithmetic: only the boundary billing may move
+    assert_eq!(pl[0].final_gap, pl[1].final_gap, "pool axis must not change arithmetic");
+    assert!(pl[1].sim_seconds < pl[0].sim_seconds, "pool must beat per-epoch spawn");
+
     let ep = ablation::sweep_epoch_pass(&obj, fstar, 10, epochs);
     print!("{}", ablation::render("epoch pass (dense vs sparse reduction)", &ep));
     // the axis changes billing only, never arithmetic: identical gaps

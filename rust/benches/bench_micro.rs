@@ -6,15 +6,20 @@
 //! Output feeds the CostModel calibration and EXPERIMENTS.md §Perf.
 
 use asysvrg::bench::{contention, report};
-use asysvrg::config::Scheme;
+use asysvrg::config::{RunConfig, Scheme, Storage};
 use asysvrg::coordinator::delay::DelayStats;
 use asysvrg::coordinator::epoch::{parallel_full_grad, parallel_full_grad_sparse};
 use asysvrg::coordinator::shared::SharedParams;
-use asysvrg::coordinator::sparse::{run_inner_loop_sparse, LazyState};
+use asysvrg::coordinator::sparse::{
+    run_inner_loop_sparse, run_inner_loop_sparse_telemetry, LazyState,
+};
+use asysvrg::coordinator::telemetry::ContentionStats;
 use asysvrg::coordinator::worker::{run_inner_loop, WorkerScratch};
+use asysvrg::coordinator::{run_asysvrg, SvrgOption};
 use asysvrg::data::synthetic::SyntheticSpec;
 use asysvrg::linalg::{dense, AtomicF32Vec};
 use asysvrg::objective::Objective;
+use asysvrg::runtime::pool::WorkerPool;
 use asysvrg::simcore::{simulate_inner, CostModel, SimTask};
 use asysvrg::util::json::Json;
 use asysvrg::util::rng::Pcg32;
@@ -62,7 +67,7 @@ fn main() {
         Scheme::Seqlock,
         Scheme::AtomicCas,
     ] {
-        let shared = SharedParams::new(&vec![0.0f32; d], scheme);
+        let shared = SharedParams::zeros(d, scheme);
         time_per(&format!("apply_step [{}]", scheme.name()), d, 500, || {
             shared.apply_step(&v, 1e-3);
         });
@@ -225,6 +230,170 @@ fn main() {
         ("pass", Json::Bool(epoch_speedup >= 5.0)),
     ]);
     match report::write_json("BENCH_epoch_pass", &epoch_json) {
+        Ok(path) => println!("json -> {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+
+    // ------------------------------------------------------------------
+    // persistent worker runtime (DESIGN.md §8):
+    //  (a) phase dispatch on the condvar-parked pool vs a fresh
+    //      thread::scope spawn of the same width — the per-epoch churn
+    //      the runtime removed. CI gates >= 5x at p = 4.
+    //  (b) end-to-end sparse epochs/sec on a short-epoch wide-d config
+    //      (the regime where the boundary dominates): the pool-backed
+    //      driver vs a faithful reconstruction of the legacy per-epoch
+    //      path (scoped spawns, SharedParams/LazyState rebuilt per
+    //      epoch). CI gates an improvement (> 1x).
+    // ------------------------------------------------------------------
+    println!("\n== worker runtime: pool wake vs thread spawn (p = 4) ==");
+    let p = 4usize;
+    let pool = WorkerPool::new(p);
+    let phases = 300usize;
+    // warm both dispatchers (first wake/first spawn pay one-time costs)
+    for _ in 0..16 {
+        pool.run_phase(p, |a| {
+            std::hint::black_box(a);
+        });
+        std::thread::scope(|s| {
+            for a in 0..p {
+                s.spawn(move || {
+                    std::hint::black_box(a);
+                });
+            }
+        });
+    }
+    let mut spawn_best = f64::INFINITY;
+    let mut wake_best = f64::INFINITY;
+    for _ in 0..3 {
+        let sw = Stopwatch::start();
+        for _ in 0..phases {
+            std::thread::scope(|s| {
+                for a in 0..p {
+                    s.spawn(move || {
+                        std::hint::black_box(a);
+                    });
+                }
+            });
+        }
+        spawn_best = spawn_best.min(sw.seconds());
+        let sw = Stopwatch::start();
+        for _ in 0..phases {
+            pool.run_phase(p, |a| {
+                std::hint::black_box(a);
+            });
+        }
+        wake_best = wake_best.min(sw.seconds());
+    }
+    let spawn_us = spawn_best * 1e6 / phases as f64;
+    let wake_us = wake_best * 1e6 / phases as f64;
+    let dispatch_speedup = spawn_us / wake_us;
+    println!("phase dispatch [spawn  ] {spawn_us:>10.2} µs/phase  (thread::scope, {p} threads)");
+    println!("phase dispatch [pool   ] {wake_us:>10.2} µs/phase  ({} wakes + inline share)", p - 1);
+    println!("dispatch speedup: {dispatch_speedup:.1}x (target: >= 5x at p >= 4)");
+
+    println!("\n== worker runtime: end-to-end sparse epochs/sec (short epochs, d >> nnz) ==");
+    let ds = SyntheticSpec::new("bench-pool", 400, 30_000, 10, 42).generate();
+    let e2e_density = ds.density();
+    let obj = Objective::paper(Arc::new(ds));
+    let cfg = RunConfig {
+        threads: p,
+        scheme: Scheme::Unlock,
+        eta: 0.1,
+        epochs: 30,
+        target_gap: 0.0, // run every epoch: throughput, not convergence
+        storage: Storage::Sparse,
+        seed: 42,
+        ..Default::default()
+    };
+    // faithful legacy loop: everything the old driver rebuilt per epoch,
+    // including the per-epoch scoped spawns, telemetry, and the loss eval
+    let legacy_run = |cfg: &RunConfig| {
+        let d = obj.dim();
+        let m = cfg.inner_iters(obj.n());
+        let telem = ContentionStats::new(d);
+        let mut w = vec![0.0f32; d];
+        let mut last_loss = 0.0f64;
+        for t in 0..cfg.epochs {
+            let eg = parallel_full_grad_sparse(&obj, &w, cfg.threads);
+            let shared = SharedParams::new(&w, cfg.scheme);
+            let lazy = LazyState::new(&w, &eg.mu, obj.lam, cfg.eta, shared.clock());
+            let delays = DelayStats::new();
+            std::thread::scope(|s| {
+                for a in 0..cfg.threads {
+                    let (shared, lazy, eg, delays, obj, tm) =
+                        (&shared, &lazy, &eg, &delays, &obj, Some(&telem));
+                    s.spawn(move || {
+                        let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
+                        run_inner_loop_sparse_telemetry(
+                            obj, shared, lazy, eg, m, &mut rng, delays, tm,
+                        );
+                    });
+                }
+            });
+            lazy.flush(&shared);
+            w = shared.snapshot();
+            last_loss = obj.loss(&w);
+        }
+        last_loss
+    };
+    // warmup one run on each side, then min-of-3 wall times
+    legacy_run(&cfg);
+    run_asysvrg(&obj, &cfg, SvrgOption::CurrentIterate, f64::NEG_INFINITY);
+    let mut legacy_best = f64::INFINITY;
+    let mut pooled_best = f64::INFINITY;
+    for _ in 0..3 {
+        let sw = Stopwatch::start();
+        let l1 = legacy_run(&cfg);
+        legacy_best = legacy_best.min(sw.seconds());
+        let sw = Stopwatch::start();
+        let r = run_asysvrg(&obj, &cfg, SvrgOption::CurrentIterate, f64::NEG_INFINITY);
+        pooled_best = pooled_best.min(sw.seconds());
+        // same algorithm: the two paths land on comparable losses
+        assert!(
+            (r.final_loss() - l1).abs() < 0.2 * (1.0 + l1.abs()),
+            "pool {} vs legacy {} diverged",
+            r.final_loss(),
+            l1
+        );
+    }
+    let legacy_eps = cfg.epochs as f64 / legacy_best;
+    let pooled_eps = cfg.epochs as f64 / pooled_best;
+    let e2e_speedup = pooled_eps / legacy_eps;
+    println!(
+        "sparse epochs/sec [legacy spawn] {legacy_eps:>9.1}  (d={}, density {:.3}%)",
+        obj.dim(),
+        e2e_density * 100.0
+    );
+    println!("sparse epochs/sec [pool       ] {pooled_eps:>9.1}");
+    println!("end-to-end epoch-rate speedup: {e2e_speedup:.2}x (target: > 1x)");
+    let dispatch_pass = dispatch_speedup >= 5.0;
+    let e2e_pass = e2e_speedup > 1.0;
+    println!(
+        "pool smoke: dispatch {} | end-to-end {} => {}",
+        if dispatch_pass { "ok" } else { "FAIL" },
+        if e2e_pass { "ok" } else { "FAIL" },
+        if dispatch_pass && e2e_pass { "PASS" } else { "FAIL" },
+    );
+    let pool_json = Json::obj(vec![
+        ("bench", Json::Str("worker_runtime_pool".into())),
+        ("threads", Json::Num(p as f64)),
+        ("dispatch_phases", Json::Num(phases as f64)),
+        ("spawn_us_per_phase", Json::Num(spawn_us)),
+        ("pool_us_per_phase", Json::Num(wake_us)),
+        ("dispatch_speedup", Json::Num(dispatch_speedup)),
+        ("dispatch_target", Json::Num(5.0)),
+        ("e2e_n", Json::Num(obj.n() as f64)),
+        ("e2e_d", Json::Num(obj.dim() as f64)),
+        ("e2e_density", Json::Num(e2e_density)),
+        ("e2e_epochs", Json::Num(cfg.epochs as f64)),
+        ("legacy_epochs_per_sec", Json::Num(legacy_eps)),
+        ("pool_epochs_per_sec", Json::Num(pooled_eps)),
+        ("e2e_speedup", Json::Num(e2e_speedup)),
+        ("dispatch_pass", Json::Bool(dispatch_pass)),
+        ("e2e_pass", Json::Bool(e2e_pass)),
+        ("pass", Json::Bool(dispatch_pass && e2e_pass)),
+    ]);
+    match report::write_json("BENCH_pool", &pool_json) {
         Ok(path) => println!("json -> {}", path.display()),
         Err(e) => eprintln!("could not write bench json: {e}"),
     }

@@ -16,7 +16,7 @@ use crate::coordinator::epoch::parallel_full_grad;
 use crate::objective::Objective;
 use crate::simcore::{
     full_grad_phase_ns, simulate_inner_opts, ContentionBilling, CostModel, EngineOpts, ReadModel,
-    SimTask,
+    RuntimeDispatch, SimTask,
 };
 use crate::util::json::Json;
 
@@ -79,12 +79,14 @@ pub fn run_config_epoch(
     let mut sim_ns = 0.0;
     let mut max_delay = 0u64;
     let mut diverged = false;
-    // shape-only quantity: price the epoch barrier once, charge per epoch
+    // shape-only quantities: price the epoch barrier and the boundary
+    // setup (spawn-vs-wake, per opts.runtime) once, charge per epoch
     let epoch_phase_ns = full_grad_phase_ns(obj, cfg.threads, costs, epoch_storage);
+    let epoch_setup_ns = costs.epoch_setup_cost(cfg.threads, d, 2, opts.runtime);
 
     for t in 0..cfg.epochs {
         let eg = parallel_full_grad(obj, &w, 1);
-        sim_ns += epoch_phase_ns;
+        sim_ns += epoch_phase_ns + epoch_setup_ns;
         let task = SimTask::Svrg { u0: &w.clone(), eg: &eg };
         let mut u = w.clone();
         let r = simulate_inner_opts(
@@ -301,6 +303,39 @@ pub fn sweep_contention(
     .collect()
 }
 
+/// Worker-runtime ablation (DESIGN.md §8): the identical sparse schedule
+/// billed under per-epoch thread spawn + O(d) state rebuild vs the
+/// persistent pool's condvar wakes + in-place reset. Same seeds, same
+/// trajectory — the sim-seconds gap is exactly the boundary overhead the
+/// persistent runtime removed, and it widens as epochs shorten or d grows.
+pub fn sweep_pool(
+    obj: &Objective,
+    fstar: f64,
+    threads: usize,
+    epochs: usize,
+) -> Vec<AblationPoint> {
+    let costs = CostModel::default_host();
+    [
+        ("spawn-per-epoch", RuntimeDispatch::Spawn),
+        ("persistent-pool", RuntimeDispatch::Pool),
+    ]
+    .into_iter()
+    .map(|(label, runtime)| {
+        let cfg = RunConfig {
+            threads,
+            scheme: Scheme::Unlock,
+            eta: 0.4,
+            epochs,
+            target_gap: 0.0,
+            storage: Storage::Sparse,
+            ..Default::default()
+        };
+        let opts = EngineOpts { storage: Storage::Sparse, runtime, ..Default::default() };
+        run_config(obj, &cfg, &costs, &opts, fstar, label)
+    })
+    .collect()
+}
+
 /// Uniform vs skewed core speeds (Assumption 3 stress).
 pub fn sweep_core_speeds(
     obj: &Objective,
@@ -461,6 +496,28 @@ mod tests {
             "collision model {} !> flat {}",
             model.sim_seconds,
             flat.sim_seconds
+        );
+    }
+
+    #[test]
+    fn pool_sweep_isolates_boundary_cost() {
+        // short epochs on a wide problem: the regime where the boundary
+        // dominates and the persistent runtime pays off. fstar = 0 is fine —
+        // the sweep asserts relative billing, not convergence.
+        let ds = SyntheticSpec::new("pool-abl", 64, 20_000, 6, 31).generate();
+        let o = Objective::new(Arc::new(ds), 1e-2, LossKind::Logistic);
+        let pts = sweep_pool(&o, 0.0, 4, 3);
+        assert_eq!(pts.len(), 2);
+        let (spawn, pool) = (&pts[0], &pts[1]);
+        // identical trajectory (same seeds, same arithmetic)…
+        assert_eq!(spawn.final_gap, pool.final_gap);
+        assert_eq!(spawn.max_delay, pool.max_delay);
+        // …only the boundary billing moves, in the pool's favor
+        assert!(
+            pool.sim_seconds < spawn.sim_seconds,
+            "pool billing {} !< spawn billing {}",
+            pool.sim_seconds,
+            spawn.sim_seconds
         );
     }
 

@@ -10,18 +10,31 @@
 //!
 //! Cost accounting follows §5.1: one epoch = 3 effective passes (1 for the
 //! full gradient + m_factor for the inner loop when m_factor = 2).
+//!
+//! **Runtime (DESIGN.md §8).** All parallel phases — the epoch pass and
+//! the inner loop — dispatch through one persistent [`WorkerPool`] per run
+//! instead of `thread::scope` spawns, and every piece of epoch state
+//! (`SharedParams`, `LazyState`, the epoch-gradient buffers, per-worker
+//! scratch) is allocated once and reset in place, so the epoch boundary
+//! performs no O(p) thread churn and no O(d) allocation. The Option-2
+//! dense average is reduced inside the phase (fill per-worker Σû slots →
+//! pool barrier → column-parallel merge) rather than as a serial O(p·d)
+//! pass after the join.
 
 use std::sync::Arc;
 
 use crate::config::{RunConfig, Storage};
 use crate::coordinator::delay::DelayStats;
-use crate::coordinator::epoch::parallel_full_grad_storage;
+use crate::coordinator::epoch::{
+    parallel_full_grad_pool, partition, EpochGradient, EpochWorkspace,
+};
 use crate::coordinator::monitor::{HistoryPoint, RunResult};
 use crate::coordinator::shared::SharedParams;
 use crate::coordinator::sparse::{run_inner_loop_sparse_telemetry, LazyState};
 use crate::coordinator::telemetry::ContentionStats;
 use crate::coordinator::worker::{run_inner_loop, run_inner_loop_averaging, WorkerScratch};
 use crate::objective::Objective;
+use crate::runtime::pool::{split_mut, WorkerPool, WorkerSlots};
 use crate::util::rng::Pcg32;
 use crate::util::Stopwatch;
 
@@ -32,9 +45,32 @@ pub enum SvrgOption {
     Average,
 }
 
+/// Per-worker dense inner-loop state, slot-owned for the whole run: the
+/// read/direction scratch plus (Option 2 only) the Σû accumulator.
+struct DenseWorker {
+    scratch: WorkerScratch,
+    acc: Vec<f32>,
+}
+
 /// Run AsySVRG. `fstar` (if known) enables early stopping at
 /// `cfg.target_gap`; pass f64::NEG_INFINITY to always run all epochs.
+/// Creates a persistent worker pool for the run; use [`run_asysvrg_on`] to
+/// share one pool across several runs.
 pub fn run_asysvrg(
+    obj: &Objective,
+    cfg: &RunConfig,
+    option: SvrgOption,
+    fstar: f64,
+) -> RunResult {
+    let pool = WorkerPool::new(cfg.threads);
+    run_asysvrg_on(&pool, obj, cfg, option, fstar)
+}
+
+/// `run_asysvrg` on a caller-provided persistent pool (`pool.threads()`
+/// must cover `cfg.threads`). Phases never spawn threads; epoch state is
+/// allocated once up front and reset in place each epoch (DESIGN.md §8).
+pub fn run_asysvrg_on(
+    pool: &WorkerPool,
     obj: &Objective,
     cfg: &RunConfig,
     option: SvrgOption,
@@ -43,6 +79,7 @@ pub fn run_asysvrg(
     let d = obj.dim();
     let n = obj.n();
     let p = cfg.threads;
+    assert!(p >= 1 && p <= pool.threads(), "cfg.threads {p} exceeds pool {}", pool.threads());
     let m_per_thread = cfg.inner_iters(n);
     let passes_per_epoch = 1.0 + cfg.m_factor;
     let delays = DelayStats::new();
@@ -50,138 +87,158 @@ pub fn run_asysvrg(
 
     // sampled collision telemetry rides along on every sparse run (the
     // dense loop has no per-coordinate write set to observe); aggregated
-    // across epochs and surfaced in RunResult::contention
+    // across epochs — with a per-epoch mark for the drift series — and
+    // surfaced in RunResult::contention
     let telem = (cfg.storage == Storage::Sparse).then(|| ContentionStats::new(d));
 
     let mut w = vec![0.0f32; d];
     let mut result = RunResult::default();
     let mut passes = 0.0f64;
 
+    // ---- persistent epoch state: allocated once, reset in place per epoch
+    // (the shared clock runs monotonically across epochs; `store` rewrites
+    // the iterate without touching it)
+    let shared = SharedParams::zeros(d, cfg.scheme);
+    let mut ws = EpochWorkspace::new(p, d, n, cfg.storage);
+    let mut eg = EpochGradient { mu: vec![0.0f32; d], residuals: vec![0.0f32; n] };
+    // sparse path: lazy clocks + closed-form constants (+ Σû for Option 2)
+    let mut lazy = (cfg.storage == Storage::Sparse).then(|| match option {
+        SvrgOption::CurrentIterate => LazyState::new(&w, &eg.mu, obj.lam, cfg.eta, 0),
+        SvrgOption::Average => LazyState::new_averaging(&w, &eg.mu, obj.lam, cfg.eta, 0),
+    });
+    // dense path: per-worker cache-line-padded slots (scratch + Σû acc;
+    // the accumulator and the shared average buffer are empty off Option 2)
+    let avg_len = if option == SvrgOption::Average { d } else { 0 };
+    let dense_slots = (cfg.storage == Storage::Dense).then(|| {
+        WorkerSlots::new(p, |_| DenseWorker {
+            scratch: WorkerScratch::new(d),
+            acc: vec![0.0f32; avg_len],
+        })
+    });
+    let mut avg = vec![0.0f32; avg_len];
+
     for t in 0..cfg.epochs {
-        // (1) parallel full gradient at w_t — sparse accumulators under
-        // storage=sparse (touched-entry barrier merge, no per-thread
-        // d-vector), the dense reduction otherwise
-        let eg = parallel_full_grad_storage(obj, &w, p, cfg.storage);
-        // (2) asynchronous inner loop
-        let shared = SharedParams::new(&w, cfg.scheme);
+        // (1) parallel full gradient at w_t on the pool — sparse
+        // accumulators under storage=sparse (touched-entry barrier merge,
+        // no per-thread d-vector), the dense reduction otherwise
+        parallel_full_grad_pool(obj, &w, pool, &mut ws, &mut eg);
+        // (2) asynchronous inner loop at u = w_t
+        shared.store(&w);
         let clock_before = shared.clock();
-        let avg: Option<Vec<f32>> = match option {
-            _ if cfg.storage == Storage::Sparse => {
+        let seed = cfg.seed ^ (t as u64) << 20;
+        let mut have_avg = false;
+        match (&mut lazy, option) {
+            (Some(state), _) => {
                 // O(nnz) fast path: lazy dense corrections, flushed at the
                 // epoch boundary so the snapshot matches the dense iterate.
                 // Option 2 additionally keeps Σû via closed-form geometric
                 // partial sums on the same per-coordinate clocks, so the
                 // Reddi-style averaged iterate costs no O(d) per update.
-                let lazy = match option {
-                    SvrgOption::CurrentIterate => {
-                        LazyState::new(&w, &eg.mu, obj.lam, cfg.eta, shared.clock())
-                    }
-                    SvrgOption::Average => {
-                        LazyState::new_averaging(&w, &eg.mu, obj.lam, cfg.eta, shared.clock())
-                    }
-                };
-                std::thread::scope(|s| {
-                    for a in 0..p {
-                        let shared = &shared;
-                        let eg = &eg;
-                        let lazy = &lazy;
-                        let delays = &delays;
-                        let tm = telem.as_ref();
-                        s.spawn(move || {
-                            let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
-                            run_inner_loop_sparse_telemetry(
-                                obj,
-                                shared,
-                                lazy,
-                                eg,
-                                m_per_thread,
-                                &mut rng,
-                                delays,
-                                tm,
-                            );
-                        });
-                    }
+                // The previous epoch's flush already advanced every lazy
+                // clock to `clock_before`, so this reset is allocation-free
+                // and O(touched).
+                state.reset(&w, &eg.mu, obj.lam, cfg.eta, clock_before);
+                let state: &LazyState = state;
+                let tm = telem.as_ref();
+                let (shared, eg, delays) = (&shared, &eg, &delays);
+                pool.run_phase(p, |a| {
+                    let mut rng = Pcg32::for_thread(seed, a);
+                    run_inner_loop_sparse_telemetry(
+                        obj,
+                        shared,
+                        state,
+                        eg,
+                        m_per_thread,
+                        &mut rng,
+                        delays,
+                        tm,
+                    );
                 });
-                lazy.flush(&shared);
-                debug_assert!(lazy.fully_drained(shared.clock()));
-                // None for Option 1 (state has no sums), Some for Option 2
-                lazy.average_iterate(&shared)
+                state.flush_pool(shared, pool, p);
+                debug_assert!(state.fully_drained(shared.clock()));
+                // no-op for Option 1 (state has no sums); for Option 2 the
+                // take also zeroes the sums, pre-arming the next reset
+                have_avg = state.take_average_into(shared, &mut avg);
             }
-            SvrgOption::CurrentIterate => {
-                std::thread::scope(|s| {
-                    for a in 0..p {
-                        let shared = &shared;
-                        let eg = &eg;
-                        let w = &w;
-                        let delays = &delays;
-                        s.spawn(move || {
-                            let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
-                            let mut scratch = WorkerScratch::new(d);
-                            run_inner_loop(
-                                obj,
-                                shared,
-                                w,
-                                eg,
-                                cfg.eta,
-                                m_per_thread,
-                                &mut rng,
-                                &mut scratch,
-                                delays,
-                            );
-                        });
-                    }
+            (None, SvrgOption::CurrentIterate) => {
+                let slots = dense_slots.as_ref().expect("dense slots exist on the dense path");
+                let (shared, eg, w, delays) = (&shared, &eg, &w, &delays);
+                pool.run_phase(p, |a| {
+                    let mut rng = Pcg32::for_thread(seed, a);
+                    let mut slot = slots.write(a);
+                    run_inner_loop(
+                        obj,
+                        shared,
+                        w,
+                        eg,
+                        cfg.eta,
+                        m_per_thread,
+                        &mut rng,
+                        &mut slot.scratch,
+                        delays,
+                    );
                 });
-                None
             }
-            SvrgOption::Average => {
-                let mut accs: Vec<Vec<f32>> = Vec::with_capacity(p);
-                std::thread::scope(|s| {
-                    let mut handles = Vec::with_capacity(p);
-                    for a in 0..p {
-                        let shared = &shared;
-                        let eg = &eg;
-                        let w = &w;
-                        let delays = &delays;
-                        handles.push(s.spawn(move || {
-                            let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
-                            let mut scratch = WorkerScratch::new(d);
-                            let mut acc = vec![0.0f32; d];
-                            run_inner_loop_averaging(
-                                obj,
-                                shared,
-                                w,
-                                eg,
-                                cfg.eta,
-                                m_per_thread,
-                                &mut rng,
-                                &mut scratch,
-                                delays,
-                                &mut acc,
-                            );
-                            acc
-                        }));
-                    }
-                    for h in handles {
-                        accs.push(h.join().expect("svrg worker panicked"));
-                    }
-                });
+            (None, SvrgOption::Average) => {
+                // inner loop + Σû reduction in ONE phase: each worker fills
+                // its slot accumulator, waits at the pool barrier, then
+                // merges a disjoint coordinate column of the average —
+                // the former serial O(p·d) post-join reduction, folded
+                // into the phase's own barrier.
+                let slots = dense_slots.as_ref().expect("dense slots exist on the dense path");
+                let ranges = partition(d, p);
+                let parts = split_mut(&mut avg, &ranges);
+                let bar = pool.barrier();
                 let total = (p * m_per_thread) as f32;
-                let mut avg = vec![0.0f32; d];
-                for acc in &accs {
-                    for j in 0..d {
-                        avg[j] += acc[j] / total;
+                let (shared, eg, w, delays) = (&shared, &eg, &w, &delays);
+                pool.run_phase(p, |a| {
+                    {
+                        let mut slot = slots.write(a);
+                        let DenseWorker { scratch, acc } = &mut *slot;
+                        acc.fill(0.0);
+                        let mut rng = Pcg32::for_thread(seed, a);
+                        run_inner_loop_averaging(
+                            obj,
+                            shared,
+                            w,
+                            eg,
+                            cfg.eta,
+                            m_per_thread,
+                            &mut rng,
+                            scratch,
+                            delays,
+                            acc,
+                        );
+                    } // drop the write guard before the rendezvous
+                    bar.wait();
+                    // column-parallel merge, same per-coordinate order
+                    // (a = 0..p) as the old serial reduction
+                    let guards: Vec<_> = (0..p).map(|b| slots.read(b)).collect();
+                    let mut out = parts[a].lock().expect("poisoned avg part");
+                    let offset = ranges[a].start;
+                    for j in ranges[a].clone() {
+                        let mut s = 0.0f32;
+                        for g in &guards {
+                            s += g.acc[j] / total;
+                        }
+                        out[j - offset] = s;
                     }
-                }
-                Some(avg)
+                });
+                have_avg = true;
             }
-        };
+        }
         let updates_this_epoch = shared.clock() - clock_before;
         // (3) w_{t+1}
-        w = match (option, avg) {
-            (SvrgOption::CurrentIterate, _) => shared.snapshot(),
-            (SvrgOption::Average, Some(a)) => a,
-            (SvrgOption::Average, None) => unreachable!(),
-        };
+        match option {
+            SvrgOption::CurrentIterate => shared.snapshot_into_pool(&mut w, pool, p),
+            SvrgOption::Average => {
+                debug_assert!(have_avg, "Option 2 must produce an average");
+                w.copy_from_slice(&avg);
+            }
+        }
+        if let Some(tm) = &telem {
+            tm.mark_epoch();
+        }
 
         passes += passes_per_epoch;
         let loss = obj.loss(&w);
@@ -441,10 +498,13 @@ mod tests {
         assert!(dense.contention.is_none(), "dense loop has no write-set telemetry");
         let sp = RunConfig { storage: crate::config::Storage::Sparse, ..base };
         let sparse = run(&obj, &sp, f64::NEG_INFINITY);
-        let c = sparse.contention.expect("sparse run collects telemetry");
+        let c = sparse.contention.clone().expect("sparse run collects telemetry");
         assert!(c.sampled_updates > 0);
         assert!(c.sampled_writes > 0);
         assert!((0.0..=1.0).contains(&c.collision_rate));
+        // per-epoch drift series: one rate per epoch actually run
+        assert_eq!(c.epoch_collision_rates.len(), sparse.epochs_run);
+        assert!(c.epoch_collision_rates.iter().all(|r| (0.0..=1.0).contains(r)));
         assert!(sparse.to_json().get("contention").is_some());
     }
 

@@ -117,6 +117,20 @@ impl SparseGradAccum {
             }
         }
     }
+
+    /// Current table capacity (slots). Stable across `clear` — the
+    /// persistent-runtime reuse invariant the pool epoch pass relies on.
+    pub fn capacity(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Empty the accumulator **keeping its table**: O(capacity) key-marker
+    /// stores (capacity ≈ 2× touched, so O(touched)), zero allocation.
+    /// Values need no clearing — `add` overwrites on first insert.
+    pub fn clear(&mut self) {
+        self.keys.fill(EMPTY_KEY);
+        self.len = 0;
+    }
 }
 
 /// Output of the epoch pass.
@@ -264,6 +278,146 @@ pub fn parallel_full_grad_storage(
     match storage {
         Storage::Dense => parallel_full_grad(obj, w, p),
         Storage::Sparse => parallel_full_grad_sparse(obj, w, p),
+    }
+}
+
+// ---------------------------------------------------------------- pool path
+
+use crate::runtime::pool::{split_mut, WorkerPool, WorkerSlots};
+
+/// Reusable per-run epoch-pass state for the persistent worker runtime
+/// (DESIGN.md §8): the per-worker partials — dense d-vectors or sparse
+/// touched-coordinate accumulators — are allocated once and reused every
+/// epoch, so the epoch boundary performs no O(d) (or O(touched))
+/// allocation at all. Arithmetic is identical to the scoped-spawn passes
+/// above, bit for bit: each coordinate appears at most once per
+/// accumulator (its partial sum is built by `add` in row order, which is
+/// capacity-independent), and the merge adds accumulators in the fixed
+/// order a=0..p — so per-coordinate float arithmetic is unchanged even
+/// though a reused (possibly grown) table's `for_each` *visits*
+/// coordinates in a different slot order than a fresh one would.
+pub struct EpochWorkspace {
+    storage: Storage,
+    p: usize,
+    /// Dense per-worker partials (empty vectors under `Storage::Sparse` or
+    /// at p = 1, where `full_grad_into` needs no partial).
+    dense: WorkerSlots<Vec<f32>>,
+    /// Sparse per-worker accumulators (capacity-keeping `clear` per epoch).
+    sparse: WorkerSlots<SparseGradAccum>,
+}
+
+impl EpochWorkspace {
+    /// Workspace for a d-dimensional problem of n instances on p workers.
+    pub fn new(p: usize, d: usize, n: usize, storage: Storage) -> Self {
+        let ranges = partition(n.max(1), p);
+        let touched_hint = |rows: usize| (rows.saturating_mul(8)).clamp(32, 1 << 16);
+        let dense_partials = storage == Storage::Dense && p > 1;
+        let dense_len = if dense_partials { d } else { 0 };
+        EpochWorkspace {
+            storage,
+            p,
+            dense: WorkerSlots::new(p, |_| vec![0.0f32; dense_len]),
+            sparse: WorkerSlots::new(p, |a| {
+                let cap = if storage == Storage::Sparse {
+                    touched_hint(ranges[a].len())
+                } else {
+                    0
+                };
+                SparseGradAccum::with_capacity(cap)
+            }),
+        }
+    }
+
+    pub fn storage(&self) -> Storage {
+        self.storage
+    }
+}
+
+/// The epoch full-gradient pass on the persistent pool: dispatches the
+/// per-worker shares via `WorkerPool::run_phase` instead of spawning
+/// threads, and writes into the caller's reusable `EpochGradient` instead
+/// of allocating a fresh one. Semantically (and numerically) identical to
+/// `parallel_full_grad_storage(obj, w, ws.p, ws.storage)`.
+pub fn parallel_full_grad_pool(
+    obj: &Objective,
+    w: &[f32],
+    pool: &WorkerPool,
+    ws: &mut EpochWorkspace,
+    eg: &mut EpochGradient,
+) {
+    let n = obj.n();
+    let d = obj.dim();
+    let p = ws.p;
+    assert!(p <= pool.threads(), "workspace wider than the pool");
+    eg.mu.resize(d, 0.0); // no-op after the first epoch
+    match ws.storage {
+        Storage::Dense => {
+            if n == 0 {
+                for (m, &wj) in eg.mu.iter_mut().zip(w.iter()) {
+                    *m = obj.lam * wj;
+                }
+                eg.residuals.clear();
+                return;
+            }
+            if p == 1 {
+                obj.full_grad_into(w, &mut eg.mu, &mut eg.residuals);
+                return;
+            }
+            eg.residuals.resize(n, 0.0);
+            let ranges = partition(n, p);
+            let parts = split_mut(&mut eg.residuals, &ranges);
+            pool.run_phase(p, |a| {
+                let mut acc = ws.dense.write(a);
+                acc.fill(0.0);
+                let mut res = parts[a].lock().expect("poisoned residual part");
+                let offset = ranges[a].start;
+                for i in ranges[a].clone() {
+                    let r = obj.residual(w, i);
+                    res[i - offset] = r;
+                    obj.data.row(i).axpy_into(r, &mut acc);
+                }
+            });
+            // reduce: μ = (1/n)Σ partials + λw — same order as the scoped path
+            eg.mu.fill(0.0);
+            for a in 0..p {
+                let part = ws.dense.get_mut(a);
+                for j in 0..d {
+                    eg.mu[j] += part[j];
+                }
+            }
+            let inv_n = 1.0 / n as f32;
+            for j in 0..d {
+                eg.mu[j] = eg.mu[j] * inv_n + obj.lam * w[j];
+            }
+        }
+        Storage::Sparse => {
+            eg.residuals.resize(n, 0.0);
+            let ranges = partition(n, p);
+            let parts = split_mut(&mut eg.residuals, &ranges);
+            pool.run_phase(p, |a| {
+                let mut acc = ws.sparse.write(a);
+                acc.clear();
+                let mut res = parts[a].lock().expect("poisoned residual part");
+                let offset = ranges[a].start;
+                for i in ranges[a].clone() {
+                    let r = obj.residual(w, i);
+                    res[i - offset] = r;
+                    let row = obj.data.row(i);
+                    for (k, &j) in row.indices.iter().enumerate() {
+                        acc.add(j, r as f64 * row.values[k] as f64);
+                    }
+                }
+            });
+            // merge: μ = λw + (1/n)·Σ touched partials — touched entries only
+            for (m, &wj) in eg.mu.iter_mut().zip(w.iter()) {
+                *m = obj.lam * wj;
+            }
+            let inv_n = if n == 0 { 0.0 } else { 1.0 / n as f64 };
+            for a in 0..p {
+                let mu = &mut eg.mu;
+                ws.sparse.get_mut(a).for_each(|j, v| mu[j as usize] += (v * inv_n) as f32);
+            }
+        }
     }
 }
 
@@ -428,6 +582,81 @@ mod tests {
             assert!(dense.mu.iter().all(|m| m.is_finite()));
             assert_eq!(dense.mu[0], 0.1 * 0.5);
             assert!(dense.residuals.is_empty() && sparse.residuals.is_empty());
+        }
+    }
+
+    #[test]
+    fn accum_clear_keeps_capacity_and_empties() {
+        let mut acc = SparseGradAccum::with_capacity(4);
+        for j in 0..200u32 {
+            acc.add(j, 1.5);
+        }
+        let grown = acc.capacity();
+        assert!(grown > 8, "growth expected");
+        acc.clear();
+        assert_eq!(acc.capacity(), grown, "clear must keep the table");
+        assert!(acc.is_empty());
+        let mut seen = 0;
+        acc.for_each(|_, _| seen += 1);
+        assert_eq!(seen, 0);
+        // refill works and partial sums restart from zero
+        acc.add(3, 2.0);
+        acc.add(3, 2.0);
+        let mut v3 = 0.0;
+        acc.for_each(|j, v| {
+            if j == 3 {
+                v3 = v;
+            }
+        });
+        assert_eq!(v3, 4.0);
+    }
+
+    /// The pool-backed epoch pass is bit-identical to the scoped-spawn
+    /// pass for both storages and every thread count, including reuse of
+    /// one workspace across epochs at different iterates.
+    #[test]
+    fn pool_epoch_pass_matches_scoped_pass_and_reuses_buffers() {
+        let ds = SyntheticSpec::new("pool-ep", 150, 400, 7, 17).generate();
+        let obj = Objective::paper(Arc::new(ds));
+        for storage in [Storage::Dense, Storage::Sparse] {
+            for p in [1usize, 2, 3, 8] {
+                let pool = crate::runtime::pool::WorkerPool::new(p);
+                let mut ws = EpochWorkspace::new(p, obj.dim(), obj.n(), storage);
+                let mut eg = EpochGradient {
+                    mu: vec![0.0; obj.dim()],
+                    residuals: vec![0.0; obj.n()],
+                };
+                let mu_ptr = eg.mu.as_ptr() as usize;
+                let res_ptr = eg.residuals.as_ptr() as usize;
+                // two "epochs" at different iterates, one workspace
+                for round in 0..2 {
+                    let w: Vec<f32> = (0..obj.dim())
+                        .map(|j| ((j % 9) as f32 - 4.0) * 0.02 * (round + 1) as f32)
+                        .collect();
+                    parallel_full_grad_pool(&obj, &w, &pool, &mut ws, &mut eg);
+                    let want = parallel_full_grad_storage(&obj, &w, p, storage);
+                    assert_eq!(eg.residuals, want.residuals, "{storage:?} p={p} r{round}");
+                    assert_eq!(eg.mu, want.mu, "{storage:?} p={p} round {round}");
+                }
+                assert_eq!(eg.mu.as_ptr() as usize, mu_ptr, "mu reallocated");
+                assert_eq!(eg.residuals.as_ptr() as usize, res_ptr, "residuals reallocated");
+            }
+        }
+    }
+
+    /// Pool pass handles the n = 0 edge like the scoped passes do.
+    #[test]
+    fn pool_epoch_pass_empty_dataset() {
+        let ds = crate::data::Dataset::from_rows(Vec::new(), Vec::new(), 8, "empty").unwrap();
+        let obj = Objective::new(Arc::new(ds), 0.1, crate::objective::LossKind::Logistic);
+        let w = vec![0.5f32; 8];
+        for storage in [Storage::Dense, Storage::Sparse] {
+            let pool = crate::runtime::pool::WorkerPool::new(3);
+            let mut ws = EpochWorkspace::new(3, 8, 0, storage);
+            let mut eg = EpochGradient { mu: vec![0.0; 8], residuals: Vec::new() };
+            parallel_full_grad_pool(&obj, &w, &pool, &mut ws, &mut eg);
+            assert!(eg.residuals.is_empty());
+            assert!(eg.mu.iter().all(|m| (*m - 0.05).abs() < 1e-7), "{storage:?}: {:?}", eg.mu);
         }
     }
 

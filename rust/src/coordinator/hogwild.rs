@@ -16,74 +16,94 @@ use crate::coordinator::shared::SharedParams;
 use crate::coordinator::sparse::{run_hogwild_inner_sparse_telemetry, LazyState};
 use crate::coordinator::telemetry::ContentionStats;
 use crate::objective::Objective;
+use crate::runtime::pool::{WorkerPool, WorkerSlots};
 use crate::util::rng::Pcg32;
 use crate::util::Stopwatch;
 
-/// Run Hogwild!. `fstar` enables the §5 stopping rule.
+/// Run Hogwild!. `fstar` enables the §5 stopping rule. Creates a
+/// persistent worker pool for the run; use [`run_hogwild_on`] to share one
+/// pool across runs.
 pub fn run_hogwild(obj: &Objective, cfg: &RunConfig, fstar: f64) -> RunResult {
+    let pool = WorkerPool::new(cfg.threads);
+    run_hogwild_on(&pool, obj, cfg, fstar)
+}
+
+/// `run_hogwild` on a caller-provided persistent pool: epochs dispatch
+/// through `run_phase` (no thread churn) and the lazy ridge-decay state is
+/// reset in place at the running clock instead of rebuilt — γ changes per
+/// epoch, the d-sized state does not (DESIGN.md §8).
+pub fn run_hogwild_on(
+    pool: &WorkerPool,
+    obj: &Objective,
+    cfg: &RunConfig,
+    fstar: f64,
+) -> RunResult {
     let d = obj.dim();
     let n = obj.n();
     let p = cfg.threads;
+    assert!(p >= 1 && p <= pool.threads(), "cfg.threads {p} exceeds pool {}", pool.threads());
     let iters = cfg.hogwild_iters(n);
     let delays = DelayStats::new();
     let sw = Stopwatch::start();
 
     let mut gamma = cfg.eta;
     let mut result = RunResult::default();
-    let shared = SharedParams::new(&vec![0.0f32; d], cfg.scheme);
+    let shared = SharedParams::zeros(d, cfg.scheme);
     let mut passes = 0.0f64;
     // sampled collision telemetry rides along on sparse runs (DESIGN.md §6)
     let telem = (cfg.storage == Storage::Sparse).then(|| ContentionStats::new(d));
+    // persistent per-run state: the lazy decay clocks (sparse) or the
+    // per-worker local read buffers (dense) are allocated once
+    let mut lazy =
+        (cfg.storage == Storage::Sparse).then(|| LazyState::for_hogwild(d, obj.lam, gamma, 0));
+    let local_slots =
+        (cfg.storage == Storage::Dense).then(|| WorkerSlots::new(p, |_| vec![0.0f32; d]));
+    let mut w = vec![0.0f32; d];
 
     for t in 0..cfg.epochs {
-        match cfg.storage {
-            Storage::Sparse => {
+        let seed = cfg.seed ^ (t as u64) << 20;
+        match &mut lazy {
+            Some(state) => {
                 // O(nnz) fast path: the λû ridge decay is applied lazily;
-                // γ changes per epoch, so the lazy state is rebuilt at the
-                // running clock each time
-                let lazy = LazyState::for_hogwild(d, obj.lam, gamma, shared.clock());
-                std::thread::scope(|s| {
-                    for a in 0..p {
-                        let shared = &shared;
-                        let lazy = &lazy;
-                        let delays = &delays;
-                        let tm = telem.as_ref();
-                        s.spawn(move || {
-                            let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
-                            run_hogwild_inner_sparse_telemetry(
-                                obj, shared, lazy, iters, &mut rng, delays, tm,
-                            );
-                        });
-                    }
+                // γ changes per epoch, so the state is re-armed (in place,
+                // O(1) — u₀ = μ̄ = 0 never move) at the running clock
+                state.reset_hogwild(gamma, shared.clock());
+                let state: &LazyState = state;
+                let tm = telem.as_ref();
+                let (shared, delays) = (&shared, &delays);
+                pool.run_phase(p, |a| {
+                    let mut rng = Pcg32::for_thread(seed, a);
+                    run_hogwild_inner_sparse_telemetry(
+                        obj, shared, state, iters, &mut rng, delays, tm,
+                    );
                 });
-                lazy.flush(&shared);
-                debug_assert!(lazy.fully_drained(shared.clock()));
+                state.flush_pool(shared, pool, p);
+                debug_assert!(state.fully_drained(shared.clock()));
             }
-            Storage::Dense => {
-                std::thread::scope(|s| {
-                    for a in 0..p {
-                        let shared = &shared;
-                        let delays = &delays;
-                        s.spawn(move || {
-                            let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
-                            let mut local = vec![0.0f32; d];
-                            for _ in 0..iters {
-                                let i = rng.below(n);
-                                let read_clock = shared.read_into(&mut local);
-                                let r = obj.residual(&local, i);
-                                let apply_clock = shared
-                                    .apply_sgd_step(obj.data.row(i), r, obj.lam, &local, gamma);
-                                delays.record(read_clock, apply_clock);
-                            }
-                        });
+            None => {
+                let slots = local_slots.as_ref().expect("dense slots exist on the dense path");
+                let (shared, delays) = (&shared, &delays);
+                pool.run_phase(p, |a| {
+                    let mut rng = Pcg32::for_thread(seed, a);
+                    let mut local = slots.write(a);
+                    for _ in 0..iters {
+                        let i = rng.below(n);
+                        let read_clock = shared.read_into(&mut local);
+                        let r = obj.residual(&local, i);
+                        let apply_clock =
+                            shared.apply_sgd_step(obj.data.row(i), r, obj.lam, &local, gamma);
+                        delays.record(read_clock, apply_clock);
                     }
                 });
             }
         }
         gamma *= cfg.gamma_decay;
         passes += 1.0; // Hogwild!: one effective pass per epoch (§5.1)
+        if let Some(tm) = &telem {
+            tm.mark_epoch();
+        }
 
-        let w = shared.snapshot();
+        shared.snapshot_into_pool(&mut w, pool, p);
         let loss = obj.loss(&w);
         result.total_updates = shared.clock();
         result.history.push(HistoryPoint {
@@ -100,7 +120,8 @@ pub fn run_hogwild(obj: &Objective, cfg: &RunConfig, fstar: f64) -> RunResult {
         }
     }
 
-    result.final_w = shared.snapshot();
+    shared.snapshot_into_pool(&mut w, pool, p);
+    result.final_w = w;
     result.total_seconds = sw.seconds();
     result.max_delay = delays.max_delay();
     result.mean_delay = delays.mean_delay();

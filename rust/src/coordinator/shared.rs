@@ -44,6 +44,19 @@ impl SharedParams {
         }
     }
 
+    /// All-zeros shared vector — what every driver starts from. Avoids the
+    /// throwaway `vec![0.0; d]` the `new(&zeros)` pattern paid just to
+    /// bit-copy zeros in (ISSUE 5 satellite).
+    pub fn zeros(dim: usize, scheme: Scheme) -> Self {
+        SharedParams {
+            data: AtomicF32Vec::new(dim),
+            lock: Mutex::new(()),
+            version: AtomicU64::new(0),
+            clock: AtomicU64::new(0),
+            scheme,
+        }
+    }
+
     pub fn dim(&self) -> usize {
         self.data.len()
     }
@@ -264,6 +277,36 @@ impl SharedParams {
         self.data.to_vec()
     }
 
+    /// Allocation-free unconditional snapshot into a reusable buffer
+    /// (epoch boundaries: all workers joined, so no discipline needed).
+    pub fn snapshot_into(&self, out: &mut [f32]) {
+        self.data.read_into(out);
+    }
+
+    /// Parallel epoch-boundary snapshot on the persistent worker pool:
+    /// each of `width` phase workers copies a disjoint coordinate range
+    /// (`width` = the run's configured thread count, which may be narrower
+    /// than a shared pool). Same result as `snapshot_into` (a copy is a
+    /// copy); at news20-scale d the copy stops being a serial O(d) tail on
+    /// the epoch boundary.
+    pub fn snapshot_into_pool(
+        &self,
+        out: &mut [f32],
+        pool: &crate::runtime::pool::WorkerPool,
+        width: usize,
+    ) {
+        let p = width.min(pool.threads()).min(out.len()).max(1);
+        if p == 1 {
+            return self.snapshot_into(out);
+        }
+        let ranges = crate::coordinator::epoch::partition(out.len(), p);
+        let parts = crate::runtime::pool::split_mut(out, &ranges);
+        pool.run_phase(p, |a| {
+            let mut slice = parts[a].lock().expect("poisoned snapshot part");
+            self.data.read_range_into(ranges[a].start, &mut slice);
+        });
+    }
+
     /// Unconditional store (epoch boundaries).
     pub fn store(&self, w: &[f32]) {
         self.data.write_from(w);
@@ -408,6 +451,33 @@ mod tests {
             saw_conflict = conflicted;
         });
         assert!(saw_conflict, "observed acquire under a held lock must report a conflict");
+    }
+
+    #[test]
+    fn zeros_matches_new_on_zero_slice() {
+        for scheme in [Scheme::Consistent, Scheme::Unlock, Scheme::AtomicCas] {
+            let a = SharedParams::zeros(5, scheme);
+            let b = SharedParams::new(&[0.0; 5], scheme);
+            assert_eq!(a.snapshot(), b.snapshot(), "{scheme:?}");
+            assert_eq!(a.dim(), 5);
+            assert_eq!(a.clock(), 0);
+            assert_eq!(a.scheme(), scheme);
+        }
+    }
+
+    #[test]
+    fn pool_snapshot_matches_serial_snapshot() {
+        let init: Vec<f32> = (0..97).map(|j| (j as f32).sin()).collect();
+        let p = SharedParams::new(&init, Scheme::Unlock);
+        let pool = crate::runtime::pool::WorkerPool::new(4);
+        let mut buf = vec![0.0f32; 97];
+        p.snapshot_into_pool(&mut buf, &pool, 4);
+        assert_eq!(buf, p.snapshot());
+        // narrow vector: p clamps to len, still exact
+        let tiny = SharedParams::new(&[1.0, 2.0], Scheme::Unlock);
+        let mut tb = vec![0.0f32; 2];
+        tiny.snapshot_into_pool(&mut tb, &pool, 4);
+        assert_eq!(tb, vec![1.0, 2.0]);
     }
 
     #[test]

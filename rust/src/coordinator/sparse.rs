@@ -152,6 +152,63 @@ impl LazyState {
         Self::new(&vec![0.0f32; dim], &vec![0.0f32; dim], lam, gamma, clock_base)
     }
 
+    /// Re-arm this state for the next epoch **in place** — the persistent-
+    /// runtime replacement for rebuilding a fresh `LazyState` (d new
+    /// atomics + 4 d-sized vectors) every epoch (DESIGN.md §8).
+    ///
+    /// The per-coordinate clocks need **no work at all**: they are absolute
+    /// values of the shared clock, which runs monotonically across epochs,
+    /// and the previous epoch's `flush` already advanced every clock to the
+    /// flush instant — which is exactly the next epoch's `clock_base`
+    /// (no updates land between a flush and the next phase start). The
+    /// flush *is* the clock reset; `reset` just asserts the invariant.
+    /// Everything else (u₀, μ̄, the u* fixed points, the Σû accumulators)
+    /// is overwritten in place, so the epoch boundary allocates nothing.
+    pub fn reset(&mut self, u0: &[f32], mu: &[f32], lam: f32, eta: f32, clock_base: u64) {
+        assert_eq!(u0.len(), self.last.len());
+        assert_eq!(mu.len(), self.last.len());
+        debug_assert!(
+            self.fully_drained(clock_base),
+            "LazyState::reset before the previous epoch was flushed"
+        );
+        self.u0.copy_from_slice(u0);
+        self.mu.copy_from_slice(mu);
+        if lam > 0.0 {
+            self.ustar.resize(u0.len(), 0.0); // no-op after the first epoch
+            for j in 0..u0.len() {
+                self.ustar[j] = u0[j] as f64 - mu[j] as f64 / lam as f64;
+            }
+        } else {
+            self.ustar.clear();
+        }
+        self.decay = 1.0 - eta as f64 * lam as f64;
+        self.eta = eta;
+        self.lam = lam;
+        self.clock_base = clock_base;
+        if let Some(sums) = &self.sums {
+            // Option 2 epochs that end via `take_average_into` leave the
+            // sums zeroed already; clearing here keeps reset correct for
+            // callers that only read `average_iterate`.
+            for c in sums {
+                c.store(0.0f64.to_bits(), Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// `reset` for the Hogwild! special case (u₀ = μ̄ = 0 stay untouched;
+    /// only the per-epoch step size γ and the clock base move).
+    pub fn reset_hogwild(&mut self, gamma: f32, clock_base: u64) {
+        debug_assert!(
+            self.fully_drained(clock_base),
+            "LazyState::reset_hogwild before the previous epoch was flushed"
+        );
+        debug_assert!(self.u0.iter().all(|&x| x == 0.0) && self.mu.iter().all(|&x| x == 0.0));
+        self.decay = 1.0 - gamma as f64 * self.lam as f64;
+        self.eta = gamma;
+        self.clock_base = clock_base;
+        // u* = u0 - mu/lam = 0 for every coordinate: nothing to recompute
+    }
+
     pub fn dim(&self) -> usize {
         self.last.len()
     }
@@ -254,6 +311,23 @@ impl LazyState {
         })
     }
 
+    /// Allocation-free `average_iterate`: writes Σû/M into `out` AND zeroes
+    /// each accumulator in the same pass, so the following `reset` has no
+    /// O(d) sum work left. Returns false (out untouched) unless this state
+    /// was built with `new_averaging`. Call after `flush`.
+    pub fn take_average_into(&self, shared: &SharedParams, out: &mut [f32]) -> bool {
+        let Some(sums) = &self.sums else {
+            return false;
+        };
+        debug_assert_eq!(out.len(), sums.len());
+        let total = shared.clock().saturating_sub(self.clock_base);
+        let inv = if total == 0 { 0.0 } else { 1.0 / total as f64 };
+        for (o, c) in out.iter_mut().zip(sums.iter()) {
+            *o = (f64::from_bits(c.swap(0.0f64.to_bits(), Ordering::Relaxed)) * inv) as f32;
+        }
+        true
+    }
+
     /// Post-flush invariant: every per-coordinate clock has been advanced
     /// to `now` — no deferred correction (or Σû tick) is outstanding.
     pub fn fully_drained(&self, now: u64) -> bool {
@@ -266,9 +340,39 @@ impl LazyState {
     /// and — for an averaging state — Σû covers every tick of every
     /// coordinate, so `average_iterate` is complete.
     pub fn flush(&self, shared: &SharedParams) {
+        self.flush_range(shared.clock(), shared.data(), 0, self.last.len());
+    }
+
+    /// Flush on the persistent worker pool: coordinates are split into
+    /// disjoint ranges, one per phase worker (`width` = the run's
+    /// configured thread count, which may be narrower than a shared pool).
+    /// Every per-coordinate flush is independent (atomic clock + plain
+    /// store, workers joined), so the result is bit-identical to the
+    /// serial `flush` — only the O(d) epoch tail stops being
+    /// single-threaded.
+    pub fn flush_pool(
+        &self,
+        shared: &SharedParams,
+        pool: &crate::runtime::pool::WorkerPool,
+        width: usize,
+    ) {
+        let d = self.last.len();
+        let p = width.min(pool.threads()).min(d).max(1);
+        if p == 1 {
+            return self.flush(shared);
+        }
         let now = shared.clock();
         let data = shared.data();
-        for j in 0..self.last.len() {
+        let ranges = crate::coordinator::epoch::partition(d, p);
+        pool.run_phase(p, |a| {
+            let r = ranges[a].clone();
+            self.flush_range(now, data, r.start, r.end);
+        });
+    }
+
+    #[inline]
+    fn flush_range(&self, now: u64, data: &crate::linalg::AtomicF32Vec, lo: usize, hi: usize) {
+        for j in lo..hi {
             let prev = self.last[j].fetch_max(now, Ordering::Relaxed);
             if prev < now {
                 data.set(j, self.advance(j, data.get(j), now - prev));
@@ -889,6 +993,119 @@ mod tests {
         // collisions are clamped 0/1 per write, so the rate is a probability
         assert!(s.collisions <= s.sampled_writes);
         assert_eq!(s.lock_acquires, 0, "unlock takes no locks");
+    }
+
+    /// A reset state replays the next epoch exactly like a freshly built
+    /// one — and reuses every buffer (no reallocation: the pointers of the
+    /// clock array and the u₀/μ̄/u* vectors are stable across epochs).
+    #[test]
+    fn reset_state_matches_fresh_state_and_reallocates_nothing() {
+        let (obj, _) = setup(1e-2);
+        let w0: Vec<f32> = (0..obj.dim()).map(|j| ((j % 5) as f32 - 2.0) * 0.1).collect();
+        let eg0 = parallel_full_grad(&obj, &w0, 1);
+        let eta = 0.2f32;
+
+        // epoch 0 on the reused state (persistent shared clock)
+        let shared = SharedParams::new(&w0, Scheme::Unlock);
+        let mut reused = LazyState::new_averaging(&w0, &eg0.mu, obj.lam, eta, 0);
+        let ptrs_before = (
+            reused.last.as_ptr() as usize,
+            reused.u0.as_ptr() as usize,
+            reused.mu.as_ptr() as usize,
+            reused.ustar.as_ptr() as usize,
+            reused.sums.as_ref().unwrap().as_ptr() as usize,
+        );
+        let mut rng = Pcg32::new(31, 1);
+        let delays = DelayStats::new();
+        run_inner_loop_sparse(&obj, &shared, &reused, &eg0, 50, &mut rng, &delays);
+        reused.flush(&shared);
+        let mut avg = vec![0.0f32; obj.dim()];
+        assert!(reused.take_average_into(&shared, &mut avg));
+
+        // epoch 1: reset in place vs a brand-new state at the same clock
+        let w1 = shared.snapshot();
+        let eg1 = parallel_full_grad(&obj, &w1, 1);
+        let base = shared.clock();
+        reused.reset(&w1, &eg1.mu, obj.lam, eta, base);
+        let ptrs_after = (
+            reused.last.as_ptr() as usize,
+            reused.u0.as_ptr() as usize,
+            reused.mu.as_ptr() as usize,
+            reused.ustar.as_ptr() as usize,
+            reused.sums.as_ref().unwrap().as_ptr() as usize,
+        );
+        assert_eq!(ptrs_before, ptrs_after, "reset must not reallocate any epoch state");
+
+        let fresh = LazyState::new_averaging(&w1, &eg1.mu, obj.lam, eta, base);
+        let run_epoch = |state: &LazyState, shared: &SharedParams| {
+            let mut rng = Pcg32::new(32, 1);
+            let delays = DelayStats::new();
+            run_inner_loop_sparse(&obj, shared, state, &eg1, 50, &mut rng, &delays);
+            state.flush(shared);
+            let mut avg = vec![0.0f32; obj.dim()];
+            assert!(state.take_average_into(shared, &mut avg));
+            (shared.snapshot(), avg)
+        };
+        // same shared start (w1), same clock base, same rng stream
+        let shared_fresh = SharedParams::new(&w1, Scheme::Unlock);
+        // advance the fresh shared clock to the same base so step counts match
+        for _ in 0..base {
+            shared_fresh.bump_clock();
+        }
+        let (w_reused, avg_reused) = run_epoch(&reused, &shared);
+        let (w_fresh, avg_fresh) = run_epoch(&fresh, &shared_fresh);
+        assert_eq!(w_reused, w_fresh, "reset state diverged from fresh state");
+        assert_eq!(avg_reused, avg_fresh, "reset Σû diverged from fresh Σû");
+    }
+
+    /// take_average_into == average_iterate, and it leaves the sums zeroed
+    /// (the in-pass reset the persistent runtime relies on).
+    #[test]
+    fn take_average_matches_average_iterate_and_zeroes_sums() {
+        let (obj, w0) = setup(1e-2);
+        let eg = parallel_full_grad(&obj, &w0, 1);
+        let shared = SharedParams::new(&w0, Scheme::Unlock);
+        let lazy = LazyState::new_averaging(&w0, &eg.mu, obj.lam, 0.2, 0);
+        let mut rng = Pcg32::new(8, 1);
+        let delays = DelayStats::new();
+        run_inner_loop_sparse(&obj, &shared, &lazy, &eg, 40, &mut rng, &delays);
+        lazy.flush(&shared);
+        let want = lazy.average_iterate(&shared).unwrap();
+        let mut got = vec![0.0f32; obj.dim()];
+        assert!(lazy.take_average_into(&shared, &mut got));
+        assert_eq!(got, want);
+        // drained: a second take reads all-zero sums
+        let mut second = vec![1.0f32; obj.dim()];
+        assert!(lazy.take_average_into(&shared, &mut second));
+        assert!(second.iter().all(|&x| x == 0.0));
+        // non-averaging states refuse
+        let plain = LazyState::new(&w0, &eg.mu, obj.lam, 0.2, 0);
+        assert!(!plain.take_average_into(&shared, &mut got));
+    }
+
+    /// Pool flush == serial flush, bit for bit.
+    #[test]
+    fn flush_pool_matches_serial_flush() {
+        let (obj, _) = setup(1e-2);
+        let w0: Vec<f32> = (0..obj.dim()).map(|j| 0.4 + (j % 3) as f32 * 0.1).collect();
+        let eg = parallel_full_grad(&obj, &w0, 1);
+        let run_and_flush = |pool: Option<&crate::runtime::pool::WorkerPool>| {
+            let shared = SharedParams::new(&w0, Scheme::Unlock);
+            let lazy = LazyState::new(&w0, &eg.mu, obj.lam, 0.1, 0);
+            let mut rng = Pcg32::new(9, 1);
+            let delays = DelayStats::new();
+            run_inner_loop_sparse(&obj, &shared, &lazy, &eg, 30, &mut rng, &delays);
+            match pool {
+                Some(p) => lazy.flush_pool(&shared, p, 4),
+                None => lazy.flush(&shared),
+            }
+            assert!(lazy.fully_drained(shared.clock()));
+            shared.snapshot()
+        };
+        let serial = run_and_flush(None);
+        let pool = crate::runtime::pool::WorkerPool::new(4);
+        let pooled = run_and_flush(Some(&pool));
+        assert_eq!(serial, pooled);
     }
 
     /// Sparse Hogwild! single-thread == dense apply_sgd_step single-thread.

@@ -51,6 +51,7 @@
 //! ```
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::util::json::Json;
 
@@ -78,6 +79,19 @@ pub struct ContentionStats {
     touches: AtomicU64,
     head_touches: AtomicU64,
     touch_hist: [AtomicU64; TOUCH_BUCKETS],
+    /// Per-epoch collision-rate series (ROADMAP "per-epoch contention
+    /// drift"): drivers call [`mark_epoch`](Self::mark_epoch) at each epoch
+    /// boundary; the rate is computed over the counter *delta* since the
+    /// previous mark. Cold path (one lock per epoch) — the hot counters
+    /// above stay lock-free.
+    epochs: Mutex<EpochTrack>,
+}
+
+#[derive(Default)]
+struct EpochTrack {
+    writes_at_mark: u64,
+    collisions_at_mark: u64,
+    rates: Vec<f64>,
 }
 
 impl ContentionStats {
@@ -101,7 +115,33 @@ impl ContentionStats {
             touches: AtomicU64::new(0),
             head_touches: AtomicU64::new(0),
             touch_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            epochs: Mutex::new(EpochTrack::default()),
         }
+    }
+
+    /// Close one epoch of the per-epoch drift series: records the collision
+    /// rate over the sampled writes accumulated since the previous mark
+    /// (0.0 for an epoch with no sampled writes). Call from the driver at
+    /// each epoch boundary, workers joined.
+    pub fn mark_epoch(&self) {
+        let w = self.sampled_writes.load(Ordering::Relaxed);
+        let c = self.collisions.load(Ordering::Relaxed);
+        let mut tr = self.epochs.lock().expect("poisoned epoch track");
+        let dw = w.saturating_sub(tr.writes_at_mark);
+        let dc = c.saturating_sub(tr.collisions_at_mark);
+        tr.writes_at_mark = w;
+        tr.collisions_at_mark = c;
+        if dw == 0 {
+            tr.rates.push(0.0);
+        } else {
+            tr.rates.push((dc as f64 / dw as f64).min(1.0));
+        }
+    }
+
+    /// The per-epoch collision-rate series recorded so far (one entry per
+    /// `mark_epoch` call).
+    pub fn epoch_collision_rates(&self) -> Vec<f64> {
+        self.epochs.lock().expect("poisoned epoch track").rates.clone()
     }
 
     /// Whether a worker's k-th iteration is in the sample (per-thread
@@ -202,7 +242,8 @@ impl ContentionStats {
         self.head_touches.load(Ordering::Relaxed) as f64 / t as f64
     }
 
-    /// Immutable snapshot of every counter plus the derived rates.
+    /// Immutable snapshot of every counter plus the derived rates and the
+    /// per-epoch drift series.
     pub fn summary(&self) -> ContentionSummary {
         ContentionSummary {
             sample_period: self.period,
@@ -215,6 +256,7 @@ impl ContentionStats {
             collision_rate: self.collision_rate(),
             lock_conflict_rate: self.lock_conflict_rate(),
             head_touch_fraction: self.head_touch_fraction(),
+            epoch_collision_rates: self.epoch_collision_rates(),
         }
     }
 
@@ -256,8 +298,9 @@ impl ContentionStats {
 
 /// Plain-data summary of a [`ContentionStats`] collector — what
 /// [`RunResult`](crate::coordinator::monitor::RunResult) carries and the
-/// bench JSON serializes.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
+/// bench JSON serializes. (No longer `Copy`: the per-epoch drift series is
+/// a vector.)
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ContentionSummary {
     pub sample_period: u64,
     pub sampled_updates: u64,
@@ -269,6 +312,9 @@ pub struct ContentionSummary {
     pub collision_rate: f64,
     pub lock_conflict_rate: f64,
     pub head_touch_fraction: f64,
+    /// Collision rate per epoch (one entry per driver epoch) — the drift
+    /// series showing whether convergence cools the hot head over a run.
+    pub epoch_collision_rates: Vec<f64>,
 }
 
 impl ContentionSummary {
@@ -284,6 +330,10 @@ impl ContentionSummary {
             ("collision_rate", Json::Num(self.collision_rate)),
             ("lock_conflict_rate", Json::Num(self.lock_conflict_rate)),
             ("head_touch_fraction", Json::Num(self.head_touch_fraction)),
+            (
+                "epoch_collision_rates",
+                Json::Arr(self.epoch_collision_rates.iter().map(|&r| Json::Num(r)).collect()),
+            ),
         ])
     }
 }
@@ -333,6 +383,30 @@ mod tests {
         assert_eq!(total, 5);
         // j = 50 lands in the bucket with upper bound 64
         assert!(hist.iter().any(|&(ub, n)| ub == 64 && n == 1));
+    }
+
+    #[test]
+    fn epoch_marks_record_per_epoch_rates() {
+        let t = ContentionStats::with_period(64, 1);
+        // epoch 0: 10 writes, 5 collided
+        t.record_update(10, 5, 0);
+        t.mark_epoch();
+        // epoch 1: 20 more writes, 2 collided
+        t.record_update(20, 2, 0);
+        t.mark_epoch();
+        // epoch 2: idle (no sampled writes)
+        t.mark_epoch();
+        let rates = t.epoch_collision_rates();
+        assert_eq!(rates.len(), 3);
+        assert!((rates[0] - 0.5).abs() < 1e-12);
+        assert!((rates[1] - 0.1).abs() < 1e-12);
+        assert_eq!(rates[2], 0.0);
+        // the aggregate rate is unchanged by marking
+        assert!((t.collision_rate() - 7.0 / 30.0).abs() < 1e-12);
+        let s = t.summary();
+        assert_eq!(s.epoch_collision_rates, rates);
+        let j = s.to_json();
+        assert_eq!(j.get("epoch_collision_rates").unwrap().as_arr().unwrap().len(), 3);
     }
 
     #[test]

@@ -27,6 +27,13 @@
 //! the cost model the paper's rcv1/real-sim/news20 corpora (density
 //! 0.02–2%) are actually measured under.
 //!
+//! All parallel phases dispatch through a **persistent worker runtime**
+//! ([`runtime::pool`]): one pool of condvar-parked workers per run with a
+//! scoped `run_phase` API and a reusable barrier, replacing per-epoch
+//! `thread::scope` churn; epoch state is allocated once and reset in
+//! place, so the epoch boundary costs condvar wakes instead of thread
+//! spawns plus O(d) reallocation (DESIGN.md §8, `BENCH_pool.json`).
+//!
 //! Sparse runs additionally carry **sampled contention telemetry**
 //! ([`coordinator::telemetry`]): lock-free write sets on text-shaped data
 //! collide on the Zipfian head features, and the measured collision rates

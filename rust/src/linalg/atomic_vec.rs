@@ -136,6 +136,17 @@ impl AtomicF32Vec {
         }
     }
 
+    /// Ranged unlocked snapshot: `out` receives coordinates
+    /// `start..start + out.len()`. The parallel epoch-boundary snapshot
+    /// (`SharedParams::snapshot_into_pool`) splits the vector into disjoint
+    /// ranges, one per pool worker.
+    pub fn read_range_into(&self, start: usize, out: &mut [f32]) {
+        debug_assert!(start + out.len() <= self.len());
+        for (o, cell) in out.iter_mut().zip(self.data[start..start + out.len()].iter()) {
+            *o = f32::from_bits(cell.load(Ordering::Relaxed));
+        }
+    }
+
     /// Bulk unlocked write.
     pub fn write_from(&self, src: &[f32]) {
         debug_assert_eq!(src.len(), self.len());

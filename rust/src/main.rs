@@ -47,7 +47,7 @@ fn top_usage() -> String {
      \x20 fig1-speedup       regenerate Figure 1 left column\n\
      \x20 fig1-convergence   regenerate Figure 1 right column\n\
      \x20 theory             Theorem 1/2 contraction factors\n\
-     \x20 ablation           sweep eta / M / read-model / cores / storage / epoch\n\
+     \x20 ablation           sweep eta / M / read-model / cores / storage / epoch / pool\n\
      \x20 calibrate          measure cost model; --contention fits the sparse collision model\n\
      \x20 e2e                XLA-backed dense end-to-end training\n\n\
      `repro <subcommand> --help` for options."
@@ -322,8 +322,8 @@ fn cmd_ablation(args: &[String]) -> Result<(), String> {
         .opt("epochs", "25", "epoch budget per point")
         .opt(
             "which",
-            "eta,m,read-model,cores,storage,epoch,contention",
-            "comma list of sweeps: eta|m|read-model|cores|storage|epoch|contention",
+            "eta,m,read-model,cores,storage,epoch,contention,pool",
+            "comma list of sweeps: eta|m|read-model|cores|storage|epoch|contention|pool",
         );
     let m = cmd.parse(args)?;
     let ds = data::resolve(m.str("dataset"), m.f64("scale")?, m.u64("seed")?)?;
@@ -362,6 +362,10 @@ fn cmd_ablation(args: &[String]) -> Result<(), String> {
             "contention" => (
                 "sparse write contention: flat factor vs calibrated collision model",
                 ablation::sweep_contention(&obj, fstar, threads, epochs),
+            ),
+            "pool" => (
+                "worker runtime: per-epoch thread spawn vs persistent pool",
+                ablation::sweep_pool(&obj, fstar, threads, epochs),
             ),
             o => return Err(format!("unknown sweep '{o}'")),
         };

@@ -1,13 +1,22 @@
-//! PJRT runtime (S13): loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them from the L3 coordinator.
-//! Python never runs at request time — the rust binary is self-contained
-//! once `make artifacts` has produced `artifacts/`.
+//! Runtime substrates: the PJRT/XLA artifact plumbing (S13) and the
+//! persistent worker pool every parallel phase dispatches through (S18,
+//! DESIGN.md §8).
+//!
+//! * [`artifact`]/[`backend`] — loads the AOT HLO-text artifacts produced
+//!   by `python/compile/aot.py` and executes them from the L3 coordinator.
+//!   Python never runs at request time — the rust binary is self-contained
+//!   once `make artifacts` has produced `artifacts/`.
+//! * [`pool`] — condvar-parked worker threads with a scoped `run_phase`
+//!   API and a reusable barrier, replacing per-epoch `thread::scope`
+//!   churn in the coordinator's hot paths.
 
 pub mod artifact;
 pub mod backend;
+pub mod pool;
 
 pub use artifact::{EntrySpec, Manifest, Runtime};
 pub use backend::{full_grad_streamed, loss_streamed, DenseBackend, NativeDense, XlaDense};
+pub use pool::{CachePadded, PhaseBarrier, WorkerPool, WorkerSlots};
 
 use std::path::PathBuf;
 

@@ -1,0 +1,522 @@
+//! S18: the persistent worker runtime (DESIGN.md §8).
+//!
+//! Before this module every parallel phase — the epoch full-gradient pass,
+//! each algorithm's asynchronous inner loop — paid `std::thread::scope`
+//! thread creation and teardown, twice per epoch. On the paper's sparse
+//! corpora (large d, short epochs) that O(p) spawn cost plus the O(d)
+//! epoch-state reallocation bounds throughput before gradient work does
+//! (cf. Keuper & Pfreundt, arXiv:1505.04956, on ASGD runtime overheads).
+//!
+//! [`WorkerPool`] replaces the churn with `threads − 1` condvar-parked OS
+//! threads created once per run. A phase is dispatched by
+//! [`WorkerPool::run_phase`]`(p, f)`: helpers 1..p are woken to execute
+//! `f(id)`, the **caller executes `f(0)` itself** (so `p = 1` is a plain
+//! inline call with zero synchronization — the sequential trajectory is
+//! bit-identical to a direct invocation), and `run_phase` returns only
+//! after every participant finished — the phase *is* the barrier the old
+//! `thread::scope` join provided.
+//!
+//! Three companions keep per-worker state off the epoch boundary:
+//!
+//! * [`PhaseBarrier`] — a reusable sense-reversing barrier sized to the
+//!   current phase, for closures that need an intra-phase rendezvous
+//!   (e.g. folding the Option-2 average reduction into the same phase as
+//!   the inner loop instead of a serial O(p·d) pass after it);
+//! * [`WorkerSlots`] — cache-line-padded per-worker slots (scratch
+//!   buffers, sparse accumulators) owned for the whole run and reused
+//!   across epochs: a worker write-locks its own slot during a phase and
+//!   any worker may read-lock every slot after a barrier for merges;
+//! * [`CachePadded`] — the 64-byte alignment wrapper that keeps adjacent
+//!   slots off one cache line (false sharing is the whole reason slots
+//!   exist).
+//!
+//! # Safety model
+//!
+//! `run_phase` borrows its closure for the duration of the call and hands
+//! workers a lifetime-erased reference (the one `unsafe` in this module).
+//! The invariant making that sound: `run_phase` does not return — not even
+//! by unwinding — until every participating worker has decremented the
+//! phase's `remaining` counter, which each worker does strictly after its
+//! last use of the closure. Worker panics are caught, counted, and
+//! re-raised on the caller after the phase drains, exactly like
+//! `std::thread::scope`.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::thread::JoinHandle;
+
+/// Pads (and aligns) `T` to a 64-byte cache line so per-worker slots never
+/// share a line — the classic false-sharing guard.
+#[repr(align(64))]
+#[derive(Debug, Default)]
+pub struct CachePadded<T>(pub T);
+
+/// Per-worker state store: one [`CachePadded`] `RwLock<T>` slot per worker
+/// id, owned by the driver for a whole run and reused across epochs. The
+/// discipline: worker `a` takes [`write`](WorkerSlots::write)`(a)` on its
+/// own slot during a phase (uncontended — ids are exclusive), drops the
+/// guard before any [`PhaseBarrier`] wait, and merge stages after the
+/// barrier take [`read`](WorkerSlots::read) on every slot concurrently.
+pub struct WorkerSlots<T> {
+    slots: Vec<CachePadded<RwLock<T>>>,
+}
+
+impl<T> WorkerSlots<T> {
+    /// One slot per worker id `0..p`, initialized by `init(id)`.
+    pub fn new(p: usize, mut init: impl FnMut(usize) -> T) -> Self {
+        WorkerSlots { slots: (0..p).map(|a| CachePadded(RwLock::new(init(a)))).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Exclusive access to slot `a` (a worker locking its own slot).
+    pub fn write(&self, a: usize) -> RwLockWriteGuard<'_, T> {
+        self.slots[a].0.write().expect("poisoned worker slot")
+    }
+
+    /// Shared access to slot `a` (post-barrier merge reads).
+    pub fn read(&self, a: usize) -> RwLockReadGuard<'_, T> {
+        self.slots[a].0.read().expect("poisoned worker slot")
+    }
+
+    /// Lock-free access when the caller holds `&mut self` (between phases).
+    pub fn get_mut(&mut self, a: usize) -> &mut T {
+        self.slots[a].0.get_mut().expect("poisoned worker slot")
+    }
+}
+
+/// Split `buf` into disjoint per-worker sub-slices (one per `ranges`
+/// entry, which must tile the buffer in order), each behind its own
+/// uncontended mutex. This is how a shared `Fn` phase closure hands worker
+/// `a` exclusive `&mut` access to part `a` without unsafe code: the lock
+/// is taken once per phase and never contended (worker ids are exclusive).
+pub fn split_mut<'a, T>(
+    buf: &'a mut [T],
+    ranges: &[std::ops::Range<usize>],
+) -> Vec<Mutex<&'a mut [T]>> {
+    let mut parts = Vec::with_capacity(ranges.len());
+    let mut rest = buf;
+    for r in ranges {
+        let (head, tail) = rest.split_at_mut(r.len());
+        parts.push(Mutex::new(head));
+        rest = tail;
+    }
+    debug_assert!(rest.is_empty(), "ranges must tile the buffer");
+    parts
+}
+
+/// Reusable sense-reversing barrier, sized by `run_phase` to the current
+/// phase's participant count. Unlike `std::sync::Barrier` the size is not
+/// fixed at construction, so one barrier serves every phase of a run.
+struct BarrierCore {
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+struct BarrierState {
+    size: usize,
+    arrived: usize,
+    generation: u64,
+}
+
+impl BarrierCore {
+    fn new() -> Self {
+        BarrierCore {
+            state: Mutex::new(BarrierState { size: 1, arrived: 0, generation: 0 }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Resize for a new phase. Callable only between phases (no waiters).
+    fn reset(&self, size: usize) {
+        let mut st = self.state.lock().expect("poisoned barrier");
+        debug_assert_eq!(st.arrived, 0, "barrier resized while occupied");
+        st.size = size;
+    }
+
+    fn wait(&self) {
+        let mut st = self.state.lock().expect("poisoned barrier");
+        let gen = st.generation;
+        st.arrived += 1;
+        if st.arrived >= st.size {
+            st.arrived = 0;
+            st.generation = st.generation.wrapping_add(1);
+            self.cv.notify_all();
+            return;
+        }
+        while st.generation == gen {
+            st = self.cv.wait(st).expect("poisoned barrier");
+        }
+    }
+}
+
+/// Handle to the pool's reusable intra-phase barrier. Capture it (via
+/// [`WorkerPool::barrier`]) in a `run_phase` closure and call
+/// [`wait`](PhaseBarrier::wait) from every participating worker to
+/// rendezvous mid-phase. Sized automatically to the phase's `p`.
+#[derive(Clone, Copy)]
+pub struct PhaseBarrier<'a> {
+    core: &'a BarrierCore,
+}
+
+impl PhaseBarrier<'_> {
+    /// Block until all `p` workers of the current phase have arrived.
+    pub fn wait(&self) {
+        self.core.wait();
+    }
+}
+
+/// The lifetime-erased phase closure handed to parked workers. The
+/// `'static` is a lie told only inside this module; see the module-level
+/// safety model.
+type Job = &'static (dyn Fn(usize) + Sync);
+
+struct PoolState {
+    /// Phase sequence number; a bump (under the mutex) publishes a new job.
+    seq: u64,
+    /// Worker ids `0..phase_workers` participate in the current phase.
+    phase_workers: usize,
+    job: Option<Job>,
+    /// Helpers that have not yet finished the current phase.
+    remaining: usize,
+    /// A helper's closure panicked during the current phase.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolInner {
+    state: Mutex<PoolState>,
+    /// Helpers park here between phases.
+    work: Condvar,
+    /// The caller parks here while a phase drains.
+    done: Condvar,
+    barrier: BarrierCore,
+}
+
+/// Persistent worker pool: `threads − 1` parked helper threads plus the
+/// caller, dispatching scoped phase closures with no per-phase spawn. See
+/// the module docs for the protocol and DESIGN.md §8 for the design.
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Pool able to run phases of up to `threads` workers. Spawns
+    /// `threads − 1` helper OS threads (the caller is always worker 0);
+    /// `threads = 1` spawns nothing and every phase runs inline.
+    pub fn new(threads: usize) -> Self {
+        assert!(threads >= 1, "pool needs at least one worker");
+        let inner = Arc::new(PoolInner {
+            state: Mutex::new(PoolState {
+                seq: 0,
+                phase_workers: 0,
+                job: None,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            barrier: BarrierCore::new(),
+        });
+        let handles = (1..threads)
+            .map(|id| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("asysvrg-pool-{id}"))
+                    .spawn(move || helper_main(inner, id))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        WorkerPool { inner, handles, threads }
+    }
+
+    /// Maximum phase width this pool supports.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The pool's reusable intra-phase barrier, pre-sized to the current
+    /// phase. Only meaningful inside a `run_phase` closure, and only if
+    /// **every** participant calls `wait` the same number of times.
+    pub fn barrier(&self) -> PhaseBarrier<'_> {
+        PhaseBarrier { core: &self.inner.barrier }
+    }
+
+    /// Run one parallel phase: `f(id)` for every `id` in `0..p`, worker 0
+    /// on the calling thread, 1..p on parked helpers. Blocks until all
+    /// participants finish (the phase is a barrier); panics propagate to
+    /// the caller after the phase drains. `p = 1` is a plain inline call.
+    pub fn run_phase<F: Fn(usize) + Sync>(&self, p: usize, f: F) {
+        assert!(
+            p >= 1 && p <= self.threads,
+            "phase width {p} outside this pool's 1..={} range",
+            self.threads
+        );
+        self.inner.barrier.reset(p);
+        if p == 1 {
+            f(0);
+            return;
+        }
+        // SAFETY (module docs): the erased reference is dropped by every
+        // helper before it decrements `remaining`, and this function does
+        // not return (even unwinding) until `remaining == 0`, so the
+        // closure outlives all uses.
+        let job: Job = unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), Job>(&f) };
+        {
+            let mut st = self.inner.state.lock().expect("poisoned pool");
+            debug_assert_eq!(st.remaining, 0, "phase dispatched while one is in flight");
+            st.seq = st.seq.wrapping_add(1);
+            st.phase_workers = p;
+            st.job = Some(job);
+            st.remaining = p - 1;
+            st.panicked = false;
+            self.inner.work.notify_all();
+        }
+        // worker 0 runs here; catch so helpers never outlive the closure
+        let own = catch_unwind(AssertUnwindSafe(|| f(0)));
+        let helpers_panicked = {
+            let mut st = self.inner.state.lock().expect("poisoned pool");
+            while st.remaining > 0 {
+                st = self.inner.done.wait(st).expect("poisoned pool");
+            }
+            st.job = None;
+            std::mem::take(&mut st.panicked)
+        };
+        if let Err(e) = own {
+            resume_unwind(e);
+        }
+        if helpers_panicked {
+            panic!("pool worker panicked during phase");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().expect("poisoned pool");
+            st.shutdown = true;
+            self.inner.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn helper_main(inner: Arc<PoolInner>, id: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = inner.state.lock().expect("poisoned pool");
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.seq != seen {
+                    seen = st.seq;
+                    if id < st.phase_workers {
+                        break st.job.expect("phase published without a job");
+                    }
+                    // not in this phase; fall through and park again
+                }
+                st = inner.work.wait(st).expect("poisoned pool");
+            }
+        };
+        let panicked = catch_unwind(AssertUnwindSafe(|| job(id))).is_err();
+        let mut st = inner.state.lock().expect("poisoned pool");
+        if panicked {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            inner.done.notify_one();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+    #[test]
+    fn phase_runs_every_worker_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_phase(4, |a| {
+            hits[a].fetch_add(1, Ordering::Relaxed);
+        });
+        for (a, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "worker {a}");
+        }
+    }
+
+    #[test]
+    fn narrow_phase_skips_high_ids_and_pool_is_reusable() {
+        let pool = WorkerPool::new(8);
+        let count = AtomicUsize::new(0);
+        for round in 1..=50usize {
+            let width = 1 + (round % 8);
+            pool.run_phase(width, |_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+            // run_phase is a barrier: the count is exact after each phase
+            let expect: usize = (1..=round).map(|r| 1 + (r % 8)).sum();
+            assert_eq!(count.load(Ordering::Relaxed), expect, "round {round}");
+        }
+    }
+
+    #[test]
+    fn single_worker_phase_is_inline() {
+        // a 1-thread pool spawns no helpers at all
+        let pool = WorkerPool::new(1);
+        assert!(pool.handles.is_empty());
+        let mut touched = false;
+        // Fn, not FnMut — prove the inline path via a cell instead
+        let cell = AtomicUsize::new(0);
+        pool.run_phase(1, |a| {
+            assert_eq!(a, 0);
+            cell.store(7, Ordering::Relaxed);
+        });
+        touched |= cell.load(Ordering::Relaxed) == 7;
+        assert!(touched);
+    }
+
+    #[test]
+    fn phase_results_are_visible_to_next_phase() {
+        // the phase boundary is a happens-before edge (mutex + condvar):
+        // writes from phase k must be readable by any worker in phase k+1
+        let pool = WorkerPool::new(4);
+        let cells: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+        pool.run_phase(4, |a| cells[a].store((a as u64 + 1) * 10, Ordering::Relaxed));
+        pool.run_phase(4, |a| {
+            let total: u64 = cells.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+            assert_eq!(total, 100, "worker {a} saw stale phase-1 writes");
+        });
+    }
+
+    #[test]
+    fn barrier_separates_stages_within_one_phase() {
+        let pool = WorkerPool::new(4);
+        let bar = pool.barrier();
+        let stage1: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+        let checked = AtomicUsize::new(0);
+        pool.run_phase(4, |a| {
+            stage1[a].store(a as u64 + 1, Ordering::Relaxed);
+            bar.wait();
+            // after the barrier every stage-1 write is visible to everyone
+            let total: u64 = stage1.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+            assert_eq!(total, 10, "worker {a}");
+            checked.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(checked.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn barrier_is_reusable_within_and_across_phases() {
+        let pool = WorkerPool::new(3);
+        let bar = pool.barrier();
+        let ticks = AtomicU64::new(0);
+        for _ in 0..3 {
+            pool.run_phase(3, |_| {
+                for _ in 0..5 {
+                    bar.wait();
+                    ticks.fetch_add(1, Ordering::Relaxed);
+                    bar.wait();
+                }
+            });
+        }
+        assert_eq!(ticks.load(Ordering::Relaxed), 3 * 3 * 5);
+    }
+
+    #[test]
+    fn worker_panic_propagates_after_phase_drains() {
+        let pool = WorkerPool::new(4);
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_phase(4, |a| {
+                if a == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(err.is_err(), "panic must propagate");
+        // the pool survives a panicked phase and keeps working
+        let ok = AtomicUsize::new(0);
+        pool.run_phase(4, |_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn caller_panic_waits_for_helpers_then_propagates() {
+        let pool = WorkerPool::new(4);
+        let finished = Arc::new(AtomicUsize::new(0));
+        let f2 = finished.clone();
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_phase(4, |a| {
+                if a == 0 {
+                    panic!("caller boom");
+                }
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                f2.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        assert!(err.is_err());
+        // run_phase must not have returned before the helpers finished
+        assert_eq!(finished.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn slots_are_padded_and_support_write_then_shared_reads() {
+        let mut slots = WorkerSlots::new(4, |a| vec![a as f32; 8]);
+        assert_eq!(slots.len(), 4);
+        assert!(std::mem::align_of::<CachePadded<RwLock<Vec<f32>>>>() >= 64);
+        {
+            let mut g = slots.write(2);
+            g[0] = 42.0;
+        }
+        // concurrent read guards on the same slot coexist
+        let r1 = slots.read(2);
+        let r2 = slots.read(2);
+        assert_eq!(r1[0], 42.0);
+        assert_eq!(r2[1], 2.0);
+        drop((r1, r2));
+        assert_eq!(slots.get_mut(2)[0], 42.0);
+    }
+
+    #[test]
+    fn slots_merge_pattern_under_pool() {
+        // the Option-2 shape: fill own slot, barrier, read all slots
+        let pool = WorkerPool::new(4);
+        let bar = pool.barrier();
+        let slots = WorkerSlots::new(4, |_| 0u64);
+        let sums: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+        pool.run_phase(4, |a| {
+            *slots.write(a) = (a as u64 + 1) * 100;
+            bar.wait();
+            let total: u64 = (0..4).map(|b| *slots.read(b)).sum();
+            sums[a].store(total, Ordering::Relaxed);
+        });
+        for s in &sums {
+            assert_eq!(s.load(Ordering::Relaxed), 1000);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "phase width")]
+    fn oversized_phase_rejected() {
+        let pool = WorkerPool::new(2);
+        pool.run_phase(3, |_| {});
+    }
+}

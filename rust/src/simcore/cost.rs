@@ -129,6 +129,24 @@ pub struct ContentionSample {
     pub extra_ns_per_update: f64,
 }
 
+/// How the epoch boundary dispatches its parallel phases — the axis the
+/// persistent worker runtime (DESIGN.md §8) moved: per-epoch
+/// `thread::scope` spawn+join of p OS threads plus an O(d) rebuild of the
+/// epoch state, versus condvar wakes of parked pool workers with the state
+/// reset in place. `ablation --which pool` sweeps the two.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RuntimeDispatch {
+    /// Legacy per-epoch thread churn: every parallel phase creates and
+    /// joins p OS threads, and `SharedParams`/`LazyState`/scratch are
+    /// reallocated and reinitialized (O(d)) per epoch.
+    Spawn,
+    /// The persistent pool: one condvar broadcast wakes the parked workers
+    /// per phase (the caller runs share 0 inline), epoch state reused
+    /// across epochs (O(touched) reset).
+    #[default]
+    Pool,
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
     pub read_coord_ns: f64,
@@ -136,6 +154,19 @@ pub struct CostModel {
     pub sparse_nnz_ns: f64,
     pub dense_coord_ns: f64,
     pub lock_ns: f64,
+    /// OS thread create + join, per thread (the per-phase churn of the
+    /// legacy `thread::scope` runtime).
+    pub thread_spawn_ns: f64,
+    /// Condvar-broadcast wake latency of a pooled phase (the `notify_all`
+    /// wakes every parked helper concurrently, so this is per PHASE, not
+    /// per worker). The `BENCH_pool.json` smoke gates the measured
+    /// spawn-vs-wake phase-dispatch ratio ≥5× at p ≥ 4; the frozen
+    /// constants keep a wide margin (25 µs·p vs 2 µs flat).
+    pub pool_wake_ns: f64,
+    /// Per-coordinate epoch-state rebuild (allocate + initialize the
+    /// shared vector, lazy clocks, worker scratch) the Spawn runtime pays
+    /// every epoch; the Pool runtime resets in place and pays none of it.
+    pub epoch_state_coord_ns: f64,
     /// Extra per-coordinate factor for CAS updates (AtomicCas scheme).
     pub cas_factor: f64,
     /// Per-extra-concurrent-writer slowdown of racy writes (cache-line
@@ -161,6 +192,13 @@ impl CostModel {
             sparse_nnz_ns: 1.1,
             dense_coord_ns: 1.1,
             lock_ns: 18.0,
+            // boundary constants follow Linux-class measurements: pthread
+            // create+join ≈ 25 µs per thread, one futex broadcast ≈ 2 µs
+            // per phase — far beyond the ≥5× dispatch ratio the BENCH_pool
+            // smoke gates at p ≥ 4
+            thread_spawn_ns: 25_000.0,
+            pool_wake_ns: 2_000.0,
+            epoch_state_coord_ns: 2.0,
             cas_factor: 3.0,
             write_contention: 0.15,
             bw_penalty: 0.05,
@@ -350,6 +388,36 @@ impl CostModel {
             + rows as f64 * per_row_overhead
     }
 
+    /// Epoch-boundary setup for `parallel_phases` fork/join phases per
+    /// epoch (AsySVRG: 2 — the full-gradient pass and the inner loop;
+    /// Hogwild!: 1) at p workers on a d-dimensional problem.
+    ///
+    /// * `Spawn` bills p thread creations+joins per phase (thread::scope
+    ///   issues them serially from the caller) **plus** the O(d)
+    ///   epoch-state rebuild (fresh shared vector, lazy clocks, worker
+    ///   scratch) the old per-epoch drivers performed;
+    /// * `Pool` bills one condvar-broadcast wake latency per phase — the
+    ///   `notify_all` wakes every parked helper concurrently, the caller
+    ///   executes share 0 inline, and p = 1 is a plain inline call (zero).
+    ///   No per-coordinate term: state is reset in place in O(touched).
+    #[inline]
+    pub fn epoch_setup_cost(
+        &self,
+        p: usize,
+        d: usize,
+        parallel_phases: usize,
+        runtime: RuntimeDispatch,
+    ) -> f64 {
+        match runtime {
+            RuntimeDispatch::Spawn => {
+                parallel_phases as f64 * p as f64 * self.thread_spawn_ns
+                    + d as f64 * self.epoch_state_coord_ns
+            }
+            RuntimeDispatch::Pool if p <= 1 => 0.0,
+            RuntimeDispatch::Pool => parallel_phases as f64 * self.pool_wake_ns,
+        }
+    }
+
     /// Serial (main-thread, workers joined) portion of the epoch barrier:
     /// `entries` coordinate writes at single-core bandwidth. Dense passes
     /// stream p·d partial entries plus the d-sized finalize; the sparse
@@ -423,6 +491,43 @@ mod tests {
         // than the dense streaming pass, never less
         let dd = 1_000;
         assert!(c.full_grad_cost_sparse(rows, 50 * dd, p) > c.full_grad_cost(rows, 50 * dd, dd, p));
+    }
+
+    #[test]
+    fn epoch_setup_spawn_dominates_pool() {
+        let c = CostModel::default_host();
+        // frozen constants keep the ≥5× wake-vs-spawn margin the bench gates
+        assert!(c.thread_spawn_ns >= 5.0 * c.pool_wake_ns);
+        for p in [1usize, 2, 4, 10] {
+            for d in [64usize, 1_000_000] {
+                let spawn = c.epoch_setup_cost(p, d, 2, RuntimeDispatch::Spawn);
+                let pool = c.epoch_setup_cost(p, d, 2, RuntimeDispatch::Pool);
+                assert!(spawn > pool, "p={p} d={d}: spawn {spawn} !> pool {pool}");
+            }
+        }
+        // pool setup: no O(d) term, zero at p = 1 (pure inline phases),
+        // and a flat broadcast per phase — independent of d AND of p
+        assert_eq!(c.epoch_setup_cost(1, 1_000_000, 2, RuntimeDispatch::Pool), 0.0);
+        assert!(
+            c.epoch_setup_cost(4, 2_000_000, 2, RuntimeDispatch::Pool)
+                == c.epoch_setup_cost(4, 64, 2, RuntimeDispatch::Pool),
+            "pool setup must not scale with d"
+        );
+        assert!(
+            c.epoch_setup_cost(10, 64, 2, RuntimeDispatch::Pool)
+                == c.epoch_setup_cost(2, 64, 2, RuntimeDispatch::Pool),
+            "pool setup is one broadcast per phase, not per worker"
+        );
+        // spawn setup scales with d (the per-epoch state rebuild)
+        assert!(
+            c.epoch_setup_cost(4, 2_000_000, 2, RuntimeDispatch::Spawn)
+                > c.epoch_setup_cost(4, 64, 2, RuntimeDispatch::Spawn)
+        );
+        // per-phase accounting: hogwild's single phase is cheaper
+        assert!(
+            c.epoch_setup_cost(4, 64, 1, RuntimeDispatch::Pool)
+                < c.epoch_setup_cost(4, 64, 2, RuntimeDispatch::Pool)
+        );
     }
 
     #[test]

@@ -38,7 +38,7 @@ use crate::coordinator::epoch::EpochGradient;
 use crate::objective::Objective;
 use crate::util::rng::Pcg32;
 
-use super::cost::CostModel;
+use super::cost::{CostModel, RuntimeDispatch};
 
 /// What the inner loop computes (the two algorithms share the engine).
 pub enum SimTask<'a> {
@@ -89,6 +89,12 @@ pub struct EngineOpts {
     /// Sparse write-contention billing: calibrated per-nnz collision model
     /// (default) or the legacy flat factor. No effect under `Dense`.
     pub contention: ContentionBilling,
+    /// Epoch-boundary dispatch billing (DESIGN.md §8): persistent-pool
+    /// wakes (default, what the real runners do) vs legacy per-epoch
+    /// thread spawn + O(d) state rebuild. Billed once per epoch by the
+    /// sim drivers via `CostModel::epoch_setup_cost`; the inner-loop
+    /// event schedule itself is identical either way.
+    pub runtime: RuntimeDispatch,
 }
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]

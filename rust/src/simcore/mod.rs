@@ -16,7 +16,7 @@
 pub mod cost;
 pub mod engine;
 
-pub use cost::{ContentionSample, CostModel, SparseContention};
+pub use cost::{ContentionSample, CostModel, RuntimeDispatch, SparseContention};
 pub use engine::{
     simulate_inner, simulate_inner_opts, ContentionBilling, EngineOpts, ReadModel, SimPhaseResult,
     SimTask,
@@ -97,18 +97,20 @@ fn sim_asysvrg(obj: &Objective, cfg: &RunConfig, costs: &CostModel, fstar: f64) 
     let mut delay_weighted = 0.0f64;
 
     // epoch-phase billing is data-shape-only (independent of w), so price
-    // it once and charge per epoch
+    // it once and charge per epoch; likewise the boundary setup (2 parallel
+    // phases per AsySVRG epoch: full-gradient pass + inner loop)
     let epoch_phase_ns = full_grad_phase_ns(obj, p, costs, cfg.storage);
+    let opts = EngineOpts { storage: cfg.storage, ..Default::default() };
+    let epoch_setup_ns = costs.epoch_setup_cost(p, d, 2, opts.runtime);
 
     for t in 0..cfg.epochs {
         // epoch phase: full gradient (computed for real, billed simulated
         // per the storage model — sparse accumulators are semantically the
         // same reduction, so the arithmetic path is shared)
         let eg = parallel_full_grad(obj, &w, 1);
-        sim_ns += epoch_phase_ns;
+        sim_ns += epoch_phase_ns + epoch_setup_ns;
 
         // inner phase on simulated cores (billed per the storage model)
-        let opts = EngineOpts { storage: cfg.storage, ..Default::default() };
         let task = SimTask::Svrg { u0: &w.clone(), eg: &eg };
         let mut u = w.clone();
         let r = simulate_inner_opts(
@@ -170,7 +172,10 @@ fn sim_hogwild(obj: &Objective, cfg: &RunConfig, costs: &CostModel, fstar: f64) 
     let mut delay_weighted = 0.0f64;
 
     let opts = EngineOpts { storage: cfg.storage, ..Default::default() };
+    // one parallel phase per Hogwild! epoch (no full-gradient pass)
+    let epoch_setup_ns = costs.epoch_setup_cost(p, d, 1, opts.runtime);
     for t in 0..cfg.epochs {
+        sim_ns += epoch_setup_ns;
         let r = simulate_inner_opts(
             obj,
             &SimTask::Sgd,

@@ -140,7 +140,7 @@ fn run_result_json_surfaces_contention_for_sparse_runs() {
         ..Default::default()
     };
     let r = coordinator::run(&obj, &cfg, f64::NEG_INFINITY);
-    let c = r.contention.expect("sparse threads run collects telemetry");
+    let c = r.contention.clone().expect("sparse threads run collects telemetry");
     assert!(c.sampled_updates > 0);
     let j = r.to_json();
     let cj = j.get("contention").expect("json carries contention");

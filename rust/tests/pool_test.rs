@@ -1,0 +1,373 @@
+//! Persistent worker runtime (DESIGN.md §8) integration tests.
+//!
+//! The drivers moved from per-epoch `thread::scope` spawns with freshly
+//! allocated epoch state onto a persistent pool with in-place resets.
+//! These tests pin the refactor down:
+//!
+//! * **Trajectory equality** — at p = 1 both runtimes are fully
+//!   deterministic, so the pool-backed drivers must be *bit-identical* to
+//!   a faithful reconstruction of the legacy scoped-spawn path, for
+//!   asysvrg {dense, sparse} × {Option 1, Option 2} and hogwild
+//!   {dense, sparse}, across epochs (fixed shapes + a propcheck sweep).
+//! * **Pool reuse** — one pool serving several runs (and both algorithms)
+//!   bleeds no state between them.
+//! * **Multi-thread sanity** — pool-backed multi-thread runs keep the
+//!   exact update accounting and converge.
+
+use asysvrg::config::{Algo, RunConfig, Scheme, Storage};
+use asysvrg::coordinator::asysvrg::run_asysvrg_on;
+use asysvrg::coordinator::delay::DelayStats;
+use asysvrg::coordinator::epoch::parallel_full_grad_storage;
+use asysvrg::coordinator::hogwild::{run_hogwild, run_hogwild_on};
+use asysvrg::coordinator::shared::SharedParams;
+use asysvrg::coordinator::sparse::{run_hogwild_inner_sparse, run_inner_loop_sparse, LazyState};
+use asysvrg::coordinator::worker::{run_inner_loop, run_inner_loop_averaging, WorkerScratch};
+use asysvrg::coordinator::{run_asysvrg, SvrgOption};
+use asysvrg::data::synthetic::SyntheticSpec;
+use asysvrg::objective::{LossKind, Objective};
+use asysvrg::propcheck::{forall_res, Gen};
+use asysvrg::runtime::pool::WorkerPool;
+use asysvrg::util::rng::Pcg32;
+use std::sync::Arc;
+
+fn small_obj(n: usize, d: usize, nnz: usize, seed: u64) -> Objective {
+    let ds = SyntheticSpec::new("pool-t", n, d, nnz, seed).generate();
+    Objective::new(Arc::new(ds), 1e-2, LossKind::Logistic)
+}
+
+/// Faithful reconstruction of the pre-pool AsySVRG driver: scoped spawns,
+/// `SharedParams`/`LazyState` rebuilt every epoch, the serial Option-2
+/// reduction — exactly the arithmetic the old `run_asysvrg` performed.
+/// Returns (final w, per-epoch losses, total updates).
+fn legacy_asysvrg(
+    obj: &Objective,
+    cfg: &RunConfig,
+    option: SvrgOption,
+) -> (Vec<f32>, Vec<f64>, u64) {
+    let d = obj.dim();
+    let n = obj.n();
+    let p = cfg.threads;
+    let m_per_thread = cfg.inner_iters(n);
+    let delays = DelayStats::new();
+    let mut w = vec![0.0f32; d];
+    let mut losses = Vec::new();
+    let mut total_updates = 0u64;
+    for t in 0..cfg.epochs {
+        let eg = parallel_full_grad_storage(obj, &w, p, cfg.storage);
+        let shared = SharedParams::new(&w, cfg.scheme);
+        let clock_before = shared.clock();
+        let avg: Option<Vec<f32>> = match option {
+            _ if cfg.storage == Storage::Sparse => {
+                let lazy = match option {
+                    SvrgOption::CurrentIterate => {
+                        LazyState::new(&w, &eg.mu, obj.lam, cfg.eta, shared.clock())
+                    }
+                    SvrgOption::Average => {
+                        LazyState::new_averaging(&w, &eg.mu, obj.lam, cfg.eta, shared.clock())
+                    }
+                };
+                std::thread::scope(|s| {
+                    for a in 0..p {
+                        let (shared, eg, lazy, delays) = (&shared, &eg, &lazy, &delays);
+                        s.spawn(move || {
+                            let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
+                            run_inner_loop_sparse(
+                                obj, shared, lazy, eg, m_per_thread, &mut rng, delays,
+                            );
+                        });
+                    }
+                });
+                lazy.flush(&shared);
+                lazy.average_iterate(&shared)
+            }
+            SvrgOption::CurrentIterate => {
+                std::thread::scope(|s| {
+                    for a in 0..p {
+                        let (shared, eg, w, delays) = (&shared, &eg, &w, &delays);
+                        s.spawn(move || {
+                            let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
+                            let mut scratch = WorkerScratch::new(d);
+                            run_inner_loop(
+                                obj,
+                                shared,
+                                w,
+                                eg,
+                                cfg.eta,
+                                m_per_thread,
+                                &mut rng,
+                                &mut scratch,
+                                delays,
+                            );
+                        });
+                    }
+                });
+                None
+            }
+            SvrgOption::Average => {
+                let mut accs: Vec<Vec<f32>> = Vec::with_capacity(p);
+                std::thread::scope(|s| {
+                    let mut handles = Vec::with_capacity(p);
+                    for a in 0..p {
+                        let (shared, eg, w, delays) = (&shared, &eg, &w, &delays);
+                        handles.push(s.spawn(move || {
+                            let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
+                            let mut scratch = WorkerScratch::new(d);
+                            let mut acc = vec![0.0f32; d];
+                            run_inner_loop_averaging(
+                                obj,
+                                shared,
+                                w,
+                                eg,
+                                cfg.eta,
+                                m_per_thread,
+                                &mut rng,
+                                &mut scratch,
+                                delays,
+                                &mut acc,
+                            );
+                            acc
+                        }));
+                    }
+                    for h in handles {
+                        accs.push(h.join().expect("legacy worker panicked"));
+                    }
+                });
+                let total = (p * m_per_thread) as f32;
+                let mut avg = vec![0.0f32; d];
+                for acc in &accs {
+                    for j in 0..d {
+                        avg[j] += acc[j] / total;
+                    }
+                }
+                Some(avg)
+            }
+        };
+        total_updates += shared.clock() - clock_before;
+        w = match (option, avg) {
+            (SvrgOption::CurrentIterate, _) => shared.snapshot(),
+            (SvrgOption::Average, Some(a)) => a,
+            (SvrgOption::Average, None) => unreachable!(),
+        };
+        losses.push(obj.loss(&w));
+    }
+    (w, losses, total_updates)
+}
+
+/// Faithful reconstruction of the pre-pool Hogwild! driver.
+fn legacy_hogwild(obj: &Objective, cfg: &RunConfig) -> (Vec<f32>, Vec<f64>, u64) {
+    let d = obj.dim();
+    let n = obj.n();
+    let p = cfg.threads;
+    let iters = cfg.hogwild_iters(n);
+    let delays = DelayStats::new();
+    let shared = SharedParams::new(&vec![0.0f32; d], cfg.scheme);
+    let mut gamma = cfg.eta;
+    let mut losses = Vec::new();
+    for t in 0..cfg.epochs {
+        match cfg.storage {
+            Storage::Sparse => {
+                let lazy = LazyState::for_hogwild(d, obj.lam, gamma, shared.clock());
+                std::thread::scope(|s| {
+                    for a in 0..p {
+                        let (shared, lazy, delays) = (&shared, &lazy, &delays);
+                        s.spawn(move || {
+                            let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
+                            run_hogwild_inner_sparse(obj, shared, lazy, iters, &mut rng, delays);
+                        });
+                    }
+                });
+                lazy.flush(&shared);
+            }
+            Storage::Dense => {
+                std::thread::scope(|s| {
+                    for a in 0..p {
+                        let (shared, delays) = (&shared, &delays);
+                        s.spawn(move || {
+                            let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
+                            let mut local = vec![0.0f32; d];
+                            for _ in 0..iters {
+                                let i = rng.below(n);
+                                let read_clock = shared.read_into(&mut local);
+                                let r = obj.residual(&local, i);
+                                let apply_clock = shared
+                                    .apply_sgd_step(obj.data.row(i), r, obj.lam, &local, gamma);
+                                delays.record(read_clock, apply_clock);
+                            }
+                        });
+                    }
+                });
+            }
+        }
+        gamma *= cfg.gamma_decay;
+        losses.push(obj.loss(&shared.snapshot()));
+    }
+    (shared.snapshot(), losses, shared.clock())
+}
+
+fn asysvrg_cfg(storage: Storage, epochs: usize, seed: u64) -> RunConfig {
+    RunConfig {
+        threads: 1,
+        scheme: Scheme::Inconsistent,
+        eta: 0.2,
+        epochs,
+        target_gap: 0.0, // fixed epoch budget: trajectories compared epoch by epoch
+        storage,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// The headline guarantee: at p = 1 the pool-backed drivers reproduce the
+/// legacy scoped-spawn trajectories BIT FOR BIT, for every
+/// storage × w_{t+1}-option combination and for hogwild.
+#[test]
+fn pool_drivers_bit_identical_to_legacy_path_single_thread() {
+    let obj = small_obj(120, 96, 7, 11);
+    for storage in [Storage::Dense, Storage::Sparse] {
+        for option in [SvrgOption::CurrentIterate, SvrgOption::Average] {
+            let cfg = asysvrg_cfg(storage, 4, 5);
+            let (lw, llosses, lupd) = legacy_asysvrg(&obj, &cfg, option);
+            let r = run_asysvrg(&obj, &cfg, option, f64::NEG_INFINITY);
+            assert_eq!(r.final_w, lw, "{storage:?}/{option:?} final w diverged");
+            assert_eq!(r.total_updates, lupd, "{storage:?}/{option:?} update count");
+            let pooled: Vec<f64> = r.history.iter().map(|h| h.loss).collect();
+            assert_eq!(pooled, llosses, "{storage:?}/{option:?} loss trajectory");
+        }
+        let cfg = RunConfig {
+            algo: Algo::Hogwild,
+            threads: 1,
+            scheme: Scheme::Unlock,
+            eta: 0.5,
+            epochs: 4,
+            target_gap: 0.0,
+            storage,
+            seed: 5,
+            ..Default::default()
+        };
+        let (lw, llosses, lupd) = legacy_hogwild(&obj, &cfg);
+        let r = run_hogwild(&obj, &cfg, f64::NEG_INFINITY);
+        assert_eq!(r.final_w, lw, "hogwild {storage:?} final w diverged");
+        assert_eq!(r.total_updates, lupd, "hogwild {storage:?} update count");
+        let pooled: Vec<f64> = r.history.iter().map(|h| h.loss).collect();
+        assert_eq!(pooled, llosses, "hogwild {storage:?} loss trajectory");
+    }
+}
+
+/// Property sweep of the same equality over random problem shapes, step
+/// sizes, seeds, epoch budgets, and combo choices.
+#[test]
+fn prop_pool_trajectory_equals_legacy_trajectory() {
+    forall_res("pool/legacy trajectory equality", 25, |g: &mut Gen| {
+        let n = g.usize_in(20..120);
+        let d = g.usize_in(16..200);
+        let nnz = g.usize_in(2..10);
+        let obj = small_obj(n, d, nnz, g.u64());
+        let storage = *g.choose(&[Storage::Dense, Storage::Sparse]);
+        let epochs = g.usize_in(1..4);
+        let mut cfg = asysvrg_cfg(storage, epochs, g.u64());
+        cfg.eta = g.f32_in(0.02..0.3);
+        if g.bool() {
+            let option =
+                *g.choose(&[SvrgOption::CurrentIterate, SvrgOption::Average]);
+            let (lw, _, lupd) = legacy_asysvrg(&obj, &cfg, option);
+            let r = run_asysvrg(&obj, &cfg, option, f64::NEG_INFINITY);
+            if r.final_w != lw {
+                return Err(format!("asysvrg {storage:?}/{option:?} w diverged"));
+            }
+            if r.total_updates != lupd {
+                return Err("update counts diverged".into());
+            }
+        } else {
+            cfg.algo = Algo::Hogwild;
+            cfg.scheme = Scheme::Unlock;
+            let (lw, _, lupd) = legacy_hogwild(&obj, &cfg);
+            let r = run_hogwild(&obj, &cfg, f64::NEG_INFINITY);
+            if r.final_w != lw {
+                return Err(format!("hogwild {storage:?} w diverged"));
+            }
+            if r.total_updates != lupd {
+                return Err("update counts diverged".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Pool reuse: several runs — different algorithms, storages, options — on
+/// ONE pool produce exactly what fresh-pool runs produce. No state bleeds
+/// through the persistent workers, slots, or barrier.
+#[test]
+fn shared_pool_across_runs_has_no_state_bleed() {
+    let obj = small_obj(100, 64, 6, 3);
+    let pool = WorkerPool::new(4);
+    // deterministic legs (p = 1 on a 4-wide pool: width is per-run)
+    for storage in [Storage::Dense, Storage::Sparse] {
+        let cfg = asysvrg_cfg(storage, 3, 9);
+        let fresh = run_asysvrg(&obj, &cfg, SvrgOption::Average, f64::NEG_INFINITY);
+        let a = run_asysvrg_on(&pool, &obj, &cfg, SvrgOption::Average, f64::NEG_INFINITY);
+        let b = run_asysvrg_on(&pool, &obj, &cfg, SvrgOption::Average, f64::NEG_INFINITY);
+        assert_eq!(a.final_w, fresh.final_w, "{storage:?} shared-pool run != fresh-pool run");
+        assert_eq!(a.final_w, b.final_w, "{storage:?} second run on the pool diverged");
+        assert_eq!(a.total_updates, b.total_updates);
+    }
+    // interleave hogwild on the same pool, then asysvrg again
+    let hcfg = RunConfig {
+        algo: Algo::Hogwild,
+        threads: 1,
+        scheme: Scheme::Unlock,
+        eta: 0.5,
+        epochs: 3,
+        target_gap: 0.0,
+        storage: Storage::Sparse,
+        seed: 9,
+        ..Default::default()
+    };
+    let h_fresh = run_hogwild(&obj, &hcfg, f64::NEG_INFINITY);
+    let h_pool = run_hogwild_on(&pool, &obj, &hcfg, f64::NEG_INFINITY);
+    assert_eq!(h_pool.final_w, h_fresh.final_w, "hogwild on shared pool diverged");
+    let cfg = asysvrg_cfg(Storage::Sparse, 2, 17);
+    let again = run_asysvrg_on(&pool, &obj, &cfg, SvrgOption::CurrentIterate, f64::NEG_INFINITY);
+    let again_fresh = run_asysvrg(&obj, &cfg, SvrgOption::CurrentIterate, f64::NEG_INFINITY);
+    assert_eq!(again.final_w, again_fresh.final_w, "asysvrg after hogwild on shared pool");
+}
+
+/// Multi-thread pool runs: exact update accounting, convergence, telemetry
+/// (including the per-epoch drift series) — the invariants the old driver
+/// tests asserted, now through the pool.
+#[test]
+fn pool_multithread_accounting_and_convergence() {
+    let obj = small_obj(256, 64, 10, 13);
+    for storage in [Storage::Dense, Storage::Sparse] {
+        for scheme in [Scheme::Inconsistent, Scheme::Unlock, Scheme::AtomicCas] {
+            if storage == Storage::Dense && scheme == Scheme::AtomicCas {
+                continue; // dense CAS is exercised elsewhere; keep the grid tight
+            }
+            let cfg = RunConfig {
+                threads: 4,
+                scheme,
+                eta: 0.2,
+                epochs: 3,
+                target_gap: 0.0,
+                storage,
+                ..Default::default()
+            };
+            let r = run_asysvrg(&obj, &cfg, SvrgOption::CurrentIterate, f64::NEG_INFINITY);
+            let m = cfg.inner_iters(obj.n());
+            assert_eq!(
+                r.total_updates,
+                (3 * 4 * m) as u64,
+                "{storage:?}/{scheme:?} update accounting"
+            );
+            assert_eq!(r.epochs_run, 3);
+            let first = r.history.first().unwrap().loss;
+            let last = r.final_loss();
+            assert!(last <= first, "{storage:?}/{scheme:?}: {first} -> {last}");
+            if storage == Storage::Sparse {
+                let c = r.contention.expect("sparse telemetry");
+                assert_eq!(c.epoch_collision_rates.len(), 3);
+            } else {
+                assert!(r.contention.is_none());
+            }
+        }
+    }
+}
