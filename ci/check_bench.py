@@ -1,0 +1,167 @@
+#!/usr/bin/env python3
+"""Bench-gate checks for CI and nightly runs.
+
+Validates the BENCH_*.json reports emitted by `cargo bench --bench
+bench_micro` against the repo's performance contracts:
+
+* sparse-vs-dense — the O(nnz) inner iteration must be >= 5x the O(d)
+  path at text-shaped density (DESIGN.md §3).
+* epoch-pass — the sparse epoch pass must be >= 5x dense at <= 1% density
+  (DESIGN.md §5).
+* contention — the calibrated collision model must predict measured
+  contended throughput within tolerance on gated thread counts, collision
+  rates must be monotone up to the host core count, and sampled telemetry
+  must stay under its overhead limit (DESIGN.md §6).
+* pool — waking the persistent worker pool must beat per-phase thread
+  spawning by its dispatch target, and improve end-to-end epochs/sec
+  (DESIGN.md §8).
+
+Usage: check_bench.py [--results rust/results] [--only sparse,pool]
+
+Exits 1 on the first failed gate. When $GITHUB_STEP_SUMMARY is set, a
+pass/fail line per gate is appended there too.
+"""
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+
+class GateFailure(Exception):
+    """A bench contract was violated (message explains which and by how much)."""
+
+
+def check_sparse_vs_dense(rep, log):
+    speedup = rep["sparse_speedup"]
+    log(f"sparse inner-iteration speedup: {speedup:.1f}x (density {rep['density']:.4%})")
+    if speedup < 5.0:
+        raise GateFailure(f"sparse fast path only {speedup:.1f}x (target >= 5x)")
+
+
+def check_epoch_pass(rep, log):
+    es = rep["epoch_speedup"]
+    log(f"sparse epoch-pass speedup: {es:.1f}x (density {rep['density']:.4%})")
+    if rep["density"] > 0.01:
+        raise GateFailure(f"epoch bench density {rep['density']:.4%} above 1%")
+    if es < 5.0:
+        raise GateFailure(f"sparse epoch pass only {es:.1f}x (target >= 5x)")
+
+
+def check_contention(rep, log):
+    cores = int(rep["host_cores"])
+    log(
+        f"contention: fitted kappa={rep['fitted']['kappa']:.4f} "
+        f"collision_ns={rep['fitted']['collision_ns']:.2f} ({cores} cores)"
+    )
+    for pred in rep["predictions"]:
+        tag = "gated" if pred["gated"] else "oversubscribed (informational)"
+        log(
+            f"  p={int(pred['threads'])}: measured {pred['measured_throughput']:.3e} "
+            f"predicted {pred['predicted_throughput']:.3e} err {pred['rel_err']:.1%} [{tag}]"
+        )
+        if pred["gated"] and pred["rel_err"] > rep["tolerance"]:
+            raise GateFailure(
+                f"p={int(pred['threads'])}: prediction off by {pred['rel_err']:.1%} "
+                f"(tolerance {rep['tolerance']:.0%})"
+            )
+    rates = [m["collision_rate"] for m in rep["points"] if m["threads"] <= cores]
+    for lo, hi in zip(rates, rates[1:]):
+        if hi < lo - 0.01:
+            raise GateFailure(f"collision rate not monotone across gated threads: {rates}")
+    ov = rep["telemetry_overhead"]
+    log(f"  telemetry overhead: {ov:+.2%} (limit {rep['overhead_limit']:.0%})")
+    if ov >= rep["overhead_limit"]:
+        raise GateFailure(f"telemetry overhead {ov:.2%} >= {rep['overhead_limit']:.0%}")
+    if not rep["pass"]:
+        raise GateFailure("contention bench reported overall FAIL")
+
+
+def check_pool(rep, log):
+    log(
+        f"pool dispatch: spawn {rep['spawn_us_per_phase']:.1f}us vs "
+        f"wake {rep['pool_us_per_phase']:.1f}us -> {rep['dispatch_speedup']:.1f}x"
+    )
+    log(
+        f"pool end-to-end: legacy {rep['legacy_epochs_per_sec']:.1f} vs "
+        f"pool {rep['pool_epochs_per_sec']:.1f} epochs/s -> {rep['e2e_speedup']:.2f}x"
+    )
+    if rep["dispatch_speedup"] < rep["dispatch_target"]:
+        raise GateFailure(
+            f"pool dispatch only {rep['dispatch_speedup']:.1f}x "
+            f"(target >= {rep['dispatch_target']:.0f}x)"
+        )
+    if rep["e2e_speedup"] <= 1.0:
+        raise GateFailure(f"pool end-to-end {rep['e2e_speedup']:.2f}x is not an improvement")
+    if not rep["pass"]:
+        raise GateFailure("pool bench reported overall FAIL")
+
+
+# gate name -> (report filename, checker)
+GATES = {
+    "sparse": ("BENCH_sparse_vs_dense.json", check_sparse_vs_dense),
+    "epoch": ("BENCH_epoch_pass.json", check_epoch_pass),
+    "contention": ("BENCH_contention.json", check_contention),
+    "pool": ("BENCH_pool.json", check_pool),
+}
+
+
+def append_step_summary(line):
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if path:
+        with open(path, "a", encoding="utf-8") as f:
+            f.write(line + "\n")
+
+
+def run_gates(results_dir, only, log=print):
+    """Run the selected gates; returns the list of failure messages."""
+    failures = []
+    for name in only:
+        filename, checker = GATES[name]
+        path = Path(results_dir) / filename
+        if not path.is_file():
+            failures.append(f"{name}: missing report {path}")
+            append_step_summary(f"❌ bench gate `{name}`: missing {filename}")
+            continue
+        try:
+            checker(json.loads(path.read_text()), log)
+        except GateFailure as e:
+            failures.append(f"{name}: {e}")
+            append_step_summary(f"❌ bench gate `{name}`: {e}")
+        except (KeyError, TypeError, ValueError) as e:
+            failures.append(f"{name}: malformed report {filename} ({e!r})")
+            append_step_summary(f"❌ bench gate `{name}`: malformed report ({e!r})")
+        else:
+            append_step_summary(f"✅ bench gate `{name}` passed")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--results",
+        default="rust/results",
+        help="directory holding the BENCH_*.json reports (default: rust/results)",
+    )
+    ap.add_argument(
+        "--only",
+        default=",".join(GATES),
+        help=f"comma list of gates to run (default: all of {','.join(GATES)})",
+    )
+    args = ap.parse_args(argv)
+    only = [g.strip() for g in args.only.split(",") if g.strip()]
+    unknown = [g for g in only if g not in GATES]
+    if unknown:
+        ap.error(f"unknown gate(s) {unknown}; choose from {','.join(GATES)}")
+    failures = run_gates(args.results, only)
+    for f in failures:
+        print(f"FAIL {f}", file=sys.stderr)
+    if failures:
+        return 1
+    print(f"all bench gates passed: {', '.join(only)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

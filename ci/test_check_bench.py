@@ -1,0 +1,169 @@
+"""Tests for the bench-gate checker (ci/check_bench.py).
+
+Each gate gets a canned passing report and targeted mutations that must
+fail, exercised through both the checker functions and the `main` CLI
+surface (exit codes, --only selection, missing/malformed reports, step
+summary writing).
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+import check_bench  # noqa: E402
+
+
+def passing_reports():
+    return {
+        "BENCH_sparse_vs_dense.json": {"sparse_speedup": 12.5, "density": 0.005},
+        "BENCH_epoch_pass.json": {"epoch_speedup": 8.0, "density": 0.004},
+        "BENCH_contention.json": {
+            "host_cores": 4,
+            "fitted": {"kappa": 0.31, "collision_ns": 45.0},
+            "tolerance": 0.3,
+            "predictions": [
+                {
+                    "threads": 2,
+                    "gated": True,
+                    "measured_throughput": 1.0e7,
+                    "predicted_throughput": 1.1e7,
+                    "rel_err": 0.1,
+                },
+                {
+                    "threads": 16,
+                    "gated": False,
+                    "measured_throughput": 2.0e7,
+                    "predicted_throughput": 9.0e7,
+                    "rel_err": 3.5,
+                },
+            ],
+            "points": [
+                {"threads": 1, "collision_rate": 0.0},
+                {"threads": 2, "collision_rate": 0.02},
+                {"threads": 4, "collision_rate": 0.05},
+            ],
+            "telemetry_overhead": 0.01,
+            "overhead_limit": 0.05,
+            "pass": True,
+        },
+        "BENCH_pool.json": {
+            "spawn_us_per_phase": 120.0,
+            "pool_us_per_phase": 10.0,
+            "dispatch_speedup": 12.0,
+            "dispatch_target": 5.0,
+            "legacy_epochs_per_sec": 40.0,
+            "pool_epochs_per_sec": 55.0,
+            "e2e_speedup": 1.4,
+            "pass": True,
+        },
+    }
+
+
+@pytest.fixture
+def results_dir(tmp_path):
+    for name, rep in passing_reports().items():
+        (tmp_path / name).write_text(json.dumps(rep))
+    return tmp_path
+
+
+def run_main(results_dir, only=None):
+    argv = ["--results", str(results_dir)]
+    if only:
+        argv += ["--only", only]
+    return check_bench.main(argv)
+
+
+def test_all_gates_pass_on_canned_reports(results_dir, capsys):
+    assert run_main(results_dir) == 0
+    assert "all bench gates passed" in capsys.readouterr().out
+
+
+@pytest.mark.parametrize(
+    "filename,mutate,expect",
+    [
+        ("BENCH_sparse_vs_dense.json", {"sparse_speedup": 3.0}, "sparse"),
+        ("BENCH_epoch_pass.json", {"epoch_speedup": 2.0}, "epoch"),
+        ("BENCH_epoch_pass.json", {"density": 0.5}, "epoch"),
+        ("BENCH_pool.json", {"dispatch_speedup": 1.2}, "pool"),
+        ("BENCH_pool.json", {"e2e_speedup": 0.9}, "pool"),
+        ("BENCH_pool.json", {"pass": False}, "pool"),
+        ("BENCH_contention.json", {"telemetry_overhead": 0.2}, "contention"),
+        ("BENCH_contention.json", {"pass": False}, "contention"),
+    ],
+)
+def test_threshold_violations_fail(results_dir, capsys, filename, mutate, expect):
+    path = results_dir / filename
+    rep = json.loads(path.read_text())
+    rep.update(mutate)
+    path.write_text(json.dumps(rep))
+    assert run_main(results_dir) == 1
+    assert expect in capsys.readouterr().err
+
+
+def test_gated_prediction_error_fails_but_oversubscribed_does_not(results_dir, capsys):
+    path = results_dir / "BENCH_contention.json"
+    rep = json.loads(path.read_text())
+    # the ungated point is already 3.5x off and must not trip the gate
+    assert run_main(results_dir) == 0
+    capsys.readouterr()
+    rep["predictions"][0]["rel_err"] = 0.9  # gated point now out of tolerance
+    path.write_text(json.dumps(rep))
+    assert run_main(results_dir) == 1
+    assert "prediction off by" in capsys.readouterr().err
+
+
+def test_collision_rate_monotonicity_only_below_core_count(results_dir, capsys):
+    path = results_dir / "BENCH_contention.json"
+    rep = json.loads(path.read_text())
+    # a dip beyond host_cores is ignored...
+    rep["points"].append({"threads": 16, "collision_rate": 0.0})
+    path.write_text(json.dumps(rep))
+    assert run_main(results_dir) == 0
+    capsys.readouterr()
+    # ...a dip within it fails
+    rep["points"][2]["collision_rate"] = 0.001
+    path.write_text(json.dumps(rep))
+    assert run_main(results_dir) == 1
+    assert "not monotone" in capsys.readouterr().err
+
+
+def test_only_selects_gates(results_dir, capsys):
+    (results_dir / "BENCH_pool.json").write_text(json.dumps({"pass": False}))
+    assert run_main(results_dir, only="sparse,epoch") == 0
+    capsys.readouterr()
+    assert run_main(results_dir, only="pool") == 1
+
+
+def test_unknown_gate_is_a_usage_error(results_dir):
+    with pytest.raises(SystemExit) as e:
+        run_main(results_dir, only="frobnicate")
+    assert e.value.code == 2
+
+
+def test_missing_report_fails_with_filename(tmp_path, capsys):
+    assert run_main(tmp_path, only="sparse") == 1
+    assert "missing report" in capsys.readouterr().err
+
+
+def test_malformed_report_fails_not_crashes(results_dir, capsys):
+    (results_dir / "BENCH_pool.json").write_text(json.dumps({"unexpected": True}))
+    assert run_main(results_dir, only="pool") == 1
+    assert "malformed report" in capsys.readouterr().err
+
+
+def test_step_summary_lines_written(results_dir, tmp_path, monkeypatch):
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    assert run_main(results_dir) == 0
+    lines = summary.read_text().splitlines()
+    assert len(lines) == len(check_bench.GATES)
+    assert all(line.startswith("✅") for line in lines)
+    summary.write_text("")
+    (results_dir / "BENCH_sparse_vs_dense.json").write_text(
+        json.dumps({"sparse_speedup": 1.0, "density": 0.005})
+    )
+    assert run_main(results_dir, only="sparse") == 1
+    assert summary.read_text().startswith("❌")

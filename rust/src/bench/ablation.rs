@@ -12,8 +12,11 @@
 //! integration tests.
 
 use crate::config::{RunConfig, Scheme, Storage};
+use crate::coordinator::asysvrg::{run_asysvrg, SvrgOption};
 use crate::coordinator::epoch::parallel_full_grad;
+use crate::coordinator::monitor::RunResult;
 use crate::objective::Objective;
+use crate::sched::{run_virtual, Policy};
 use crate::simcore::{
     full_grad_phase_ns, simulate_inner_opts, ContentionBilling, CostModel, EngineOpts, ReadModel,
     RuntimeDispatch, SimTask,
@@ -336,6 +339,52 @@ pub fn sweep_pool(
     .collect()
 }
 
+/// Schedule ablation (DESIGN.md §9): the identical sparse AsySVRG run
+/// under each deterministic interleaving policy of the virtual scheduler
+/// (`crate::sched`), plus a real-thread baseline. Unlike the simulator
+/// axes this executes the *actual* inner loops — no cost model — so the
+/// seconds column is wall-clock and the interesting columns are max τ̂ and
+/// the final gap: what schedule pessimism costs in convergence.
+pub fn sweep_schedule(
+    obj: &Objective,
+    fstar: f64,
+    threads: usize,
+    epochs: usize,
+) -> Vec<AblationPoint> {
+    let cfg = RunConfig {
+        threads,
+        scheme: Scheme::Unlock,
+        eta: 0.2,
+        epochs,
+        target_gap: 0.0,
+        storage: Storage::Sparse,
+        ..Default::default()
+    };
+    let w0 = vec![0.0f32; obj.dim()];
+    let f0 = obj.loss(&w0);
+    let point = |label: &str, r: &RunResult| {
+        let loss = r.final_loss();
+        let diverged = !loss.is_finite() || loss > 10.0 * f0;
+        AblationPoint {
+            label: label.to_string(),
+            final_gap: if diverged { f64::INFINITY } else { loss - fstar },
+            sim_seconds: r.total_seconds,
+            max_delay: r.max_delay,
+            diverged,
+        }
+    };
+    let mut pts: Vec<AblationPoint> = Policy::all()
+        .into_iter()
+        .map(|policy| {
+            let r = run_virtual(obj, &cfg, SvrgOption::CurrentIterate, policy, fstar);
+            point(policy.name(), &r)
+        })
+        .collect();
+    let timed = run_asysvrg(obj, &cfg, SvrgOption::CurrentIterate, fstar);
+    pts.push(point("threads", &timed));
+    pts
+}
+
 /// Uniform vs skewed core speeds (Assumption 3 stress).
 pub fn sweep_core_speeds(
     obj: &Objective,
@@ -519,6 +568,28 @@ mod tests {
             pool.sim_seconds,
             spawn.sim_seconds
         );
+    }
+
+    #[test]
+    fn schedule_sweep_adversarial_dominates_staleness() {
+        let (o, fs) = setup();
+        let pts = sweep_schedule(&o, fs, 3, 2);
+        assert_eq!(pts.len(), 5); // 4 policies + real-thread baseline
+        for p in &pts {
+            assert!(!p.diverged, "{} diverged", p.label);
+            assert!(p.final_gap.is_finite(), "{}", p.label);
+        }
+        // the adversarial schedule realizes the worst staleness of them all
+        let adv = pts.iter().find(|p| p.label == "adversarial").unwrap();
+        for p in &pts {
+            assert!(
+                adv.max_delay >= p.max_delay,
+                "{} tau {} exceeds adversarial {}",
+                p.label,
+                p.max_delay,
+                adv.max_delay
+            );
+        }
     }
 
     #[test]

@@ -86,14 +86,10 @@ pub fn run_hogwild_on(
                 pool.run_phase(p, |a| {
                     let mut rng = Pcg32::for_thread(seed, a);
                     let mut local = slots.write(a);
-                    for _ in 0..iters {
-                        let i = rng.below(n);
-                        let read_clock = shared.read_into(&mut local);
-                        let r = obj.residual(&local, i);
-                        let apply_clock =
-                            shared.apply_sgd_step(obj.data.row(i), r, obj.lam, &local, gamma);
-                        delays.record(read_clock, apply_clock);
-                    }
+                    crate::coordinator::step::WorkerStep::dense_hogwild(
+                        obj, shared, gamma, iters, &mut rng, &mut local, delays,
+                    )
+                    .run_to_end();
                 });
             }
         }

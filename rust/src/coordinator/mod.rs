@@ -7,6 +7,8 @@
 //!   corrections via per-coordinate clocks)
 //! * [`asysvrg`] — Algorithm 1 driver (Options 1 & 2)
 //! * [`hogwild`] — the Hogwild! baseline under identical disciplines
+//! * [`step`] — the resumable worker-step state machine both the thread
+//!   pool and the virtual scheduler (`crate::sched`) drive
 //! * [`delay`] — bounded-delay (τ) instrumentation
 //! * [`telemetry`] — sampled hot-coordinate collision telemetry
 //!   (DESIGN.md §6)
@@ -19,6 +21,7 @@ pub mod hogwild;
 pub mod monitor;
 pub mod shared;
 pub mod sparse;
+pub mod step;
 pub mod telemetry;
 pub mod worker;
 

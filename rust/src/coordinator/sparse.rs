@@ -64,7 +64,6 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::config::Scheme;
 use crate::coordinator::delay::DelayStats;
 use crate::coordinator::epoch::EpochGradient;
 use crate::coordinator::shared::SharedParams;
@@ -387,6 +386,206 @@ impl LazyState {
 /// r_i(u₀) (0 for Hogwild!, whose direction uses r alone). Returns
 /// (read_clock, apply_clock) for staleness accounting.
 ///
+/// Micro-state of one in-flight sparse update, split at the yield points
+/// the virtual scheduler interleaves on (DESIGN.md §9): clock capture →
+/// fused catch-up/margin read pass → residual → scatter write → clock
+/// bump. The threaded hot path (`sparse_update`) composes the segments
+/// back-to-back, so the `runtime::pool` drivers and the `sched::` virtual
+/// scheduler execute the identical arithmetic in the identical order —
+/// the segments are the single source of truth for the update.
+pub(crate) struct SparseIter {
+    i: usize,
+    r0: f32,
+    /// Clock pinned at segment start — the staleness window's left edge.
+    now: u64,
+    dot: f32,
+    dr: f32,
+    t_writes: u64,
+    t_colls: u64,
+    t_retries: u64,
+    t_touches: u64,
+    t_head: u64,
+}
+
+impl SparseIter {
+    /// Segment 1 (sample): pin the read clock for instance `i`.
+    #[inline]
+    pub(crate) fn start(shared: &SharedParams, i: usize, r0: f32) -> Self {
+        SparseIter {
+            i,
+            r0,
+            now: shared.clock(),
+            dot: 0.0,
+            dr: 0.0,
+            t_writes: 0,
+            t_colls: 0,
+            t_retries: 0,
+            t_touches: 0,
+            t_head: 0,
+        }
+    }
+
+    /// The clock this update read at (for `DelayStats` and the adversarial
+    /// scheduling policy, which always runs the oldest read).
+    #[inline]
+    pub(crate) fn read_clock(&self) -> u64 {
+        self.now
+    }
+
+    /// Segment 2 (snapshot read): fused catch-up + margin pass — each
+    /// touched coordinate is loaded once, fast-forwarded if stale, and fed
+    /// straight into the margin dot (one shared-memory pass instead of a
+    /// write pass plus a re-read pass).
+    #[inline]
+    pub(crate) fn read_pass(
+        &mut self,
+        obj: &Objective,
+        shared: &SharedParams,
+        lazy: &LazyState,
+        cas: bool,
+        telem: Option<&ContentionStats>,
+    ) {
+        let data = shared.data();
+        let row = obj.data.row(self.i);
+        let now = self.now;
+        let mut dot = 0.0f32;
+        for (k, &j) in row.indices.iter().enumerate() {
+            let ju = j as usize;
+            let prev = lazy.last[ju].fetch_max(now, Ordering::Relaxed);
+            if let Some(tm) = telem {
+                // scalar counters stay in registers; only the histogram pays
+                // an atomic per touch
+                self.t_touches += 1;
+                if ju < tm.head_boundary() {
+                    self.t_head += 1;
+                }
+                tm.record_touch_hist(ju);
+                // a concurrent update already advanced j past our start clock:
+                // this iteration's window overlaps a foreign write to j
+                if prev > now {
+                    self.t_colls += 1;
+                }
+            }
+            let u = if prev < now {
+                let steps = now - prev;
+                if cas {
+                    // Σû absorbs the missed ticks from a pre-read of the same
+                    // cell (exact single-threaded; racy under contention like
+                    // every other Hogwild-style quantity — the CAS retry
+                    // closure cannot carry the sum without double-counting)
+                    lazy.record_drift(ju, data.get(ju), steps);
+                    if telem.is_some() {
+                        self.t_writes += 1;
+                        let (fresh, retries) =
+                            data.update_cas_counted(ju, |u| lazy.caught_up(ju, u, steps));
+                        self.t_retries += retries as u64;
+                        if retries > 0 {
+                            self.t_colls += 1; // this write collided (0/1, not per retry)
+                        }
+                        fresh
+                    } else {
+                        data.update_cas(ju, |u| lazy.caught_up(ju, u, steps))
+                    }
+                } else {
+                    // fused: one a^k evaluation covers both the catch-up and
+                    // the Σû partial sum
+                    let fresh = lazy.advance(ju, data.get(ju), steps);
+                    data.set(ju, fresh);
+                    if telem.is_some() {
+                        self.t_writes += 1;
+                    }
+                    fresh
+                }
+            } else {
+                data.get(ju)
+            };
+            lazy.record_touch(ju, u);
+            dot += u * row.values[k];
+        }
+        self.dot = dot;
+    }
+
+    /// Segment 3 (gradient): margin → residual difference r(û,i) − r₀.
+    #[inline]
+    pub(crate) fn residual(&mut self, obj: &Objective) {
+        let y = obj.data.label(self.i);
+        let r = obj.kind.dphi(y * self.dot) * y;
+        self.dr = r - self.r0;
+    }
+
+    /// Segment 4 (scatter write): apply −η(dr·x_ij + dense term) per
+    /// touched coordinate under the CAS or racy discipline.
+    #[inline]
+    pub(crate) fn scatter(
+        &mut self,
+        obj: &Objective,
+        shared: &SharedParams,
+        lazy: &LazyState,
+        cas: bool,
+        telem: Option<&ContentionStats>,
+    ) {
+        let data = shared.data();
+        let row = obj.data.row(self.i);
+        let eta = lazy.eta;
+        let dr = self.dr;
+        for (k, &j) in row.indices.iter().enumerate() {
+            let ju = j as usize;
+            let xij = row.values[k];
+            if telem.is_some() {
+                self.t_writes += 1;
+            }
+            if cas {
+                if telem.is_some() {
+                    let (_, retries) = data
+                        .update_cas_counted(ju, |u| u - eta * (lazy.dense_term(ju, u) + dr * xij));
+                    self.t_retries += retries as u64;
+                    if retries > 0 {
+                        self.t_colls += 1;
+                    }
+                } else {
+                    data.update_cas(ju, |u| u - eta * (lazy.dense_term(ju, u) + dr * xij));
+                }
+            } else {
+                let u = data.get(ju);
+                let fresh = u - eta * (lazy.dense_term(ju, u) + dr * xij);
+                data.set(ju, fresh);
+                // sampled write-after-write detector: a re-read that does not
+                // see our bits means another writer landed in the store window
+                if telem.is_some() && data.get(ju).to_bits() != fresh.to_bits() {
+                    self.t_colls += 1;
+                }
+            }
+        }
+    }
+
+    /// Segment 5 (clock bump): stamp the touched clocks at the new apply
+    /// clock and flush the telemetry locals. Returns (read, apply) for
+    /// `DelayStats`.
+    #[inline]
+    pub(crate) fn finish(
+        self,
+        obj: &Objective,
+        shared: &SharedParams,
+        lazy: &LazyState,
+        telem: Option<&ContentionStats>,
+    ) -> (u64, u64) {
+        let row = obj.data.row(self.i);
+        let apply = shared.bump_clock();
+        // the touched coordinates absorbed their own correction eagerly
+        for &j in row.indices {
+            lazy.last[j as usize].fetch_max(apply, Ordering::Relaxed);
+        }
+        if let Some(tm) = telem {
+            // the detectors can fire twice for one coordinate (clock overlap in
+            // the catch-up pass + a WAW/retry on its scatter write); clamping
+            // to the write count keeps collision_rate a probability per write
+            tm.record_update(self.t_writes, self.t_colls.min(self.t_writes), self.t_retries);
+            tm.record_touches(self.t_touches, self.t_head);
+        }
+        (self.now, apply)
+    }
+}
+
 /// `telem = Some(..)` marks this update as telemetry-sampled: touched
 /// coordinates, write collisions (clock overlaps, racy overwrites, CAS
 /// retries) and write counts are accumulated locally and flushed once at
@@ -401,116 +600,11 @@ fn sparse_update(
     cas: bool,
     telem: Option<&ContentionStats>,
 ) -> (u64, u64) {
-    let data = shared.data();
-    let row = obj.data.row(i);
-    let eta = lazy.eta;
-    let now = shared.clock();
-    let mut t_writes = 0u64;
-    let mut t_colls = 0u64;
-    let mut t_retries = 0u64;
-    let mut t_touches = 0u64;
-    let mut t_head = 0u64;
-    // fused catch-up + margin pass: each touched coordinate is loaded once,
-    // fast-forwarded if stale, and fed straight into the margin dot (one
-    // shared-memory pass instead of a write pass plus a re-read pass)
-    let mut dot = 0.0f32;
-    for (k, &j) in row.indices.iter().enumerate() {
-        let ju = j as usize;
-        let prev = lazy.last[ju].fetch_max(now, Ordering::Relaxed);
-        if let Some(tm) = telem {
-            // scalar counters stay in registers; only the histogram pays
-            // an atomic per touch
-            t_touches += 1;
-            if ju < tm.head_boundary() {
-                t_head += 1;
-            }
-            tm.record_touch_hist(ju);
-            // a concurrent update already advanced j past our start clock:
-            // this iteration's window overlaps a foreign write to j
-            if prev > now {
-                t_colls += 1;
-            }
-        }
-        let u = if prev < now {
-            let steps = now - prev;
-            if cas {
-                // Σû absorbs the missed ticks from a pre-read of the same
-                // cell (exact single-threaded; racy under contention like
-                // every other Hogwild-style quantity — the CAS retry
-                // closure cannot carry the sum without double-counting)
-                lazy.record_drift(ju, data.get(ju), steps);
-                if telem.is_some() {
-                    t_writes += 1;
-                    let (fresh, retries) =
-                        data.update_cas_counted(ju, |u| lazy.caught_up(ju, u, steps));
-                    t_retries += retries as u64;
-                    if retries > 0 {
-                        t_colls += 1; // this write collided (0/1, not per retry)
-                    }
-                    fresh
-                } else {
-                    data.update_cas(ju, |u| lazy.caught_up(ju, u, steps))
-                }
-            } else {
-                // fused: one a^k evaluation covers both the catch-up and
-                // the Σû partial sum
-                let fresh = lazy.advance(ju, data.get(ju), steps);
-                data.set(ju, fresh);
-                if telem.is_some() {
-                    t_writes += 1;
-                }
-                fresh
-            }
-        } else {
-            data.get(ju)
-        };
-        lazy.record_touch(ju, u);
-        dot += u * row.values[k];
-    }
-    let y = obj.data.label(i);
-    let r = obj.kind.dphi(y * dot) * y;
-    let dr = r - r0;
-    for (k, &j) in row.indices.iter().enumerate() {
-        let ju = j as usize;
-        let xij = row.values[k];
-        if telem.is_some() {
-            t_writes += 1;
-        }
-        if cas {
-            if telem.is_some() {
-                let (_, retries) =
-                    data.update_cas_counted(ju, |u| u - eta * (lazy.dense_term(ju, u) + dr * xij));
-                t_retries += retries as u64;
-                if retries > 0 {
-                    t_colls += 1;
-                }
-            } else {
-                data.update_cas(ju, |u| u - eta * (lazy.dense_term(ju, u) + dr * xij));
-            }
-        } else {
-            let u = data.get(ju);
-            let fresh = u - eta * (lazy.dense_term(ju, u) + dr * xij);
-            data.set(ju, fresh);
-            // sampled write-after-write detector: a re-read that does not
-            // see our bits means another writer landed in the store window
-            if telem.is_some() && data.get(ju).to_bits() != fresh.to_bits() {
-                t_colls += 1;
-            }
-        }
-    }
-    let apply = shared.bump_clock();
-    // the touched coordinates absorbed their own correction eagerly
-    for &j in row.indices {
-        lazy.last[j as usize].fetch_max(apply, Ordering::Relaxed);
-    }
-    if let Some(tm) = telem {
-        // the detectors can fire twice for one coordinate (clock overlap in
-        // the catch-up pass + a WAW/retry on its scatter write); clamping
-        // to the write count keeps collision_rate a probability per write
-        tm.record_update(t_writes, t_colls.min(t_writes), t_retries);
-        tm.record_touches(t_touches, t_head);
-    }
-    (now, apply)
+    let mut it = SparseIter::start(shared, i, r0);
+    it.read_pass(obj, shared, lazy, cas, telem);
+    it.residual(obj);
+    it.scatter(obj, shared, lazy, cas, telem);
+    it.finish(obj, shared, lazy, telem)
 }
 
 /// Run M sparse AsySVRG inner updates (the Alg. 1 lines 5–9 hot path at
@@ -543,18 +637,8 @@ pub fn run_inner_loop_sparse_telemetry(
     delays: &DelayStats,
     telem: Option<&ContentionStats>,
 ) -> usize {
-    let n = obj.n();
-    let scheme = shared.scheme();
-    let locked = matches!(scheme, Scheme::Consistent | Scheme::Inconsistent | Scheme::Seqlock);
-    let cas = scheme == Scheme::AtomicCas;
-    for k in 0..iters {
-        let i = rng.below(n);
-        let r0 = eg.residuals[i];
-        let sampled = telem.filter(|t| t.should_sample(k as u64));
-        let (read, apply) = locked_or_free_update(obj, shared, lazy, i, r0, cas, locked, sampled);
-        delays.record(read, apply);
-    }
-    iters
+    crate::coordinator::step::WorkerStep::sparse_svrg(obj, shared, lazy, eg, iters, rng, delays, telem)
+        .run_to_end()
 }
 
 /// Run one thread's share of a sparse Hogwild! epoch: n/p plain-SGD updates
@@ -581,24 +665,15 @@ pub fn run_hogwild_inner_sparse_telemetry(
     delays: &DelayStats,
     telem: Option<&ContentionStats>,
 ) -> usize {
-    let n = obj.n();
-    let scheme = shared.scheme();
-    let locked = matches!(scheme, Scheme::Consistent | Scheme::Inconsistent | Scheme::Seqlock);
-    let cas = scheme == Scheme::AtomicCas;
-    for k in 0..iters {
-        let i = rng.below(n);
-        let sampled = telem.filter(|t| t.should_sample(k as u64));
-        let (read, apply) = locked_or_free_update(obj, shared, lazy, i, 0.0, cas, locked, sampled);
-        delays.record(read, apply);
-    }
-    iters
+    crate::coordinator::step::WorkerStep::sparse_hogwild(obj, shared, lazy, iters, rng, delays, telem)
+        .run_to_end()
 }
 
 /// Dispatch one update through the scheme's lock discipline, recording the
 /// lock-conflict sample when this iteration is telemetry-sampled.
 #[inline]
 #[allow(clippy::too_many_arguments)]
-fn locked_or_free_update(
+pub(crate) fn locked_or_free_update(
     obj: &Objective,
     shared: &SharedParams,
     lazy: &LazyState,
@@ -625,6 +700,7 @@ fn locked_or_free_update(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Scheme;
     use crate::coordinator::epoch::parallel_full_grad;
     use crate::coordinator::worker::{run_inner_loop, WorkerScratch};
     use crate::data::synthetic::SyntheticSpec;

@@ -1,0 +1,461 @@
+//! S19: the resumable worker step — one inner-loop update as a state
+//! machine.
+//!
+//! `WorkerStep` owns everything one worker thread carries through an inner
+//! phase (rng stream, scratch buffers, iteration budget) and exposes the
+//! update as a sequence of `advance()` calls, one per yield point:
+//!
+//! | kind          | advances per update | segments                          |
+//! |---------------|---------------------|-----------------------------------|
+//! | dense         | 4                   | sample → read → grad → write+bump |
+//! | sparse (free) | 5                   | sample/clock → catch-up read →    |
+//! |               |                     | residual → scatter → bump         |
+//! | sparse (lock) | 1                   | whole update inside the lock      |
+//!
+//! The threaded drivers (`worker::run_inner_loop*`, `sparse::run_inner_*`,
+//! hogwild's dense loop) call `run_to_end()`, which replays the exact
+//! pre-refactor loop bodies — same rng draws, same arithmetic order, same
+//! staleness accounting — so wall-clock runs are bit-compatible with the
+//! old closures. The virtual scheduler (`crate::sched`) instead interleaves
+//! `advance()` calls across workers under a seeded policy, exploring
+//! schedules the OS scheduler never shows us, with full reproducibility.
+//!
+//! Two deliberate asymmetries in the yield-point map (DESIGN.md §9):
+//! - the dense write and clock bump are fused into one segment because
+//!   `SharedParams::apply_step` performs both under the scheme's write
+//!   discipline — splitting them would fork the locking logic;
+//! - locked sparse schemes run the whole update in a single `advance()`:
+//!   the critical section must not yield (std `Mutex` is not reentrant on
+//!   the scheduler's single OS thread), and the clock capture must stay
+//!   inside the lock or the overlap detector reports spurious collisions.
+
+use crate::coordinator::delay::DelayStats;
+use crate::coordinator::epoch::EpochGradient;
+use crate::coordinator::shared::SharedParams;
+use crate::coordinator::sparse::{locked_or_free_update, LazyState, SparseIter};
+use crate::coordinator::telemetry::ContentionStats;
+use crate::coordinator::worker::{dense_grad, dense_read, dense_write, WorkerScratch};
+use crate::config::Scheme;
+use crate::objective::Objective;
+use crate::util::rng::Pcg32;
+
+/// Where a worker is inside its current update. `Ready` doubles as "between
+/// updates": an `advance()` from any terminal segment lands back on it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Between updates — next advance samples i (and pins the read clock on
+    /// the sparse path).
+    Ready,
+    /// Instance sampled; sparse updates have pinned their read clock.
+    Sampled,
+    /// Snapshot / catch-up read done.
+    ReadDone,
+    /// Gradient (residual difference) computed.
+    GradDone,
+    /// Scatter write done, clock bump pending (sparse free path only).
+    WriteDone,
+}
+
+/// Result of one `advance()`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepEvent {
+    /// Moved to the given stage; `Advanced(Stage::Ready)` means an update
+    /// just completed.
+    Advanced(Stage),
+    /// All `iters` updates are done; the step is inert.
+    Finished,
+}
+
+/// Per-kind state: which inner loop this worker runs and its buffers.
+enum Kind<'a> {
+    /// Dense AsySVRG (Option 1, or Option 2 when `avg` is set).
+    DenseSvrg {
+        u0: &'a [f32],
+        eg: &'a EpochGradient,
+        eta: f32,
+        scratch: &'a mut WorkerScratch,
+        avg: Option<&'a mut [f32]>,
+    },
+    /// Dense Hogwild! SGD (`shared.apply_sgd_step` fuses write + bump).
+    DenseHogwild { gamma: f32, local: &'a mut [f32], r: f32 },
+    /// Sparse path (AsySVRG when `residuals` is set, Hogwild! otherwise),
+    /// lazy-decay state shared across workers.
+    Sparse {
+        lazy: &'a LazyState,
+        residuals: Option<&'a [f32]>,
+        telem: Option<&'a ContentionStats>,
+        iter: Option<SparseIter>,
+        sampled: bool,
+    },
+}
+
+/// A resumable inner-loop worker: `iters` updates, advanced one yield point
+/// at a time. Both the thread pool (via `run_to_end`) and the virtual
+/// scheduler (via `advance`) drive this same code.
+pub struct WorkerStep<'a> {
+    obj: &'a Objective,
+    shared: &'a SharedParams,
+    delays: &'a DelayStats,
+    rng: &'a mut Pcg32,
+    kind: Kind<'a>,
+    iters: usize,
+    done: usize,
+    stage: Stage,
+    i: usize,
+    read_clock: u64,
+    locked: bool,
+    cas: bool,
+}
+
+impl<'a> WorkerStep<'a> {
+    /// Dense AsySVRG worker; `avg = Some(acc)` accumulates Σû (Option 2).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn dense_svrg(
+        obj: &'a Objective,
+        shared: &'a SharedParams,
+        u0: &'a [f32],
+        eg: &'a EpochGradient,
+        eta: f32,
+        iters: usize,
+        rng: &'a mut Pcg32,
+        scratch: &'a mut WorkerScratch,
+        delays: &'a DelayStats,
+        avg: Option<&'a mut [f32]>,
+    ) -> Self {
+        WorkerStep {
+            obj,
+            shared,
+            delays,
+            rng,
+            kind: Kind::DenseSvrg { u0, eg, eta, scratch, avg },
+            iters,
+            done: 0,
+            stage: Stage::Ready,
+            i: 0,
+            read_clock: 0,
+            locked: false,
+            cas: false,
+        }
+    }
+
+    /// Dense Hogwild! worker (plain SGD with lazily-applied ridge decay
+    /// handled inside `apply_sgd_step`).
+    pub(crate) fn dense_hogwild(
+        obj: &'a Objective,
+        shared: &'a SharedParams,
+        gamma: f32,
+        iters: usize,
+        rng: &'a mut Pcg32,
+        local: &'a mut [f32],
+        delays: &'a DelayStats,
+    ) -> Self {
+        WorkerStep {
+            obj,
+            shared,
+            delays,
+            rng,
+            kind: Kind::DenseHogwild { gamma, local, r: 0.0 },
+            iters,
+            done: 0,
+            stage: Stage::Ready,
+            i: 0,
+            read_clock: 0,
+            locked: false,
+            cas: false,
+        }
+    }
+
+    /// Sparse AsySVRG worker over the lazy-decay state.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn sparse_svrg(
+        obj: &'a Objective,
+        shared: &'a SharedParams,
+        lazy: &'a LazyState,
+        eg: &'a EpochGradient,
+        iters: usize,
+        rng: &'a mut Pcg32,
+        delays: &'a DelayStats,
+        telem: Option<&'a ContentionStats>,
+    ) -> Self {
+        Self::sparse(obj, shared, lazy, Some(&eg.residuals[..]), iters, rng, delays, telem)
+    }
+
+    /// Sparse Hogwild! worker (no residual cache: r₀ ≡ 0).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn sparse_hogwild(
+        obj: &'a Objective,
+        shared: &'a SharedParams,
+        lazy: &'a LazyState,
+        iters: usize,
+        rng: &'a mut Pcg32,
+        delays: &'a DelayStats,
+        telem: Option<&'a ContentionStats>,
+    ) -> Self {
+        Self::sparse(obj, shared, lazy, None, iters, rng, delays, telem)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn sparse(
+        obj: &'a Objective,
+        shared: &'a SharedParams,
+        lazy: &'a LazyState,
+        residuals: Option<&'a [f32]>,
+        iters: usize,
+        rng: &'a mut Pcg32,
+        delays: &'a DelayStats,
+        telem: Option<&'a ContentionStats>,
+    ) -> Self {
+        let scheme = shared.scheme();
+        let locked =
+            matches!(scheme, Scheme::Consistent | Scheme::Inconsistent | Scheme::Seqlock);
+        let cas = scheme == Scheme::AtomicCas;
+        WorkerStep {
+            obj,
+            shared,
+            delays,
+            rng,
+            kind: Kind::Sparse { lazy, residuals, telem, iter: None, sampled: false },
+            iters,
+            done: 0,
+            stage: Stage::Ready,
+            i: 0,
+            read_clock: 0,
+            locked,
+            cas,
+        }
+    }
+
+    /// All updates applied?
+    pub fn is_done(&self) -> bool {
+        self.done >= self.iters
+    }
+
+    /// Updates fully applied so far.
+    pub fn updates_done(&self) -> usize {
+        self.done
+    }
+
+    /// Current micro-stage.
+    pub fn stage(&self) -> Stage {
+        self.stage
+    }
+
+    /// The read clock of the in-flight update, if one is pinned: the
+    /// adversarial policy keeps the worker with the *oldest* read parked to
+    /// maximize its staleness at apply time.
+    pub fn in_flight_clock(&self) -> Option<u64> {
+        match &self.kind {
+            Kind::Sparse { iter, .. } => iter.as_ref().map(|it| it.read_clock()),
+            Kind::DenseSvrg { .. } | Kind::DenseHogwild { .. } => {
+                matches!(self.stage, Stage::ReadDone | Stage::GradDone)
+                    .then_some(self.read_clock)
+            }
+        }
+    }
+
+    /// Does the in-flight update touch a head (hot) coordinate, i.e. one
+    /// with index < `head`? Dense updates touch every coordinate; sparse
+    /// ones only their row support. `false` between updates.
+    pub fn touches_head(&self, head: usize) -> bool {
+        if self.stage == Stage::Ready {
+            return false;
+        }
+        match &self.kind {
+            Kind::DenseSvrg { .. } | Kind::DenseHogwild { .. } => true,
+            Kind::Sparse { .. } => {
+                self.obj.data.row(self.i).indices.iter().any(|&j| (j as usize) < head)
+            }
+        }
+    }
+
+    /// Run one micro-segment. The segment boundaries are the yield points
+    /// listed in the module docs; the arithmetic inside each is byte-for-
+    /// byte the pre-refactor loop body.
+    pub fn advance(&mut self) -> StepEvent {
+        if self.done >= self.iters {
+            return StepEvent::Finished;
+        }
+        let obj = self.obj;
+        let shared = self.shared;
+        match &mut self.kind {
+            Kind::DenseSvrg { u0, eg, eta, scratch, avg } => match self.stage {
+                Stage::Ready => {
+                    self.i = self.rng.below(obj.n());
+                    self.stage = Stage::Sampled;
+                }
+                Stage::Sampled => {
+                    self.read_clock = dense_read(shared, scratch);
+                    self.stage = Stage::ReadDone;
+                }
+                Stage::ReadDone => {
+                    dense_grad(obj, u0, eg, self.i, scratch, avg.as_deref_mut());
+                    self.stage = Stage::GradDone;
+                }
+                // write + clock bump are fused under the scheme's lock
+                Stage::GradDone | Stage::WriteDone => {
+                    let apply = dense_write(shared, scratch, *eta);
+                    self.delays.record(self.read_clock, apply);
+                    self.done += 1;
+                    self.stage = Stage::Ready;
+                }
+            },
+            Kind::DenseHogwild { gamma, local, r } => match self.stage {
+                Stage::Ready => {
+                    self.i = self.rng.below(obj.n());
+                    self.stage = Stage::Sampled;
+                }
+                Stage::Sampled => {
+                    self.read_clock = shared.read_into(local);
+                    self.stage = Stage::ReadDone;
+                }
+                Stage::ReadDone => {
+                    *r = obj.residual(local, self.i);
+                    self.stage = Stage::GradDone;
+                }
+                Stage::GradDone | Stage::WriteDone => {
+                    let apply =
+                        shared.apply_sgd_step(obj.data.row(self.i), *r, obj.lam, local, *gamma);
+                    self.delays.record(self.read_clock, apply);
+                    self.done += 1;
+                    self.stage = Stage::Ready;
+                }
+            },
+            Kind::Sparse { lazy, residuals, telem, iter, sampled } => {
+                if self.locked {
+                    // the whole locked update is one atomic segment: the
+                    // mutex is not reentrant on the scheduler's single OS
+                    // thread, and the clock capture must stay inside the
+                    // critical section (see module docs)
+                    let i = self.rng.below(obj.n());
+                    let r0 = residuals.map_or(0.0, |r| r[i]);
+                    let s = telem.filter(|t| t.should_sample(self.done as u64));
+                    let (read, apply) =
+                        locked_or_free_update(obj, shared, *lazy, i, r0, self.cas, true, s);
+                    self.delays.record(read, apply);
+                    self.done += 1;
+                    self.stage = Stage::Ready;
+                } else {
+                    match self.stage {
+                        Stage::Ready => {
+                            let i = self.rng.below(obj.n());
+                            self.i = i;
+                            let r0 = residuals.map_or(0.0, |r| r[i]);
+                            // the telemetry-sampling decision is per update,
+                            // made once at sample time like the loop did
+                            *sampled =
+                                telem.filter(|t| t.should_sample(self.done as u64)).is_some();
+                            *iter = Some(SparseIter::start(shared, i, r0));
+                            self.stage = Stage::Sampled;
+                        }
+                        Stage::Sampled => {
+                            let tm = if *sampled { *telem } else { None };
+                            iter.as_mut().unwrap().read_pass(obj, shared, lazy, self.cas, tm);
+                            self.stage = Stage::ReadDone;
+                        }
+                        Stage::ReadDone => {
+                            iter.as_mut().unwrap().residual(obj);
+                            self.stage = Stage::GradDone;
+                        }
+                        Stage::GradDone => {
+                            let tm = if *sampled { *telem } else { None };
+                            iter.as_mut().unwrap().scatter(obj, shared, lazy, self.cas, tm);
+                            self.stage = Stage::WriteDone;
+                        }
+                        Stage::WriteDone => {
+                            let tm = if *sampled { *telem } else { None };
+                            let it = iter.take().unwrap();
+                            let (read, apply) = it.finish(obj, shared, lazy, tm);
+                            self.delays.record(read, apply);
+                            self.done += 1;
+                            self.stage = Stage::Ready;
+                        }
+                    }
+                }
+            }
+        }
+        StepEvent::Advanced(self.stage)
+    }
+
+    /// Drive to completion on the current thread — the threaded loops'
+    /// driver. Returns the number of updates applied (== iters).
+    pub fn run_to_end(mut self) -> usize {
+        while !matches!(self.advance(), StepEvent::Finished) {}
+        self.done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::epoch::parallel_full_grad;
+    use crate::coordinator::sparse::LazyState;
+    use crate::data::synthetic::SyntheticSpec;
+    use std::sync::Arc;
+
+    fn setup() -> (Objective, Vec<f32>) {
+        let ds = SyntheticSpec::new("step", 64, 32, 6, 3).generate();
+        let obj = Objective::paper(Arc::new(ds));
+        let w = vec![0.0f32; obj.dim()];
+        (obj, w)
+    }
+
+    /// One dense update = exactly 4 advances; completion events land on
+    /// `Advanced(Ready)`.
+    #[test]
+    fn dense_cycle_is_four_segments() {
+        let (obj, w0) = setup();
+        let eg = parallel_full_grad(&obj, &w0, 1);
+        let shared = SharedParams::new(&w0, Scheme::Unlock);
+        let mut rng = Pcg32::new(3, 1);
+        let mut scratch = WorkerScratch::new(obj.dim());
+        let delays = DelayStats::new();
+        let mut step = WorkerStep::dense_svrg(
+            &obj, &shared, &w0, &eg, 0.05, 2, &mut rng, &mut scratch, &delays, None,
+        );
+        let events: Vec<StepEvent> = (0..8).map(|_| step.advance()).collect();
+        assert_eq!(events[3], StepEvent::Advanced(Stage::Ready));
+        assert_eq!(events[7], StepEvent::Advanced(Stage::Ready));
+        assert_eq!(step.updates_done(), 2);
+        assert_eq!(step.advance(), StepEvent::Finished);
+        assert_eq!(shared.clock(), 2);
+    }
+
+    /// One free-scheme sparse update = exactly 5 advances.
+    #[test]
+    fn sparse_free_cycle_is_five_segments() {
+        let (obj, w0) = setup();
+        let eg = parallel_full_grad(&obj, &w0, 1);
+        let shared = SharedParams::new(&w0, Scheme::Unlock);
+        let lazy = LazyState::new(&w0, &eg.mu, obj.lam, 0.05, shared.clock());
+        let mut rng = Pcg32::new(3, 1);
+        let delays = DelayStats::new();
+        let mut step =
+            WorkerStep::sparse_svrg(&obj, &shared, &lazy, &eg, 1, &mut rng, &delays, None);
+        assert_eq!(step.advance(), StepEvent::Advanced(Stage::Sampled));
+        assert!(step.in_flight_clock().is_some());
+        assert_eq!(step.advance(), StepEvent::Advanced(Stage::ReadDone));
+        assert_eq!(step.advance(), StepEvent::Advanced(Stage::GradDone));
+        assert_eq!(step.advance(), StepEvent::Advanced(Stage::WriteDone));
+        assert_eq!(step.advance(), StepEvent::Advanced(Stage::Ready));
+        assert_eq!(step.updates_done(), 1);
+        assert_eq!(step.advance(), StepEvent::Finished);
+    }
+
+    /// Locked sparse schemes complete a whole update per advance.
+    #[test]
+    fn sparse_locked_cycle_is_one_segment() {
+        let (obj, w0) = setup();
+        let eg = parallel_full_grad(&obj, &w0, 1);
+        let shared = SharedParams::new(&w0, Scheme::Inconsistent);
+        let lazy = LazyState::new(&w0, &eg.mu, obj.lam, 0.05, shared.clock());
+        let mut rng = Pcg32::new(3, 1);
+        let delays = DelayStats::new();
+        let mut step =
+            WorkerStep::sparse_svrg(&obj, &shared, &lazy, &eg, 3, &mut rng, &delays, None);
+        for k in 1..=3 {
+            assert_eq!(step.advance(), StepEvent::Advanced(Stage::Ready));
+            assert_eq!(step.updates_done(), k);
+        }
+        assert_eq!(step.advance(), StepEvent::Finished);
+    }
+}

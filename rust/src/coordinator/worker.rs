@@ -33,6 +33,58 @@ impl WorkerScratch {
     }
 }
 
+/// Segment 1 of the dense update — the O(d) snapshot read. Split out so the
+/// threaded loop and the virtual scheduler (`coordinator::step`) execute the
+/// same code between the same yield points.
+///
+/// NOTE (perf iteration 1, EXPERIMENTS.md §Perf): fusing this read
+/// with the dense v-build (`SharedParams::read_and_build_svrg`) was
+/// tried and REVERTED — interleaving relaxed-atomic loads with the
+/// arithmetic defeats LLVM's vectorization of the math pass and
+/// costs ~15% (3.0 → 3.5 µs/update). Two clean passes win.
+#[inline]
+pub(crate) fn dense_read(shared: &SharedParams, scratch: &mut WorkerScratch) -> u64 {
+    shared.read_into(&mut scratch.u_hat)
+}
+
+/// Segment 2 — the full variance-reduced direction v in `scratch.v`. With
+/// `avg = Some(..)` (Option 2) the û snapshot is accumulated first, exactly
+/// where the averaging loop did it.
+#[inline]
+pub(crate) fn dense_grad(
+    obj: &Objective,
+    u0: &[f32],
+    eg: &EpochGradient,
+    i: usize,
+    scratch: &mut WorkerScratch,
+    avg: Option<&mut [f32]>,
+) {
+    let lam = obj.lam;
+    let mu = &eg.mu;
+    if let Some(acc) = avg {
+        for j in 0..scratch.u_hat.len() {
+            acc[j] += scratch.u_hat[j];
+        }
+    }
+    // residual at û (sparse dot on the local copy)
+    let r = obj.residual(&scratch.u_hat, i);
+    let dr = r - eg.residuals[i];
+    // dense part: λ(û − u₀) + μ̄
+    for j in 0..scratch.v.len() {
+        scratch.v[j] = lam * (scratch.u_hat[j] - u0[j]) + mu[j];
+    }
+    // sparse part: (r − r₀)·x_i
+    obj.data.row(i).axpy_into(dr, &mut scratch.v);
+}
+
+/// Segment 3 — apply −ηv under the scheme's write discipline and bump the
+/// clock (fused: the scheme's lock covers both, so there is no yield point
+/// between write and bump — see DESIGN.md §9).
+#[inline]
+pub(crate) fn dense_write(shared: &SharedParams, scratch: &WorkerScratch, eta: f32) -> u64 {
+    shared.apply_step(&scratch.v, eta)
+}
+
 /// Run M inner updates of AsySVRG on `shared`. `u0` is the epoch snapshot
 /// w_t, `eg` the epoch gradient (μ̄ + residual cache). Returns the number
 /// of updates applied (== iters).
@@ -48,30 +100,10 @@ pub fn run_inner_loop(
     scratch: &mut WorkerScratch,
     delays: &DelayStats,
 ) -> usize {
-    let n = obj.n();
-    let lam = obj.lam;
-    let mu = &eg.mu;
-    for _ in 0..iters {
-        let i = rng.below(n);
-        // NOTE (perf iteration 1, EXPERIMENTS.md §Perf): fusing this read
-        // with the dense v-build (`SharedParams::read_and_build_svrg`) was
-        // tried and REVERTED — interleaving relaxed-atomic loads with the
-        // arithmetic defeats LLVM's vectorization of the math pass and
-        // costs ~15% (3.0 → 3.5 µs/update). Two clean passes win.
-        let read_clock = shared.read_into(&mut scratch.u_hat);
-        // residual at û (sparse dot on the local copy)
-        let r = obj.residual(&scratch.u_hat, i);
-        let dr = r - eg.residuals[i];
-        // dense part: λ(û − u₀) + μ̄
-        for j in 0..scratch.v.len() {
-            scratch.v[j] = lam * (scratch.u_hat[j] - u0[j]) + mu[j];
-        }
-        // sparse part: (r − r₀)·x_i
-        obj.data.row(i).axpy_into(dr, &mut scratch.v);
-        let apply_clock = shared.apply_step(&scratch.v, eta);
-        delays.record(read_clock, apply_clock);
-    }
-    iters
+    crate::coordinator::step::WorkerStep::dense_svrg(
+        obj, shared, u0, eg, eta, iters, rng, scratch, delays, None,
+    )
+    .run_to_end()
 }
 
 /// Option 2 of Alg. 1 needs the running average of the u_m sequence; this
@@ -89,24 +121,19 @@ pub fn run_inner_loop_averaging(
     delays: &DelayStats,
     avg_acc: &mut [f32],
 ) -> usize {
-    let n = obj.n();
-    let lam = obj.lam;
-    for _ in 0..iters {
-        let i = rng.below(n);
-        let read_clock = shared.read_into(&mut scratch.u_hat);
-        for j in 0..scratch.u_hat.len() {
-            avg_acc[j] += scratch.u_hat[j];
-        }
-        let r = obj.residual(&scratch.u_hat, i);
-        let dr = r - eg.residuals[i];
-        for j in 0..scratch.v.len() {
-            scratch.v[j] = lam * (scratch.u_hat[j] - u0[j]) + eg.mu[j];
-        }
-        obj.data.row(i).axpy_into(dr, &mut scratch.v);
-        let apply_clock = shared.apply_step(&scratch.v, eta);
-        delays.record(read_clock, apply_clock);
-    }
-    iters
+    crate::coordinator::step::WorkerStep::dense_svrg(
+        obj,
+        shared,
+        u0,
+        eg,
+        eta,
+        iters,
+        rng,
+        scratch,
+        delays,
+        Some(avg_acc),
+    )
+    .run_to_end()
 }
 
 #[cfg(test)]

@@ -34,6 +34,14 @@
 //! place, so the epoch boundary costs condvar wakes instead of thread
 //! spawns plus O(d) reallocation (DESIGN.md §8, `BENCH_pool.json`).
 //!
+//! The inner loops are also drivable by a **virtual scheduler**
+//! ([`sched`]): every update runs as a resumable state machine
+//! ([`coordinator::step`]), interleaved one micro-segment at a time under
+//! seeded deterministic policies (round-robin, random, adversarial
+//! max-staleness, forced hot-collision). Any schedule replays bit-exactly
+//! from one printed `SCHED_REPLAY` line, and CI gates merges on the
+//! pinned-seed interleaving suite (`repro sched --gate`, DESIGN.md §9).
+//!
 //! Sparse runs additionally carry **sampled contention telemetry**
 //! ([`coordinator::telemetry`]): lock-free write sets on text-shaped data
 //! collide on the Zipfian head features, and the measured collision rates
@@ -70,6 +78,7 @@ pub mod objective;
 pub mod optim;
 pub mod propcheck;
 pub mod runtime;
+pub mod sched;
 pub mod simcore;
 pub mod theory;
 pub mod util;

@@ -12,6 +12,10 @@
 //! * `calibrate`         — measure this host's simulator cost model; with
 //!   `--contention`, fit the sparse collision model from real contended
 //!   runs on a Zipfian workload (DESIGN.md §6)
+//! * `sched`             — drive the real inner loops under deterministic
+//!   interleaving policies: `--gate` is the CI race gate, `--fuzz N`
+//!   explores random schedules, `--replay '<line>'` reproduces a failure
+//!   bit-exactly (DESIGN.md §9)
 //! * `e2e`               — XLA-backed dense end-to-end training driver
 
 use asysvrg::bench::{self, report, BenchEnv};
@@ -20,6 +24,7 @@ use asysvrg::config::{Algo, RunConfig, Scheme, Storage};
 use asysvrg::coordinator;
 use asysvrg::data::{self, PaperDataset};
 use asysvrg::objective::Objective;
+use asysvrg::sched;
 use asysvrg::simcore::{self, CostModel};
 use asysvrg::theory;
 use asysvrg::util;
@@ -47,8 +52,9 @@ fn top_usage() -> String {
      \x20 fig1-speedup       regenerate Figure 1 left column\n\
      \x20 fig1-convergence   regenerate Figure 1 right column\n\
      \x20 theory             Theorem 1/2 contraction factors\n\
-     \x20 ablation           sweep eta / M / read-model / cores / storage / epoch / pool\n\
+     \x20 ablation           sweep eta / M / read-model / cores / storage / epoch / pool / schedule\n\
      \x20 calibrate          measure cost model; --contention fits the sparse collision model\n\
+     \x20 sched              deterministic interleaving schedules: CI race gate, fuzz, replay\n\
      \x20 e2e                XLA-backed dense end-to-end training\n\n\
      `repro <subcommand> --help` for options."
         .to_string()
@@ -69,6 +75,7 @@ fn dispatch(args: &[String]) -> Result<(), String> {
         "theory" => cmd_theory(rest),
         "ablation" => cmd_ablation(rest),
         "calibrate" => cmd_calibrate(rest),
+        "sched" => cmd_sched(rest),
         "e2e" => cmd_e2e(rest),
         "--help" | "-h" | "help" => Err(top_usage()),
         other => Err(format!("unknown subcommand '{other}'\n\n{}", top_usage())),
@@ -322,8 +329,8 @@ fn cmd_ablation(args: &[String]) -> Result<(), String> {
         .opt("epochs", "25", "epoch budget per point")
         .opt(
             "which",
-            "eta,m,read-model,cores,storage,epoch,contention,pool",
-            "comma list of sweeps: eta|m|read-model|cores|storage|epoch|contention|pool",
+            "eta,m,read-model,cores,storage,epoch,contention,pool,schedule",
+            "comma list of sweeps: eta|m|read-model|cores|storage|epoch|contention|pool|schedule",
         );
     let m = cmd.parse(args)?;
     let ds = data::resolve(m.str("dataset"), m.f64("scale")?, m.u64("seed")?)?;
@@ -366,6 +373,10 @@ fn cmd_ablation(args: &[String]) -> Result<(), String> {
             "pool" => (
                 "worker runtime: per-epoch thread spawn vs persistent pool",
                 ablation::sweep_pool(&obj, fstar, threads, epochs),
+            ),
+            "schedule" => (
+                "interleaving policy: virtual scheduler vs real threads",
+                ablation::sweep_schedule(&obj, fstar, threads, epochs),
             ),
             o => return Err(format!("unknown sweep '{o}'")),
         };
@@ -434,6 +445,117 @@ fn cmd_calibrate(args: &[String]) -> Result<(), String> {
     let path = report::write_json("calibration_contention", &rep.to_json())
         .map_err(|e| e.to_string())?;
     println!("json -> {}", path.display());
+    Ok(())
+}
+
+fn cmd_sched(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("sched", "deterministic + fuzzed interleaving schedules (DESIGN.md §9)")
+        .flag("gate", "run the pinned-seed CI race gate (fails with a replay line)")
+        .opt("fuzz", "0", "fuzz N random schedule configs (0 = off)")
+        .opt("seed-base", "1", "base seed for --fuzz case generation")
+        .opt("replay", "", "re-execute a printed SCHED_REPLAY line bit-exactly")
+        .opt("seeds", "42,1337,2024", "gate seeds (comma list)")
+        .opt("threads", "4", "virtual workers per schedule");
+    let m = cmd.parse(args)?;
+    let threads = m.usize("threads")?;
+    if threads == 0 {
+        return Err("--threads must be >= 1".into());
+    }
+    let seeds: Vec<u64> = m
+        .str("seeds")
+        .split(',')
+        .map(|t| t.trim().parse().map_err(|_| format!("bad seed '{t}'")))
+        .collect::<Result<_, _>>()?;
+    if seeds.is_empty() {
+        return Err("--seeds must name at least one seed".into());
+    }
+
+    let line = m.str("replay");
+    if !line.is_empty() {
+        let rep = sched::replay_from_line(line)?;
+        println!(
+            "policy={} seed={} threads={} iters={} micro_steps={} clock={} \
+             max_staleness={} mean_staleness={:.2} collisions={} loss {:.6} -> {:.6} \
+             fingerprint={:016x}",
+            rep.policy.name(),
+            rep.seed,
+            rep.threads,
+            rep.iters,
+            rep.micro_steps,
+            rep.clock,
+            rep.max_staleness,
+            rep.mean_staleness,
+            rep.collisions,
+            rep.loss_before,
+            rep.loss_after,
+            rep.fingerprint
+        );
+        rep.check().map_err(|e| format!("{e}\n  replay: {}", rep.replay))?;
+        println!("replay ok: schedule drained, all invariants hold");
+        return Ok(());
+    }
+
+    if m.flag("gate") {
+        // writes results/SCHED_gate.json; failures carry their replay line
+        sched::run_gate(&seeds, threads)?;
+        println!(
+            "schedule gate PASS: {} seeds x 4 policies, determinism + staleness + theory checks",
+            seeds.len()
+        );
+        println!("json -> results/SCHED_gate.json");
+        return Ok(());
+    }
+
+    let fuzz = m.usize("fuzz")?;
+    if fuzz > 0 {
+        sched::run_fuzz(fuzz, m.u64("seed-base")?, threads)?;
+        println!("schedule fuzz PASS: {fuzz} random configs drained deterministically");
+        println!("json -> results/SCHED_fuzz.json");
+        return Ok(());
+    }
+
+    // default: one-seed summary table across the four policies
+    let seed = seeds[0];
+    println!("virtual schedules at seed {seed}, {threads} workers (gate config):");
+    println!(
+        "{:>14} | {:>9} | {:>9} | {:>10} | {:>11} | {:>12} | {:>16}",
+        "policy", "max_stale", "mean", "collisions", "micro_steps", "loss_after", "fingerprint"
+    );
+    let mut worst_tau = 0u64;
+    for policy in sched::Policy::all() {
+        let mut cfg = sched::SchedConfig::gate_default(policy, seed);
+        cfg.threads = threads;
+        let rep = sched::run_schedule(&cfg)?;
+        rep.check().map_err(|e| format!("{e}\n  replay: {}", rep.replay))?;
+        worst_tau = worst_tau.max(rep.max_staleness);
+        println!(
+            "{:>14} | {:>9} | {:>9.2} | {:>10} | {:>11} | {:>12.6} | {:016x}",
+            policy.name(),
+            rep.max_staleness,
+            rep.mean_staleness,
+            rep.collisions,
+            rep.micro_steps,
+            rep.loss_after,
+            rep.fingerprint
+        );
+    }
+    let rc = sched::validate_rates(
+        sched::GATE_MU,
+        sched::GATE_L,
+        sched::GATE_ETA,
+        sched::GATE_M_TILDE,
+        worst_tau,
+    );
+    match (rc.alpha, rc.max_feasible_eta) {
+        (Some(a), Some(e)) => println!(
+            "theory at worst-case tau={}: alpha={a:.4} feasible={} max_feasible_eta={e:.4}",
+            rc.tau, rc.feasible
+        ),
+        _ => println!(
+            "theory at worst-case tau={}: infeasible at eta={} (no contraction)",
+            rc.tau, rc.eta
+        ),
+    }
     Ok(())
 }
 

@@ -1,0 +1,1369 @@
+//! S20: the virtual scheduler — deterministic + fuzzed interleavings of the
+//! *real* inner loops.
+//!
+//! Threads explore only the schedules the OS happens to produce. This
+//! module instead drives the same [`WorkerStep`] state machines the thread
+//! pool runs — same rng streams, same arithmetic, same staleness
+//! accounting — one micro-segment at a time on a single OS thread, under a
+//! seeded [`Policy`]. That buys three things threads cannot give us:
+//!
+//! 1. **Determinism.** A schedule is a pure function of `(policy, seed)`;
+//!    the same pair replays the bit-identical trajectory, so the CI race
+//!    gate ([`run_gate`]) pins seeds and asserts exact invariants.
+//! 2. **Adversarial coverage.** `AdversarialMaxStaleness` parks the worker
+//!    holding the oldest read until everyone else finishes, realizing the
+//!    schedule-space *maximum* staleness (p−1)·M — far beyond anything a
+//!    timing-based run shows — and `HotCollision` forces write–write
+//!    overlap on the Zipf head on demand.
+//! 3. **Replay.** Every failure prints one `SCHED_REPLAY …` line
+//!    ([`replay_line`]); feeding it back re-executes the exact failing
+//!    schedule ([`replay_from_line`]).
+//!
+//! The measured worst-case staleness also feeds the paper's bounded-delay
+//! constants: [`validate_rates`] checks Theorem 1 feasibility (α < 1) at
+//! the observed τ and reports the largest feasible step size
+//! ([`crate::theory::max_feasible_eta`]).
+
+pub mod policy;
+pub mod replay;
+
+pub use policy::Policy;
+pub use replay::{parse_replay_line, replay, replay_from_line, replay_line};
+
+use policy::{Chooser, WorkerView};
+
+use crate::config::{Algo, RunConfig, Scheme, Storage};
+use crate::coordinator::asysvrg::SvrgOption;
+use crate::coordinator::delay::DelayStats;
+use crate::coordinator::epoch::{
+    parallel_full_grad, parallel_full_grad_pool, EpochGradient, EpochWorkspace,
+};
+use crate::coordinator::monitor::{HistoryPoint, RunResult};
+use crate::coordinator::shared::SharedParams;
+use crate::coordinator::sparse::{run_hogwild_inner_sparse, run_inner_loop_sparse, LazyState};
+use crate::coordinator::step::WorkerStep;
+use crate::coordinator::telemetry::ContentionStats;
+use crate::coordinator::worker::{run_inner_loop, run_inner_loop_averaging, WorkerScratch};
+use crate::objective::Objective;
+use crate::runtime::pool::{WorkerPool, WorkerSlots};
+use crate::util::json::Json;
+use crate::util::rng::{splitmix64, Pcg32};
+use crate::util::Stopwatch;
+
+/// Fixed dataset seed: replay regenerates the dataset from this, so a
+/// replay line never needs to carry data.
+pub const DATA_SEED: u64 = 7;
+
+/// Which inner loop the virtual schedule drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedAlgo {
+    /// AsySVRG Option 1 (current iterate).
+    Svrg1,
+    /// AsySVRG Option 2 (averaged iterate).
+    Svrg2,
+    /// Hogwild! SGD.
+    Hogwild,
+}
+
+impl SchedAlgo {
+    pub fn parse(s: &str) -> Result<SchedAlgo, String> {
+        match s {
+            "svrg1" => Ok(SchedAlgo::Svrg1),
+            "svrg2" => Ok(SchedAlgo::Svrg2),
+            "hogwild" => Ok(SchedAlgo::Hogwild),
+            _ => Err(format!("unknown sched algo '{s}' (svrg1|svrg2|hogwild)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedAlgo::Svrg1 => "svrg1",
+            SchedAlgo::Svrg2 => "svrg2",
+            SchedAlgo::Hogwild => "hogwild",
+        }
+    }
+
+    pub fn all() -> [SchedAlgo; 3] {
+        [SchedAlgo::Svrg1, SchedAlgo::Svrg2, SchedAlgo::Hogwild]
+    }
+}
+
+/// Full description of one virtual schedule — everything [`replay_line`]
+/// serializes and [`run_schedule`] consumes.
+#[derive(Clone, Debug)]
+pub struct SchedConfig {
+    pub dataset: String,
+    pub scale: f64,
+    pub policy: Policy,
+    pub seed: u64,
+    pub threads: usize,
+    /// Updates per virtual worker.
+    pub iters: usize,
+    pub scheme: Scheme,
+    pub storage: Storage,
+    pub algo: SchedAlgo,
+    pub eta: f32,
+}
+
+impl SchedConfig {
+    /// The pinned CI-gate configuration: a small Zipf-1.1 instance (heavy
+    /// head, so hot-collision forcing has something to collide on), 4
+    /// virtual workers, sparse lock-free SVRG.
+    pub fn gate_default(policy: Policy, seed: u64) -> SchedConfig {
+        SchedConfig {
+            dataset: "zipf:1.1".into(),
+            scale: 0.05,
+            policy,
+            seed,
+            threads: 4,
+            iters: 150,
+            scheme: Scheme::Unlock,
+            storage: Storage::Sparse,
+            algo: SchedAlgo::Svrg1,
+            eta: 0.2,
+        }
+    }
+}
+
+/// Cap on recorded picks — enough for every gate/fuzz shape; longer
+/// schedules mark themselves truncated instead of growing unboundedly.
+const TRACE_CAP: usize = 100_000;
+
+/// The pick sequence of one schedule: trace\[k\] = worker advanced at
+/// micro-step k. Uploaded as the failing-schedule artifact.
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleTrace {
+    picks: Vec<u16>,
+    capped: bool,
+}
+
+impl ScheduleTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn record(&mut self, w: u16) {
+        if self.picks.len() < TRACE_CAP {
+            self.picks.push(w);
+        } else {
+            self.capped = true;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.picks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.picks.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "picks",
+                Json::Arr(self.picks.iter().map(|&w| Json::Num(w as f64)).collect()),
+            ),
+            ("capped", Json::Bool(self.capped)),
+        ])
+    }
+}
+
+fn fnv1a(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+/// FNV-1a over the exact f32 bit patterns of the trajectory endpoints plus
+/// the clock and staleness counters: equal fingerprints ⇔ bit-identical
+/// schedules (up to 64-bit collision).
+fn fingerprint(final_w: &[f32], avg: Option<&[f32]>, clock: u64, max_staleness: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &x in final_w {
+        fnv1a(&mut h, &x.to_bits().to_le_bytes());
+    }
+    if let Some(a) = avg {
+        for &x in a {
+            fnv1a(&mut h, &x.to_bits().to_le_bytes());
+        }
+    }
+    fnv1a(&mut h, &clock.to_le_bytes());
+    fnv1a(&mut h, &max_staleness.to_le_bytes());
+    h
+}
+
+/// Everything one virtual schedule measures.
+#[derive(Clone, Debug)]
+pub struct ScheduleReport {
+    /// The one-line replay token reproducing this schedule.
+    pub replay: String,
+    pub policy: Policy,
+    pub seed: u64,
+    pub threads: usize,
+    pub iters: usize,
+    /// Total `advance()` calls issued.
+    pub micro_steps: u64,
+    /// Shared clock after the phase (== applied updates).
+    pub clock: u64,
+    /// Updates recorded by the staleness instrumentation.
+    pub updates: u64,
+    /// threads × iters.
+    pub expected_updates: u64,
+    /// Empirical worst-case staleness τ̂ under this schedule.
+    pub max_staleness: u64,
+    pub mean_staleness: f64,
+    /// Write–write overlaps observed by the collision telemetry
+    /// (period 1: every update sampled).
+    pub collisions: u64,
+    pub collision_rate: f64,
+    pub lock_conflicts: u64,
+    pub loss_before: f64,
+    pub loss_after: f64,
+    /// Lazy state fully drained after the final flush (sparse only; dense
+    /// is trivially true).
+    pub drained: bool,
+    /// Final iterate and loss are finite.
+    pub finite: bool,
+    /// Bit-exact trajectory fingerprint (FNV-1a64).
+    pub fingerprint: u64,
+    pub trace: ScheduleTrace,
+    /// Final shared iterate (post-flush snapshot).
+    pub final_w: Vec<f32>,
+    /// Averaged iterate (Svrg2 only).
+    pub avg: Option<Vec<f32>>,
+}
+
+impl ScheduleReport {
+    /// Structural invariants every schedule must satisfy, regardless of
+    /// policy: update accounting exact, lazy state drained, iterate finite.
+    pub fn check(&self) -> Result<(), String> {
+        if self.clock != self.expected_updates {
+            return Err(format!(
+                "clock {} != expected updates {}",
+                self.clock, self.expected_updates
+            ));
+        }
+        if self.updates != self.expected_updates {
+            return Err(format!(
+                "recorded updates {} != expected {}",
+                self.updates, self.expected_updates
+            ));
+        }
+        if !self.drained {
+            return Err("lazy state not fully drained after flush".into());
+        }
+        if !self.finite {
+            return Err(format!("non-finite trajectory (loss_after = {})", self.loss_after));
+        }
+        Ok(())
+    }
+
+    /// Scalar summary (no vectors, no trace) — one row in the gate report.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("replay", Json::Str(self.replay.clone())),
+            ("policy", Json::Str(self.policy.name().into())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+            ("iters", Json::Num(self.iters as f64)),
+            ("micro_steps", Json::Num(self.micro_steps as f64)),
+            ("clock", Json::Num(self.clock as f64)),
+            ("updates", Json::Num(self.updates as f64)),
+            ("expected_updates", Json::Num(self.expected_updates as f64)),
+            ("max_staleness", Json::Num(self.max_staleness as f64)),
+            ("mean_staleness", Json::Num(self.mean_staleness)),
+            ("collisions", Json::Num(self.collisions as f64)),
+            ("collision_rate", Json::Num(self.collision_rate)),
+            ("lock_conflicts", Json::Num(self.lock_conflicts as f64)),
+            ("loss_before", Json::Num(self.loss_before)),
+            ("loss_after", Json::Num(self.loss_after)),
+            ("drained", Json::Bool(self.drained)),
+            ("finite", Json::Bool(self.finite)),
+            ("fingerprint", Json::Str(format!("{:016x}", self.fingerprint))),
+        ])
+    }
+
+    /// Summary + the full pick trace — the failing-schedule artifact.
+    pub fn to_json_with_trace(&self) -> Json {
+        let mut j = self.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("trace".into(), self.trace.to_json());
+        }
+        j
+    }
+}
+
+/// The scheduler core: rebuild the per-worker views, ask the policy who
+/// advances, run that worker's next micro-segment; repeat until everyone is
+/// done. Returns the number of micro-steps issued.
+pub(crate) fn drive(
+    steps: &mut [WorkerStep],
+    chooser: &mut Chooser,
+    head: usize,
+    mut trace: Option<&mut ScheduleTrace>,
+) -> u64 {
+    let mut micro = 0u64;
+    let mut views: Vec<WorkerView> = Vec::with_capacity(steps.len());
+    loop {
+        views.clear();
+        views.extend(steps.iter().map(|s| WorkerView {
+            done: s.is_done(),
+            read_clock: s.in_flight_clock(),
+            hot: s.touches_head(head),
+            updates: s.updates_done(),
+            stage: s.stage(),
+        }));
+        if views.iter().all(|v| v.done) {
+            break;
+        }
+        let w = chooser.pick(&views);
+        steps[w].advance();
+        if let Some(tr) = trace.as_deref_mut() {
+            tr.record(w as u16);
+        }
+        micro += 1;
+    }
+    micro
+}
+
+/// Run one virtual schedule: regenerate the dataset from [`DATA_SEED`] and
+/// execute `cfg` on a single OS thread.
+pub fn run_schedule(cfg: &SchedConfig) -> Result<ScheduleReport, String> {
+    let ds = crate::data::resolve(&cfg.dataset, cfg.scale, DATA_SEED)?;
+    let obj = Objective::paper(ds);
+    Ok(run_schedule_on(&obj, cfg))
+}
+
+/// [`run_schedule`] against a caller-built objective (gate/fuzz resolve
+/// the dataset once and reuse it across many schedules).
+pub fn run_schedule_on(obj: &Objective, cfg: &SchedConfig) -> ScheduleReport {
+    let d = obj.dim();
+    let p = cfg.threads;
+    assert!(p >= 1 && cfg.iters >= 1, "threads and iters must be >= 1");
+
+    // one inner phase from w₀ = 0: full gradient, shared state, telemetry
+    // at period 1 (every update observed — no sampling noise in the gate)
+    let w0 = vec![0.0f32; d];
+    let loss_before = obj.loss(&w0);
+    let eg = parallel_full_grad(obj, &w0, 1);
+    let shared = SharedParams::new(&w0, cfg.scheme);
+    let telem = ContentionStats::with_period(d, 1);
+    let delays = DelayStats::new();
+    let head = telem.head_boundary();
+    let mut chooser = Chooser::new(cfg.policy, cfg.seed);
+    // identical rng streams to a threaded phase with the same seed
+    let mut rngs: Vec<Pcg32> = (0..p).map(|t| Pcg32::for_thread(cfg.seed, t)).collect();
+
+    // per-kind owner state (what WorkerSlots holds on the threaded path)
+    let lazy = match (cfg.storage, cfg.algo) {
+        (Storage::Sparse, SchedAlgo::Svrg1) => {
+            Some(LazyState::new(&w0, &eg.mu, obj.lam, cfg.eta, shared.clock()))
+        }
+        (Storage::Sparse, SchedAlgo::Svrg2) => {
+            Some(LazyState::new_averaging(&w0, &eg.mu, obj.lam, cfg.eta, shared.clock()))
+        }
+        (Storage::Sparse, SchedAlgo::Hogwild) => {
+            Some(LazyState::for_hogwild(d, obj.lam, cfg.eta, shared.clock()))
+        }
+        (Storage::Dense, _) => None,
+    };
+    let mut scratches: Vec<WorkerScratch> = match (cfg.storage, cfg.algo) {
+        (Storage::Dense, SchedAlgo::Svrg1 | SchedAlgo::Svrg2) => {
+            (0..p).map(|_| WorkerScratch::new(d)).collect()
+        }
+        _ => Vec::new(),
+    };
+    let mut accs: Vec<Vec<f32>> = match (cfg.storage, cfg.algo) {
+        (Storage::Dense, SchedAlgo::Svrg2) => (0..p).map(|_| vec![0.0f32; d]).collect(),
+        _ => Vec::new(),
+    };
+    let mut locals: Vec<Vec<f32>> = match (cfg.storage, cfg.algo) {
+        (Storage::Dense, SchedAlgo::Hogwild) => (0..p).map(|_| vec![0.0f32; d]).collect(),
+        _ => Vec::new(),
+    };
+
+    let mut trace = ScheduleTrace::new();
+    let micro_steps;
+    {
+        let mut steps: Vec<WorkerStep> = Vec::with_capacity(p);
+        match (cfg.storage, cfg.algo) {
+            (Storage::Sparse, SchedAlgo::Svrg1 | SchedAlgo::Svrg2) => {
+                let lz = lazy.as_ref().expect("sparse path has lazy state");
+                for rng in rngs.iter_mut() {
+                    steps.push(WorkerStep::sparse_svrg(
+                        obj,
+                        &shared,
+                        lz,
+                        &eg,
+                        cfg.iters,
+                        rng,
+                        &delays,
+                        Some(&telem),
+                    ));
+                }
+            }
+            (Storage::Sparse, SchedAlgo::Hogwild) => {
+                let lz = lazy.as_ref().expect("sparse path has lazy state");
+                for rng in rngs.iter_mut() {
+                    steps.push(WorkerStep::sparse_hogwild(
+                        obj,
+                        &shared,
+                        lz,
+                        cfg.iters,
+                        rng,
+                        &delays,
+                        Some(&telem),
+                    ));
+                }
+            }
+            (Storage::Dense, SchedAlgo::Svrg1) => {
+                for (rng, scratch) in rngs.iter_mut().zip(scratches.iter_mut()) {
+                    steps.push(WorkerStep::dense_svrg(
+                        obj, &shared, &w0, &eg, cfg.eta, cfg.iters, rng, scratch, &delays,
+                        None,
+                    ));
+                }
+            }
+            (Storage::Dense, SchedAlgo::Svrg2) => {
+                for ((rng, scratch), acc) in
+                    rngs.iter_mut().zip(scratches.iter_mut()).zip(accs.iter_mut())
+                {
+                    steps.push(WorkerStep::dense_svrg(
+                        obj,
+                        &shared,
+                        &w0,
+                        &eg,
+                        cfg.eta,
+                        cfg.iters,
+                        rng,
+                        scratch,
+                        &delays,
+                        Some(acc.as_mut_slice()),
+                    ));
+                }
+            }
+            (Storage::Dense, SchedAlgo::Hogwild) => {
+                for (rng, local) in rngs.iter_mut().zip(locals.iter_mut()) {
+                    steps.push(WorkerStep::dense_hogwild(
+                        obj, &shared, cfg.eta, cfg.iters, rng, local, &delays,
+                    ));
+                }
+            }
+        }
+        micro_steps = drive(&mut steps, &mut chooser, head, Some(&mut trace));
+    }
+
+    // epoch boundary, exactly as the threaded drivers do it
+    let mut drained = true;
+    if let Some(lz) = &lazy {
+        lz.flush(&shared);
+        drained = lz.fully_drained(shared.clock());
+    }
+    let avg: Option<Vec<f32>> = match (cfg.storage, cfg.algo) {
+        (Storage::Sparse, SchedAlgo::Svrg2) => {
+            let mut a = vec![0.0f32; d];
+            let got = lazy
+                .as_ref()
+                .expect("sparse path has lazy state")
+                .take_average_into(&shared, &mut a);
+            debug_assert!(got, "averaging state must produce an average");
+            Some(a)
+        }
+        (Storage::Dense, SchedAlgo::Svrg2) => {
+            // same merge order as the threaded reduction (worker 0..p)
+            let total = (p * cfg.iters) as f32;
+            let mut a = vec![0.0f32; d];
+            for (j, out) in a.iter_mut().enumerate() {
+                let mut s = 0.0f32;
+                for acc in &accs {
+                    s += acc[j] / total;
+                }
+                *out = s;
+            }
+            Some(a)
+        }
+        _ => None,
+    };
+
+    let snap = shared.snapshot();
+    let final_iterate: &[f32] = avg.as_deref().unwrap_or(&snap);
+    let loss_after = obj.loss(final_iterate);
+    let finite = loss_after.is_finite() && final_iterate.iter().all(|x| x.is_finite());
+    let ct = telem.summary();
+    let clock = shared.clock();
+    let max_staleness = delays.max_delay();
+    let fp = fingerprint(&snap, avg.as_deref(), clock, max_staleness);
+    ScheduleReport {
+        replay: replay::replay_line(cfg),
+        policy: cfg.policy,
+        seed: cfg.seed,
+        threads: p,
+        iters: cfg.iters,
+        micro_steps,
+        clock,
+        updates: delays.count(),
+        expected_updates: (p * cfg.iters) as u64,
+        max_staleness,
+        mean_staleness: delays.mean_delay(),
+        collisions: ct.collisions,
+        collision_rate: ct.collision_rate,
+        lock_conflicts: ct.lock_conflicts,
+        loss_before,
+        loss_after,
+        drained,
+        finite,
+        fingerprint: fp,
+        trace,
+        final_w: snap,
+        avg,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Timed (real-thread) baseline phase — what the virtual schedules compare to
+// ---------------------------------------------------------------------------
+
+/// Endpoint measurements of one *real-thread* inner phase with the same
+/// shape as a virtual schedule (same rng streams, same iteration budget).
+/// The gate asserts the adversarial virtual staleness dominates this.
+#[derive(Clone, Debug)]
+pub struct TimedPhase {
+    pub max_staleness: u64,
+    pub mean_staleness: f64,
+    pub clock: u64,
+    pub final_w: Vec<f32>,
+    pub avg: Option<Vec<f32>>,
+}
+
+/// Run `cfg`'s phase on real threads (dataset from [`DATA_SEED`]).
+pub fn run_phase_timed(cfg: &SchedConfig) -> Result<TimedPhase, String> {
+    let ds = crate::data::resolve(&cfg.dataset, cfg.scale, DATA_SEED)?;
+    let obj = Objective::paper(ds);
+    Ok(run_phase_timed_on(&obj, cfg))
+}
+
+/// [`run_phase_timed`] against a caller-built objective. The policy field
+/// of `cfg` is ignored — the OS scheduler interleaves.
+pub fn run_phase_timed_on(obj: &Objective, cfg: &SchedConfig) -> TimedPhase {
+    let d = obj.dim();
+    let p = cfg.threads;
+    assert!(p >= 1 && cfg.iters >= 1, "threads and iters must be >= 1");
+    let pool = WorkerPool::new(p);
+    let w0 = vec![0.0f32; d];
+    let eg = parallel_full_grad(obj, &w0, 1);
+    let shared = SharedParams::new(&w0, cfg.scheme);
+    let delays = DelayStats::new();
+
+    let lazy = match (cfg.storage, cfg.algo) {
+        (Storage::Sparse, SchedAlgo::Svrg1) => {
+            Some(LazyState::new(&w0, &eg.mu, obj.lam, cfg.eta, shared.clock()))
+        }
+        (Storage::Sparse, SchedAlgo::Svrg2) => {
+            Some(LazyState::new_averaging(&w0, &eg.mu, obj.lam, cfg.eta, shared.clock()))
+        }
+        (Storage::Sparse, SchedAlgo::Hogwild) => {
+            Some(LazyState::for_hogwild(d, obj.lam, cfg.eta, shared.clock()))
+        }
+        (Storage::Dense, _) => None,
+    };
+
+    let mut avg: Option<Vec<f32>> = None;
+    match (cfg.storage, cfg.algo) {
+        (Storage::Sparse, SchedAlgo::Svrg1 | SchedAlgo::Svrg2) => {
+            let lz: &LazyState = lazy.as_ref().expect("sparse path has lazy state");
+            let (shared, eg, delays) = (&shared, &eg, &delays);
+            pool.run_phase(p, |a| {
+                let mut rng = Pcg32::for_thread(cfg.seed, a);
+                run_inner_loop_sparse(obj, shared, lz, eg, cfg.iters, &mut rng, delays);
+            });
+        }
+        (Storage::Sparse, SchedAlgo::Hogwild) => {
+            let lz: &LazyState = lazy.as_ref().expect("sparse path has lazy state");
+            let (shared, delays) = (&shared, &delays);
+            pool.run_phase(p, |a| {
+                let mut rng = Pcg32::for_thread(cfg.seed, a);
+                run_hogwild_inner_sparse(obj, shared, lz, cfg.iters, &mut rng, delays);
+            });
+        }
+        (Storage::Dense, SchedAlgo::Svrg1) => {
+            let slots = WorkerSlots::new(p, |_| WorkerScratch::new(d));
+            let (shared, eg, w0r, delays) = (&shared, &eg, &w0, &delays);
+            pool.run_phase(p, |a| {
+                let mut rng = Pcg32::for_thread(cfg.seed, a);
+                let mut scratch = slots.write(a);
+                run_inner_loop(
+                    obj,
+                    shared,
+                    w0r,
+                    eg,
+                    cfg.eta,
+                    cfg.iters,
+                    &mut rng,
+                    &mut scratch,
+                    delays,
+                );
+            });
+        }
+        (Storage::Dense, SchedAlgo::Svrg2) => {
+            let slots = WorkerSlots::new(p, |_| (WorkerScratch::new(d), vec![0.0f32; d]));
+            {
+                let (shared, eg, w0r, delays) = (&shared, &eg, &w0, &delays);
+                pool.run_phase(p, |a| {
+                    let mut rng = Pcg32::for_thread(cfg.seed, a);
+                    let mut slot = slots.write(a);
+                    let (scratch, acc) = &mut *slot;
+                    acc.fill(0.0);
+                    run_inner_loop_averaging(
+                        obj,
+                        shared,
+                        w0r,
+                        eg,
+                        cfg.eta,
+                        cfg.iters,
+                        &mut rng,
+                        scratch,
+                        delays,
+                        acc,
+                    );
+                });
+            }
+            // serial merge in worker order 0..p — the same per-coordinate
+            // summation order as the virtual executor's merge
+            let guards: Vec<_> = (0..p).map(|b| slots.read(b)).collect();
+            let total = (p * cfg.iters) as f32;
+            let mut a = vec![0.0f32; d];
+            for (j, out) in a.iter_mut().enumerate() {
+                let mut s = 0.0f32;
+                for g in &guards {
+                    s += g.1[j] / total;
+                }
+                *out = s;
+            }
+            avg = Some(a);
+        }
+        (Storage::Dense, SchedAlgo::Hogwild) => {
+            let slots = WorkerSlots::new(p, |_| vec![0.0f32; d]);
+            let (shared, delays) = (&shared, &delays);
+            pool.run_phase(p, |a| {
+                let mut rng = Pcg32::for_thread(cfg.seed, a);
+                let mut local = slots.write(a);
+                WorkerStep::dense_hogwild(
+                    obj, shared, cfg.eta, cfg.iters, &mut rng, &mut local, delays,
+                )
+                .run_to_end();
+            });
+        }
+    }
+
+    if let Some(lz) = &lazy {
+        lz.flush(&shared);
+        debug_assert!(lz.fully_drained(shared.clock()));
+        if cfg.algo == SchedAlgo::Svrg2 {
+            let mut a = vec![0.0f32; d];
+            let got = lz.take_average_into(&shared, &mut a);
+            debug_assert!(got, "averaging state must produce an average");
+            avg = Some(a);
+        }
+    }
+
+    TimedPhase {
+        max_staleness: delays.max_delay(),
+        mean_staleness: delays.mean_delay(),
+        clock: shared.clock(),
+        final_w: shared.snapshot(),
+        avg,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full virtual runs — the `ablation --which schedule` axis
+// ---------------------------------------------------------------------------
+
+/// Run a full multi-epoch optimization (same bookkeeping as the threaded
+/// drivers) with every inner phase executed by the virtual scheduler under
+/// `policy` instead of the OS. With `cfg.threads == 1` this is bit-identical
+/// to the threaded driver at p = 1 for any policy.
+pub fn run_virtual(
+    obj: &Objective,
+    cfg: &RunConfig,
+    option: SvrgOption,
+    policy: Policy,
+    fstar: f64,
+) -> RunResult {
+    match cfg.algo {
+        Algo::AsySvrg => virtual_asysvrg(obj, cfg, option, policy, fstar),
+        Algo::Hogwild => virtual_hogwild(obj, cfg, policy, fstar),
+    }
+}
+
+/// Per-epoch chooser seed: decorrelated from the worker rng streams (which
+/// use `seed ^ t<<20` via `Pcg32::for_thread`) so the interleaving and the
+/// sample draws are independent randomness.
+fn epoch_chooser(policy: Policy, cfg_seed: u64, t: usize) -> Chooser {
+    Chooser::new(policy, cfg_seed ^ 0x5EED ^ ((t as u64) << 32))
+}
+
+/// AsySVRG (Algorithm 1) with virtually-scheduled inner phases — the mirror
+/// of `asysvrg::run_asysvrg_on`, with `drive()` replacing `pool.run_phase`.
+fn virtual_asysvrg(
+    obj: &Objective,
+    cfg: &RunConfig,
+    option: SvrgOption,
+    policy: Policy,
+    fstar: f64,
+) -> RunResult {
+    let d = obj.dim();
+    let n = obj.n();
+    let p = cfg.threads;
+    assert!(p >= 1, "threads must be >= 1");
+    let m_per_thread = cfg.inner_iters(n);
+    let passes_per_epoch = 1.0 + cfg.m_factor;
+    let delays = DelayStats::new();
+    let sw = Stopwatch::start();
+    let head = (d as f64).sqrt().ceil() as usize;
+
+    // serial pool for the epoch pass / flush / snapshot plumbing
+    let pool = WorkerPool::new(1);
+    let mut ws = EpochWorkspace::new(1, d, n, cfg.storage);
+    let mut eg = EpochGradient { mu: vec![0.0f32; d], residuals: vec![0.0f32; n] };
+    let shared = SharedParams::zeros(d, cfg.scheme);
+
+    let mut w = vec![0.0f32; d];
+    let mut result = RunResult::default();
+    let mut passes = 0.0f64;
+
+    let mut lazy = (cfg.storage == Storage::Sparse).then(|| match option {
+        SvrgOption::CurrentIterate => LazyState::new(&w, &eg.mu, obj.lam, cfg.eta, 0),
+        SvrgOption::Average => LazyState::new_averaging(&w, &eg.mu, obj.lam, cfg.eta, 0),
+    });
+    let mut scratches: Vec<WorkerScratch> = match cfg.storage {
+        Storage::Dense => (0..p).map(|_| WorkerScratch::new(d)).collect(),
+        Storage::Sparse => Vec::new(),
+    };
+    let avg_len = if option == SvrgOption::Average { d } else { 0 };
+    let mut accs: Vec<Vec<f32>> = match (cfg.storage, option) {
+        (Storage::Dense, SvrgOption::Average) => (0..p).map(|_| vec![0.0f32; d]).collect(),
+        _ => Vec::new(),
+    };
+    let mut avg = vec![0.0f32; avg_len];
+
+    for t in 0..cfg.epochs {
+        parallel_full_grad_pool(obj, &w, &pool, &mut ws, &mut eg);
+        shared.store(&w);
+        let clock_before = shared.clock();
+        let seed = cfg.seed ^ (t as u64) << 20;
+        let mut chooser = epoch_chooser(policy, cfg.seed, t);
+        let mut rngs: Vec<Pcg32> = (0..p).map(|a| Pcg32::for_thread(seed, a)).collect();
+        let mut have_avg = false;
+        match (&mut lazy, option) {
+            (Some(state), _) => {
+                state.reset(&w, &eg.mu, obj.lam, cfg.eta, clock_before);
+                let state: &LazyState = state;
+                {
+                    let mut steps: Vec<WorkerStep> = rngs
+                        .iter_mut()
+                        .map(|rng| {
+                            WorkerStep::sparse_svrg(
+                                obj,
+                                &shared,
+                                state,
+                                &eg,
+                                m_per_thread,
+                                rng,
+                                &delays,
+                                None,
+                            )
+                        })
+                        .collect();
+                    drive(&mut steps, &mut chooser, head, None);
+                }
+                state.flush_pool(&shared, &pool, 1);
+                debug_assert!(state.fully_drained(shared.clock()));
+                have_avg = state.take_average_into(&shared, &mut avg);
+            }
+            (None, SvrgOption::CurrentIterate) => {
+                let mut steps: Vec<WorkerStep> = rngs
+                    .iter_mut()
+                    .zip(scratches.iter_mut())
+                    .map(|(rng, scratch)| {
+                        WorkerStep::dense_svrg(
+                            obj,
+                            &shared,
+                            &w,
+                            &eg,
+                            cfg.eta,
+                            m_per_thread,
+                            rng,
+                            scratch,
+                            &delays,
+                            None,
+                        )
+                    })
+                    .collect();
+                drive(&mut steps, &mut chooser, head, None);
+            }
+            (None, SvrgOption::Average) => {
+                {
+                    let mut steps: Vec<WorkerStep> = Vec::with_capacity(p);
+                    for ((rng, scratch), acc) in
+                        rngs.iter_mut().zip(scratches.iter_mut()).zip(accs.iter_mut())
+                    {
+                        acc.fill(0.0);
+                        steps.push(WorkerStep::dense_svrg(
+                            obj,
+                            &shared,
+                            &w,
+                            &eg,
+                            cfg.eta,
+                            m_per_thread,
+                            rng,
+                            scratch,
+                            &delays,
+                            Some(acc.as_mut_slice()),
+                        ));
+                    }
+                    drive(&mut steps, &mut chooser, head, None);
+                }
+                // same merge order as the threaded reduction (worker 0..p)
+                let total = (p * m_per_thread) as f32;
+                for (j, out) in avg.iter_mut().enumerate() {
+                    let mut s = 0.0f32;
+                    for acc in &accs {
+                        s += acc[j] / total;
+                    }
+                    *out = s;
+                }
+                have_avg = true;
+            }
+        }
+        let updates_this_epoch = shared.clock() - clock_before;
+        match option {
+            SvrgOption::CurrentIterate => shared.snapshot_into_pool(&mut w, &pool, 1),
+            SvrgOption::Average => {
+                debug_assert!(have_avg, "Option 2 must produce an average");
+                w.copy_from_slice(&avg);
+            }
+        }
+        passes += passes_per_epoch;
+        let loss = obj.loss(&w);
+        result.total_updates += updates_this_epoch;
+        result.history.push(HistoryPoint {
+            passes,
+            loss,
+            seconds: sw.seconds(),
+            updates: result.total_updates,
+        });
+        result.epochs_run = t + 1;
+        crate::log!(
+            Debug,
+            "virtual asysvrg [{}] epoch {t}: f={loss:.6} gap={:.3e}",
+            policy.name(),
+            loss - fstar
+        );
+        if loss - fstar < cfg.target_gap {
+            result.converged = true;
+            break;
+        }
+    }
+
+    result.final_w = w;
+    result.total_seconds = sw.seconds();
+    result.max_delay = delays.max_delay();
+    result.mean_delay = delays.mean_delay();
+    result
+}
+
+/// Hogwild! with virtually-scheduled epochs — the mirror of
+/// `hogwild::run_hogwild_on`.
+fn virtual_hogwild(obj: &Objective, cfg: &RunConfig, policy: Policy, fstar: f64) -> RunResult {
+    let d = obj.dim();
+    let n = obj.n();
+    let p = cfg.threads;
+    assert!(p >= 1, "threads must be >= 1");
+    let iters = cfg.hogwild_iters(n);
+    let delays = DelayStats::new();
+    let sw = Stopwatch::start();
+    let head = (d as f64).sqrt().ceil() as usize;
+
+    let pool = WorkerPool::new(1);
+    let mut gamma = cfg.eta;
+    let mut result = RunResult::default();
+    let shared = SharedParams::zeros(d, cfg.scheme);
+    let mut passes = 0.0f64;
+    let mut lazy =
+        (cfg.storage == Storage::Sparse).then(|| LazyState::for_hogwild(d, obj.lam, gamma, 0));
+    let mut locals: Vec<Vec<f32>> = match cfg.storage {
+        Storage::Dense => (0..p).map(|_| vec![0.0f32; d]).collect(),
+        Storage::Sparse => Vec::new(),
+    };
+    let mut w = vec![0.0f32; d];
+
+    for t in 0..cfg.epochs {
+        let seed = cfg.seed ^ (t as u64) << 20;
+        let mut chooser = epoch_chooser(policy, cfg.seed, t);
+        let mut rngs: Vec<Pcg32> = (0..p).map(|a| Pcg32::for_thread(seed, a)).collect();
+        match &mut lazy {
+            Some(state) => {
+                state.reset_hogwild(gamma, shared.clock());
+                let state: &LazyState = state;
+                {
+                    let mut steps: Vec<WorkerStep> = rngs
+                        .iter_mut()
+                        .map(|rng| {
+                            WorkerStep::sparse_hogwild(
+                                obj, &shared, state, iters, rng, &delays, None,
+                            )
+                        })
+                        .collect();
+                    drive(&mut steps, &mut chooser, head, None);
+                }
+                state.flush_pool(&shared, &pool, 1);
+                debug_assert!(state.fully_drained(shared.clock()));
+            }
+            None => {
+                let mut steps: Vec<WorkerStep> = rngs
+                    .iter_mut()
+                    .zip(locals.iter_mut())
+                    .map(|(rng, local)| {
+                        WorkerStep::dense_hogwild(
+                            obj, &shared, gamma, iters, rng, local, &delays,
+                        )
+                    })
+                    .collect();
+                drive(&mut steps, &mut chooser, head, None);
+            }
+        }
+        gamma *= cfg.gamma_decay;
+        passes += 1.0;
+
+        shared.snapshot_into_pool(&mut w, &pool, 1);
+        let loss = obj.loss(&w);
+        result.total_updates = shared.clock();
+        result.history.push(HistoryPoint {
+            passes,
+            loss,
+            seconds: sw.seconds(),
+            updates: result.total_updates,
+        });
+        result.epochs_run = t + 1;
+        crate::log!(
+            Debug,
+            "virtual hogwild [{}] epoch {t}: f={loss:.6} gap={:.3e}",
+            policy.name(),
+            loss - fstar
+        );
+        if loss - fstar < cfg.target_gap {
+            result.converged = true;
+            break;
+        }
+    }
+
+    shared.snapshot_into_pool(&mut w, &pool, 1);
+    result.final_w = w;
+    result.total_seconds = sw.seconds();
+    result.max_delay = delays.max_delay();
+    result.mean_delay = delays.mean_delay();
+    result
+}
+
+// ---------------------------------------------------------------------------
+// Theory validation: measured τ̂ → Theorem 1 feasibility
+// ---------------------------------------------------------------------------
+
+/// Gate constants for the rate check: the paper-scale regime (κ ≈ 25,
+/// M̃ = 2n at rcv1 size) where Theorem 1 is feasible at small τ but
+/// collapses once τ reaches the adversarial schedule-space maximum.
+pub const GATE_MU: f64 = 1e-2;
+pub const GATE_L: f64 = 0.2501;
+pub const GATE_ETA: f64 = 0.05;
+pub const GATE_M_TILDE: u64 = 4_000_000;
+
+/// Theorem 1 evaluated at a *measured* worst-case staleness.
+#[derive(Clone, Copy, Debug)]
+pub struct RateCheck {
+    /// The measured τ̂ fed to the bound.
+    pub tau: u32,
+    pub eta: f64,
+    /// Lemma 1 ρ (None: no feasible ρ at this step size).
+    pub rho: Option<f64>,
+    /// Theorem 1 contraction α (None: bound infeasible).
+    pub alpha: Option<f64>,
+    /// α < 1 — linear convergence guaranteed at this (η, τ̂).
+    pub feasible: bool,
+    /// Largest η with α < 1 at this τ̂ (None: no step size works).
+    pub max_feasible_eta: Option<f64>,
+}
+
+impl RateCheck {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tau", Json::Num(self.tau as f64)),
+            ("eta", Json::Num(self.eta)),
+            ("rho", self.rho.map_or(Json::Null, Json::Num)),
+            ("alpha", self.alpha.map_or(Json::Null, Json::Num)),
+            ("feasible", Json::Bool(self.feasible)),
+            ("max_feasible_eta", self.max_feasible_eta.map_or(Json::Null, Json::Num)),
+        ])
+    }
+}
+
+/// Evaluate Theorem 1 (consistent reading) at the measured worst-case
+/// staleness: is the configured step size still inside the linear-rate
+/// region, and what is the largest step size that would be?
+pub fn validate_rates(mu: f64, l: f64, eta: f64, m_tilde: u64, measured_tau: u64) -> RateCheck {
+    let tau = measured_tau.min(u32::MAX as u64) as u32;
+    let p = crate::theory::RateParams { mu, l, eta, tau, m_tilde };
+    let rep = crate::theory::theorem1_alpha(&p);
+    RateCheck {
+        tau,
+        eta,
+        rho: rep.map(|r| r.rho),
+        alpha: rep.map(|r| r.alpha),
+        feasible: matches!(rep, Some(r) if r.alpha < 1.0),
+        max_feasible_eta: crate::theory::max_feasible_eta(
+            mu,
+            l,
+            tau,
+            m_tilde,
+            crate::theory::theorem1_alpha,
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CI wiring: gate, fuzz, replay diagnostics
+// ---------------------------------------------------------------------------
+
+/// Append one line to `$GITHUB_STEP_SUMMARY` when running under Actions;
+/// silently a no-op elsewhere.
+pub fn append_step_summary(line: &str) {
+    if let Ok(path) = std::env::var("GITHUB_STEP_SUMMARY") {
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+            let _ = writeln!(f, "{line}");
+        }
+    }
+}
+
+/// Record a failing schedule: dump the full pick trace to
+/// `results/SCHED_failing_trace.json` (the CI artifact), surface the replay
+/// line in the step summary, and return the diagnostic message.
+fn sched_fail(kind: &str, rep: &ScheduleReport, msg: &str) -> String {
+    let _ = crate::bench::report::write_json("SCHED_failing_trace", &rep.to_json_with_trace());
+    append_step_summary(&format!("❌ sched {kind}: {msg}"));
+    append_step_summary(&format!("   replay: `{}`", rep.replay));
+    format!("{msg}\n  replay: {}", rep.replay)
+}
+
+/// Run a schedule twice and insist on determinism + structural invariants.
+fn run_checked(obj: &Objective, cfg: &SchedConfig, kind: &str) -> Result<ScheduleReport, String> {
+    let rep = run_schedule_on(obj, cfg);
+    let rep2 = run_schedule_on(obj, cfg);
+    if rep.fingerprint != rep2.fingerprint {
+        return Err(sched_fail(
+            kind,
+            &rep,
+            &format!(
+                "nondeterministic schedule: fingerprints {:016x} vs {:016x} on identical (policy, seed)",
+                rep.fingerprint, rep2.fingerprint
+            ),
+        ));
+    }
+    if let Err(msg) = rep.check() {
+        return Err(sched_fail(kind, &rep, &msg));
+    }
+    Ok(rep)
+}
+
+/// The merge-gating interleaving suite: pinned seeds, all four policies,
+/// exact staleness/collision invariants, determinism spot-checks across
+/// the scheme × storage × algo grid, p = 1 bitwise parity with the real
+/// sequential path, and Theorem-1 feasibility at the measured τ̂.
+/// Writes `results/SCHED_gate.json`; any failure names its replay line.
+pub fn run_gate(seeds: &[u64], threads: usize) -> Result<Json, String> {
+    if seeds.is_empty() {
+        return Err("gate needs at least one seed".into());
+    }
+    if threads < 2 {
+        return Err("gate needs threads >= 2 (staleness invariants are vacuous at p = 1)".into());
+    }
+    let base = SchedConfig::gate_default(Policy::RoundRobin, seeds[0]);
+    let ds = crate::data::resolve(&base.dataset, base.scale, DATA_SEED)?;
+    let obj = Objective::paper(ds);
+
+    let mut seed_rows = Vec::new();
+    let mut rr_tau = 0u64;
+    let mut adv_tau = 0u64;
+    for (k, &seed) in seeds.iter().enumerate() {
+        let mut reports = Vec::new();
+        for policy in Policy::all() {
+            let mut cfg = SchedConfig::gate_default(policy, seed);
+            cfg.threads = threads;
+            reports.push(run_checked(&obj, &cfg, "gate")?);
+        }
+        // Policy::all() order: round-robin, random, adversarial, hot
+        let (rr, adv, hot) = (&reports[0], &reports[2], &reports[3]);
+        let want_adv = ((threads - 1) * rr.iters) as u64;
+        if adv.max_staleness != want_adv {
+            return Err(sched_fail(
+                "gate",
+                adv,
+                &format!(
+                    "adversarial max staleness {} != (p-1)*M = {want_adv}",
+                    adv.max_staleness
+                ),
+            ));
+        }
+        if rr.max_staleness != (threads - 1) as u64 {
+            return Err(sched_fail(
+                "gate",
+                rr,
+                &format!("round-robin max staleness {} != p-1 = {}", rr.max_staleness, threads - 1),
+            ));
+        }
+        if rr.collisions != 0 {
+            return Err(sched_fail(
+                "gate",
+                rr,
+                &format!("round-robin lockstep must be collision-free, saw {}", rr.collisions),
+            ));
+        }
+        if hot.collisions == 0 {
+            return Err(sched_fail(
+                "gate",
+                hot,
+                "hot-collision forcing produced zero collisions on the Zipf head",
+            ));
+        }
+        // real threads, same shape: the adversarial schedule must dominate
+        // every timing-based interleaving (it starves its victim for the
+        // whole phase; the OS cannot do worse)
+        let mut tcfg = SchedConfig::gate_default(Policy::RoundRobin, seed);
+        tcfg.threads = threads;
+        let timed = run_phase_timed_on(&obj, &tcfg);
+        if adv.max_staleness < timed.max_staleness {
+            return Err(sched_fail(
+                "gate",
+                adv,
+                &format!(
+                    "adversarial staleness {} < timed run's {}",
+                    adv.max_staleness, timed.max_staleness
+                ),
+            ));
+        }
+        if k == 0 {
+            rr_tau = rr.max_staleness;
+            adv_tau = adv.max_staleness;
+        }
+        seed_rows.push(Json::obj(vec![
+            ("seed", Json::Num(seed as f64)),
+            ("timed_max_staleness", Json::Num(timed.max_staleness as f64)),
+            ("policies", Json::Arr(reports.iter().map(|r| r.to_json()).collect())),
+        ]));
+    }
+
+    // determinism spot-checks across the scheme × storage × algo grid
+    let spots = [
+        (Scheme::AtomicCas, Storage::Sparse, SchedAlgo::Svrg1),
+        (Scheme::Inconsistent, Storage::Sparse, SchedAlgo::Svrg1),
+        (Scheme::Unlock, Storage::Sparse, SchedAlgo::Svrg2),
+        (Scheme::Unlock, Storage::Sparse, SchedAlgo::Hogwild),
+        (Scheme::Unlock, Storage::Dense, SchedAlgo::Svrg1),
+        (Scheme::Unlock, Storage::Dense, SchedAlgo::Svrg2),
+        (Scheme::Unlock, Storage::Dense, SchedAlgo::Hogwild),
+    ];
+    let mut spot_rows = Vec::new();
+    for (scheme, storage, algo) in spots {
+        let mut cfg = SchedConfig::gate_default(Policy::SeededRandom, seeds[0]);
+        cfg.threads = threads;
+        cfg.scheme = scheme;
+        cfg.storage = storage;
+        cfg.algo = algo;
+        cfg.iters = 60;
+        let rep = run_checked(&obj, &cfg, "gate")?;
+        spot_rows.push(rep.to_json());
+    }
+
+    // p = 1: the virtual executor IS the sequential path, bit for bit
+    let mut parity_rows = Vec::new();
+    for (storage, algo) in [(Storage::Sparse, SchedAlgo::Svrg1), (Storage::Dense, SchedAlgo::Svrg2)]
+    {
+        let mut cfg = SchedConfig::gate_default(Policy::RoundRobin, seeds[0]);
+        cfg.threads = 1;
+        cfg.storage = storage;
+        cfg.algo = algo;
+        cfg.iters = 120;
+        let virt = run_schedule_on(&obj, &cfg);
+        let timed = run_phase_timed_on(&obj, &cfg);
+        if virt.final_w != timed.final_w || virt.avg != timed.avg {
+            return Err(sched_fail(
+                "gate",
+                &virt,
+                &format!(
+                    "p=1 parity broken: virtual {}/{} differs bitwise from the sequential threaded phase",
+                    storage.name(),
+                    algo.name()
+                ),
+            ));
+        }
+        parity_rows.push(Json::obj(vec![
+            ("storage", Json::Str(storage.name().into())),
+            ("algo", Json::Str(algo.name().into())),
+            ("fingerprint", Json::Str(format!("{:016x}", virt.fingerprint))),
+        ]));
+    }
+
+    // Theorem 1 at the measured staleness extremes: feasible at the fair
+    // schedule's τ̂, and the feasible-step region shrinks monotonically as
+    // the adversary saturates τ
+    let rr_rates = validate_rates(GATE_MU, GATE_L, GATE_ETA, GATE_M_TILDE, rr_tau);
+    let adv_rates = validate_rates(GATE_MU, GATE_L, GATE_ETA, GATE_M_TILDE, adv_tau);
+    if !rr_rates.feasible {
+        return Err(format!(
+            "theory gate: Theorem 1 infeasible at round-robin tau = {rr_tau} (need alpha < 1)"
+        ));
+    }
+    let (e_rr, e_adv) = match (rr_rates.max_feasible_eta, adv_rates.max_feasible_eta) {
+        (Some(a), Some(b)) => (a, b),
+        _ => return Err("theory gate: no feasible step size found at a measured tau".into()),
+    };
+    if e_adv > e_rr {
+        return Err(format!(
+            "theory gate: max feasible eta not monotone in tau ({e_adv:.3e} at tau={adv_tau} > {e_rr:.3e} at tau={rr_tau})"
+        ));
+    }
+
+    let j = Json::obj(vec![
+        ("dataset", Json::Str(base.dataset.clone())),
+        ("scale", Json::Num(base.scale)),
+        ("threads", Json::Num(threads as f64)),
+        ("iters", Json::Num(base.iters as f64)),
+        ("seeds", Json::Arr(seeds.iter().map(|&s| Json::Num(s as f64)).collect())),
+        ("seed_runs", Json::Arr(seed_rows)),
+        ("determinism_spots", Json::Arr(spot_rows)),
+        ("parity", Json::Arr(parity_rows)),
+        (
+            "theory",
+            Json::obj(vec![
+                ("round_robin", rr_rates.to_json()),
+                ("adversarial", adv_rates.to_json()),
+            ]),
+        ),
+        ("pass", Json::Bool(true)),
+    ]);
+    crate::bench::report::write_json("SCHED_gate", &j)
+        .map_err(|e| format!("write SCHED_gate: {e}"))?;
+    append_step_summary(&format!(
+        "✅ schedule gate: {} seeds x {} policies pass (tau rr = {rr_tau}, adversarial = {adv_tau})",
+        seeds.len(),
+        Policy::all().len()
+    ));
+    Ok(j)
+}
+
+/// Extended fuzz (nightly): `cases` randomized schedules — policy, scheme,
+/// storage, algo, thread count, and budget all drawn from a seed chain
+/// rooted at `seed_base` (the CI run id, so every night explores new
+/// schedules). Each case must be deterministic and pass the structural
+/// invariants; failures name their replay line.
+pub fn run_fuzz(cases: usize, seed_base: u64, max_threads: usize) -> Result<Json, String> {
+    if cases == 0 {
+        return Err("fuzz needs at least one case".into());
+    }
+    let base = SchedConfig::gate_default(Policy::RoundRobin, 0);
+    let ds = crate::data::resolve(&base.dataset, base.scale, DATA_SEED)?;
+    let obj = Objective::paper(ds);
+    let mut state = seed_base;
+    let mut rows = Vec::new();
+    for _ in 0..cases {
+        let seed = splitmix64(&mut state);
+        let mut g = Pcg32::new(seed, 0xF022);
+        let mut cfg = SchedConfig::gate_default(Policy::all()[g.below(4)], seed);
+        cfg.scheme = [Scheme::Unlock, Scheme::AtomicCas, Scheme::Inconsistent][g.below(3)];
+        // sparse-biased: that's where the racy scatter paths live
+        cfg.storage = [Storage::Sparse, Storage::Sparse, Storage::Dense][g.below(3)];
+        cfg.algo = SchedAlgo::all()[g.below(3)];
+        cfg.threads = 2 + g.below(max_threads.saturating_sub(1).max(1));
+        cfg.iters = 40 + g.below(111);
+        let rep = run_checked(&obj, &cfg, "fuzz")?;
+        rows.push(rep.to_json());
+    }
+    let j = Json::obj(vec![
+        ("cases", Json::Num(cases as f64)),
+        ("seed_base", Json::Num(seed_base as f64)),
+        ("runs", Json::Arr(rows)),
+        ("pass", Json::Bool(true)),
+    ]);
+    crate::bench::report::write_json("SCHED_fuzz", &j)
+        .map_err(|e| format!("write SCHED_fuzz: {e}"))?;
+    append_step_summary(&format!(
+        "✅ schedule fuzz: {cases} randomized schedules pass (seed base {seed_base})"
+    ));
+    Ok(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use std::sync::Arc;
+
+    fn tiny_obj() -> Objective {
+        let ds = SyntheticSpec::new("sched", 96, 64, 6, 5).generate();
+        Objective::paper(Arc::new(ds))
+    }
+
+    fn tiny_cfg(policy: Policy, seed: u64) -> SchedConfig {
+        let mut cfg = SchedConfig::gate_default(policy, seed);
+        cfg.threads = 3;
+        cfg.iters = 20;
+        cfg
+    }
+
+    #[test]
+    fn same_seed_same_fingerprint() {
+        let obj = tiny_obj();
+        for policy in Policy::all() {
+            let a = run_schedule_on(&obj, &tiny_cfg(policy, 11));
+            let b = run_schedule_on(&obj, &tiny_cfg(policy, 11));
+            assert_eq!(a.fingerprint, b.fingerprint, "{}", policy.name());
+            assert_eq!(a.final_w, b.final_w, "{}", policy.name());
+            a.check().unwrap();
+        }
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_seed() {
+        let obj = tiny_obj();
+        let a = run_schedule_on(&obj, &tiny_cfg(Policy::SeededRandom, 1));
+        let b = run_schedule_on(&obj, &tiny_cfg(Policy::SeededRandom, 2));
+        assert_ne!(a.fingerprint, b.fingerprint);
+    }
+
+    /// The two exact staleness endpoints of schedule space: round-robin
+    /// lockstep (τ̂ = p−1, zero collisions) and the adversarial schedule
+    /// (τ̂ = (p−1)·M, the worst any interleaving of p·M updates allows).
+    #[test]
+    fn staleness_extremes() {
+        let obj = tiny_obj();
+        let rr = run_schedule_on(&obj, &tiny_cfg(Policy::RoundRobin, 5));
+        rr.check().unwrap();
+        assert_eq!(rr.max_staleness, 2);
+        assert_eq!(rr.collisions, 0);
+        let adv = run_schedule_on(&obj, &tiny_cfg(Policy::AdversarialMaxStaleness, 5));
+        adv.check().unwrap();
+        assert_eq!(adv.max_staleness, 2 * 20);
+    }
+
+    #[test]
+    fn validate_rates_monotone_in_tau() {
+        let lo = validate_rates(GATE_MU, GATE_L, GATE_ETA, GATE_M_TILDE, 3);
+        assert!(lo.feasible, "alpha {:?}", lo.alpha);
+        let hi = validate_rates(GATE_MU, GATE_L, GATE_ETA, GATE_M_TILDE, 450);
+        assert!(!hi.feasible);
+        let (a, b) = (lo.max_feasible_eta.unwrap(), hi.max_feasible_eta.unwrap());
+        assert!(b <= a, "max feasible eta must shrink with tau: {a} vs {b}");
+    }
+}

@@ -1,0 +1,246 @@
+//! Interleaving policies: who advances next.
+//!
+//! A policy sees only a cheap per-worker view (done? in-flight read clock?
+//! touching a hot coordinate?) and returns the index of the worker whose
+//! next micro-segment runs. All policies are deterministic functions of
+//! their seed and the view sequence, which is what makes a schedule
+//! replayable from `(policy, seed)` alone.
+
+use crate::coordinator::step::Stage;
+use crate::util::rng::Pcg32;
+
+/// Scheduling policy for the virtual executor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Advance workers cyclically, one segment each — the maximally fair
+    /// schedule (baseline: zero write–write collisions on the sparse path,
+    /// staleness ≤ p−1).
+    RoundRobin,
+    /// Pick a uniformly random alive worker each micro-step (seeded).
+    SeededRandom,
+    /// Always defer the worker holding the *oldest* in-flight read: every
+    /// other worker runs to completion first, so that worker's update lands
+    /// with staleness exactly (p−1)·M — the paper's bounded-delay τ
+    /// saturated to its schedule-space maximum.
+    AdversarialMaxStaleness,
+    /// Force write–write collisions on hot (head) coordinates: hold a
+    /// worker whose sampled row touches the Zipf head right after it pins
+    /// its read clock, drive a partner through a full update (stamping the
+    /// hot clocks past the held read), then release the held worker so its
+    /// catch-up pass observes the overlap (`coordinator::telemetry`).
+    HotCollision,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Result<Policy, String> {
+        match s {
+            "round-robin" | "rr" => Ok(Policy::RoundRobin),
+            "random" | "seeded-random" => Ok(Policy::SeededRandom),
+            "adversarial" | "max-staleness" => Ok(Policy::AdversarialMaxStaleness),
+            "hot-collision" | "hot" => Ok(Policy::HotCollision),
+            _ => Err(format!(
+                "unknown policy '{s}' (round-robin|random|adversarial|hot-collision)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round-robin",
+            Policy::SeededRandom => "random",
+            Policy::AdversarialMaxStaleness => "adversarial",
+            Policy::HotCollision => "hot-collision",
+        }
+    }
+
+    pub fn all() -> [Policy; 4] {
+        [
+            Policy::RoundRobin,
+            Policy::SeededRandom,
+            Policy::AdversarialMaxStaleness,
+            Policy::HotCollision,
+        ]
+    }
+}
+
+/// What a policy may observe about one worker before picking.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct WorkerView {
+    /// All its updates applied — never pick it.
+    pub done: bool,
+    /// Read clock of the in-flight update (None between sample and read on
+    /// the dense path, or at `Ready`).
+    pub read_clock: Option<u64>,
+    /// In-flight update touches a head (hot) coordinate.
+    pub hot: bool,
+    /// Updates fully applied so far.
+    pub updates: usize,
+    /// Current micro-stage.
+    pub stage: Stage,
+}
+
+/// Hot-collision sub-state: which worker is being held / driven.
+#[derive(Clone, Copy, Debug)]
+enum HcMode {
+    /// Looking for a freshly-sampled hot-row worker to hold.
+    Seek,
+    /// Holding `held`; driving `partner` until it completes one update
+    /// (it had `start_updates` when the drive began).
+    DrivePartner { held: usize, partner: usize, start_updates: usize },
+    /// Releasing `held` until it completes the overlapped update.
+    Release { held: usize, start_updates: usize },
+}
+
+/// A stateful, seeded instance of a policy.
+pub(crate) struct Chooser {
+    policy: Policy,
+    cursor: usize,
+    rng: Pcg32,
+    hc: HcMode,
+}
+
+impl Chooser {
+    pub fn new(policy: Policy, seed: u64) -> Self {
+        Chooser { policy, cursor: 0, rng: Pcg32::new(seed, 0x5CED), hc: HcMode::Seek }
+    }
+
+    /// Next alive worker at or after `self.cursor`, advancing the cursor
+    /// past the pick. `skip` (if set) is avoided unless it is the only
+    /// alive worker.
+    fn round_robin(&mut self, views: &[WorkerView], skip: Option<usize>) -> usize {
+        let p = views.len();
+        for off in 0..p {
+            let w = (self.cursor + off) % p;
+            if !views[w].done && Some(w) != skip {
+                self.cursor = (w + 1) % p;
+                return w;
+            }
+        }
+        // only `skip` is alive
+        skip.expect("round_robin called with no alive worker")
+    }
+
+    /// Pick the worker whose next segment runs. At least one view must be
+    /// alive (`!done`).
+    pub fn pick(&mut self, views: &[WorkerView]) -> usize {
+        match self.policy {
+            Policy::RoundRobin => self.round_robin(views, None),
+            Policy::SeededRandom => {
+                let alive: Vec<usize> =
+                    (0..views.len()).filter(|&w| !views[w].done).collect();
+                alive[self.rng.below(alive.len())]
+            }
+            Policy::AdversarialMaxStaleness => {
+                // victim := alive worker with the oldest pinned read
+                let victim = (0..views.len())
+                    .filter(|&w| !views[w].done)
+                    .filter_map(|w| views[w].read_clock.map(|c| (c, w)))
+                    .min()
+                    .map(|(_, w)| w);
+                match victim {
+                    // nobody has a pinned read yet: fair-schedule until
+                    // someone does
+                    None => self.round_robin(views, None),
+                    // starve the victim; it runs only when alone
+                    Some(v) => self.round_robin(views, Some(v)),
+                }
+            }
+            Policy::HotCollision => {
+                // bounded transition loop: Seek → DrivePartner → Release →
+                // Seek can each fire at most once before a pick is made
+                for _ in 0..4 {
+                    match self.hc {
+                        HcMode::Seek => {
+                            let held = (0..views.len()).find(|&w| {
+                                !views[w].done && views[w].stage == Stage::Sampled && views[w].hot
+                            });
+                            let held = match held {
+                                Some(h) => h,
+                                None => return self.round_robin(views, None),
+                            };
+                            // need a partner to overlap with the held read
+                            let any_other =
+                                (0..views.len()).any(|w| w != held && !views[w].done);
+                            if !any_other {
+                                return self.round_robin(views, None);
+                            }
+                            let partner = self.round_robin(views, Some(held));
+                            self.hc = HcMode::DrivePartner {
+                                held,
+                                partner,
+                                start_updates: views[partner].updates,
+                            };
+                            return partner;
+                        }
+                        HcMode::DrivePartner { held, partner, start_updates } => {
+                            if !views[partner].done && views[partner].updates == start_updates {
+                                return partner;
+                            }
+                            // partner finished an update (its writes landed
+                            // past the held read clock): release the victim
+                            self.hc =
+                                HcMode::Release { held, start_updates: views[held].updates };
+                        }
+                        HcMode::Release { held, start_updates } => {
+                            if !views[held].done && views[held].updates == start_updates {
+                                return held;
+                            }
+                            self.hc = HcMode::Seek;
+                        }
+                    }
+                }
+                self.round_robin(views, None)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(done: bool, read_clock: Option<u64>) -> WorkerView {
+        WorkerView { done, read_clock, hot: false, updates: 0, stage: Stage::Ready }
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in Policy::all() {
+            assert_eq!(Policy::parse(p.name()).unwrap(), p);
+        }
+        assert!(Policy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn round_robin_cycles_alive_workers() {
+        let mut c = Chooser::new(Policy::RoundRobin, 1);
+        let vs = [view(false, None), view(true, None), view(false, None)];
+        assert_eq!(c.pick(&vs), 0);
+        assert_eq!(c.pick(&vs), 2);
+        assert_eq!(c.pick(&vs), 0);
+    }
+
+    #[test]
+    fn adversarial_starves_oldest_reader() {
+        let mut c = Chooser::new(Policy::AdversarialMaxStaleness, 1);
+        // worker 1 pinned the oldest read: never picked while 0/2 alive
+        let vs = [view(false, Some(7)), view(false, Some(3)), view(false, None)];
+        for _ in 0..8 {
+            assert_ne!(c.pick(&vs), 1);
+        }
+        // ...but runs once alone
+        let only = [view(true, None), view(false, Some(3)), view(true, None)];
+        assert_eq!(c.pick(&only), 1);
+    }
+
+    #[test]
+    fn seeded_random_is_reproducible() {
+        let vs = [view(false, None), view(false, None), view(false, None)];
+        let picks = |seed| {
+            let mut c = Chooser::new(Policy::SeededRandom, seed);
+            (0..32).map(|_| c.pick(&vs)).collect::<Vec<_>>()
+        };
+        assert_eq!(picks(9), picks(9));
+        assert_ne!(picks(9), picks(10));
+    }
+}

@@ -1,0 +1,126 @@
+//! Replay protocol: any schedule is reproducible from one printed line.
+//!
+//! A failing gate or fuzz case prints
+//!
+//! ```text
+//! SCHED_REPLAY policy=adversarial seed=1337 threads=4 iters=150 \
+//!     scheme=unlock storage=sparse algo=svrg1 eta=0.2 dataset=zipf:1.1 scale=0.05
+//! ```
+//!
+//! (one line; wrapped here for width). Feeding that line back through
+//! `repro sched --replay '<line>'` — or `replay_from_line` in code —
+//! re-executes the bit-identical schedule: the dataset is regenerated from
+//! the fixed data seed, the per-worker rng streams from `seed`, and the
+//! interleaving from `(policy, seed)`. Nothing else feeds the trajectory.
+
+use super::policy::Policy;
+use super::{run_schedule, SchedAlgo, SchedConfig, ScheduleReport};
+use crate::config::{Scheme, Storage};
+
+/// Render the one-line replay token for a config. `replay_from_line`
+/// inverts this exactly; both sides live here so they cannot drift.
+pub fn replay_line(cfg: &SchedConfig) -> String {
+    format!(
+        "SCHED_REPLAY policy={} seed={} threads={} iters={} scheme={} storage={} algo={} eta={} dataset={} scale={}",
+        cfg.policy.name(),
+        cfg.seed,
+        cfg.threads,
+        cfg.iters,
+        cfg.scheme.name(),
+        cfg.storage.name(),
+        cfg.algo.name(),
+        cfg.eta,
+        cfg.dataset,
+        cfg.scale,
+    )
+}
+
+/// Parse a `SCHED_REPLAY` line (leading tag optional) back into a config.
+pub fn parse_replay_line(line: &str) -> Result<SchedConfig, String> {
+    let mut cfg = SchedConfig::gate_default(Policy::RoundRobin, 42);
+    let mut saw_any = false;
+    for tok in line.split_whitespace() {
+        if tok == "SCHED_REPLAY" {
+            continue;
+        }
+        let (k, v) = tok
+            .split_once('=')
+            .ok_or_else(|| format!("replay line: bad token '{tok}' (want key=value)"))?;
+        saw_any = true;
+        match k {
+            "policy" => cfg.policy = Policy::parse(v)?,
+            "seed" => cfg.seed = v.parse().map_err(|_| format!("replay line: bad seed '{v}'"))?,
+            "threads" => {
+                cfg.threads = v.parse().map_err(|_| format!("replay line: bad threads '{v}'"))?
+            }
+            "iters" => {
+                cfg.iters = v.parse().map_err(|_| format!("replay line: bad iters '{v}'"))?
+            }
+            "scheme" => cfg.scheme = Scheme::parse(v)?,
+            "storage" => cfg.storage = Storage::parse(v)?,
+            "algo" => cfg.algo = SchedAlgo::parse(v)?,
+            "eta" => cfg.eta = v.parse().map_err(|_| format!("replay line: bad eta '{v}'"))?,
+            "dataset" => cfg.dataset = v.to_string(),
+            "scale" => {
+                cfg.scale = v.parse().map_err(|_| format!("replay line: bad scale '{v}'"))?
+            }
+            _ => return Err(format!("replay line: unknown key '{k}'")),
+        }
+    }
+    if !saw_any {
+        return Err("replay line: no key=value tokens found".into());
+    }
+    if cfg.threads == 0 || cfg.iters == 0 {
+        return Err("replay line: threads and iters must be >= 1".into());
+    }
+    Ok(cfg)
+}
+
+/// Reproduce the pinned gate schedule for `(seed, policy)` — the one-call
+/// entry point the CI diagnostics name.
+pub fn replay(seed: u64, policy: Policy) -> Result<ScheduleReport, String> {
+    run_schedule(&SchedConfig::gate_default(policy, seed))
+}
+
+/// Reproduce an arbitrary schedule from its printed replay line.
+pub fn replay_from_line(line: &str) -> Result<ScheduleReport, String> {
+    run_schedule(&parse_replay_line(line)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_roundtrips_through_parser() {
+        let mut cfg = SchedConfig::gate_default(Policy::AdversarialMaxStaleness, 1337);
+        cfg.threads = 3;
+        cfg.iters = 77;
+        cfg.scheme = Scheme::AtomicCas;
+        cfg.storage = Storage::Dense;
+        cfg.algo = SchedAlgo::Svrg2;
+        cfg.eta = 0.125; // dyadic: formats/parses exactly
+        let line = replay_line(&cfg);
+        let back = parse_replay_line(&line).unwrap();
+        assert_eq!(replay_line(&back), line);
+        assert_eq!(back.policy, cfg.policy);
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.threads, cfg.threads);
+        assert_eq!(back.iters, cfg.iters);
+        assert_eq!(back.scheme, cfg.scheme);
+        assert_eq!(back.storage, cfg.storage);
+        assert_eq!(back.algo, cfg.algo);
+        assert_eq!(back.eta, cfg.eta);
+        assert_eq!(back.dataset, cfg.dataset);
+        assert_eq!(back.scale, cfg.scale);
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        assert!(parse_replay_line("").is_err());
+        assert!(parse_replay_line("SCHED_REPLAY").is_err());
+        assert!(parse_replay_line("policy=warp-speed").is_err());
+        assert!(parse_replay_line("frobnicate=1").is_err());
+        assert!(parse_replay_line("threads=0 iters=5").is_err());
+    }
+}

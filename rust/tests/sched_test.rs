@@ -1,0 +1,221 @@
+//! Virtual scheduler (DESIGN.md §9) integration tests.
+//!
+//! The `sched` module drives the *real* inner-loop code — the same
+//! `WorkerStep` state machines the thread pool runs — one micro-segment at
+//! a time under seeded interleaving policies. These tests pin the contract
+//! down from outside the crate:
+//!
+//! * **Determinism** — same `(policy, seed)` ⇒ bit-identical trajectory
+//!   and fingerprint, for every policy, and across the scheme × storage ×
+//!   algo grid (propcheck sweep).
+//! * **Schedule-space extremes** — round-robin lockstep achieves exactly
+//!   τ̂ = p−1 with zero collisions; the adversarial policy achieves exactly
+//!   τ̂ = (p−1)·M and dominates both round-robin and a real threaded run of
+//!   the same phase.
+//! * **Collision forcing** — hot-collision produces write–write overlaps
+//!   on the Zipf head where round-robin produces none.
+//! * **p = 1 parity** — `run_virtual` is bit-identical to the threaded
+//!   drivers at one worker, for AsySVRG {dense, sparse} × {Opt 1, Opt 2}
+//!   and Hogwild!, under any policy.
+//! * **Replay** — the printed `SCHED_REPLAY` line reproduces the exact
+//!   fingerprint.
+
+use asysvrg::config::{Algo, RunConfig, Scheme, Storage};
+use asysvrg::coordinator::hogwild::run_hogwild;
+use asysvrg::coordinator::{run_asysvrg, SvrgOption};
+use asysvrg::data::synthetic::SyntheticSpec;
+use asysvrg::objective::Objective;
+use asysvrg::propcheck::{forall_res, Gen};
+use asysvrg::sched::{
+    self, parse_replay_line, replay_from_line, replay_line, run_phase_timed_on, run_schedule_on,
+    run_virtual, Policy, SchedAlgo, SchedConfig,
+};
+use std::sync::Arc;
+
+fn small_obj(n: usize, d: usize, nnz: usize, seed: u64) -> Objective {
+    let ds = SyntheticSpec::new("sched-t", n, d, nnz, seed).generate();
+    Objective::paper(Arc::new(ds))
+}
+
+fn small_cfg(policy: Policy, seed: u64, threads: usize, iters: usize) -> SchedConfig {
+    let mut cfg = SchedConfig::gate_default(policy, seed);
+    cfg.threads = threads;
+    cfg.iters = iters;
+    cfg
+}
+
+/// Same `(policy, seed)` twice ⇒ the same trajectory, bit for bit, and the
+/// structural invariants (drained, exact update accounting, finite) hold.
+#[test]
+fn every_policy_is_deterministic_under_fixed_seed() {
+    let obj = small_obj(96, 64, 6, 5);
+    for policy in Policy::all() {
+        let cfg = small_cfg(policy, 23, 3, 25);
+        let a = run_schedule_on(&obj, &cfg);
+        let b = run_schedule_on(&obj, &cfg);
+        a.check().unwrap_or_else(|e| panic!("{}: {e}", policy.name()));
+        assert_eq!(a.fingerprint, b.fingerprint, "{}", policy.name());
+        assert_eq!(a.final_w, b.final_w, "{}", policy.name());
+        assert_eq!(a.micro_steps, b.micro_steps, "{}", policy.name());
+        assert_eq!(a.max_staleness, b.max_staleness, "{}", policy.name());
+    }
+}
+
+/// The two exact endpoints of schedule space, plus dominance over the OS:
+/// round-robin lockstep is τ̂ = p−1 / collision-free; the adversarial
+/// schedule is τ̂ = (p−1)·M and no timed interleaving of the same phase can
+/// exceed it.
+#[test]
+fn adversarial_staleness_is_exact_and_dominates_timed_runs() {
+    let obj = small_obj(120, 80, 7, 9);
+    let (p, iters) = (4, 30);
+    let rr = run_schedule_on(&obj, &small_cfg(Policy::RoundRobin, 7, p, iters));
+    rr.check().unwrap();
+    assert_eq!(rr.max_staleness, (p - 1) as u64);
+    assert_eq!(rr.collisions, 0, "lockstep round-robin must be collision-free");
+    let adv = run_schedule_on(&obj, &small_cfg(Policy::AdversarialMaxStaleness, 7, p, iters));
+    adv.check().unwrap();
+    assert_eq!(adv.max_staleness, ((p - 1) * iters) as u64);
+    assert!(adv.max_staleness >= rr.max_staleness);
+    // real OS threads running the identical phase cannot be more stale
+    let timed = run_phase_timed_on(&obj, &small_cfg(Policy::RoundRobin, 7, p, iters));
+    assert!(
+        adv.max_staleness >= timed.max_staleness,
+        "adversarial {} < timed {}",
+        adv.max_staleness,
+        timed.max_staleness
+    );
+}
+
+/// Collision forcing needs a heavy head to collide on, so this one runs on
+/// the gate's Zipf-1.1 instance: hot-collision must overlap writes where
+/// round-robin provably never does.
+#[test]
+fn hot_collision_forces_overlaps_where_round_robin_has_none() {
+    let hot = sched::run_schedule(&small_cfg(Policy::HotCollision, 42, 4, 60)).unwrap();
+    hot.check().unwrap();
+    assert!(hot.collisions > 0, "no collisions forced on the Zipf head");
+    let rr = sched::run_schedule(&small_cfg(Policy::RoundRobin, 42, 4, 60)).unwrap();
+    assert_eq!(rr.collisions, 0);
+}
+
+/// At p = 1 the virtual scheduler IS the sequential path: `run_virtual`
+/// reproduces the threaded drivers bit for bit across storages, w_{t+1}
+/// options, and hogwild — and the choice of policy is immaterial.
+#[test]
+fn single_worker_virtual_runs_match_threaded_drivers_bitwise() {
+    let obj = small_obj(110, 72, 6, 11);
+    for storage in [Storage::Dense, Storage::Sparse] {
+        let cfg = RunConfig {
+            threads: 1,
+            scheme: Scheme::Inconsistent,
+            eta: 0.2,
+            epochs: 3,
+            target_gap: 0.0,
+            storage,
+            seed: 5,
+            ..Default::default()
+        };
+        for option in [SvrgOption::CurrentIterate, SvrgOption::Average] {
+            let real = run_asysvrg(&obj, &cfg, option, f64::NEG_INFINITY);
+            for policy in [Policy::RoundRobin, Policy::AdversarialMaxStaleness] {
+                let virt = run_virtual(&obj, &cfg, option, policy, f64::NEG_INFINITY);
+                assert_eq!(
+                    virt.final_w, real.final_w,
+                    "{storage:?}/{option:?}/{} final w",
+                    policy.name()
+                );
+                assert_eq!(virt.total_updates, real.total_updates);
+                let vl: Vec<f64> = virt.history.iter().map(|h| h.loss).collect();
+                let rl: Vec<f64> = real.history.iter().map(|h| h.loss).collect();
+                assert_eq!(vl, rl, "{storage:?}/{option:?}/{} trajectory", policy.name());
+            }
+        }
+        let hcfg = RunConfig {
+            algo: Algo::Hogwild,
+            threads: 1,
+            scheme: Scheme::Unlock,
+            eta: 0.5,
+            epochs: 3,
+            target_gap: 0.0,
+            storage,
+            seed: 5,
+            ..Default::default()
+        };
+        let real = run_hogwild(&obj, &hcfg, f64::NEG_INFINITY);
+        let virt = run_virtual(&obj, &hcfg, SvrgOption::CurrentIterate, Policy::RoundRobin, f64::NEG_INFINITY);
+        assert_eq!(virt.final_w, real.final_w, "hogwild {storage:?} final w");
+        assert_eq!(virt.total_updates, real.total_updates);
+    }
+}
+
+/// The replay contract end to end: the report's printed line, fed back
+/// through the parser and executor, lands on the identical fingerprint.
+#[test]
+fn replay_line_reproduces_the_exact_schedule() {
+    let mut cfg = SchedConfig::gate_default(Policy::SeededRandom, 1337);
+    cfg.threads = 3;
+    cfg.iters = 40;
+    cfg.scheme = Scheme::AtomicCas;
+    cfg.algo = SchedAlgo::Svrg2;
+    let rep = sched::run_schedule(&cfg).unwrap();
+    assert_eq!(rep.replay, replay_line(&cfg));
+    let back = replay_from_line(&rep.replay).unwrap();
+    assert_eq!(back.fingerprint, rep.fingerprint, "replayed schedule diverged");
+    assert_eq!(back.final_w, rep.final_w);
+    assert_eq!(back.max_staleness, rep.max_staleness);
+    // and the parsed config is the one we started from
+    let parsed = parse_replay_line(&rep.replay).unwrap();
+    assert_eq!(replay_line(&parsed), rep.replay);
+}
+
+/// Propcheck sweep over the whole grid the fuzzer draws from: every
+/// (policy, scheme, storage, algo, p, M) combination must drain with exact
+/// accounting and reproduce its own fingerprint.
+#[test]
+fn prop_schedules_drain_deterministically_across_the_grid() {
+    let obj = small_obj(90, 56, 5, 17);
+    forall_res("sched grid determinism", 20, |g: &mut Gen| {
+        let mut cfg = SchedConfig::gate_default(*g.choose(&Policy::all()), g.u64());
+        cfg.scheme = *g.choose(&[Scheme::Unlock, Scheme::AtomicCas, Scheme::Inconsistent]);
+        cfg.storage = *g.choose(&[Storage::Sparse, Storage::Sparse, Storage::Dense]);
+        cfg.algo = *g.choose(&SchedAlgo::all());
+        cfg.threads = g.usize_in(2..5);
+        cfg.iters = g.usize_in(8..30);
+        let a = run_schedule_on(&obj, &cfg);
+        a.check().map_err(|e| format!("{e}\n  replay: {}", a.replay))?;
+        let b = run_schedule_on(&obj, &cfg);
+        if a.fingerprint != b.fingerprint {
+            return Err(format!("nondeterministic: {}", a.replay));
+        }
+        Ok(())
+    });
+}
+
+/// Theorem 1 at measured staleness: the gate constants are feasible at the
+/// fair schedule's τ̂ and the feasible step-size region shrinks as the
+/// adversary saturates τ — the empirical check `run_gate` performs, pinned
+/// here at the schedule-space endpoints of a small instance.
+#[test]
+fn theory_feasibility_shrinks_from_fair_to_adversarial_staleness() {
+    let obj = small_obj(96, 64, 6, 5);
+    let rr = run_schedule_on(&obj, &small_cfg(Policy::RoundRobin, 3, 4, 40));
+    let adv = run_schedule_on(&obj, &small_cfg(Policy::AdversarialMaxStaleness, 3, 4, 40));
+    let lo = sched::validate_rates(
+        sched::GATE_MU,
+        sched::GATE_L,
+        sched::GATE_ETA,
+        sched::GATE_M_TILDE,
+        rr.max_staleness,
+    );
+    let hi = sched::validate_rates(
+        sched::GATE_MU,
+        sched::GATE_L,
+        sched::GATE_ETA,
+        sched::GATE_M_TILDE,
+        adv.max_staleness,
+    );
+    assert!(lo.feasible, "Theorem 1 must contract at tau = p-1 (alpha {:?})", lo.alpha);
+    let (e_lo, e_hi) = (lo.max_feasible_eta.unwrap(), hi.max_feasible_eta.unwrap());
+    assert!(e_hi <= e_lo, "max feasible eta must shrink with tau: {e_lo} vs {e_hi}");
+}
