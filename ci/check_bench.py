@@ -15,6 +15,11 @@ bench_micro` against the repo's performance contracts:
 * pool — waking the persistent worker pool must beat per-phase thread
   spawning by its dispatch target, and improve end-to-end epochs/sec
   (DESIGN.md §8).
+* distributed — the cluster simulator must scale monotonically in node
+  count below the network knee, reproduce the single-box simulator
+  bit-for-bit at m=1 with a zero-cost network, run async epoch
+  boundaries at least as fast as sync under high RPC latency, and be
+  bit-deterministic per seed (DESIGN.md §10).
 
 Usage: check_bench.py [--results rust/results] [--only sparse,pool]
 
@@ -98,12 +103,48 @@ def check_pool(rep, log):
         raise GateFailure("pool bench reported overall FAIL")
 
 
+def check_distributed(rep, log):
+    secs = [
+        (int(pt["nodes"]), pt["sim_seconds"])
+        for pt in rep["surface"]
+        if pt["net"] == "zero"
+    ]
+    secs.sort()
+    log(f"distributed free-network surface: {['m=%d: %.4fs' % s for s in secs]}")
+    for (m_lo, t_lo), (m_hi, t_hi) in zip(secs, secs[1:]):
+        if t_hi > t_lo * 1.02:
+            raise GateFailure(
+                f"free-network sim time not monotone in nodes: "
+                f"m={m_hi} takes {t_hi:.4f}s vs m={m_lo} at {t_lo:.4f}s"
+            )
+    if not rep["parity_pass"]:
+        raise GateFailure(
+            f"m=1/zero-network parity broken: cluster "
+            f"{rep['parity_cluster_seconds']!r}s vs single-box "
+            f"{rep['parity_single_box_seconds']!r}s"
+        )
+    log(
+        f"  boundary under high latency: sync {rep['sync_epochs_per_sec']:.2f} "
+        f"vs async {rep['async_epochs_per_sec']:.2f} epochs/s"
+    )
+    if rep["async_epochs_per_sec"] < rep["sync_epochs_per_sec"]:
+        raise GateFailure(
+            f"async boundary slower than sync under latency: "
+            f"{rep['async_epochs_per_sec']:.2f} < {rep['sync_epochs_per_sec']:.2f} epochs/s"
+        )
+    if not rep["determinism_pass"]:
+        raise GateFailure("distributed run not bit-deterministic per seed")
+    if not rep["pass"]:
+        raise GateFailure("distributed bench reported overall FAIL")
+
+
 # gate name -> (report filename, checker)
 GATES = {
     "sparse": ("BENCH_sparse_vs_dense.json", check_sparse_vs_dense),
     "epoch": ("BENCH_epoch_pass.json", check_epoch_pass),
     "contention": ("BENCH_contention.json", check_contention),
     "pool": ("BENCH_pool.json", check_pool),
+    "distributed": ("BENCH_distributed.json", check_distributed),
 }
 
 

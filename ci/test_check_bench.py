@@ -59,6 +59,24 @@ def passing_reports():
             "e2e_speedup": 1.4,
             "pass": True,
         },
+        "BENCH_distributed.json": {
+            "surface": [
+                {"nodes": 1, "net": "zero", "sim_seconds": 4.0},
+                {"nodes": 1, "net": "lan", "sim_seconds": 4.5},
+                {"nodes": 2, "net": "zero", "sim_seconds": 2.1},
+                {"nodes": 2, "net": "lan", "sim_seconds": 2.8},
+                {"nodes": 4, "net": "zero", "sim_seconds": 1.2},
+                {"nodes": 4, "net": "lan", "sim_seconds": 2.0},
+            ],
+            "parity_cluster_seconds": 4.0,
+            "parity_single_box_seconds": 4.0,
+            "parity_pass": True,
+            "sync_epochs_per_sec": 0.8,
+            "async_epochs_per_sec": 1.1,
+            "monotone_pass": True,
+            "determinism_pass": True,
+            "pass": True,
+        },
     }
 
 
@@ -92,6 +110,10 @@ def test_all_gates_pass_on_canned_reports(results_dir, capsys):
         ("BENCH_pool.json", {"pass": False}, "pool"),
         ("BENCH_contention.json", {"telemetry_overhead": 0.2}, "contention"),
         ("BENCH_contention.json", {"pass": False}, "contention"),
+        ("BENCH_distributed.json", {"parity_pass": False}, "distributed"),
+        ("BENCH_distributed.json", {"async_epochs_per_sec": 0.5}, "distributed"),
+        ("BENCH_distributed.json", {"determinism_pass": False}, "distributed"),
+        ("BENCH_distributed.json", {"pass": False}, "distributed"),
     ],
 )
 def test_threshold_violations_fail(results_dir, capsys, filename, mutate, expect):
@@ -128,6 +150,21 @@ def test_collision_rate_monotonicity_only_below_core_count(results_dir, capsys):
     path.write_text(json.dumps(rep))
     assert run_main(results_dir) == 1
     assert "not monotone" in capsys.readouterr().err
+
+
+def test_distributed_free_network_must_scale(results_dir, capsys):
+    path = results_dir / "BENCH_distributed.json"
+    rep = json.loads(path.read_text())
+    # a slowdown on the LAN surface is fine (that's the network knee)...
+    rep["surface"][5]["sim_seconds"] = 9.0
+    path.write_text(json.dumps(rep))
+    assert run_main(results_dir, only="distributed") == 0
+    capsys.readouterr()
+    # ...but the free-network surface must stay monotone in node count
+    rep["surface"][4]["sim_seconds"] = 3.0
+    path.write_text(json.dumps(rep))
+    assert run_main(results_dir, only="distributed") == 1
+    assert "not monotone in nodes" in capsys.readouterr().err
 
 
 def test_only_selects_gates(results_dir, capsys):

@@ -6,7 +6,7 @@
 //! Output feeds the CostModel calibration and EXPERIMENTS.md §Perf.
 
 use asysvrg::bench::{contention, report};
-use asysvrg::config::{RunConfig, Scheme, Storage};
+use asysvrg::config::{Boundary, RunConfig, Scheme, Storage};
 use asysvrg::coordinator::delay::DelayStats;
 use asysvrg::coordinator::epoch::{parallel_full_grad, parallel_full_grad_sparse};
 use asysvrg::coordinator::shared::SharedParams;
@@ -20,7 +20,8 @@ use asysvrg::data::synthetic::SyntheticSpec;
 use asysvrg::linalg::{dense, AtomicF32Vec};
 use asysvrg::objective::Objective;
 use asysvrg::runtime::pool::WorkerPool;
-use asysvrg::simcore::{simulate_inner, CostModel, SimTask};
+use asysvrg::simcore::{sim_run, simulate_inner, CostModel, SimTask};
+use asysvrg::simdist::{sim_dist_run, DistConfig, LatencyDist, NetworkModel};
 use asysvrg::util::json::Json;
 use asysvrg::util::rng::Pcg32;
 use asysvrg::util::Stopwatch;
@@ -495,4 +496,145 @@ fn main() {
         "frozen   : read {:.3} write {:.3} sparse {:.3} dense {:.3} lock {:.1} (ns)",
         f.read_coord_ns, f.write_coord_ns, f.sparse_nnz_ns, f.dense_coord_ns, f.lock_ns
     );
+
+    // ------------------------------------------------------------------
+    // distributed cluster simulator (DESIGN.md §10): the p×m epoch-rate
+    // surface, the m=1/zero-network parity contract against the
+    // single-box simulator, the async-vs-sync boundary under high RPC
+    // latency, and whole-run determinism per seed. CI bench smoke gates
+    // all four from the emitted JSON.
+    // ------------------------------------------------------------------
+    println!("\n== distributed: cluster simulator (m nodes x p threads) ==");
+    let ds = SyntheticSpec::new("bench-dist", 512, 4096, 24, 42).generate();
+    let obj = Objective::paper(Arc::new(ds));
+    let p = 2usize;
+    let cfg = RunConfig {
+        threads: p,
+        scheme: Scheme::Unlock,
+        eta: 0.2,
+        epochs: 4,
+        target_gap: 0.0, // run every epoch: timing surfaces, not convergence
+        storage: Storage::Sparse,
+        seed: 42,
+        ..Default::default()
+    };
+    let costs = CostModel::default_host();
+    let dist = |nodes: usize, boundary: Boundary, net: NetworkModel| DistConfig {
+        nodes,
+        threads_per_node: p,
+        boundary,
+        net,
+        ..Default::default()
+    };
+
+    // epoch-rate surface over node counts, free network vs a 10 GbE LAN
+    let mut surface = Vec::new();
+    let mut free_secs = Vec::new();
+    for nodes in [1usize, 2, 4] {
+        for (label, net) in [("zero", NetworkModel::zero()), ("lan", NetworkModel::lan())] {
+            let r = sim_dist_run(
+                &obj,
+                &cfg,
+                &dist(nodes, Boundary::Sync, net),
+                &costs,
+                f64::NEG_INFINITY,
+            );
+            println!(
+                "m={nodes} p={p} net={label:<4} sim {:>9.4}s  {:>8.2} epochs/s  tau_e2e={}",
+                r.total_seconds,
+                r.epochs_per_sec(),
+                r.tau_end_to_end
+            );
+            if label == "zero" {
+                free_secs.push(r.total_seconds);
+            }
+            surface.push(Json::obj(vec![
+                ("nodes", Json::Num(nodes as f64)),
+                ("threads_per_node", Json::Num(p as f64)),
+                ("net", Json::Str(label.into())),
+                ("sim_seconds", Json::Num(r.total_seconds)),
+                ("epochs_per_sec", Json::Num(r.epochs_per_sec())),
+                ("tau_end_to_end", Json::Num(r.tau_end_to_end as f64)),
+            ]));
+        }
+    }
+    // free network = below the knee: more machines must not slow the run
+    // (2% slack absorbs the per-shard merge/pack overhead at small scale)
+    let monotone_pass = free_secs.windows(2).all(|w| w[1] <= w[0] * 1.02);
+
+    // m = 1 + zero network reproduces the single-box sim-seconds bit-for-bit
+    let d1 = sim_dist_run(
+        &obj,
+        &cfg,
+        &dist(1, Boundary::Sync, NetworkModel::zero()),
+        &costs,
+        f64::NEG_INFINITY,
+    );
+    let s1 = sim_run(&obj, &cfg, &costs, f64::NEG_INFINITY);
+    let parity_pass = d1.total_seconds.to_bits() == s1.total_seconds.to_bits();
+    println!(
+        "m=1 parity: cluster {:.6}s vs single-box {:.6}s => {}",
+        d1.total_seconds,
+        s1.total_seconds,
+        if parity_pass { "bit-exact" } else { "MISMATCH" }
+    );
+
+    // sync barrier vs async free-running boundary under 500 µs RPCs
+    let slow = NetworkModel {
+        latency: LatencyDist::Fixed(500_000.0),
+        gbps: 1.0,
+        shared: true,
+        bytes_per_coord: 8.0,
+    };
+    let sync_r =
+        sim_dist_run(&obj, &cfg, &dist(4, Boundary::Sync, slow), &costs, f64::NEG_INFINITY);
+    let async_r =
+        sim_dist_run(&obj, &cfg, &dist(4, Boundary::Async, slow), &costs, f64::NEG_INFINITY);
+    let async_pass = async_r.epochs_per_sec() >= sync_r.epochs_per_sec();
+    println!(
+        "high-latency boundary: sync {:.2} epochs/s vs async {:.2} epochs/s (tau_e2e {} vs {})",
+        sync_r.epochs_per_sec(),
+        async_r.epochs_per_sec(),
+        sync_r.tau_end_to_end,
+        async_r.tau_end_to_end
+    );
+
+    // whole-run determinism: same seed, bit-identical timing and iterate
+    let again =
+        sim_dist_run(&obj, &cfg, &dist(4, Boundary::Async, slow), &costs, f64::NEG_INFINITY);
+    let det_pass = async_r.total_seconds.to_bits() == again.total_seconds.to_bits()
+        && async_r.final_loss.to_bits() == again.final_loss.to_bits();
+
+    let dist_pass = monotone_pass && parity_pass && async_pass && det_pass;
+    println!(
+        "distributed smoke: monotone {} | m=1 parity {} | async>=sync {} | deterministic {} => {}",
+        if monotone_pass { "ok" } else { "FAIL" },
+        if parity_pass { "ok" } else { "FAIL" },
+        if async_pass { "ok" } else { "FAIL" },
+        if det_pass { "ok" } else { "FAIL" },
+        if dist_pass { "PASS" } else { "FAIL" },
+    );
+    let dist_json = Json::obj(vec![
+        ("bench", Json::Str("distributed_cluster_sim".into())),
+        ("n", Json::Num(obj.n() as f64)),
+        ("d", Json::Num(obj.dim() as f64)),
+        ("threads_per_node", Json::Num(p as f64)),
+        ("epochs", Json::Num(cfg.epochs as f64)),
+        ("surface", Json::Arr(surface)),
+        ("parity_cluster_seconds", Json::Num(d1.total_seconds)),
+        ("parity_single_box_seconds", Json::Num(s1.total_seconds)),
+        ("sync_epochs_per_sec", Json::Num(sync_r.epochs_per_sec())),
+        ("async_epochs_per_sec", Json::Num(async_r.epochs_per_sec())),
+        ("sync_tau_end_to_end", Json::Num(sync_r.tau_end_to_end as f64)),
+        ("async_tau_end_to_end", Json::Num(async_r.tau_end_to_end as f64)),
+        ("monotone_pass", Json::Bool(monotone_pass)),
+        ("parity_pass", Json::Bool(parity_pass)),
+        ("async_pass", Json::Bool(async_pass)),
+        ("determinism_pass", Json::Bool(det_pass)),
+        ("pass", Json::Bool(dist_pass)),
+    ]);
+    match report::write_json("BENCH_distributed", &dist_json) {
+        Ok(path) => println!("json -> {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
 }

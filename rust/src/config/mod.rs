@@ -127,6 +127,33 @@ impl Algo {
     }
 }
 
+/// Epoch-boundary discipline of the distributed simulator
+/// (`crate::simdist`): barrier every node on the global epoch end, or let
+/// each node free-run on the freshest locally-available full gradient.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Boundary {
+    #[default]
+    Sync,
+    Async,
+}
+
+impl Boundary {
+    pub fn parse(s: &str) -> Result<Boundary, String> {
+        match s {
+            "sync" => Ok(Boundary::Sync),
+            "async" => Ok(Boundary::Async),
+            _ => Err(format!("unknown boundary '{s}' (sync|async)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Boundary::Sync => "sync",
+            Boundary::Async => "async",
+        }
+    }
+}
+
 /// Full experiment configuration. Defaults reproduce §5.1.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -248,6 +275,10 @@ mod tests {
         }
         assert!(Scheme::parse("nope").is_err());
         assert_eq!(Algo::parse("hogwild").unwrap(), Algo::Hogwild);
+        for b in [Boundary::Sync, Boundary::Async] {
+            assert_eq!(Boundary::parse(b.name()).unwrap(), b);
+        }
+        assert!(Boundary::parse("bsp").is_err());
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! eq. 10's mixed-age reads).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, TryLockError};
 
 use crate::config::Scheme;
 use crate::linalg::AtomicF32Vec;
@@ -249,6 +249,56 @@ impl SharedParams {
         }
     }
 
+    /// Open a writer critical section **without blocking**: `None` when
+    /// another writer holds the lock. The returned [`WriteSession`] keeps
+    /// the section open across arbitrary code (including yield points of
+    /// the virtual scheduler) and completes the scheme's protocol on drop.
+    pub fn try_write_session(&self) -> Option<WriteSession<'_>> {
+        match self.lock.try_lock() {
+            Ok(g) => Some(self.open_session(g, false)),
+            Err(TryLockError::WouldBlock) => None,
+            Err(TryLockError::Poisoned(e)) => panic!("poisoned write lock: {e}"),
+        }
+    }
+
+    /// Blocking [`WriteSession`] acquire. `conflicted()` reports whether
+    /// the acquire had to wait — the same fast-probe-then-block accounting
+    /// as [`SharedParams::with_write_lock_observed`].
+    pub fn lock_write_session(&self) -> WriteSession<'_> {
+        match self.lock.try_lock() {
+            Ok(g) => self.open_session(g, false),
+            Err(TryLockError::WouldBlock) => {
+                let g = self.lock.lock().unwrap();
+                self.open_session(g, true)
+            }
+            Err(TryLockError::Poisoned(e)) => panic!("poisoned write lock: {e}"),
+        }
+    }
+
+    /// Probe: is the writer lock currently held? (A `try_lock` that is
+    /// immediately released.) The virtual scheduler uses this to recompute
+    /// which workers would block on their next acquire; on the scheduler's
+    /// single OS thread the answer cannot change between the probe and the
+    /// pick, so the blocked set is exact.
+    pub fn write_lock_held(&self) -> bool {
+        match self.lock.try_lock() {
+            Ok(_g) => false,
+            Err(TryLockError::WouldBlock) => true,
+            Err(TryLockError::Poisoned(e)) => panic!("poisoned write lock: {e}"),
+        }
+    }
+
+    /// Start the writer protocol with the mutex already held: the seqlock
+    /// version goes odd (readers retry) before the session is handed out.
+    fn open_session<'a>(&'a self, guard: MutexGuard<'a, ()>, conflicted: bool) -> WriteSession<'a> {
+        let ver = self.version.load(Ordering::Relaxed);
+        if self.scheme == Scheme::Seqlock {
+            self.version.store(ver + 1, Ordering::Release);
+            std::sync::atomic::fence(Ordering::Release);
+        }
+        WriteSession { shared: self, ver, conflicted, _guard: guard }
+    }
+
     /// Body shared by the lock entry points: the seqlock version dance when
     /// the scheme needs it, plain `f()` otherwise. Caller holds the mutex.
     fn write_locked_body<R>(&self, f: impl FnOnce() -> R) -> R {
@@ -310,6 +360,42 @@ impl SharedParams {
     /// Unconditional store (epoch boundaries).
     pub fn store(&self, w: &[f32]) {
         self.data.write_from(w);
+    }
+}
+
+/// An open writer critical section as an RAII value: the scheme's mutex
+/// guard plus the in-progress half of the seqlock version dance. Unlike
+/// the closure-based [`SharedParams::with_write_lock`], a session can be
+/// *held across yield points*: `coordinator::step` opens one per locked
+/// sparse update so the virtual scheduler (`crate::sched`) can interleave
+/// other workers' segments against a held lock — which is exactly what the
+/// locked schemes' read/update races look like on real threads. Dropping
+/// the session completes the protocol (seqlock version odd → even, then
+/// the mutex releases), so a panicking holder still restores readability.
+pub struct WriteSession<'a> {
+    shared: &'a SharedParams,
+    /// Seqlock version at open (pre-bump); the close stores `ver + 2`.
+    ver: u64,
+    conflicted: bool,
+    _guard: MutexGuard<'a, ()>,
+}
+
+impl WriteSession<'_> {
+    /// The acquire had to wait behind another writer (blocking entry point
+    /// only; `try_write_session` either succeeds uncontended or refuses).
+    pub fn conflicted(&self) -> bool {
+        self.conflicted
+    }
+}
+
+impl Drop for WriteSession<'_> {
+    fn drop(&mut self) {
+        // version goes even *before* `_guard` releases the mutex (fields
+        // drop after this body), so the next writer opens from the same
+        // clean state `write_locked_body` leaves behind
+        if self.shared.scheme == Scheme::Seqlock {
+            self.shared.version.store(self.ver + 2, Ordering::Release);
+        }
     }
 }
 
@@ -451,6 +537,57 @@ mod tests {
             saw_conflict = conflicted;
         });
         assert!(saw_conflict, "observed acquire under a held lock must report a conflict");
+    }
+
+    /// A held session excludes other writers (`try` refuses, probe reports
+    /// held) and keeps the seqlock version odd until drop; afterwards reads
+    /// are admissible again. The session is the open-coded equivalent of
+    /// `with_write_lock` — same version parity at every boundary.
+    #[test]
+    fn write_session_excludes_writers_and_completes_seqlock_protocol() {
+        for scheme in [Scheme::Consistent, Scheme::Inconsistent, Scheme::Seqlock] {
+            let p = SharedParams::new(&[1.0, 2.0], scheme);
+            assert!(!p.write_lock_held(), "{scheme:?}: fresh lock must be free");
+            let s = p.try_write_session().expect("uncontended try must succeed");
+            assert!(p.write_lock_held(), "{scheme:?}: open session must hold the lock");
+            assert!(p.try_write_session().is_none(), "{scheme:?}: second writer must refuse");
+            if scheme == Scheme::Seqlock {
+                assert_eq!(p.version.load(Ordering::Relaxed) % 2, 1, "version odd while open");
+            }
+            // writes inside the session use the racy primitives (the
+            // session IS the discipline), then the clock bump
+            p.data().set(0, 7.0);
+            p.bump_clock();
+            drop(s);
+            assert!(!p.write_lock_held(), "{scheme:?}: drop must release");
+            if scheme == Scheme::Seqlock {
+                assert_eq!(p.version.load(Ordering::Relaxed) % 2, 0, "version even after drop");
+            }
+            let mut buf = [0.0f32; 2];
+            let at = p.read_into(&mut buf);
+            assert_eq!((buf, at), ([7.0, 2.0], 1), "{scheme:?}");
+        }
+    }
+
+    /// Blocking acquire reports contention exactly like
+    /// `with_write_lock_observed`: false uncontended, true behind a holder.
+    #[test]
+    fn write_session_conflict_accounting() {
+        let p = Arc::new(SharedParams::new(&[0.0], Scheme::Consistent));
+        assert!(!p.lock_write_session().conflicted());
+        let mut saw_conflict = false;
+        std::thread::scope(|s| {
+            let barrier = std::sync::Barrier::new(2);
+            let (p2, b2) = (&p, &barrier);
+            s.spawn(move || {
+                let _hold = p2.lock_write_session();
+                b2.wait();
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            });
+            barrier.wait();
+            saw_conflict = p.lock_write_session().conflicted();
+        });
+        assert!(saw_conflict, "acquire behind a held session must report a conflict");
     }
 
     #[test]

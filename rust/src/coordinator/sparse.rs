@@ -389,10 +389,12 @@ impl LazyState {
 /// Micro-state of one in-flight sparse update, split at the yield points
 /// the virtual scheduler interleaves on (DESIGN.md §9): clock capture →
 /// fused catch-up/margin read pass → residual → scatter write → clock
-/// bump. The threaded hot path (`sparse_update`) composes the segments
-/// back-to-back, so the `runtime::pool` drivers and the `sched::` virtual
-/// scheduler execute the identical arithmetic in the identical order —
-/// the segments are the single source of truth for the update.
+/// bump. The threaded hot path (`step::WorkerStep::run_to_end`) composes
+/// the segments back-to-back — for the locked schemes inside one held
+/// `shared::WriteSession` — so the `runtime::pool` drivers and the
+/// `sched::` virtual scheduler execute the identical arithmetic in the
+/// identical order; the segments are the single source of truth for the
+/// update.
 pub(crate) struct SparseIter {
     i: usize,
     r0: f32,
@@ -586,27 +588,6 @@ impl SparseIter {
     }
 }
 
-/// `telem = Some(..)` marks this update as telemetry-sampled: touched
-/// coordinates, write collisions (clock overlaps, racy overwrites, CAS
-/// retries) and write counts are accumulated locally and flushed once at
-/// the end — the unsampled path pays only the `Option` branch.
-#[inline]
-fn sparse_update(
-    obj: &Objective,
-    shared: &SharedParams,
-    lazy: &LazyState,
-    i: usize,
-    r0: f32,
-    cas: bool,
-    telem: Option<&ContentionStats>,
-) -> (u64, u64) {
-    let mut it = SparseIter::start(shared, i, r0);
-    it.read_pass(obj, shared, lazy, cas, telem);
-    it.residual(obj);
-    it.scatter(obj, shared, lazy, cas, telem);
-    it.finish(obj, shared, lazy, telem)
-}
-
 /// Run M sparse AsySVRG inner updates (the Alg. 1 lines 5–9 hot path at
 /// O(nnz_i) per update). Mirrors `worker::run_inner_loop`: same rng stream,
 /// same staleness accounting, same update count.
@@ -667,34 +648,6 @@ pub fn run_hogwild_inner_sparse_telemetry(
 ) -> usize {
     crate::coordinator::step::WorkerStep::sparse_hogwild(obj, shared, lazy, iters, rng, delays, telem)
         .run_to_end()
-}
-
-/// Dispatch one update through the scheme's lock discipline, recording the
-/// lock-conflict sample when this iteration is telemetry-sampled.
-#[inline]
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn locked_or_free_update(
-    obj: &Objective,
-    shared: &SharedParams,
-    lazy: &LazyState,
-    i: usize,
-    r0: f32,
-    cas: bool,
-    locked: bool,
-    sampled: Option<&ContentionStats>,
-) -> (u64, u64) {
-    if !locked {
-        return sparse_update(obj, shared, lazy, i, r0, cas, sampled);
-    }
-    match sampled {
-        Some(tm) => {
-            let (ra, conflicted) = shared
-                .with_write_lock_observed(|| sparse_update(obj, shared, lazy, i, r0, cas, Some(tm)));
-            tm.record_lock(conflicted);
-            ra
-        }
-        None => shared.with_write_lock(|| sparse_update(obj, shared, lazy, i, r0, cas, None)),
-    }
 }
 
 #[cfg(test)]

@@ -10,7 +10,9 @@
 //! | dense         | 4                   | sample → read → grad → write+bump |
 //! | sparse (free) | 5                   | sample/clock → catch-up read →    |
 //! |               |                     | residual → scatter → bump         |
-//! | sparse (lock) | 1                   | whole update inside the lock      |
+//! | sparse (lock) | 6                   | sample → acquire/clock →          |
+//! |               |                     | catch-up read → residual →        |
+//! |               |                     | scatter → bump+release            |
 //!
 //! The threaded drivers (`worker::run_inner_loop*`, `sparse::run_inner_*`,
 //! hogwild's dense loop) call `run_to_end()`, which replays the exact
@@ -24,15 +26,26 @@
 //! - the dense write and clock bump are fused into one segment because
 //!   `SharedParams::apply_step` performs both under the scheme's write
 //!   discipline — splitting them would fork the locking logic;
-//! - locked sparse schemes run the whole update in a single `advance()`:
-//!   the critical section must not yield (std `Mutex` is not reentrant on
-//!   the scheduler's single OS thread), and the clock capture must stay
-//!   inside the lock or the overlap detector reports spurious collisions.
+//! - locked sparse schemes hold an RAII [`WriteSession`] from the acquire
+//!   segment through the final bump: the critical section itself never
+//!   yields the lock, but *other* workers still interleave their reads and
+//!   lock attempts against it — the races the consistent/seqlock schemes
+//!   actually exhibit on threads. The clock capture happens inside the
+//!   session (at acquire), or the overlap detector would report spurious
+//!   collisions.
+//!
+//! Because std `Mutex` is not reentrant on the scheduler's single OS
+//! thread, a locked worker whose acquire segment finds the lock held
+//! returns [`StepEvent::Blocked`] without advancing; the scheduling
+//! policies treat such workers as unpickable until the holder's release
+//! (the holder is always a distinct runnable worker, so some pick always
+//! makes progress). Threaded drivers never see `Blocked` — `run_to_end`
+//! falls back to a genuinely blocking acquire.
 
 use crate::coordinator::delay::DelayStats;
 use crate::coordinator::epoch::EpochGradient;
-use crate::coordinator::shared::SharedParams;
-use crate::coordinator::sparse::{locked_or_free_update, LazyState, SparseIter};
+use crate::coordinator::shared::{SharedParams, WriteSession};
+use crate::coordinator::sparse::{LazyState, SparseIter};
 use crate::coordinator::telemetry::ContentionStats;
 use crate::coordinator::worker::{dense_grad, dense_read, dense_write, WorkerScratch};
 use crate::config::Scheme;
@@ -44,15 +57,19 @@ use crate::util::rng::Pcg32;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Stage {
     /// Between updates — next advance samples i (and pins the read clock on
-    /// the sparse path).
+    /// the sparse free path).
     Ready,
-    /// Instance sampled; sparse updates have pinned their read clock.
+    /// Instance sampled; free-path sparse updates have pinned their read
+    /// clock, locked ones acquire next.
     Sampled,
+    /// Locked sparse path only: the write session is held and the read
+    /// clock pinned inside it.
+    Acquired,
     /// Snapshot / catch-up read done.
     ReadDone,
     /// Gradient (residual difference) computed.
     GradDone,
-    /// Scatter write done, clock bump pending (sparse free path only).
+    /// Scatter write done, clock bump pending (sparse paths only).
     WriteDone,
 }
 
@@ -62,6 +79,12 @@ pub enum StepEvent {
     /// Moved to the given stage; `Advanced(Stage::Ready)` means an update
     /// just completed.
     Advanced(Stage),
+    /// Locked sparse path: the acquire segment found the writer lock held
+    /// by another worker's open session. Nothing advanced; the virtual
+    /// scheduler must run other workers until the holder releases
+    /// (`would_block` recomputes this exactly), and `run_to_end` falls
+    /// back to a blocking acquire.
+    Blocked,
     /// All `iters` updates are done; the step is inert.
     Finished,
 }
@@ -86,6 +109,16 @@ enum Kind<'a> {
         telem: Option<&'a ContentionStats>,
         iter: Option<SparseIter>,
         sampled: bool,
+        /// Cached residual r₀ for the in-flight update (locked path samples
+        /// before it can pin the clock, so r₀ outlives the Ready segment).
+        r0: f32,
+        /// Locked schemes: the open critical section, held from `Acquired`
+        /// through the final bump; dropping it releases the lock and
+        /// completes the seqlock protocol.
+        session: Option<WriteSession<'a>>,
+        /// A `try_write_session` probe already missed for the in-flight
+        /// update — the acquire (whenever it lands) counts as contended.
+        lock_waited: bool,
     },
 }
 
@@ -214,7 +247,16 @@ impl<'a> WorkerStep<'a> {
             shared,
             delays,
             rng,
-            kind: Kind::Sparse { lazy, residuals, telem, iter: None, sampled: false },
+            kind: Kind::Sparse {
+                lazy,
+                residuals,
+                telem,
+                iter: None,
+                sampled: false,
+                r0: 0.0,
+                session: None,
+                lock_waited: false,
+            },
             iters,
             done: 0,
             stage: Stage::Ready,
@@ -268,6 +310,18 @@ impl<'a> WorkerStep<'a> {
         }
     }
 
+    /// Would the next `advance()` return [`StepEvent::Blocked`]? True only
+    /// for a locked sparse worker at its acquire segment while another
+    /// worker's open session holds the writer lock. On the virtual
+    /// scheduler's single OS thread the probe is exact (nothing can take or
+    /// release the lock between this and the pick), so policies filter
+    /// blocked workers out of the pickable set. The holder is always a
+    /// distinct alive worker — it cannot finish its budget mid-session —
+    /// so at least one unblocked worker always exists.
+    pub fn would_block(&self) -> bool {
+        self.locked && self.stage == Stage::Sampled && self.shared.write_lock_held()
+    }
+
     /// Run one micro-segment. The segment boundaries are the yield points
     /// listed in the module docs; the arithmetic inside each is byte-for-
     /// byte the pre-refactor loop body.
@@ -275,10 +329,28 @@ impl<'a> WorkerStep<'a> {
         if self.done >= self.iters {
             return StepEvent::Finished;
         }
+        // locked sparse acquire segment: handled before the main dispatch
+        // so the non-blocking miss can report without touching any state
+        // beyond the contended-acquire flag
+        if self.locked && self.stage == Stage::Sampled {
+            return match self.shared.try_write_session() {
+                None => {
+                    if let Kind::Sparse { lock_waited, .. } = &mut self.kind {
+                        *lock_waited = true;
+                    }
+                    StepEvent::Blocked
+                }
+                Some(s) => {
+                    self.install_session(s);
+                    StepEvent::Advanced(self.stage)
+                }
+            };
+        }
         let obj = self.obj;
         let shared = self.shared;
         match &mut self.kind {
             Kind::DenseSvrg { u0, eg, eta, scratch, avg } => match self.stage {
+                Stage::Acquired => unreachable!("dense path has no acquire segment"),
                 Stage::Ready => {
                     self.i = self.rng.below(obj.n());
                     self.stage = Stage::Sampled;
@@ -300,6 +372,7 @@ impl<'a> WorkerStep<'a> {
                 }
             },
             Kind::DenseHogwild { gamma, local, r } => match self.stage {
+                Stage::Acquired => unreachable!("dense path has no acquire segment"),
                 Stage::Ready => {
                     self.i = self.rng.below(obj.n());
                     self.stage = Stage::Sampled;
@@ -320,55 +393,59 @@ impl<'a> WorkerStep<'a> {
                     self.stage = Stage::Ready;
                 }
             },
-            Kind::Sparse { lazy, residuals, telem, iter, sampled } => {
-                if self.locked {
-                    // the whole locked update is one atomic segment: the
-                    // mutex is not reentrant on the scheduler's single OS
-                    // thread, and the clock capture must stay inside the
-                    // critical section (see module docs)
-                    let i = self.rng.below(obj.n());
-                    let r0 = residuals.map_or(0.0, |r| r[i]);
-                    let s = telem.filter(|t| t.should_sample(self.done as u64));
-                    let (read, apply) =
-                        locked_or_free_update(obj, shared, *lazy, i, r0, self.cas, true, s);
-                    self.delays.record(read, apply);
-                    self.done += 1;
-                    self.stage = Stage::Ready;
-                } else {
-                    match self.stage {
-                        Stage::Ready => {
-                            let i = self.rng.below(obj.n());
-                            self.i = i;
-                            let r0 = residuals.map_or(0.0, |r| r[i]);
-                            // the telemetry-sampling decision is per update,
-                            // made once at sample time like the loop did
-                            *sampled =
-                                telem.filter(|t| t.should_sample(self.done as u64)).is_some();
-                            *iter = Some(SparseIter::start(shared, i, r0));
-                            self.stage = Stage::Sampled;
+            Kind::Sparse { lazy, residuals, telem, iter, sampled, r0, session, lock_waited } => {
+                match self.stage {
+                    Stage::Ready => {
+                        let i = self.rng.below(obj.n());
+                        self.i = i;
+                        *r0 = residuals.map_or(0.0, |r| r[i]);
+                        // the telemetry-sampling decision is per update,
+                        // made once at sample time like the loop did
+                        *sampled =
+                            telem.filter(|t| t.should_sample(self.done as u64)).is_some();
+                        if self.locked {
+                            // clock pin waits for the acquire segment (the
+                            // capture must happen inside the lock); the
+                            // contended-acquire flag resets per update
+                            *lock_waited = false;
+                        } else {
+                            *iter = Some(SparseIter::start(shared, i, *r0));
                         }
-                        Stage::Sampled => {
-                            let tm = if *sampled { *telem } else { None };
-                            iter.as_mut().unwrap().read_pass(obj, shared, lazy, self.cas, tm);
-                            self.stage = Stage::ReadDone;
-                        }
-                        Stage::ReadDone => {
-                            iter.as_mut().unwrap().residual(obj);
-                            self.stage = Stage::GradDone;
-                        }
-                        Stage::GradDone => {
-                            let tm = if *sampled { *telem } else { None };
-                            iter.as_mut().unwrap().scatter(obj, shared, lazy, self.cas, tm);
-                            self.stage = Stage::WriteDone;
-                        }
-                        Stage::WriteDone => {
-                            let tm = if *sampled { *telem } else { None };
-                            let it = iter.take().unwrap();
-                            let (read, apply) = it.finish(obj, shared, lazy, tm);
-                            self.delays.record(read, apply);
-                            self.done += 1;
-                            self.stage = Stage::Ready;
-                        }
+                        self.stage = Stage::Sampled;
+                    }
+                    // the locked acquire was intercepted before the
+                    // dispatch; reaching here at Sampled means free path
+                    Stage::Sampled => {
+                        let tm = if *sampled { *telem } else { None };
+                        iter.as_mut().unwrap().read_pass(obj, shared, lazy, self.cas, tm);
+                        self.stage = Stage::ReadDone;
+                    }
+                    Stage::Acquired => {
+                        debug_assert!(self.locked && session.is_some());
+                        let tm = if *sampled { *telem } else { None };
+                        iter.as_mut().unwrap().read_pass(obj, shared, lazy, self.cas, tm);
+                        self.stage = Stage::ReadDone;
+                    }
+                    Stage::ReadDone => {
+                        iter.as_mut().unwrap().residual(obj);
+                        self.stage = Stage::GradDone;
+                    }
+                    Stage::GradDone => {
+                        let tm = if *sampled { *telem } else { None };
+                        iter.as_mut().unwrap().scatter(obj, shared, lazy, self.cas, tm);
+                        self.stage = Stage::WriteDone;
+                    }
+                    Stage::WriteDone => {
+                        let tm = if *sampled { *telem } else { None };
+                        let it = iter.take().unwrap();
+                        let (read, apply) = it.finish(obj, shared, lazy, tm);
+                        // release only after the clock bump: the whole
+                        // update stays inside the critical section, exactly
+                        // like the closure-based locked loop
+                        *session = None;
+                        self.delays.record(read, apply);
+                        self.done += 1;
+                        self.stage = Stage::Ready;
                     }
                 }
             }
@@ -376,11 +453,46 @@ impl<'a> WorkerStep<'a> {
         StepEvent::Advanced(self.stage)
     }
 
+    /// Complete the acquire segment with an already-open session: record
+    /// the lock-conflict sample (a missed probe now or on an earlier
+    /// `Blocked` pick counts as one contended acquire — the same
+    /// accounting as `SharedParams::with_write_lock_observed`), pin the
+    /// read clock *inside* the critical section, and hold the session
+    /// until the final bump.
+    fn install_session(&mut self, s: WriteSession<'a>) {
+        let Kind::Sparse { telem, iter, sampled, r0, session, lock_waited, .. } = &mut self.kind
+        else {
+            unreachable!("only locked sparse workers acquire sessions");
+        };
+        if *sampled {
+            if let Some(tm) = telem {
+                tm.record_lock(s.conflicted() || *lock_waited);
+            }
+        }
+        *iter = Some(SparseIter::start(self.shared, self.i, *r0));
+        *session = Some(s);
+        self.stage = Stage::Acquired;
+    }
+
+    /// Threaded fallback for a `Blocked` acquire: genuinely wait on the
+    /// mutex (other OS threads hold it transiently), then make the same
+    /// transition a successful `advance()` from `Sampled` makes.
+    fn block_on_lock(&mut self) {
+        debug_assert!(self.locked && self.stage == Stage::Sampled);
+        let s = self.shared.lock_write_session();
+        self.install_session(s);
+    }
+
     /// Drive to completion on the current thread — the threaded loops'
     /// driver. Returns the number of updates applied (== iters).
     pub fn run_to_end(mut self) -> usize {
-        while !matches!(self.advance(), StepEvent::Finished) {}
-        self.done
+        loop {
+            match self.advance() {
+                StepEvent::Finished => return self.done,
+                StepEvent::Blocked => self.block_on_lock(),
+                StepEvent::Advanced(_) => {}
+            }
+        }
     }
 }
 
@@ -441,21 +553,67 @@ mod tests {
         assert_eq!(step.advance(), StepEvent::Finished);
     }
 
-    /// Locked sparse schemes complete a whole update per advance.
+    /// Locked sparse schemes: one update = exactly 6 advances, the writer
+    /// lock held from `Acquired` through the final bump and released on
+    /// the transition back to `Ready`.
     #[test]
-    fn sparse_locked_cycle_is_one_segment() {
+    fn sparse_locked_cycle_is_six_segments() {
+        for scheme in [Scheme::Consistent, Scheme::Inconsistent, Scheme::Seqlock] {
+            let (obj, w0) = setup();
+            let eg = parallel_full_grad(&obj, &w0, 1);
+            let shared = SharedParams::new(&w0, scheme);
+            let lazy = LazyState::new(&w0, &eg.mu, obj.lam, 0.05, shared.clock());
+            let mut rng = Pcg32::new(3, 1);
+            let delays = DelayStats::new();
+            let mut step =
+                WorkerStep::sparse_svrg(&obj, &shared, &lazy, &eg, 2, &mut rng, &delays, None);
+            for k in 1..=2 {
+                assert_eq!(step.advance(), StepEvent::Advanced(Stage::Sampled), "{scheme:?}");
+                // no clock pinned yet: the capture waits for the lock
+                assert!(step.in_flight_clock().is_none(), "{scheme:?}");
+                assert!(!step.would_block(), "{scheme:?}: free lock must not block");
+                assert_eq!(step.advance(), StepEvent::Advanced(Stage::Acquired), "{scheme:?}");
+                assert!(step.in_flight_clock().is_some(), "{scheme:?}");
+                assert!(shared.write_lock_held(), "{scheme:?}: session must hold the lock");
+                assert_eq!(step.advance(), StepEvent::Advanced(Stage::ReadDone), "{scheme:?}");
+                assert_eq!(step.advance(), StepEvent::Advanced(Stage::GradDone), "{scheme:?}");
+                assert_eq!(step.advance(), StepEvent::Advanced(Stage::WriteDone), "{scheme:?}");
+                assert!(shared.write_lock_held(), "{scheme:?}: held until the bump");
+                assert_eq!(step.advance(), StepEvent::Advanced(Stage::Ready), "{scheme:?}");
+                assert!(!shared.write_lock_held(), "{scheme:?}: released after the update");
+                assert_eq!(step.updates_done(), k, "{scheme:?}");
+            }
+            assert_eq!(step.advance(), StepEvent::Finished, "{scheme:?}");
+            assert_eq!(shared.clock(), 2, "{scheme:?}");
+        }
+    }
+
+    /// A locked worker whose acquire finds the lock held reports `Blocked`
+    /// (and `would_block`), advances nothing, and proceeds normally once
+    /// the holder releases — the interleaving the virtual scheduler drives.
+    #[test]
+    fn sparse_locked_worker_blocks_while_session_held() {
         let (obj, w0) = setup();
         let eg = parallel_full_grad(&obj, &w0, 1);
-        let shared = SharedParams::new(&w0, Scheme::Inconsistent);
+        let shared = SharedParams::new(&w0, Scheme::Consistent);
         let lazy = LazyState::new(&w0, &eg.mu, obj.lam, 0.05, shared.clock());
         let mut rng = Pcg32::new(3, 1);
         let delays = DelayStats::new();
         let mut step =
-            WorkerStep::sparse_svrg(&obj, &shared, &lazy, &eg, 3, &mut rng, &delays, None);
-        for k in 1..=3 {
-            assert_eq!(step.advance(), StepEvent::Advanced(Stage::Ready));
-            assert_eq!(step.updates_done(), k);
+            WorkerStep::sparse_svrg(&obj, &shared, &lazy, &eg, 1, &mut rng, &delays, None);
+        assert_eq!(step.advance(), StepEvent::Advanced(Stage::Sampled));
+        let holder = shared.try_write_session().expect("lock free before the holder");
+        assert!(step.would_block());
+        assert_eq!(step.advance(), StepEvent::Blocked);
+        assert_eq!(step.stage(), Stage::Sampled, "a blocked advance must not move");
+        assert_eq!(step.updates_done(), 0);
+        drop(holder);
+        assert!(!step.would_block());
+        assert_eq!(step.advance(), StepEvent::Advanced(Stage::Acquired));
+        for want in [Stage::ReadDone, Stage::GradDone, Stage::WriteDone, Stage::Ready] {
+            assert_eq!(step.advance(), StepEvent::Advanced(want));
         }
+        assert_eq!(step.updates_done(), 1);
         assert_eq!(step.advance(), StepEvent::Finished);
     }
 }

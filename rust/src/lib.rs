@@ -7,8 +7,10 @@
 //!   paper's consistent / inconsistent / unlock access schemes
 //!   ([`coordinator`]), the Hogwild! baseline, a deterministic p-core
 //!   discrete-event simulator ([`simcore`]) standing in for the paper's
-//!   12-core testbed, the executable convergence theory ([`theory`]), and
-//!   the harness regenerating every table and figure ([`bench`]).
+//!   12-core testbed, a multi-node cluster simulator with a sharded
+//!   parameter server and pluggable network cost models ([`simdist`]),
+//!   the executable convergence theory ([`theory`]), and the harness
+//!   regenerating every table and figure ([`bench`]).
 //! * **L2/L1 (python/, build-time only)** — the JAX model and Pallas
 //!   kernels, AOT-lowered to HLO text and executed from rust through PJRT
 //!   ([`runtime`]); python never runs on the request path.
@@ -80,5 +82,6 @@ pub mod propcheck;
 pub mod runtime;
 pub mod sched;
 pub mod simcore;
+pub mod simdist;
 pub mod theory;
 pub mod util;

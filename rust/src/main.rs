@@ -16,16 +16,20 @@
 //!   interleaving policies: `--gate` is the CI race gate, `--fuzz N`
 //!   explores random schedules, `--replay '<line>'` reproduces a failure
 //!   bit-exactly (DESIGN.md §9)
+//! * `distributed`       — discrete-event cluster simulation: m nodes ×
+//!   p threads against a sharded parameter server over a configurable
+//!   network model (DESIGN.md §10)
 //! * `e2e`               — XLA-backed dense end-to-end training driver
 
 use asysvrg::bench::{self, report, BenchEnv};
 use asysvrg::cli::Command;
-use asysvrg::config::{Algo, RunConfig, Scheme, Storage};
+use asysvrg::config::{Algo, Boundary, RunConfig, Scheme, Storage};
 use asysvrg::coordinator;
 use asysvrg::data::{self, PaperDataset};
 use asysvrg::objective::Objective;
 use asysvrg::sched;
 use asysvrg::simcore::{self, CostModel};
+use asysvrg::simdist::{self, DistConfig, LatencyDist, NetworkModel};
 use asysvrg::theory;
 use asysvrg::util;
 
@@ -52,9 +56,10 @@ fn top_usage() -> String {
      \x20 fig1-speedup       regenerate Figure 1 left column\n\
      \x20 fig1-convergence   regenerate Figure 1 right column\n\
      \x20 theory             Theorem 1/2 contraction factors\n\
-     \x20 ablation           sweep eta / M / read-model / cores / storage / epoch / pool / schedule\n\
+     \x20 ablation           sweep eta / M / read-model / cores / storage / epoch / pool / schedule / distributed\n\
      \x20 calibrate          measure cost model; --contention fits the sparse collision model\n\
      \x20 sched              deterministic interleaving schedules: CI race gate, fuzz, replay\n\
+     \x20 distributed        simulate an m-node cluster with a sharded parameter server\n\
      \x20 e2e                XLA-backed dense end-to-end training\n\n\
      `repro <subcommand> --help` for options."
         .to_string()
@@ -76,6 +81,7 @@ fn dispatch(args: &[String]) -> Result<(), String> {
         "ablation" => cmd_ablation(rest),
         "calibrate" => cmd_calibrate(rest),
         "sched" => cmd_sched(rest),
+        "distributed" => cmd_distributed(rest),
         "e2e" => cmd_e2e(rest),
         "--help" | "-h" | "help" => Err(top_usage()),
         other => Err(format!("unknown subcommand '{other}'\n\n{}", top_usage())),
@@ -329,8 +335,8 @@ fn cmd_ablation(args: &[String]) -> Result<(), String> {
         .opt("epochs", "25", "epoch budget per point")
         .opt(
             "which",
-            "eta,m,read-model,cores,storage,epoch,contention,pool,schedule",
-            "comma list of sweeps: eta|m|read-model|cores|storage|epoch|contention|pool|schedule",
+            "eta,m,read-model,cores,storage,epoch,contention,pool,schedule,distributed",
+            "comma list of sweeps: eta|m|read-model|cores|storage|epoch|contention|pool|schedule|distributed",
         );
     let m = cmd.parse(args)?;
     let ds = data::resolve(m.str("dataset"), m.f64("scale")?, m.u64("seed")?)?;
@@ -377,6 +383,10 @@ fn cmd_ablation(args: &[String]) -> Result<(), String> {
             "schedule" => (
                 "interleaving policy: virtual scheduler vs real threads",
                 ablation::sweep_schedule(&obj, fstar, threads, epochs),
+            ),
+            "distributed" => (
+                "distributed cluster: p x m surface + boundary x latency",
+                ablation::sweep_distributed(&obj, fstar, threads, epochs),
             ),
             o => return Err(format!("unknown sweep '{o}'")),
         };
@@ -555,6 +565,113 @@ fn cmd_sched(args: &[String]) -> Result<(), String> {
             "theory at worst-case tau={}: infeasible at eta={} (no contraction)",
             rc.tau, rc.eta
         ),
+    }
+    Ok(())
+}
+
+fn cmd_distributed(args: &[String]) -> Result<(), String> {
+    let cmd = env_opts(
+        Command::new("distributed", "simulate AsySVRG on an m-node cluster (DESIGN.md §10)")
+            .opt(
+                "dataset",
+                "rcv1",
+                "rcv1|real-sim|news20|zipf:<s>[:<n>:<d>:<nnz>]|<libsvm path>",
+            )
+            .opt("scheme", "unlock", "consistent|inconsistent|unlock|seqlock|atomic-cas")
+            .opt("nodes", "4", "machines m; shard k of w lives on node k")
+            .opt("threads", "4", "local worker threads p per node")
+            .opt("boundary", "sync", "epoch boundary: sync (global barrier) | async (free-running)")
+            .opt(
+                "latency",
+                "fixed:50",
+                "per-message latency in microseconds: zero|fixed:US|uniform:LO:HI|exp:MEAN",
+            )
+            .opt("gbps", "10", "link bandwidth in gigabits/s (inf = no serialization term)")
+            .opt("flushes", "4", "update-push flushes per node per epoch")
+            .flag("dedicated", "per-link dedicated bandwidth (default: shared incast fair-share)"),
+    );
+    let m = cmd.parse(args)?;
+    let env = bench_env(&m)?;
+    let nodes = m.usize("nodes")?;
+    let threads = m.usize("threads")?;
+    if nodes == 0 || threads == 0 {
+        return Err("--nodes and --threads must be >= 1".into());
+    }
+    let ds = data::resolve(m.str("dataset"), env.scale, env.seed)?;
+    println!("{}", ds.describe());
+    let obj = Objective::paper(ds);
+    let cfg = RunConfig {
+        dataset: m.str("dataset").into(),
+        scheme: Scheme::parse(m.str("scheme"))?,
+        threads,
+        eta: env.eta_svrg,
+        epochs: env.max_epochs,
+        target_gap: env.target_gap,
+        seed: env.seed,
+        scale: env.scale,
+        storage: env.storage,
+        ..Default::default()
+    };
+    let dist = DistConfig {
+        nodes,
+        threads_per_node: threads,
+        boundary: Boundary::parse(m.str("boundary"))?,
+        net: NetworkModel {
+            latency: LatencyDist::parse(m.str("latency"))?,
+            gbps: m.f64("gbps")?,
+            shared: !m.flag("dedicated"),
+            bytes_per_coord: 8.0,
+        },
+        flushes_per_epoch: m.usize("flushes")?,
+        record_trace: false,
+    };
+    println!(
+        "cluster: {} node(s) x {} thread(s), {} boundary, latency {} at {} gbps ({})",
+        dist.nodes,
+        dist.threads_per_node,
+        dist.boundary.name(),
+        dist.net.latency.label(),
+        dist.net.gbps,
+        if dist.net.shared { "shared link" } else { "dedicated links" },
+    );
+    let (_, fstar) = coordinator::asysvrg::solve_fstar(&obj, env.eta_svrg, env.max_epochs * 3, 7);
+    println!("f* = {fstar:.8} (long sequential SVRG)");
+    let r = simdist::sim_dist_run(&obj, &cfg, &dist, &env.costs, fstar);
+    println!("{:>7} {:>12} {:>12} {:>10}", "passes", "loss", "gap", "seconds");
+    for h in &r.history {
+        println!("{:>7.0} {:>12.6} {:>12.3e} {:>10.3}", h.passes, h.loss, h.loss - fstar, h.seconds);
+    }
+    println!(
+        "converged={} epochs={} updates={} epochs/sec={:.3} net_seconds={:.3}",
+        r.converged,
+        r.epochs_run,
+        r.total_updates,
+        r.epochs_per_sec(),
+        r.net_ns / 1e9
+    );
+    println!(
+        "staleness: within-node tau={} network tau={} end-to-end tau={}",
+        r.max_delay_node, r.tau_net, r.tau_end_to_end
+    );
+    // Theorem 1 at the *measured* end-to-end delay: does this cluster's
+    // staleness still admit the linear rate at the configured step size?
+    let mu = obj.lam as f64;
+    let l = obj.lipschitz() as f64;
+    let m_tilde = (cfg.m_factor * obj.n() as f64) as u64;
+    let tau = u32::try_from(r.tau_end_to_end).unwrap_or(u32::MAX);
+    let p = theory::RateParams { mu, l, eta: cfg.eta as f64, tau, m_tilde };
+    match theory::theorem1_alpha(&p) {
+        Some(rep) if rep.alpha < 1.0 => println!(
+            "theorem 1 at measured tau={}: alpha={:.4} (linear rate holds)",
+            tau, rep.alpha
+        ),
+        _ => {
+            println!("theorem 1 at measured tau={tau}: INFEASIBLE at eta={} (no contraction)", cfg.eta);
+            match theory::max_feasible_tau(mu, l, cfg.eta as f64, m_tilde, theory::theorem1_alpha) {
+                Some(t) => println!("  largest feasible tau at this eta: {t}"),
+                None => println!("  eta={} is infeasible even at tau=0", cfg.eta),
+            }
+        }
     }
     Ok(())
 }

@@ -310,6 +310,7 @@ pub(crate) fn drive(
         views.clear();
         views.extend(steps.iter().map(|s| WorkerView {
             done: s.is_done(),
+            blocked: s.would_block(),
             read_clock: s.in_flight_clock(),
             hot: s.touches_head(head),
             updates: s.updates_done(),
@@ -1168,6 +1169,8 @@ pub fn run_gate(seeds: &[u64], threads: usize) -> Result<Json, String> {
     let spots = [
         (Scheme::AtomicCas, Storage::Sparse, SchedAlgo::Svrg1),
         (Scheme::Inconsistent, Storage::Sparse, SchedAlgo::Svrg1),
+        (Scheme::Consistent, Storage::Sparse, SchedAlgo::Svrg1),
+        (Scheme::Seqlock, Storage::Sparse, SchedAlgo::Svrg2),
         (Scheme::Unlock, Storage::Sparse, SchedAlgo::Svrg2),
         (Scheme::Unlock, Storage::Sparse, SchedAlgo::Hogwild),
         (Scheme::Unlock, Storage::Dense, SchedAlgo::Svrg1),
@@ -1281,7 +1284,13 @@ pub fn run_fuzz(cases: usize, seed_base: u64, max_threads: usize) -> Result<Json
         let seed = splitmix64(&mut state);
         let mut g = Pcg32::new(seed, 0xF022);
         let mut cfg = SchedConfig::gate_default(Policy::all()[g.below(4)], seed);
-        cfg.scheme = [Scheme::Unlock, Scheme::AtomicCas, Scheme::Inconsistent][g.below(3)];
+        cfg.scheme = [
+            Scheme::Unlock,
+            Scheme::AtomicCas,
+            Scheme::Inconsistent,
+            Scheme::Consistent,
+            Scheme::Seqlock,
+        ][g.below(5)];
         // sparse-biased: that's where the racy scatter paths live
         cfg.storage = [Storage::Sparse, Storage::Sparse, Storage::Dense][g.below(3)];
         cfg.algo = SchedAlgo::all()[g.below(3)];
@@ -1355,6 +1364,32 @@ mod tests {
         let adv = run_schedule_on(&obj, &tiny_cfg(Policy::AdversarialMaxStaleness, 5));
         adv.check().unwrap();
         assert_eq!(adv.max_staleness, 2 * 20);
+    }
+
+    /// Locked schemes have real yield points on the virtual executor: the
+    /// acquire segment can report `Blocked` while another worker's write
+    /// session is open, and every policy must route around the held lock.
+    /// Each run must terminate (no livelock) and stay bit-deterministic.
+    #[test]
+    fn locked_schemes_run_under_every_policy() {
+        let obj = tiny_obj();
+        for scheme in [Scheme::Consistent, Scheme::Seqlock] {
+            for policy in Policy::all() {
+                let mut cfg = tiny_cfg(policy, 17);
+                cfg.scheme = scheme;
+                let a = run_schedule_on(&obj, &cfg);
+                let b = run_schedule_on(&obj, &cfg);
+                a.check().unwrap();
+                assert_eq!(
+                    a.fingerprint,
+                    b.fingerprint,
+                    "{} {}",
+                    scheme.name(),
+                    policy.name()
+                );
+                assert_eq!(a.final_w, b.final_w);
+            }
+        }
     }
 
     #[test]

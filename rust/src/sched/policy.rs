@@ -68,6 +68,12 @@ impl Policy {
 pub(crate) struct WorkerView {
     /// All its updates applied — never pick it.
     pub done: bool,
+    /// Its next advance would return `Blocked` (a locked sparse worker at
+    /// its acquire segment while another worker's session holds the writer
+    /// lock) — picking it makes no progress, so policies skip it. The lock
+    /// holder is always a distinct alive, unblocked worker, so at least
+    /// one pickable worker exists whenever anyone is blocked.
+    pub blocked: bool,
     /// Read clock of the in-flight update (None between sample and read on
     /// the dense path, or at `Ready`).
     pub read_clock: Option<u64>,
@@ -77,6 +83,13 @@ pub(crate) struct WorkerView {
     pub updates: usize,
     /// Current micro-stage.
     pub stage: Stage,
+}
+
+impl WorkerView {
+    /// Pickable: running this worker's next segment makes progress.
+    fn pickable(&self) -> bool {
+        !self.done && !self.blocked
+    }
 }
 
 /// Hot-collision sub-state: which worker is being held / driven.
@@ -104,36 +117,36 @@ impl Chooser {
         Chooser { policy, cursor: 0, rng: Pcg32::new(seed, 0x5CED), hc: HcMode::Seek }
     }
 
-    /// Next alive worker at or after `self.cursor`, advancing the cursor
-    /// past the pick. `skip` (if set) is avoided unless it is the only
-    /// alive worker.
+    /// Next pickable worker at or after `self.cursor`, advancing the
+    /// cursor past the pick. `skip` (if set) is avoided unless it is the
+    /// only pickable worker.
     fn round_robin(&mut self, views: &[WorkerView], skip: Option<usize>) -> usize {
         let p = views.len();
         for off in 0..p {
             let w = (self.cursor + off) % p;
-            if !views[w].done && Some(w) != skip {
+            if views[w].pickable() && Some(w) != skip {
                 self.cursor = (w + 1) % p;
                 return w;
             }
         }
-        // only `skip` is alive
-        skip.expect("round_robin called with no alive worker")
+        // only `skip` is pickable
+        skip.expect("round_robin called with no pickable worker")
     }
 
     /// Pick the worker whose next segment runs. At least one view must be
-    /// alive (`!done`).
+    /// pickable (`!done && !blocked`).
     pub fn pick(&mut self, views: &[WorkerView]) -> usize {
         match self.policy {
             Policy::RoundRobin => self.round_robin(views, None),
             Policy::SeededRandom => {
                 let alive: Vec<usize> =
-                    (0..views.len()).filter(|&w| !views[w].done).collect();
+                    (0..views.len()).filter(|&w| views[w].pickable()).collect();
                 alive[self.rng.below(alive.len())]
             }
             Policy::AdversarialMaxStaleness => {
-                // victim := alive worker with the oldest pinned read
+                // victim := pickable worker with the oldest pinned read
                 let victim = (0..views.len())
-                    .filter(|&w| !views[w].done)
+                    .filter(|&w| views[w].pickable())
                     .filter_map(|w| views[w].read_clock.map(|c| (c, w)))
                     .min()
                     .map(|(_, w)| w);
@@ -160,7 +173,7 @@ impl Chooser {
                             };
                             // need a partner to overlap with the held read
                             let any_other =
-                                (0..views.len()).any(|w| w != held && !views[w].done);
+                                (0..views.len()).any(|w| w != held && views[w].pickable());
                             if !any_other {
                                 return self.round_robin(views, None);
                             }
@@ -174,6 +187,11 @@ impl Chooser {
                         }
                         HcMode::DrivePartner { held, partner, start_updates } => {
                             if !views[partner].done && views[partner].updates == start_updates {
+                                if views[partner].blocked {
+                                    // drive someone else (the lock holder
+                                    // among them) until the partner can run
+                                    return self.round_robin(views, Some(held));
+                                }
                                 return partner;
                             }
                             // partner finished an update (its writes landed
@@ -183,6 +201,9 @@ impl Chooser {
                         }
                         HcMode::Release { held, start_updates } => {
                             if !views[held].done && views[held].updates == start_updates {
+                                if views[held].blocked {
+                                    return self.round_robin(views, Some(held));
+                                }
                                 return held;
                             }
                             self.hc = HcMode::Seek;
@@ -200,7 +221,7 @@ mod tests {
     use super::*;
 
     fn view(done: bool, read_clock: Option<u64>) -> WorkerView {
-        WorkerView { done, read_clock, hot: false, updates: 0, stage: Stage::Ready }
+        WorkerView { done, blocked: false, read_clock, hot: false, updates: 0, stage: Stage::Ready }
     }
 
     #[test]

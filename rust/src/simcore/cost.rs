@@ -30,6 +30,8 @@
 //! (`bench::contention`), which measures collision rates with the sampled
 //! telemetry of `coordinator::telemetry`.
 
+use crate::config::{Scheme, Storage};
+use crate::objective::Objective;
 use crate::util::json::Json;
 use crate::util::Stopwatch;
 
@@ -418,6 +420,15 @@ impl CostModel {
         }
     }
 
+    /// One network-facing coordinate transfer's serialization work on the
+    /// sending side (pack index+value pairs) — used by `simdist` so wire
+    /// payload preparation is billed with the same per-coordinate constants
+    /// as local memory traffic.
+    #[inline]
+    pub fn pack_cost(&self, coords: usize) -> f64 {
+        coords as f64 * (self.read_coord_ns + self.write_coord_ns)
+    }
+
     /// Serial (main-thread, workers joined) portion of the epoch barrier:
     /// `entries` coordinate writes at single-core bandwidth. Dense passes
     /// stream p·d partial entries plus the d-sized finalize; the sparse
@@ -426,6 +437,151 @@ impl CostModel {
     #[inline]
     pub fn epoch_merge_cost(&self, entries: usize) -> f64 {
         entries as f64 * self.write_coord_ns
+    }
+}
+
+/// How sparse updates are billed for write contention (DESIGN.md §6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ContentionBilling {
+    /// Legacy: the dense flat per-writer factor applied to the sparse
+    /// scatter — skew-blind. Kept for `ablation --which contention`.
+    Flat,
+    /// Calibrated per-nnz collision model (`CostModel::contention`): the
+    /// penalty follows the measured collision rate as a function of thread
+    /// count, density and dataset skew. The default.
+    #[default]
+    PerNnz,
+}
+
+/// The ONE per-update cost entry point (ISSUE 7 satellite): the scheme →
+/// lock-discipline mapping and the per-phase duration formulas shared by
+/// the single-box engine (`engine::simulate_inner_opts`), the ablation
+/// sweeps, and the distributed event billing (`crate::simdist`). Routing
+/// every path through this struct is what guarantees the cluster simulator
+/// cannot drift from the single-box cost model — the m=1 parity gate
+/// depends on these calls being bit-identical.
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateBilling {
+    pub costs: CostModel,
+    /// Reads serialize behind the writer lock: the consistent scheme
+    /// everywhere, plus inconsistent/seqlock under sparse storage (the
+    /// real sparse path locks the whole O(nnz) iteration —
+    /// `coordinator::sparse` module docs).
+    pub read_locked: bool,
+    /// Updates serialize behind the writer lock.
+    pub update_locked: bool,
+    /// Per-coordinate CAS scheme (AtomicCas).
+    pub cas: bool,
+    /// Billing is per-nonzero (Storage::Sparse) vs per-dimension.
+    pub sparse: bool,
+    /// Calibrated per-nnz collision model active (sparse + PerNnz).
+    pub per_nnz: bool,
+    /// Dataset touch concentration Σ f_j² (0 unless `per_nnz`).
+    pub overlap: f64,
+    pub avg_nnz: f64,
+    pub d: usize,
+    /// Active cores on the (simulated) machine — the bandwidth factor.
+    pub p: usize,
+}
+
+impl UpdateBilling {
+    /// Price the per-update phases for `p` cores of one machine running
+    /// `scheme` over `obj`. The touch concentration is only computed when
+    /// the collision model will actually consume it (it is an O(nnz) scan).
+    pub fn new(
+        costs: &CostModel,
+        scheme: Scheme,
+        storage: Storage,
+        contention: ContentionBilling,
+        p: usize,
+        obj: &Objective,
+    ) -> Self {
+        let sparse = storage == Storage::Sparse;
+        let read_locked = scheme == Scheme::Consistent
+            || (sparse && matches!(scheme, Scheme::Inconsistent | Scheme::Seqlock));
+        let update_locked = matches!(
+            scheme,
+            Scheme::Consistent | Scheme::Inconsistent | Scheme::Seqlock
+        );
+        let per_nnz = sparse && contention == ContentionBilling::PerNnz;
+        UpdateBilling {
+            costs: *costs,
+            read_locked,
+            update_locked,
+            cas: scheme == Scheme::AtomicCas,
+            sparse,
+            per_nnz,
+            overlap: if per_nnz { obj.data.coord_touch_concentration() } else { 0.0 },
+            avg_nnz: obj.data.avg_nnz(),
+            d: obj.dim(),
+            p,
+        }
+    }
+
+    /// Concurrent lock-free writers the collision model sees: serialized
+    /// iterations (the locking schemes hold the writer lock across the
+    /// whole sparse update) cannot collide — they bill as a single writer.
+    #[inline]
+    pub fn lockfree_writers(&self) -> usize {
+        if self.update_locked {
+            1
+        } else {
+            self.p
+        }
+    }
+
+    /// Lock acquire+release overhead billed per locked phase.
+    #[inline]
+    pub fn lock_ns(&self) -> f64 {
+        self.costs.lock_ns
+    }
+
+    /// Read-phase duration for a row with `nnz` nonzeros.
+    #[inline]
+    pub fn read_ns(&self, nnz: usize) -> f64 {
+        if self.sparse {
+            self.costs.sparse_read_cost(nnz, self.p)
+        } else {
+            self.costs.read_cost(self.d, self.p)
+        }
+    }
+
+    /// Compute-phase duration; `svrg` selects the AsySVRG v-build vs the
+    /// Hogwild margin-only dot on the dense path (the sparse lazy path
+    /// bills identically for both).
+    #[inline]
+    pub fn compute_ns(&self, nnz: usize, svrg: bool) -> f64 {
+        if self.sparse {
+            self.costs.sparse_compute_cost(nnz)
+        } else if svrg {
+            self.costs.svrg_compute_cost(nnz, self.d, self.p)
+        } else {
+            self.costs.sgd_compute_cost(nnz)
+        }
+    }
+
+    /// Update-phase duration at `writers` concurrent updaters (the
+    /// engine's live updater count; the calibrated collision model uses
+    /// `lockfree_writers()` instead — collisions depend on the scheme's
+    /// steady-state writer population, not the instantaneous one).
+    #[inline]
+    pub fn update_ns(&self, nnz: usize, writers: usize) -> f64 {
+        if self.sparse {
+            if self.per_nnz {
+                self.costs.sparse_update_cost_contended(
+                    nnz,
+                    self.p,
+                    self.lockfree_writers(),
+                    self.cas,
+                    self.overlap,
+                    self.avg_nnz,
+                )
+            } else {
+                self.costs.sparse_update_cost(nnz, self.p, writers, self.cas)
+            }
+        } else {
+            self.costs.update_cost(self.d, self.p, writers, self.cas)
+        }
     }
 }
 
@@ -629,6 +785,84 @@ mod tests {
         let f = SparseContention::fit(&zero_rates);
         assert_eq!(f.kappa, dflt.kappa);
         assert!(f.collision_ns.is_finite());
+    }
+
+    // ------------------------------------------- shared billing entry point
+
+    #[test]
+    fn update_billing_matches_raw_cost_calls() {
+        use crate::data::synthetic::SyntheticSpec;
+        use std::sync::Arc;
+        let ds = SyntheticSpec::new("ub", 64, 128, 8, 3).generate();
+        let o = crate::objective::Objective::new(
+            Arc::new(ds),
+            1e-2,
+            crate::objective::LossKind::Logistic,
+        );
+        let c = CostModel::default_host();
+        let p = 4;
+        let nnz = 10;
+        // sparse + per-nnz (the engine default)
+        let b = UpdateBilling::new(
+            &c,
+            Scheme::Unlock,
+            Storage::Sparse,
+            ContentionBilling::PerNnz,
+            p,
+            &o,
+        );
+        assert!(!b.read_locked && !b.update_locked && !b.cas);
+        assert_eq!(b.lockfree_writers(), p);
+        assert_eq!(b.lock_ns(), c.lock_ns);
+        assert_eq!(b.read_ns(nnz), c.sparse_read_cost(nnz, p));
+        assert_eq!(b.compute_ns(nnz, true), c.sparse_compute_cost(nnz));
+        assert_eq!(
+            b.update_ns(nnz, 3),
+            c.sparse_update_cost_contended(
+                nnz,
+                p,
+                p,
+                false,
+                o.data.coord_touch_concentration(),
+                o.data.avg_nnz()
+            )
+        );
+        // locking schemes serialize the whole sparse iteration: reads lock
+        // too and the collision model sees one writer
+        let bl = UpdateBilling::new(
+            &c,
+            Scheme::Inconsistent,
+            Storage::Sparse,
+            ContentionBilling::PerNnz,
+            p,
+            &o,
+        );
+        assert!(bl.read_locked && bl.update_locked);
+        assert_eq!(bl.lockfree_writers(), 1);
+        // dense keeps the paper's read/update lock split
+        let bd = UpdateBilling::new(
+            &c,
+            Scheme::Inconsistent,
+            Storage::Dense,
+            ContentionBilling::PerNnz,
+            p,
+            &o,
+        );
+        assert!(!bd.read_locked && bd.update_locked);
+        assert_eq!(bd.read_ns(nnz), c.read_cost(o.dim(), p));
+        assert_eq!(bd.update_ns(nnz, 2), c.update_cost(o.dim(), p, 2, false));
+        assert_eq!(bd.compute_ns(nnz, false), c.sgd_compute_cost(nnz));
+        // flat legacy billing bypasses the collision model
+        let bf = UpdateBilling::new(
+            &c,
+            Scheme::Unlock,
+            Storage::Sparse,
+            ContentionBilling::Flat,
+            p,
+            &o,
+        );
+        assert_eq!(bf.update_ns(nnz, 2), c.sparse_update_cost(nnz, p, 2, false));
+        assert_eq!(bf.overlap, 0.0, "touch concentration only scanned when consumed");
     }
 
     #[test]

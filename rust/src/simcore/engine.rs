@@ -38,7 +38,9 @@ use crate::coordinator::epoch::EpochGradient;
 use crate::objective::Objective;
 use crate::util::rng::Pcg32;
 
-use super::cost::{CostModel, RuntimeDispatch};
+use super::cost::{CostModel, RuntimeDispatch, UpdateBilling};
+
+pub use super::cost::ContentionBilling;
 
 /// What the inner loop computes (the two algorithms share the engine).
 pub enum SimTask<'a> {
@@ -54,19 +56,6 @@ pub enum ReadModel {
     #[default]
     Point,
     Window,
-}
-
-/// How sparse updates are billed for write contention (DESIGN.md §6).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
-pub enum ContentionBilling {
-    /// Legacy: the dense flat per-writer factor applied to the sparse
-    /// scatter — skew-blind. Kept for `ablation --which contention`.
-    Flat,
-    /// Calibrated per-nnz collision model (`CostModel::contention`): the
-    /// penalty follows the measured collision rate as a function of thread
-    /// count, density and dataset skew. The default.
-    #[default]
-    PerNnz,
 }
 
 /// Optional engine behaviours beyond the paper's baseline machine.
@@ -239,58 +228,22 @@ pub fn simulate_inner_opts(
         })
         .collect();
 
-    let sparse = opts.storage == Storage::Sparse;
-    // Scheme mapping mirrors the real runners: dense keeps the paper's
+    // Per-phase durations and lock discipline come from the ONE shared
+    // billing entry point (`simcore::cost::UpdateBilling`) — the scheme
+    // mapping mirrors the real runners: dense keeps the paper's
     // read-lock/update-lock distinction; the sparse path serializes the
     // whole O(nnz) iteration for every locking scheme
     // (`coordinator::sparse` module docs), so its reads are locked for
     // Inconsistent/Seqlock too. (Approximation: the simulator still
     // releases the lock between a thread's read and update phases, where
     // the real sparse path holds it across the iteration.)
-    let read_locked = scheme == Scheme::Consistent
-        || (sparse && matches!(scheme, Scheme::Inconsistent | Scheme::Seqlock));
-    let update_locked = matches!(
-        scheme,
-        Scheme::Consistent | Scheme::Inconsistent | Scheme::Seqlock
-    );
-    let cas = scheme == Scheme::AtomicCas;
+    let bill = UpdateBilling::new(costs, scheme, opts.storage, opts.contention, p, obj);
+    let read_locked = bill.read_locked;
+    let update_locked = bill.update_locked;
     let window = opts.read_model == ReadModel::Window && !read_locked;
-    // per-phase durations, branched on the storage billing model
     let row_nnz = |i: usize| obj.data.row(i).nnz();
-    let read_dur = |i: usize| {
-        if sparse {
-            costs.sparse_read_cost(row_nnz(i), p)
-        } else {
-            costs.read_cost(d, p)
-        }
-    };
-    // calibrated collision billing (DESIGN.md §6): the penalty is a
-    // function of thread count, density and dataset skew, so the dataset's
-    // touch concentration is priced once per phase. Serialized iterations
-    // (the locking schemes hold the writer lock across the whole sparse
-    // update) cannot collide — they bill as a single lock-free writer.
-    let per_nnz_model = sparse && opts.contention == ContentionBilling::PerNnz;
-    let overlap = if per_nnz_model { obj.data.coord_touch_concentration() } else { 0.0 };
-    let avg_nnz = obj.data.avg_nnz();
-    let lockfree_writers = if update_locked { 1 } else { p };
-    let update_dur = |i: usize, writers: usize| {
-        if sparse {
-            if per_nnz_model {
-                costs.sparse_update_cost_contended(
-                    row_nnz(i),
-                    p,
-                    lockfree_writers,
-                    cas,
-                    overlap,
-                    avg_nnz,
-                )
-            } else {
-                costs.sparse_update_cost(row_nnz(i), p, writers, cas)
-            }
-        } else {
-            costs.update_cost(d, p, writers, cas)
-        }
-    };
+    let read_dur = |i: usize| bill.read_ns(row_nnz(i));
+    let update_dur = |i: usize, writers: usize| bill.update_ns(row_nnz(i), writers);
 
     let push = |heap: &mut BinaryHeap<Event>, seq: &mut u64, time: f64, tid: usize, phase: Phase| {
         *seq += 1;
@@ -402,15 +355,8 @@ pub fn simulate_inner_opts(
                 }
                 let i = threads[tid].cur_i;
                 let nnz = obj.data.row(i).nnz();
-                let dur = if sparse {
-                    // margin dot + lazy catch-up, both over nnz only
-                    costs.sparse_compute_cost(nnz)
-                } else {
-                    match task {
-                        SimTask::Svrg { .. } => costs.svrg_compute_cost(nnz, d, p),
-                        SimTask::Sgd => costs.sgd_compute_cost(nnz),
-                    }
-                } * speed(tid);
+                let dur =
+                    bill.compute_ns(nnz, matches!(task, SimTask::Svrg { .. })) * speed(tid);
                 push(&mut heap, &mut seq, now + dur, tid, Phase::ComputeDone);
             }
             Phase::ComputeDone => {

@@ -16,10 +16,12 @@
 pub mod cost;
 pub mod engine;
 
-pub use cost::{ContentionSample, CostModel, RuntimeDispatch, SparseContention};
+pub use cost::{
+    ContentionBilling, ContentionSample, CostModel, RuntimeDispatch, SparseContention,
+    UpdateBilling,
+};
 pub use engine::{
-    simulate_inner, simulate_inner_opts, ContentionBilling, EngineOpts, ReadModel, SimPhaseResult,
-    SimTask,
+    simulate_inner, simulate_inner_opts, EngineOpts, ReadModel, SimPhaseResult, SimTask,
 };
 
 use crate::config::{Algo, RunConfig, Storage};
@@ -45,15 +47,31 @@ pub fn sim_run(obj: &Objective, cfg: &RunConfig, costs: &CostModel, fstar: f64) 
 /// O(d) term per epoch is real and stays billed (the win over dense is the
 /// (p+1)·d → d reduction of the barrier, not its disappearance).
 pub fn full_grad_phase_ns(obj: &Objective, p: usize, costs: &CostModel, storage: Storage) -> f64 {
-    let n = obj.n();
+    full_grad_phase_ns_range(obj, 0..obj.n(), p, costs, storage)
+}
+
+/// `full_grad_phase_ns` restricted to a contiguous row range — the share
+/// one cluster node computes when the corpus is row-partitioned across m
+/// machines (`crate::simdist`). The single-box function delegates here with
+/// the full range, so the m = 1 distributed configuration bills the epoch
+/// phase bit-identically to the single-box path.
+pub fn full_grad_phase_ns_range(
+    obj: &Objective,
+    rows: std::ops::Range<usize>,
+    p: usize,
+    costs: &CostModel,
+    storage: Storage,
+) -> f64 {
+    let n = rows.len();
+    let base = rows.start;
     let d = obj.dim();
     let mut worst = 0.0f64;
     match storage {
         Storage::Dense => {
             for range in partition(n, p) {
-                let rows = range.len();
-                let nnz: usize = range.map(|i| obj.data.row(i).nnz()).sum();
-                worst = worst.max(costs.full_grad_cost(rows, nnz, d, p));
+                let share_rows = range.len();
+                let nnz: usize = range.map(|i| obj.data.row(base + i).nnz()).sum();
+                worst = worst.max(costs.full_grad_cost(share_rows, nnz, d, p));
             }
             let merged = if p > 1 { p * d } else { 0 };
             worst + costs.epoch_merge_cost(merged + d)
@@ -63,10 +81,10 @@ pub fn full_grad_phase_ns(obj: &Objective, p: usize, costs: &CostModel, storage:
             let mut stamp = vec![usize::MAX; d];
             let mut touched_total = 0usize;
             for (a, range) in partition(n, p).into_iter().enumerate() {
-                let rows = range.len();
+                let share_rows = range.len();
                 let mut nnz = 0usize;
                 for i in range {
-                    let row = obj.data.row(i);
+                    let row = obj.data.row(base + i);
                     nnz += row.nnz();
                     for &j in row.indices {
                         if stamp[j as usize] != a {
@@ -75,18 +93,54 @@ pub fn full_grad_phase_ns(obj: &Objective, p: usize, costs: &CostModel, storage:
                         }
                     }
                 }
-                worst = worst.max(costs.full_grad_cost_sparse(rows, nnz, p));
+                worst = worst.max(costs.full_grad_cost_sparse(share_rows, nnz, p));
             }
             worst + costs.epoch_merge_cost(touched_total + d)
         }
     }
 }
 
+/// One AsySVRG epoch on the simulated machine: the real full-gradient pass
+/// (billed per the storage model), the epoch-boundary setup, and the inner
+/// loop on `cfg.threads` simulated cores. Advances `w` in place and returns
+/// `(epoch_sim_ns, inner_result)` where `epoch_sim_ns` already includes the
+/// pre-billed phase and setup costs. Shared by `sim_asysvrg`, the ablation
+/// sweeps (`bench::ablation`) and the distributed trajectory driver
+/// (`crate::simdist`) so the epoch arithmetic — seeds, snapshot cloning,
+/// billing order — cannot drift between the single-box and cluster paths.
+#[allow(clippy::too_many_arguments)]
+pub fn sim_asysvrg_epoch(
+    obj: &Objective,
+    cfg: &RunConfig,
+    costs: &CostModel,
+    opts: &EngineOpts,
+    epoch_phase_ns: f64,
+    epoch_setup_ns: f64,
+    t: usize,
+    w: &mut Vec<f32>,
+) -> (f64, SimPhaseResult) {
+    let eg = parallel_full_grad(obj, w, 1);
+    let task = SimTask::Svrg { u0: &w.clone(), eg: &eg };
+    let mut u = w.clone();
+    let r = simulate_inner_opts(
+        obj,
+        &task,
+        cfg.scheme,
+        costs,
+        &mut u,
+        cfg.eta,
+        cfg.threads,
+        cfg.inner_iters(obj.n()),
+        cfg.seed ^ ((t as u64) << 20),
+        opts,
+    );
+    *w = u;
+    (epoch_phase_ns + epoch_setup_ns + r.elapsed_ns, r)
+}
+
 fn sim_asysvrg(obj: &Objective, cfg: &RunConfig, costs: &CostModel, fstar: f64) -> RunResult {
     let d = obj.dim();
-    let n = obj.n();
     let p = cfg.threads;
-    let m_per_thread = cfg.inner_iters(n);
     let passes_per_epoch = 1.0 + cfg.m_factor;
 
     let mut w = vec![0.0f32; d];
@@ -104,29 +158,12 @@ fn sim_asysvrg(obj: &Objective, cfg: &RunConfig, costs: &CostModel, fstar: f64) 
     let epoch_setup_ns = costs.epoch_setup_cost(p, d, 2, opts.runtime);
 
     for t in 0..cfg.epochs {
-        // epoch phase: full gradient (computed for real, billed simulated
-        // per the storage model — sparse accumulators are semantically the
-        // same reduction, so the arithmetic path is shared)
-        let eg = parallel_full_grad(obj, &w, 1);
-        sim_ns += epoch_phase_ns + epoch_setup_ns;
-
-        // inner phase on simulated cores (billed per the storage model)
-        let task = SimTask::Svrg { u0: &w.clone(), eg: &eg };
-        let mut u = w.clone();
-        let r = simulate_inner_opts(
-            obj,
-            &task,
-            cfg.scheme,
-            costs,
-            &mut u,
-            cfg.eta,
-            p,
-            m_per_thread,
-            cfg.seed ^ ((t as u64) << 20),
-            &opts,
-        );
-        sim_ns += r.elapsed_ns;
-        w = u;
+        // one epoch: full gradient (computed for real, billed simulated per
+        // the storage model) + inner phase on simulated cores, via the
+        // shared epoch helper
+        let (epoch_ns, r) =
+            sim_asysvrg_epoch(obj, cfg, costs, &opts, epoch_phase_ns, epoch_setup_ns, t, &mut w);
+        sim_ns += epoch_ns;
 
         max_delay = max_delay.max(r.max_delay);
         delay_weighted += r.mean_delay * r.updates as f64;

@@ -1,0 +1,771 @@
+//! S21: distributed AsySVRG — a discrete-event multi-node simulator with a
+//! sharded parameter server and pluggable network cost models (DESIGN.md
+//! §10).
+//!
+//! The single-box simulator (`simcore`) answers "what does p cores of one
+//! machine cost?"; this module scales the question to *machines*: m nodes,
+//! each running p local threads billed by the same calibrated
+//! [`CostModel`]/[`UpdateBilling`](crate::simcore::UpdateBilling) path, a
+//! parameter-server shard per node (shard k owns the coordinate range
+//! `partition(d, m)[k]`), and a [`NetworkModel`] pricing every message as
+//! latency + per-coordinate wire bytes (with an optional shared-throughput
+//! mode for the epoch-boundary incast).
+//!
+//! **Event model.** Each epoch runs as a DAG of timed events on the
+//! deterministic [`EventQueue`] (keyed `(time, seq)` — order is a pure
+//! function of the seed):
+//!
+//! ```text
+//! PullDone → GradDone → PartialArrived×m → ReduceDone → MuArrived×m
+//!      (snapshot)  (local partial)   (shard merge)    (μ̄ broadcast)
+//! MuArrived[all] → InnerDone  +  FlushArrived×F (update pushes)
+//! ```
+//!
+//! Sync boundaries barrier every node on the global epoch end; async lets
+//! each node proceed at its own finish using the freshest locally-available
+//! μ̄ (the reduce/broadcast leave its critical path, at the price of extra
+//! staleness, measured and reported as τ̂_net).
+//!
+//! **Parity contract.** At m = 1 there are no remote shards, so no network
+//! events exist and the epoch is delegated to the shared single-box helper
+//! [`sim_asysvrg_epoch`] — the m = 1 configuration reproduces
+//! `simcore::sim_run` sim-seconds *bit-for-bit* (gated in CI, see
+//! `tests/simdist_test.rs`).
+//!
+//! **Trajectory semantics.** Nodes sample uniformly from the shared corpus
+//! (the paper's sampling model); each node's inner loop starts from the
+//! epoch snapshot w and its delta is summed into the next iterate
+//! (parameter-server delta application). The async boundary changes event
+//! *timing* only — its convergence impact enters through the Theorem-1
+//! feasibility check at the measured end-to-end τ̂, which includes the
+//! network staleness window. Cross-epoch message interleavings are
+//! approximated by a per-epoch event horizon with component clocks clamped
+//! monotone.
+
+pub mod net;
+pub mod queue;
+
+pub use net::{LatencyDist, NetworkModel};
+pub use queue::EventQueue;
+
+use crate::config::{Boundary, RunConfig, Storage};
+use crate::coordinator::epoch::{parallel_full_grad, partition};
+use crate::coordinator::monitor::HistoryPoint;
+use crate::objective::Objective;
+use crate::simcore::{
+    full_grad_phase_ns, full_grad_phase_ns_range, sim_asysvrg_epoch, simulate_inner_opts,
+    CostModel, EngineOpts, SimTask,
+};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// Cluster topology + boundary + network specification.
+#[derive(Clone, Debug)]
+pub struct DistConfig {
+    /// Machines m; shard k of the parameter vector lives on node k.
+    pub nodes: usize,
+    /// Local worker threads p per node (billed via the calibrated
+    /// single-box cost model).
+    pub threads_per_node: usize,
+    /// Epoch-boundary discipline: global barrier vs free-running nodes.
+    pub boundary: Boundary,
+    pub net: NetworkModel,
+    /// Update pushes to remote shards are batched into this many flushes
+    /// per node per epoch (the last flush gates the node's epoch end).
+    pub flushes_per_epoch: usize,
+    /// Record a `(time, component)` event trace for the monotonicity
+    /// property tests (components 0..m are nodes, m..2m shards).
+    pub record_trace: bool,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            nodes: 1,
+            threads_per_node: 4,
+            boundary: Boundary::Sync,
+            net: NetworkModel::zero(),
+            flushes_per_epoch: 4,
+            record_trace: false,
+        }
+    }
+}
+
+impl DistConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("threads_per_node", Json::Num(self.threads_per_node as f64)),
+            ("boundary", Json::Str(self.boundary.name().into())),
+            ("net", self.net.to_json()),
+            ("flushes_per_epoch", Json::Num(self.flushes_per_epoch as f64)),
+        ])
+    }
+}
+
+/// Outcome of one simulated cluster run.
+#[derive(Clone, Debug, Default)]
+pub struct DistResult {
+    pub total_seconds: f64,
+    pub epochs_run: usize,
+    pub converged: bool,
+    pub final_loss: f64,
+    pub total_updates: u64,
+    /// Worst within-node read→apply delay (the single-box τ̂).
+    pub max_delay_node: u64,
+    /// Worst measured network-staleness component: foreign updates landing
+    /// at the parameter server inside one pull + push(+ stale-μ̄) window.
+    pub tau_net: u64,
+    /// End-to-end bounded delay fed to Theorem 1: within-node + network.
+    pub tau_end_to_end: u64,
+    /// Total simulated wire nanoseconds billed across the run.
+    pub net_ns: f64,
+    pub history: Vec<HistoryPoint>,
+    /// `(time, component)` event log when `record_trace` is set.
+    pub trace: Vec<(f64, usize)>,
+}
+
+impl DistResult {
+    pub fn epochs_per_sec(&self) -> f64 {
+        if self.total_seconds > 0.0 {
+            self.epochs_run as f64 / self.total_seconds
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total_seconds", Json::Num(self.total_seconds)),
+            ("epochs_run", Json::Num(self.epochs_run as f64)),
+            ("epochs_per_sec", Json::Num(self.epochs_per_sec())),
+            ("converged", Json::Bool(self.converged)),
+            ("final_loss", Json::Num(self.final_loss)),
+            ("total_updates", Json::Num(self.total_updates as f64)),
+            ("max_delay_node", Json::Num(self.max_delay_node as f64)),
+            ("tau_net", Json::Num(self.tau_net as f64)),
+            ("tau_end_to_end", Json::Num(self.tau_end_to_end as f64)),
+            ("net_seconds", Json::Num(self.net_ns / 1e9)),
+        ])
+    }
+}
+
+/// Per-node inner seed: epoch t's single-box seed, decorrelated per node.
+/// Node 0 uses the plain epoch seed so the m = 1 path is bit-identical to
+/// `sim_asysvrg`.
+fn node_seed(seed: u64, t: usize, k: usize) -> u64 {
+    seed ^ ((t as u64) << 20) ^ ((k as u64) << 44)
+}
+
+/// Distinct-feature counts: corpus-wide and per node row-share — the
+/// touched-coordinate payloads of the full-gradient reduce.
+fn touched_counts(obj: &Objective, node_rows: &[std::ops::Range<usize>]) -> (usize, Vec<usize>) {
+    let d = obj.dim();
+    let mut global_seen = vec![false; d];
+    let mut global = 0usize;
+    let mut stamp = vec![usize::MAX; d];
+    let mut per_node = Vec::with_capacity(node_rows.len());
+    for (k, range) in node_rows.iter().enumerate() {
+        let mut cnt = 0usize;
+        for i in range.clone() {
+            for &j in obj.data.row(i).indices {
+                let j = j as usize;
+                if stamp[j] != k {
+                    stamp[j] = k;
+                    cnt += 1;
+                }
+                if !global_seen[j] {
+                    global_seen[j] = true;
+                    global += 1;
+                }
+            }
+        }
+        per_node.push(cnt);
+    }
+    (global, per_node)
+}
+
+/// One epoch's cluster events (m > 1 only; m = 1 never constructs these).
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    PullDone { node: usize },
+    GradDone { node: usize },
+    PartialArrived { shard: usize },
+    ReduceDone { shard: usize },
+    MuArrived { node: usize },
+    InnerDone { node: usize },
+    FlushArrived { node: usize, flush: usize, gen: f64 },
+}
+
+/// Static per-run cluster shape + wire payload sizes.
+struct Cluster {
+    m: usize,
+    /// Snapshot coords node k must pull from remote shards: d − |shard k|.
+    pull_coords: Vec<usize>,
+    /// Remote share of node k's full-gradient partial (touched · (m−1)/m).
+    partial_coords: Vec<usize>,
+    /// Touched coords of node k's partial (sender-side pack cost).
+    touched_node: Vec<usize>,
+    /// μ̄ slice one shard broadcasts per recipient: touched_global / m.
+    mu_coords: usize,
+    /// Shard-side reduce entries: m partials × per-shard touched coords.
+    reduce_entries: usize,
+    /// Remote coords of one update-push flush from node k.
+    flush_coords: Vec<usize>,
+}
+
+impl Cluster {
+    fn new(
+        obj: &Objective,
+        cfg: &RunConfig,
+        dist: &DistConfig,
+        node_rows: &[std::ops::Range<usize>],
+        updates_per_node: u64,
+    ) -> Cluster {
+        let m = dist.nodes;
+        let d = obj.dim();
+        let remote = (m - 1) as f64 / m as f64;
+        let (touched_global, touched_node) = touched_counts(obj, node_rows);
+        let shard_coords = partition(d, m);
+        let pull_coords = (0..m).map(|k| d - shard_coords[k].len()).collect();
+        let partial_coords =
+            touched_node.iter().map(|&t| (t as f64 * remote).round() as usize).collect();
+        let mu_coords = (touched_global as f64 / m as f64).ceil() as usize;
+        let reduce_entries = m * mu_coords;
+        let flushes = dist.flushes_per_epoch.max(1) as f64;
+        let flush_coords = (0..m)
+            .map(|_| {
+                let batch = match cfg.storage {
+                    Storage::Dense => d as f64,
+                    Storage::Sparse => {
+                        let per_flush = updates_per_node as f64 / flushes;
+                        (per_flush * obj.data.avg_nnz()).min(touched_global as f64)
+                    }
+                };
+                (batch * remote).round() as usize
+            })
+            .collect();
+        Cluster {
+            m,
+            pull_coords,
+            partial_coords,
+            touched_node,
+            mu_coords,
+            reduce_entries,
+            flush_coords,
+        }
+    }
+}
+
+/// Measured network-delay components of one epoch, per node.
+struct EpochNet {
+    pull_delay: Vec<f64>,
+    push_delay_sum: Vec<f64>,
+    push_count: Vec<usize>,
+    mu_lag: Vec<f64>,
+    start: f64,
+    end: f64,
+}
+
+/// Run one epoch's cluster timeline on a fresh deterministic event queue.
+/// `spans[k]` is node k's inner-loop simulated duration (from the engine).
+/// Mutates node/shard clocks in place; returns the measured delays.
+#[allow(clippy::too_many_arguments)]
+fn epoch_timeline(
+    cluster: &Cluster,
+    dist: &DistConfig,
+    costs: &CostModel,
+    setup_ns: f64,
+    grad_ns: &[f64],
+    spans: &[f64],
+    clocks: &mut [f64],
+    shard_clocks: &mut [f64],
+    rng: &mut Pcg32,
+    net_ns: &mut f64,
+    trace: &mut Vec<(f64, usize)>,
+) -> EpochNet {
+    let m = cluster.m;
+    let sync = dist.boundary == Boundary::Sync;
+    let flushes = dist.flushes_per_epoch.max(1);
+    let mut q: EventQueue<Ev> = EventQueue::new();
+
+    let mut pull_start = vec![0.0f64; m];
+    let mut grad_done = vec![0.0f64; m];
+    let mut inner_end = vec![0.0f64; m];
+    let mut last_flush = vec![0.0f64; m];
+    let mut partials = vec![0usize; m];
+    let mut mus = vec![0usize; m];
+    let mut stats = EpochNet {
+        pull_delay: vec![0.0; m],
+        push_delay_sum: vec![0.0; m],
+        push_count: vec![0; m],
+        mu_lag: vec![0.0; m],
+        start: 0.0,
+        end: 0.0,
+    };
+
+    // one transfer, burst concurrency = m aggregated per-node messages
+    macro_rules! xfer {
+        ($coords:expr) => {{
+            let dur = dist.net.transfer_ns($coords, m, rng);
+            *net_ns += dur;
+            dur
+        }};
+    }
+    // clamp a component clock monotone and record the trace point
+    macro_rules! touch {
+        ($clock:expr, $t:expr, $comp:expr) => {{
+            let c: &mut f64 = &mut $clock;
+            *c = c.max($t);
+            if dist.record_trace {
+                trace.push((*c, $comp));
+            }
+        }};
+    }
+
+    // epoch start: global barrier (sync) or each node's own clock (async)
+    let barrier = clocks.iter().cloned().fold(0.0f64, f64::max);
+    stats.start = if sync { barrier } else { clocks.iter().cloned().fold(f64::INFINITY, f64::min) };
+    for k in 0..m {
+        let s = if sync { barrier } else { clocks[k] };
+        pull_start[k] = s + setup_ns;
+        let dur = xfer!(cluster.pull_coords[k]);
+        q.push(pull_start[k] + dur, Ev::PullDone { node: k });
+    }
+
+    // schedule one node's inner phase + its update-push flushes
+    macro_rules! start_inner {
+        ($k:expr, $t:expr, $q:expr) => {{
+            let (k, t) = ($k, $t);
+            $q.push(t + spans[k], Ev::InnerDone { node: k });
+            for f in 1..=flushes {
+                let gen = t + spans[k] * f as f64 / flushes as f64;
+                let dur = costs.pack_cost(cluster.flush_coords[k]) + xfer!(cluster.flush_coords[k]);
+                $q.push(gen + dur, Ev::FlushArrived { node: k, flush: f, gen });
+            }
+        }};
+    }
+
+    while let Some((t, ev)) = q.pop() {
+        match ev {
+            Ev::PullDone { node } => {
+                stats.pull_delay[node] = t - pull_start[node];
+                touch!(clocks[node], t, node);
+                q.push(t + grad_ns[node], Ev::GradDone { node });
+            }
+            Ev::GradDone { node } => {
+                grad_done[node] = t;
+                touch!(clocks[node], t, node);
+                // ship the partial to the remote shards (one aggregated
+                // message; the own shard's slice arrives for free)
+                let dur = costs.pack_cost(cluster.touched_node[node])
+                    + xfer!(cluster.partial_coords[node]);
+                for j in 0..m {
+                    let at = if j == node { t } else { t + dur };
+                    q.push(at, Ev::PartialArrived { shard: j });
+                }
+                if !sync {
+                    // async boundary: don't wait for the reduce — run on
+                    // the freshest locally-available μ̄
+                    start_inner!(node, t, q);
+                }
+            }
+            Ev::PartialArrived { shard } => {
+                touch!(shard_clocks[shard], t, m + shard);
+                partials[shard] += 1;
+                if partials[shard] == m {
+                    let merge = costs.epoch_merge_cost(cluster.reduce_entries);
+                    q.push(t + merge, Ev::ReduceDone { shard });
+                }
+            }
+            Ev::ReduceDone { shard } => {
+                touch!(shard_clocks[shard], t, m + shard);
+                for k in 0..m {
+                    let at = if k == shard { t } else { t + xfer!(cluster.mu_coords) };
+                    q.push(at, Ev::MuArrived { node: k });
+                }
+            }
+            Ev::MuArrived { node } => {
+                mus[node] += 1;
+                if mus[node] == m {
+                    stats.mu_lag[node] = (t - grad_done[node]).max(0.0);
+                    if sync {
+                        touch!(clocks[node], t, node);
+                        start_inner!(node, t, q);
+                    }
+                }
+            }
+            Ev::InnerDone { node } => {
+                inner_end[node] = t;
+                touch!(clocks[node], t, node);
+            }
+            Ev::FlushArrived { node, flush, gen } => {
+                stats.push_delay_sum[node] += t - gen;
+                stats.push_count[node] += 1;
+                for j in 0..m {
+                    if j != node {
+                        touch!(shard_clocks[j], t, m + j);
+                    }
+                }
+                if flush == flushes {
+                    last_flush[node] = t;
+                }
+            }
+        }
+    }
+
+    // epoch end: a node is done when its inner loop finished AND its last
+    // flush landed at the shards
+    let mut global_end = 0.0f64;
+    for k in 0..m {
+        let end_k = inner_end[k].max(last_flush[k]);
+        clocks[k] = clocks[k].max(end_k);
+        global_end = global_end.max(end_k);
+    }
+    if sync {
+        // the barrier: every node waits for the global epoch end
+        for c in clocks.iter_mut() {
+            *c = global_end;
+        }
+    }
+    stats.end = global_end;
+    stats
+}
+
+/// Simulate a full distributed AsySVRG run: m nodes × p threads against a
+/// sharded parameter server over `dist.net`. See the module docs for the
+/// event model and the m = 1 parity contract.
+pub fn sim_dist_run(
+    obj: &Objective,
+    cfg: &RunConfig,
+    dist: &DistConfig,
+    costs: &CostModel,
+    fstar: f64,
+) -> DistResult {
+    let m = dist.nodes;
+    let p = dist.threads_per_node;
+    assert!(m >= 1 && p >= 1, "need at least one node and one thread");
+    let d = obj.dim();
+    let n = obj.n();
+    assert!(m <= n, "more nodes ({m}) than rows ({n})");
+
+    // the trajectory is the p·m-way asynchronous run: per-thread inner
+    // iterations shrink with the cluster so the per-epoch update budget
+    // (m_factor·n) is machine-count-invariant — strong scaling
+    let mut traj_cfg = cfg.clone();
+    traj_cfg.threads = m * p;
+    let m_per_thread = traj_cfg.inner_iters(n);
+    let opts = EngineOpts { storage: cfg.storage, ..Default::default() };
+    let setup_ns = costs.epoch_setup_cost(p, d, 2, opts.runtime);
+    let passes_per_epoch = 1.0 + cfg.m_factor;
+
+    let node_rows = partition(n, m);
+    let grad_ns: Vec<f64> = node_rows
+        .iter()
+        .map(|r| full_grad_phase_ns_range(obj, r.clone(), p, costs, cfg.storage))
+        .collect();
+    let cluster = Cluster::new(obj, cfg, dist, &node_rows, (p * m_per_thread) as u64);
+    let mut rng = Pcg32::new(cfg.seed ^ 0xD157_ED6E, 0xD157);
+
+    let mut w = vec![0.0f32; d];
+    let mut clocks = vec![0.0f64; m];
+    let mut shard_clocks = vec![0.0f64; m];
+    let mut result = DistResult::default();
+    let mut passes = 0.0f64;
+    let mut tau_net_max = 0.0f64;
+
+    for t in 0..cfg.epochs {
+        if m == 1 {
+            // the parity fast path: no remote shards ⇒ no network events ⇒
+            // the epoch IS the single-box epoch, billed by the shared
+            // helper so timing and trajectory match sim_run bit-for-bit
+            let (epoch_ns, r) = sim_asysvrg_epoch(
+                obj,
+                &traj_cfg,
+                costs,
+                &opts,
+                full_grad_phase_ns(obj, p, costs, cfg.storage),
+                setup_ns,
+                t,
+                &mut w,
+            );
+            clocks[0] += epoch_ns;
+            if dist.record_trace {
+                result.trace.push((clocks[0], 0));
+            }
+            result.max_delay_node = result.max_delay_node.max(r.max_delay);
+            result.total_updates += r.updates;
+        } else {
+            // ---- math: every node runs its inner phase from the epoch
+            // snapshot; deltas sum at the parameter server
+            let eg = parallel_full_grad(obj, &w, 1);
+            let u0 = w.clone();
+            let task = SimTask::Svrg { u0: &u0, eg: &eg };
+            let mut spans = Vec::with_capacity(m);
+            let mut epoch_updates = Vec::with_capacity(m);
+            let mut acc = w.clone();
+            for k in 0..m {
+                let mut u = w.clone();
+                let r = simulate_inner_opts(
+                    obj,
+                    &task,
+                    cfg.scheme,
+                    costs,
+                    &mut u,
+                    cfg.eta,
+                    p,
+                    m_per_thread,
+                    node_seed(cfg.seed, t, k),
+                    &opts,
+                );
+                for j in 0..d {
+                    acc[j] += u[j] - w[j];
+                }
+                spans.push(r.elapsed_ns);
+                epoch_updates.push(r.updates);
+                result.max_delay_node = result.max_delay_node.max(r.max_delay);
+                result.total_updates += r.updates;
+            }
+            w = acc;
+
+            // ---- timing: the cluster event timeline
+            let stats = epoch_timeline(
+                &cluster,
+                dist,
+                costs,
+                setup_ns,
+                &grad_ns,
+                &spans,
+                &mut clocks,
+                &mut shard_clocks,
+                &mut rng,
+                &mut result.net_ns,
+                &mut result.trace,
+            );
+
+            // ---- measured network staleness: foreign updates landing at
+            // the parameter server inside one node's pull + mean-push
+            // (+ stale-μ̄, async) window
+            let wall = (stats.end - stats.start).max(1e-9);
+            let total_upd: u64 = epoch_updates.iter().sum();
+            for k in 0..m {
+                let push_mean = if stats.push_count[k] > 0 {
+                    stats.push_delay_sum[k] / stats.push_count[k] as f64
+                } else {
+                    0.0
+                };
+                let mut window = stats.pull_delay[k] + push_mean;
+                if dist.boundary == Boundary::Async {
+                    window += stats.mu_lag[k];
+                }
+                let foreign_rate = (total_upd - epoch_updates[k]) as f64 / wall;
+                tau_net_max = tau_net_max.max((foreign_rate * window).ceil());
+            }
+        }
+
+        let epoch_end = clocks.iter().cloned().fold(0.0f64, f64::max);
+        passes += passes_per_epoch;
+        let loss = obj.loss(&w);
+        result.history.push(HistoryPoint {
+            passes,
+            loss,
+            seconds: epoch_end / 1e9,
+            updates: result.total_updates,
+        });
+        result.epochs_run = t + 1;
+        if loss - fstar < cfg.target_gap {
+            result.converged = true;
+            break;
+        }
+    }
+
+    result.total_seconds = clocks.iter().cloned().fold(0.0f64, f64::max) / 1e9;
+    result.final_loss = obj.loss(&w);
+    result.tau_net = tau_net_max as u64;
+    result.tau_end_to_end = result.max_delay_node + result.tau_net;
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scheme;
+    use crate::data::synthetic::SyntheticSpec;
+    use std::sync::Arc;
+
+    fn obj() -> Objective {
+        let ds = SyntheticSpec::new("dist", 256, 64, 10, 13).generate();
+        Objective::new(Arc::new(ds), 1e-2, crate::objective::LossKind::Logistic)
+    }
+
+    fn cfg() -> RunConfig {
+        RunConfig {
+            threads: 4,
+            scheme: Scheme::Unlock,
+            eta: 0.2,
+            epochs: 3,
+            target_gap: 0.0,
+            storage: Storage::Sparse,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let o = obj();
+        let costs = CostModel::default_host();
+        let dist = DistConfig {
+            nodes: 3,
+            threads_per_node: 2,
+            net: NetworkModel::lan(),
+            ..Default::default()
+        };
+        let a = sim_dist_run(&o, &cfg(), &dist, &costs, f64::NEG_INFINITY);
+        let b = sim_dist_run(&o, &cfg(), &dist, &costs, f64::NEG_INFINITY);
+        assert_eq!(a.total_seconds.to_bits(), b.total_seconds.to_bits());
+        assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
+        assert_eq!(a.tau_end_to_end, b.tau_end_to_end);
+        assert_eq!(a.net_ns.to_bits(), b.net_ns.to_bits());
+    }
+
+    #[test]
+    fn seeds_change_the_run() {
+        let o = obj();
+        let costs = CostModel::default_host();
+        let dist = DistConfig {
+            nodes: 3,
+            threads_per_node: 2,
+            net: NetworkModel::lan(),
+            ..Default::default()
+        };
+        let a = sim_dist_run(&o, &cfg(), &dist, &costs, f64::NEG_INFINITY);
+        let mut c2 = cfg();
+        c2.seed = 1337;
+        let b = sim_dist_run(&o, &c2, &dist, &costs, f64::NEG_INFINITY);
+        assert_ne!(a.final_loss.to_bits(), b.final_loss.to_bits());
+    }
+
+    #[test]
+    fn converges_and_bills_network() {
+        let o = obj();
+        let costs = CostModel::default_host();
+        let mut c = cfg();
+        c.epochs = 8;
+        let dist = DistConfig {
+            nodes: 4,
+            threads_per_node: 2,
+            net: NetworkModel::lan(),
+            ..Default::default()
+        };
+        let r = sim_dist_run(&o, &c, &dist, &costs, f64::NEG_INFINITY);
+        assert_eq!(r.epochs_run, 8);
+        assert!(r.final_loss < (2f64).ln(), "loss {}", r.final_loss);
+        assert!(r.net_ns > 0.0, "a 4-node run must pay wire time");
+        assert!(r.total_updates > 0);
+        assert!(r.tau_end_to_end >= r.max_delay_node);
+    }
+
+    /// Per-component simulated clocks are monotone (ISSUE 7 satellite 3b):
+    /// the traced event times never regress for any node or shard.
+    #[test]
+    fn component_clocks_monotone() {
+        let o = obj();
+        let costs = CostModel::default_host();
+        for boundary in [Boundary::Sync, Boundary::Async] {
+            let dist = DistConfig {
+                nodes: 3,
+                threads_per_node: 2,
+                boundary,
+                net: NetworkModel {
+                    latency: LatencyDist::Exp { mean: 20_000.0 },
+                    ..NetworkModel::lan()
+                },
+                record_trace: true,
+                ..Default::default()
+            };
+            let r = sim_dist_run(&o, &cfg(), &dist, &costs, f64::NEG_INFINITY);
+            assert!(!r.trace.is_empty());
+            let mut last = vec![0.0f64; 2 * dist.nodes];
+            for &(t, comp) in &r.trace {
+                assert!(
+                    t >= last[comp],
+                    "{boundary:?}: component {comp} clock regressed: {t} < {}",
+                    last[comp]
+                );
+                last[comp] = t;
+            }
+        }
+    }
+
+    /// Async boundaries never run slower than sync under latency: removing
+    /// the barrier + reduce wait can only shorten the epoch.
+    #[test]
+    fn async_at_least_as_fast_as_sync_under_latency() {
+        let o = obj();
+        let costs = CostModel::default_host();
+        let net = NetworkModel {
+            latency: LatencyDist::Fixed(500_000.0), // 500 µs RPCs
+            gbps: 1.0,
+            shared: true,
+            bytes_per_coord: 8.0,
+        };
+        let mk = |boundary| DistConfig {
+            nodes: 4,
+            threads_per_node: 2,
+            boundary,
+            net,
+            ..Default::default()
+        };
+        let sync = sim_dist_run(&o, &cfg(), &mk(Boundary::Sync), &costs, f64::NEG_INFINITY);
+        let asyn = sim_dist_run(&o, &cfg(), &mk(Boundary::Async), &costs, f64::NEG_INFINITY);
+        assert!(
+            asyn.total_seconds <= sync.total_seconds,
+            "async {} !<= sync {}",
+            asyn.total_seconds,
+            sync.total_seconds
+        );
+        // the price of async: extra staleness through the stale-μ̄ window
+        assert!(asyn.tau_end_to_end >= sync.tau_end_to_end.saturating_sub(1));
+    }
+
+    /// More latency ⇒ more simulated time and more network staleness.
+    #[test]
+    fn latency_costs_time_and_staleness() {
+        let o = obj();
+        let costs = CostModel::default_host();
+        let mk = |lat_ns: f64| DistConfig {
+            nodes: 4,
+            threads_per_node: 2,
+            net: NetworkModel {
+                latency: if lat_ns == 0.0 { LatencyDist::Zero } else { LatencyDist::Fixed(lat_ns) },
+                gbps: 10.0,
+                shared: true,
+                bytes_per_coord: 8.0,
+            },
+            ..Default::default()
+        };
+        let quiet = sim_dist_run(&o, &cfg(), &mk(0.0), &costs, f64::NEG_INFINITY);
+        let slow = sim_dist_run(&o, &cfg(), &mk(2_000_000.0), &costs, f64::NEG_INFINITY);
+        assert!(slow.total_seconds > quiet.total_seconds);
+        assert!(slow.tau_net >= quiet.tau_net);
+        // identical trajectory either way: the network changes timing only
+        assert_eq!(slow.final_loss.to_bits(), quiet.final_loss.to_bits());
+    }
+
+    /// Zero-cost network, matched machine budget: distributing over more
+    /// nodes must not slow the simulated run (the no-knee regime).
+    #[test]
+    fn free_network_scales_with_nodes() {
+        let o = obj();
+        let costs = CostModel::default_host();
+        let mk = |m| DistConfig {
+            nodes: m,
+            threads_per_node: 2,
+            net: NetworkModel::zero(),
+            ..Default::default()
+        };
+        let t1 = sim_dist_run(&o, &cfg(), &mk(1), &costs, f64::NEG_INFINITY).total_seconds;
+        let t4 = sim_dist_run(&o, &cfg(), &mk(4), &costs, f64::NEG_INFINITY).total_seconds;
+        assert!(t4 < t1, "4 free nodes {t4} !< 1 node {t1}");
+    }
+}

@@ -1,0 +1,217 @@
+//! Pluggable network cost model for the cluster simulator: a per-message
+//! latency distribution plus per-link bandwidth, with an optional
+//! shared-throughput mode where concurrent transfers split the link (the
+//! epoch-boundary incast that dominates distributed ASGD at scale —
+//! Keuper & Pfreundt, arXiv:1505.04956).
+//!
+//! All wire costs are billed **per touched coordinate**: a sparse update
+//! push ships (index, value) pairs, so the payload of every message is
+//! `coords · bytes_per_coord` bytes. Latency is sampled deterministically
+//! from a seeded `Pcg32`, so a distributed run is a pure function of its
+//! seed.
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// Per-message latency distribution (nanoseconds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LatencyDist {
+    /// No latency — the parity configuration (m=1 / same-box).
+    Zero,
+    /// Constant latency per message.
+    Fixed(f64),
+    /// Uniform in [lo, hi].
+    Uniform { lo: f64, hi: f64 },
+    /// Exponential with the given mean (heavy-ish tail: the occasional
+    /// straggler RPC that sync barriers amplify).
+    Exp { mean: f64 },
+}
+
+impl LatencyDist {
+    /// Draw one latency sample (ns).
+    pub fn sample(&self, rng: &mut Pcg32) -> f64 {
+        match *self {
+            LatencyDist::Zero => 0.0,
+            LatencyDist::Fixed(ns) => ns,
+            LatencyDist::Uniform { lo, hi } => lo + (hi - lo) * rng.uniform(),
+            LatencyDist::Exp { mean } => mean * rng.exponential(),
+        }
+    }
+
+    /// Distribution mean (ns) — used for reporting, never for billing.
+    pub fn mean_ns(&self) -> f64 {
+        match *self {
+            LatencyDist::Zero => 0.0,
+            LatencyDist::Fixed(ns) => ns,
+            LatencyDist::Uniform { lo, hi } => 0.5 * (lo + hi),
+            LatencyDist::Exp { mean } => mean,
+        }
+    }
+
+    /// Parse a CLI spec; times are **microseconds** (the natural unit for
+    /// datacenter RPC): `zero`, `fixed:US`, `uniform:LO:HI`, `exp:MEAN`.
+    pub fn parse(s: &str) -> Result<LatencyDist, String> {
+        let us = 1_000.0; // µs → ns
+        let parts: Vec<&str> = s.split(':').collect();
+        let num = |x: &str| -> Result<f64, String> {
+            x.parse::<f64>().map_err(|_| format!("bad latency number '{x}' in '{s}'"))
+        };
+        match parts.as_slice() {
+            ["zero"] => Ok(LatencyDist::Zero),
+            ["fixed", v] => Ok(LatencyDist::Fixed(num(v)? * us)),
+            ["uniform", lo, hi] => {
+                let (lo, hi) = (num(lo)? * us, num(hi)? * us);
+                if hi < lo {
+                    return Err(format!("uniform latency hi < lo in '{s}'"));
+                }
+                Ok(LatencyDist::Uniform { lo, hi })
+            }
+            ["exp", m] => Ok(LatencyDist::Exp { mean: num(m)? * us }),
+            _ => Err(format!(
+                "unknown latency spec '{s}' (zero|fixed:US|uniform:LO:HI|exp:MEAN — µs)"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        let us = 1_000.0;
+        match *self {
+            LatencyDist::Zero => "zero".into(),
+            LatencyDist::Fixed(ns) => format!("fixed:{}", ns / us),
+            LatencyDist::Uniform { lo, hi } => format!("uniform:{}:{}", lo / us, hi / us),
+            LatencyDist::Exp { mean } => format!("exp:{}", mean / us),
+        }
+    }
+}
+
+/// Latency + bandwidth model of one cluster interconnect.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetworkModel {
+    pub latency: LatencyDist,
+    /// Link bandwidth in gigabits/s; `f64::INFINITY` disables the
+    /// serialization term entirely.
+    pub gbps: f64,
+    /// Shared-throughput option: `concurrent` simultaneous transfers each
+    /// get `gbps / concurrent` (fluid fair-share, frozen at transfer
+    /// start — the burst concurrency of an epoch-boundary incast).
+    pub shared: bool,
+    /// Wire bytes per parameter coordinate: u32 index + f32 value = 8.
+    pub bytes_per_coord: f64,
+}
+
+impl NetworkModel {
+    /// The parity configuration: zero latency, infinite bandwidth. Every
+    /// transfer costs exactly 0.0 ns, so the m=1 cluster reproduces the
+    /// single-box sim-seconds bit-for-bit.
+    pub fn zero() -> Self {
+        NetworkModel {
+            latency: LatencyDist::Zero,
+            gbps: f64::INFINITY,
+            shared: false,
+            bytes_per_coord: 8.0,
+        }
+    }
+
+    /// A 10 GbE datacenter LAN: 50 µs fixed RPC latency, shared link.
+    pub fn lan() -> Self {
+        NetworkModel {
+            latency: LatencyDist::Fixed(50_000.0),
+            gbps: 10.0,
+            shared: true,
+            bytes_per_coord: 8.0,
+        }
+    }
+
+    /// Duration (ns) of one `coords`-coordinate message when `concurrent`
+    /// transfers share the link: one latency sample plus the serialization
+    /// time of the payload at the (possibly split) bandwidth. 1 gbps =
+    /// 1 bit/ns, so `bits / gbps` is already nanoseconds.
+    pub fn transfer_ns(&self, coords: usize, concurrent: usize, rng: &mut Pcg32) -> f64 {
+        let lat = self.latency.sample(rng);
+        if coords == 0 {
+            return lat;
+        }
+        let bits = coords as f64 * self.bytes_per_coord * 8.0;
+        let eff = if self.shared { self.gbps / concurrent.max(1) as f64 } else { self.gbps };
+        let wire = if eff.is_finite() && eff > 0.0 { bits / eff } else { 0.0 };
+        lat + wire
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("latency", Json::Str(self.latency.label())),
+            ("gbps", Json::Num(self.gbps)),
+            ("shared", Json::Bool(self.shared)),
+            ("bytes_per_coord", Json::Num(self.bytes_per_coord)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_network_costs_exactly_nothing() {
+        let net = NetworkModel::zero();
+        let mut rng = Pcg32::new(1, 1);
+        for coords in [0usize, 1, 47_236] {
+            for conc in [1usize, 4, 64] {
+                assert_eq!(net.transfer_ns(coords, conc, &mut rng), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip_and_errors() {
+        for spec in ["zero", "fixed:50", "uniform:20:80", "exp:100"] {
+            let d = LatencyDist::parse(spec).unwrap();
+            assert_eq!(LatencyDist::parse(&d.label()).unwrap(), d, "{spec}");
+        }
+        assert_eq!(LatencyDist::parse("fixed:50").unwrap(), LatencyDist::Fixed(50_000.0));
+        assert!(LatencyDist::parse("uniform:80:20").is_err());
+        assert!(LatencyDist::parse("gaussian:5").is_err());
+        assert!(LatencyDist::parse("fixed:abc").is_err());
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_in_support() {
+        let d = LatencyDist::Uniform { lo: 1_000.0, hi: 2_000.0 };
+        let mut a = Pcg32::new(9, 2);
+        let mut b = Pcg32::new(9, 2);
+        for _ in 0..100 {
+            let x = d.sample(&mut a);
+            assert_eq!(x, d.sample(&mut b));
+            assert!((1_000.0..=2_000.0).contains(&x));
+        }
+        let e = LatencyDist::Exp { mean: 5_000.0 };
+        let mut sum = 0.0;
+        for _ in 0..5_000 {
+            let x = e.sample(&mut a);
+            assert!(x >= 0.0);
+            sum += x;
+        }
+        assert!((sum / 5_000.0 - 5_000.0).abs() < 500.0, "exp mean off: {}", sum / 5_000.0);
+    }
+
+    #[test]
+    fn shared_link_splits_bandwidth() {
+        let net = NetworkModel { latency: LatencyDist::Zero, ..NetworkModel::lan() };
+        let mut rng = Pcg32::new(1, 1);
+        let one = net.transfer_ns(10_000, 1, &mut rng);
+        let four = net.transfer_ns(10_000, 4, &mut rng);
+        assert!((four - 4.0 * one).abs() < 1e-9, "fair share: {four} vs 4×{one}");
+        // dedicated links ignore concurrency
+        let ded = NetworkModel { shared: false, ..net };
+        assert_eq!(ded.transfer_ns(10_000, 1, &mut rng), ded.transfer_ns(10_000, 4, &mut rng));
+        // 10_000 coords × 8 B × 8 b / 10 gbps = 64 µs
+        assert!((one - 64_000.0).abs() < 1e-6, "wire time {one}");
+    }
+
+    #[test]
+    fn latency_applies_even_to_empty_messages() {
+        let net = NetworkModel { latency: LatencyDist::Fixed(7_000.0), ..NetworkModel::lan() };
+        let mut rng = Pcg32::new(1, 1);
+        assert_eq!(net.transfer_ns(0, 8, &mut rng), 7_000.0);
+    }
+}

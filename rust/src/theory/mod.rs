@@ -162,6 +162,31 @@ pub fn max_feasible_eta(
     best
 }
 
+/// Largest bounded delay τ for which the given theorem still certifies
+/// α < 1 at fixed (μ, L, η, M̃) — the question the distributed simulator
+/// asks in reverse: how much end-to-end staleness (within-node plus
+/// network, the τ̂ measured by `simdist`) can this step size absorb before
+/// the linear rate is lost? α is monotone in τ (the ρ^τ amplification), so
+/// the scan stops at the first infeasible delay. Returns None when even
+/// τ = 0 is infeasible.
+pub fn max_feasible_tau(
+    mu: f64,
+    l: f64,
+    eta: f64,
+    m_tilde: u64,
+    theorem: fn(&RateParams) -> Option<RateReport>,
+) -> Option<u32> {
+    let mut best = None;
+    for tau in 0..=512u32 {
+        let p = RateParams { mu, l, eta, tau, m_tilde };
+        match theorem(&p) {
+            Some(rep) if rep.alpha < 1.0 => best = Some(tau),
+            _ => break,
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -218,6 +243,19 @@ mod tests {
         let e1 = max_feasible_eta(1e-2, 0.2501, 1, 40_000, theorem1_alpha).unwrap();
         let e16 = max_feasible_eta(1e-2, 0.2501, 16, 40_000, theorem1_alpha).unwrap();
         assert!(e16 <= e1, "eta(tau=16)={e16} > eta(tau=1)={e1}");
+    }
+
+    #[test]
+    fn feasible_tau_shrinks_with_eta() {
+        // a gentler step absorbs more staleness before losing the rate
+        let t_small = max_feasible_tau(1e-2, 0.2501, 0.02, 40_000, theorem1_alpha).unwrap();
+        let t_big = max_feasible_tau(1e-2, 0.2501, 0.2, 40_000, theorem1_alpha).unwrap();
+        assert!(t_small >= t_big, "tau(eta=0.02)={t_small} < tau(eta=0.2)={t_big}");
+        assert!(t_small >= 1, "small steps should tolerate some staleness");
+        // consistency with the forward search: the feasible-η at this τ
+        // must itself admit the τ it was searched at
+        let eta = max_feasible_eta(1e-2, 0.2501, 8, 40_000, theorem1_alpha).unwrap();
+        assert!(max_feasible_tau(1e-2, 0.2501, eta, 40_000, theorem1_alpha).unwrap() >= 8);
     }
 
     #[test]

@@ -1,0 +1,171 @@
+//! Integration + property tests for the distributed cluster simulator
+//! (DESIGN.md §10): the m=1/zero-network parity contract against the
+//! single-box simulator, whole-run bit-determinism, per-component clock
+//! monotonicity, and event-queue ordering under fuzzed loads.
+
+use asysvrg::config::{Boundary, RunConfig, Scheme, Storage};
+use asysvrg::data::synthetic::SyntheticSpec;
+use asysvrg::objective::{LossKind, Objective};
+use asysvrg::propcheck::forall;
+use asysvrg::simcore::{sim_run, CostModel};
+use asysvrg::simdist::{sim_dist_run, DistConfig, EventQueue, LatencyDist, NetworkModel};
+use std::sync::Arc;
+
+fn obj() -> Objective {
+    let ds = SyntheticSpec::new("simdist", 320, 80, 10, 17).generate();
+    Objective::new(Arc::new(ds), 1e-2, LossKind::Logistic)
+}
+
+fn base_cfg(storage: Storage) -> RunConfig {
+    RunConfig {
+        threads: 3,
+        scheme: Scheme::Unlock,
+        eta: 0.2,
+        epochs: 4,
+        target_gap: 0.0, // never met at fstar = -inf: runs every epoch
+        storage,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+/// The ISSUE 7 acceptance contract: one node over a zero-cost network IS
+/// the single box — same trajectory, same sim-seconds, bit for bit, on
+/// both storage engines.
+#[test]
+fn single_node_zero_network_matches_single_box_exactly() {
+    let o = obj();
+    let costs = CostModel::default_host();
+    for storage in [Storage::Dense, Storage::Sparse] {
+        let cfg = base_cfg(storage);
+        let dist = DistConfig {
+            nodes: 1,
+            threads_per_node: cfg.threads,
+            net: NetworkModel::zero(),
+            ..Default::default()
+        };
+        let cluster = sim_dist_run(&o, &cfg, &dist, &costs, f64::NEG_INFINITY);
+        let single = sim_run(&o, &cfg, &costs, f64::NEG_INFINITY);
+        assert_eq!(
+            cluster.total_seconds.to_bits(),
+            single.total_seconds.to_bits(),
+            "{storage:?}: sim-seconds diverged: {} vs {}",
+            cluster.total_seconds,
+            single.total_seconds
+        );
+        assert_eq!(cluster.epochs_run, single.epochs_run, "{storage:?}");
+        assert_eq!(cluster.total_updates, single.total_updates, "{storage:?}");
+        assert_eq!(cluster.max_delay_node, single.max_delay, "{storage:?}");
+        assert_eq!(cluster.tau_net, 0, "{storage:?}: one node has no network staleness");
+        assert_eq!(cluster.net_ns, 0.0, "{storage:?}: no wire time without remote shards");
+        for (a, b) in cluster.history.iter().zip(&single.history) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{storage:?}: trajectory forked");
+            assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "{storage:?}");
+        }
+    }
+}
+
+/// Whole-run determinism across every boundary × latency-distribution
+/// combination: re-running the same seed reproduces timing, trajectory,
+/// staleness, and the full event trace bit-for-bit.
+#[test]
+fn cluster_runs_are_bit_deterministic_per_seed() {
+    let o = obj();
+    let costs = CostModel::default_host();
+    for boundary in [Boundary::Sync, Boundary::Async] {
+        for latency in [
+            LatencyDist::Zero,
+            LatencyDist::Fixed(80_000.0),
+            LatencyDist::Uniform { lo: 10_000.0, hi: 90_000.0 },
+            LatencyDist::Exp { mean: 40_000.0 },
+        ] {
+            let dist = DistConfig {
+                nodes: 3,
+                threads_per_node: 2,
+                boundary,
+                net: NetworkModel { latency, ..NetworkModel::lan() },
+                record_trace: true,
+                ..Default::default()
+            };
+            let cfg = base_cfg(Storage::Sparse);
+            let a = sim_dist_run(&o, &cfg, &dist, &costs, f64::NEG_INFINITY);
+            let b = sim_dist_run(&o, &cfg, &dist, &costs, f64::NEG_INFINITY);
+            let tag = format!("{boundary:?}/{}", latency.label());
+            assert_eq!(a.total_seconds.to_bits(), b.total_seconds.to_bits(), "{tag}");
+            assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits(), "{tag}");
+            assert_eq!(a.net_ns.to_bits(), b.net_ns.to_bits(), "{tag}");
+            assert_eq!(a.tau_end_to_end, b.tau_end_to_end, "{tag}");
+            assert_eq!(a.trace.len(), b.trace.len(), "{tag}");
+            for (&(ta, ca), &(tb, cb)) in a.trace.iter().zip(&b.trace) {
+                assert_eq!((ta.to_bits(), ca), (tb.to_bits(), cb), "{tag}: trace forked");
+            }
+        }
+    }
+}
+
+/// Every node and shard observes a non-decreasing sequence of event times
+/// across the whole run, under both boundaries and a heavy-tailed latency
+/// distribution — the simulator's causality invariant.
+#[test]
+fn component_clocks_never_regress() {
+    let o = obj();
+    let costs = CostModel::default_host();
+    for boundary in [Boundary::Sync, Boundary::Async] {
+        let dist = DistConfig {
+            nodes: 4,
+            threads_per_node: 2,
+            boundary,
+            net: NetworkModel {
+                latency: LatencyDist::Exp { mean: 100_000.0 },
+                ..NetworkModel::lan()
+            },
+            record_trace: true,
+            ..Default::default()
+        };
+        let r = sim_dist_run(&o, &base_cfg(Storage::Sparse), &dist, &costs, f64::NEG_INFINITY);
+        assert!(!r.trace.is_empty(), "{boundary:?}: trace must be recorded");
+        let mut last = vec![0.0f64; 2 * dist.nodes];
+        for &(t, comp) in &r.trace {
+            assert!(comp < last.len(), "{boundary:?}: unknown component {comp}");
+            assert!(
+                t >= last[comp],
+                "{boundary:?}: component {comp} clock regressed: {t} < {}",
+                last[comp]
+            );
+            last[comp] = t;
+        }
+    }
+}
+
+/// Event-queue ordering is a pure function of the pushed keys: any fuzzed
+/// batch of (time, payload) pairs pops in (time, insertion-seq) order, and
+/// the identical push sequence replays to the identical pop sequence.
+#[test]
+fn event_queue_orders_any_load_deterministically() {
+    forall("event queue total order", 200, |g| {
+        let n = g.usize_in(1..120);
+        let times: Vec<f64> = (0..n).map(|_| g.f64_in(0.0..1e6)).collect();
+        let run = |times: &[f64]| {
+            let mut q: EventQueue<usize> = EventQueue::new();
+            for (i, &t) in times.iter().enumerate() {
+                q.push(t, i);
+            }
+            let mut out = Vec::with_capacity(n);
+            while let Some((t, i)) = q.pop() {
+                out.push((t, i));
+            }
+            out
+        };
+        let a = run(&times);
+        let b = run(&times);
+        assert_eq!(a.len(), n, "all events pop");
+        assert_eq!(a, b, "same pushes, same pops");
+        for w in a.windows(2) {
+            assert!(w[0].0 <= w[1].0, "time order violated: {:?}", w);
+            if w[0].0 == w[1].0 {
+                assert!(w[0].1 < w[1].1, "FIFO tie-break violated: {:?}", w);
+            }
+        }
+        true
+    });
+}
