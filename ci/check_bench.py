@@ -20,6 +20,11 @@ bench_micro` against the repo's performance contracts:
   bit-for-bit at m=1 with a zero-cost network, run async epoch
   boundaries at least as fast as sync under high RPC latency, and be
   bit-deterministic per seed (DESIGN.md §10).
+* serving — train-while-serving must hold its p99 latency SLO at nominal
+  load while continual AsySVRG trains, keep epochs/sec within the bound
+  the report states, train bit-identical with and without readers (both
+  consistency modes), shed deterministically at the admission cap, and
+  keep variance reduction alive across ingest rounds (DESIGN.md §11).
 
 Usage: check_bench.py [--results rust/results] [--only sparse,pool]
 
@@ -138,6 +143,48 @@ def check_distributed(rep, log):
         raise GateFailure("distributed bench reported overall FAIL")
 
 
+def check_serving(rep, log):
+    # thresholds live in the report so the bench and the gate can't drift
+    log(
+        f"serving latency: p50 {rep['p50_ms']:.3f}ms p99 {rep['p99_ms']:.3f}ms "
+        f"over {int(rep['served'])} served (SLO {rep['slo_ms']:.0f}ms, "
+        f"{int(rep['overlap_requests'])} due during training)"
+    )
+    if int(rep["served"]) <= 0:
+        raise GateFailure("serving run served zero requests")
+    if rep["p99_ms"] > rep["slo_ms"]:
+        raise GateFailure(f"p99 {rep['p99_ms']:.3f}ms exceeds the {rep['slo_ms']:.0f}ms SLO")
+    log(
+        f"serving throughput: {rep['quiet_epochs_per_sec']:.1f} quiet vs "
+        f"{rep['loaded_epochs_per_sec']:.1f} loaded epochs/s "
+        f"({rep['eps_ratio']:.2f}x, floor {rep['eps_ratio_min']:.2f}x)"
+    )
+    if rep["eps_ratio"] < rep["eps_ratio_min"]:
+        raise GateFailure(
+            f"training throughput degraded to {rep['eps_ratio']:.2f}x under load "
+            f"(floor {rep['eps_ratio_min']:.2f}x)"
+        )
+    if not (rep["parity_quiet"] == rep["parity_hotswap"] == rep["parity_live"]):
+        raise GateFailure(
+            f"readers changed the trained bits: quiet {rep['parity_quiet']} "
+            f"hotswap {rep['parity_hotswap']} live {rep['parity_live']}"
+        )
+    shed_expect = int(rep["overload_offered"]) - int(rep["overload_admitted"])
+    log(
+        f"serving overload: {int(rep['overload_offered'])} offered, "
+        f"{int(rep['overload_admitted'])} admitted, {int(rep['overload_shed'])} shed"
+    )
+    if int(rep["overload_shed"]) != shed_expect or shed_expect <= 0:
+        raise GateFailure(
+            f"admission control off: shed {int(rep['overload_shed'])} != "
+            f"offered-admitted {shed_expect}"
+        )
+    if not rep["vr_pass"]:
+        raise GateFailure("variance reduction did not survive ingest rounds")
+    if not rep["pass"]:
+        raise GateFailure("serving bench reported overall FAIL")
+
+
 # gate name -> (report filename, checker)
 GATES = {
     "sparse": ("BENCH_sparse_vs_dense.json", check_sparse_vs_dense),
@@ -145,6 +192,7 @@ GATES = {
     "contention": ("BENCH_contention.json", check_contention),
     "pool": ("BENCH_pool.json", check_pool),
     "distributed": ("BENCH_distributed.json", check_distributed),
+    "serving": ("BENCH_serving.json", check_serving),
 }
 
 

@@ -77,6 +77,25 @@ def passing_reports():
             "determinism_pass": True,
             "pass": True,
         },
+        "BENCH_serving.json": {
+            "slo_ms": 50.0,
+            "p50_ms": 0.4,
+            "p99_ms": 6.0,
+            "served": 600,
+            "overlap_requests": 420,
+            "quiet_epochs_per_sec": 80.0,
+            "loaded_epochs_per_sec": 52.0,
+            "eps_ratio": 0.65,
+            "eps_ratio_min": 0.25,
+            "parity_quiet": "a3f1c2d4e5b60789",
+            "parity_hotswap": "a3f1c2d4e5b60789",
+            "parity_live": "a3f1c2d4e5b60789",
+            "overload_offered": 512,
+            "overload_admitted": 64,
+            "overload_shed": 448,
+            "vr_pass": True,
+            "pass": True,
+        },
     }
 
 
@@ -114,6 +133,13 @@ def test_all_gates_pass_on_canned_reports(results_dir, capsys):
         ("BENCH_distributed.json", {"async_epochs_per_sec": 0.5}, "distributed"),
         ("BENCH_distributed.json", {"determinism_pass": False}, "distributed"),
         ("BENCH_distributed.json", {"pass": False}, "distributed"),
+        ("BENCH_serving.json", {"p99_ms": 80.0}, "serving"),
+        ("BENCH_serving.json", {"served": 0}, "serving"),
+        ("BENCH_serving.json", {"eps_ratio": 0.1}, "serving"),
+        ("BENCH_serving.json", {"parity_live": "deadbeefdeadbeef"}, "serving"),
+        ("BENCH_serving.json", {"overload_shed": 447}, "serving"),
+        ("BENCH_serving.json", {"vr_pass": False}, "serving"),
+        ("BENCH_serving.json", {"pass": False}, "serving"),
     ],
 )
 def test_threshold_violations_fail(results_dir, capsys, filename, mutate, expect):

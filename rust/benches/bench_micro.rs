@@ -20,6 +20,7 @@ use asysvrg::data::synthetic::SyntheticSpec;
 use asysvrg::linalg::{dense, AtomicF32Vec};
 use asysvrg::objective::Objective;
 use asysvrg::runtime::pool::WorkerPool;
+use asysvrg::serving::{run_train_and_serve, ConsistencyMode, ServingConfig};
 use asysvrg::simcore::{sim_run, simulate_inner, CostModel, SimTask};
 use asysvrg::simdist::{sim_dist_run, DistConfig, LatencyDist, NetworkModel};
 use asysvrg::util::json::Json;
@@ -634,6 +635,221 @@ fn main() {
         ("pass", Json::Bool(dist_pass)),
     ]);
     match report::write_json("BENCH_distributed", &dist_json) {
+        Ok(path) => println!("json -> {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+
+    // ------------------------------------------------------------------
+    // train-while-serving (DESIGN.md §11): four sub-experiments, all gated
+    // from the emitted JSON by ci/check_bench.py:
+    //  (a) latency — p99 of the open-loop serving load stays under the SLO
+    //      while continual AsySVRG (2 ingest rounds) trains;
+    //  (b) degradation — epochs/sec with the serving rig attached stays
+    //      within a generous factor of the training-only baseline (CI
+    //      runners have 2-4 cores; the bound is written into the JSON);
+    //  (c) parity — a p=1 training run is bit-identical with and without
+    //      readers, in both consistency modes (readers never write);
+    //  (d) overload — with no drain at all, the bounded queue admits
+    //      exactly `cap` and sheds the rest at the door (deterministic).
+    // ------------------------------------------------------------------
+    println!("\n== serving: train-while-serving at SLO (DESIGN.md §11) ==");
+    let slo_ms = 50.0;
+    let eps_ratio_min = 0.25;
+    let serve_base = Arc::new(SyntheticSpec::new("bench-serve", 4000, 20_000, 50, 42).generate());
+    let p = 2usize;
+    let train_cfg = RunConfig {
+        threads: p,
+        scheme: Scheme::Unlock,
+        eta: 0.2,
+        epochs: 4,
+        target_gap: 0.0, // throughput comparison needs exact epoch counts
+        storage: Storage::Sparse,
+        seed: 42,
+        ..Default::default()
+    };
+    let quiet_scfg = ServingConfig {
+        readers: 0,
+        requests: 0,
+        ingest_batches: 2,
+        ingest_batch_rows: 200,
+        slo_ms,
+        ..Default::default()
+    };
+    let loaded_scfg = ServingConfig {
+        readers: 2,
+        qps: 3_000.0,
+        overload: 1.0,
+        queue_cap: 256,
+        snapshot_every: 1,
+        mode: ConsistencyMode::HotSwap,
+        slo_ms,
+        req_zipf: 1.0,
+        requests: 600,
+        ingest_batches: 2,
+        ingest_batch_rows: 200,
+        seed: 42,
+    };
+    // warmup, then one measured run per side
+    run_train_and_serve(
+        serve_base.clone(),
+        &train_cfg,
+        SvrgOption::CurrentIterate,
+        &quiet_scfg,
+        f64::NEG_INFINITY,
+    );
+    let quiet = run_train_and_serve(
+        serve_base.clone(),
+        &train_cfg,
+        SvrgOption::CurrentIterate,
+        &quiet_scfg,
+        f64::NEG_INFINITY,
+    );
+    let loaded = run_train_and_serve(
+        serve_base.clone(),
+        &train_cfg,
+        SvrgOption::CurrentIterate,
+        &loaded_scfg,
+        f64::NEG_INFINITY,
+    );
+    let eps_ratio = if quiet.epochs_per_sec > 0.0 {
+        loaded.epochs_per_sec / quiet.epochs_per_sec
+    } else {
+        0.0
+    };
+    let slo_pass = loaded.served > 0 && loaded.p99_ms <= slo_ms;
+    let eps_pass = eps_ratio >= eps_ratio_min;
+    let vr_pass = loaded.vr_survived();
+    println!(
+        "latency: p50={:.3} ms p99={:.3} ms over {} served ({} overlapping training) -> SLO {slo_ms} ms {}",
+        loaded.p50_ms,
+        loaded.p99_ms,
+        loaded.served,
+        loaded.overlap_requests,
+        if slo_pass { "ok" } else { "FAIL" }
+    );
+    println!(
+        "throughput: {:.1} epochs/s quiet vs {:.1} loaded = {:.2}x (floor {eps_ratio_min}x) {}",
+        quiet.epochs_per_sec,
+        loaded.epochs_per_sec,
+        eps_ratio,
+        if eps_pass { "ok" } else { "FAIL" }
+    );
+    println!(
+        "continual: {} rounds, variance reduction {} (seqlock reads={} retries={} fallbacks={})",
+        loaded.rounds.len(),
+        if vr_pass { "survived" } else { "LOST" },
+        loaded.read_stats.reads,
+        loaded.read_stats.retries,
+        loaded.read_stats.lock_fallbacks
+    );
+
+    // (c) parity at p=1: the trained bits must not care about the readers
+    let par_base = Arc::new(SyntheticSpec::new("bench-serve-par", 400, 2_000, 20, 7).generate());
+    let par_cfg = RunConfig { threads: 1, epochs: 3, ..train_cfg.clone() };
+    let par_quiet_scfg = ServingConfig { readers: 0, requests: 0, ..loaded_scfg.clone() };
+    let par_run = |scfg: &ServingConfig| {
+        run_train_and_serve(
+            par_base.clone(),
+            &par_cfg,
+            SvrgOption::CurrentIterate,
+            scfg,
+            f64::NEG_INFINITY,
+        )
+    };
+    let par_quiet = par_run(&par_quiet_scfg);
+    let par_hot = par_run(&ServingConfig {
+        readers: 2,
+        requests: 300,
+        qps: 30_000.0,
+        mode: ConsistencyMode::HotSwap,
+        ..loaded_scfg.clone()
+    });
+    let par_live = par_run(&ServingConfig {
+        readers: 2,
+        requests: 300,
+        qps: 30_000.0,
+        mode: ConsistencyMode::Live,
+        ..loaded_scfg.clone()
+    });
+    let parity_pass =
+        par_quiet.fingerprint == par_hot.fingerprint && par_quiet.fingerprint == par_live.fingerprint;
+    println!(
+        "parity (p=1): quiet {:016x} vs hotswap {:016x} vs live {:016x} => {}",
+        par_quiet.fingerprint,
+        par_hot.fingerprint,
+        par_live.fingerprint,
+        if parity_pass { "bit-identical" } else { "MISMATCH" }
+    );
+
+    // (d) overload without drain: admit exactly cap, shed the rest
+    let over = run_train_and_serve(
+        par_base.clone(),
+        &par_cfg,
+        SvrgOption::CurrentIterate,
+        &ServingConfig {
+            readers: 0,
+            requests: 512,
+            queue_cap: 64,
+            qps: 1e6,
+            overload: 8.0,
+            ingest_batches: 0,
+            ..loaded_scfg.clone()
+        },
+        f64::NEG_INFINITY,
+    );
+    let shed_pass = over.admitted == 64 && over.shed == 512 - 64;
+    println!(
+        "overload (no drain): offered={} admitted={} shed={} => {}",
+        over.offered,
+        over.admitted,
+        over.shed,
+        if shed_pass { "ok" } else { "FAIL" }
+    );
+
+    let serving_pass = slo_pass && eps_pass && vr_pass && parity_pass && shed_pass;
+    println!(
+        "serving smoke: slo {} | throughput {} | vr {} | parity {} | shed {} => {}",
+        if slo_pass { "ok" } else { "FAIL" },
+        if eps_pass { "ok" } else { "FAIL" },
+        if vr_pass { "ok" } else { "FAIL" },
+        if parity_pass { "ok" } else { "FAIL" },
+        if shed_pass { "ok" } else { "FAIL" },
+        if serving_pass { "PASS" } else { "FAIL" },
+    );
+    let serving_json = Json::obj(vec![
+        ("bench", Json::Str("train_while_serving".into())),
+        ("n", Json::Num(serve_base.n() as f64)),
+        ("d", Json::Num(serve_base.dim as f64)),
+        ("train_threads", Json::Num(p as f64)),
+        ("readers", Json::Num(loaded_scfg.readers as f64)),
+        ("qps", Json::Num(loaded_scfg.qps)),
+        ("slo_ms", Json::Num(slo_ms)),
+        ("p50_ms", Json::Num(loaded.p50_ms)),
+        ("p99_ms", Json::Num(loaded.p99_ms)),
+        ("served", Json::Num(loaded.served as f64)),
+        ("overlap_requests", Json::Num(loaded.overlap_requests as f64)),
+        ("quiet_epochs_per_sec", Json::Num(quiet.epochs_per_sec)),
+        ("loaded_epochs_per_sec", Json::Num(loaded.epochs_per_sec)),
+        ("eps_ratio", Json::Num(eps_ratio)),
+        ("eps_ratio_min", Json::Num(eps_ratio_min)),
+        ("seqlock_reads", Json::Num(loaded.read_stats.reads as f64)),
+        ("seqlock_retries", Json::Num(loaded.read_stats.retries as f64)),
+        ("seqlock_lock_fallbacks", Json::Num(loaded.read_stats.lock_fallbacks as f64)),
+        ("ingest_rounds", Json::Num(loaded.rounds.len() as f64)),
+        ("parity_quiet", Json::Str(format!("{:016x}", par_quiet.fingerprint))),
+        ("parity_hotswap", Json::Str(format!("{:016x}", par_hot.fingerprint))),
+        ("parity_live", Json::Str(format!("{:016x}", par_live.fingerprint))),
+        ("overload_offered", Json::Num(over.offered as f64)),
+        ("overload_admitted", Json::Num(over.admitted as f64)),
+        ("overload_shed", Json::Num(over.shed as f64)),
+        ("slo_pass", Json::Bool(slo_pass)),
+        ("eps_pass", Json::Bool(eps_pass)),
+        ("vr_pass", Json::Bool(vr_pass)),
+        ("parity_pass", Json::Bool(parity_pass)),
+        ("shed_pass", Json::Bool(shed_pass)),
+        ("pass", Json::Bool(serving_pass)),
+    ]);
+    match report::write_json("BENCH_serving", &serving_json) {
         Ok(path) => println!("json -> {}", path.display()),
         Err(e) => eprintln!("could not write bench json: {e}"),
     }

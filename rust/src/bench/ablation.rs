@@ -462,6 +462,69 @@ pub fn sweep_distributed(
     pts
 }
 
+/// Serving-while-training sweep over snapshot cadence × reader count ×
+/// offered load (DESIGN.md §11), on real threads.
+///
+/// Column reinterpretation for this sweep (the table schema is shared
+/// with the simulator sweeps): `final_gap` is f(w_final) − f*,
+/// `sim_seconds` is the **p99 serving latency in seconds**, `max_delay`
+/// is the **shed request count**, and `diverged` flags an SLO violation
+/// (p99 above the 50 ms budget), not numeric divergence.
+pub fn sweep_serving(
+    obj: &Objective,
+    fstar: f64,
+    threads: usize,
+    epochs: usize,
+) -> Vec<AblationPoint> {
+    use crate::coordinator::SvrgOption;
+    use crate::serving::{run_train_and_serve, ConsistencyMode, ServingConfig};
+    let cfg = RunConfig {
+        threads,
+        scheme: Scheme::Unlock,
+        eta: 0.2,
+        epochs: epochs.clamp(2, 8),
+        target_gap: 0.0,
+        storage: Storage::Sparse,
+        lambda: obj.lam,
+        loss: obj.kind,
+        ..Default::default()
+    };
+    let slo_ms = 50.0;
+    let mut pts = Vec::new();
+    for cadence in [1usize, 4] {
+        for readers in [1usize, 4] {
+            for overload in [1.0f64, 8.0] {
+                let scfg = ServingConfig {
+                    readers,
+                    qps: 2_000.0,
+                    overload,
+                    queue_cap: if overload > 1.0 { 32 } else { 256 },
+                    snapshot_every: cadence,
+                    mode: ConsistencyMode::HotSwap,
+                    slo_ms,
+                    requests: 400,
+                    ..Default::default()
+                };
+                let rep = run_train_and_serve(
+                    obj.data.clone(),
+                    &cfg,
+                    SvrgOption::CurrentIterate,
+                    &scfg,
+                    fstar,
+                );
+                pts.push(AblationPoint {
+                    label: format!("cad{cadence}-r{readers}-x{overload}"),
+                    final_gap: rep.final_loss - fstar,
+                    sim_seconds: rep.p99_ms / 1e3,
+                    max_delay: rep.shed,
+                    diverged: !rep.slo_met(),
+                });
+            }
+        }
+    }
+    pts
+}
+
 /// Render a sweep as an aligned table.
 pub fn render(title: &str, points: &[AblationPoint]) -> String {
     let mut s = format!("Ablation: {title}\n");
@@ -655,6 +718,21 @@ mod tests {
         );
         // both latency distributions are present in the ablation
         assert!(pts.iter().any(|p| p.label.contains("exp:500")));
+    }
+
+    #[test]
+    fn serving_sweep_covers_the_grid_and_overload_sheds_more() {
+        let (o, fs) = setup();
+        let pts = sweep_serving(&o, fs, 2, 2);
+        assert_eq!(pts.len(), 8); // {1,4} cadence × {1,4} readers × {1,8} load
+        for p in &pts {
+            assert!(p.final_gap.is_finite(), "{}", p.label);
+            assert!(p.sim_seconds >= 0.0, "{}: negative p99", p.label);
+        }
+        // the grid axes all made it into the labels
+        for needle in ["cad1-", "cad4-", "-r1-", "-r4-", "-x1", "-x8"] {
+            assert!(pts.iter().any(|p| p.label.contains(needle)), "missing {needle}");
+        }
     }
 
     #[test]

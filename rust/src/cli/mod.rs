@@ -149,6 +149,20 @@ impl Matches {
         self.str(name).parse().map_err(|_| format!("--{name}: expected number, got '{}'", self.str(name)))
     }
 
+    /// Strictly positive finite f64 — for rates, factors, and budgets where
+    /// `-5`, `0`, `inf`, or `nan` would surface much later as a panic or a
+    /// silently degenerate run.
+    pub fn f64_pos(&self, name: &str) -> Result<f64, String> {
+        let v = self.f64(name)?;
+        if !v.is_finite() || v <= 0.0 {
+            return Err(format!(
+                "--{name}: expected a positive finite number, got '{}'",
+                self.str(name)
+            ));
+        }
+        Ok(v)
+    }
+
     /// Comma-separated usize list, e.g. `--threads 1,2,4,8,10`.
     pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, String> {
         self.str(name)
@@ -204,6 +218,17 @@ mod tests {
     fn value_missing_rejected() {
         let e = cmd().parse(&args(&["--eta"])).unwrap_err();
         assert!(e.contains("needs a value"));
+    }
+
+    #[test]
+    fn positive_finite_numbers() {
+        let c = Command::new("x", "y").opt("qps", "100", "rate");
+        for (val, ok) in
+            [("100", true), ("0.5", true), ("0", false), ("-5", false), ("inf", false), ("nan", false)]
+        {
+            let m = c.parse(&args(&["--qps", val])).unwrap();
+            assert_eq!(m.f64_pos("qps").is_ok(), ok, "--qps {val}");
+        }
     }
 
     #[test]

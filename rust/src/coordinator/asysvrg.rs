@@ -76,6 +76,47 @@ pub fn run_asysvrg_on(
     option: SvrgOption,
     fstar: f64,
 ) -> RunResult {
+    run_asysvrg_hooked(pool, obj, cfg, option, fstar, None, None, None)
+}
+
+/// What an epoch-end hook observes: the freshly committed outer iterate
+/// w_{t+1} plus enough bookkeeping to stamp a snapshot (DESIGN.md §11 —
+/// the serving front end publishes its hot-swap snapshots from here).
+pub struct EpochEnd<'a> {
+    /// Outer iteration t (0-based) that just finished.
+    pub epoch: usize,
+    /// The committed iterate w_{t+1}.
+    pub w: &'a [f32],
+    /// Full objective value at `w`.
+    pub loss: f64,
+    /// Inner updates applied so far across all epochs of this run.
+    pub total_updates: u64,
+}
+
+/// [`run_asysvrg_on`] plus the three extension points continual serving
+/// needs, all defaulting to the stock behavior:
+///
+/// * `w0` warm-starts the outer iterate (continual/online AsySVRG re-runs
+///   over a grown dataset keep the model learned so far; μ re-anchors on
+///   the first epoch pass regardless);
+/// * `shared_ext` substitutes a caller-owned [`SharedParams`] (same dim
+///   and scheme) for the run's private one — live-mode serving readers
+///   gather coordinates from it *during* inner phases. Its clock runs on
+///   monotonically across rounds, exactly as across epochs;
+/// * `on_epoch_end` fires on the coordinator thread after every epoch
+///   commit — between inner-loop phases, never concurrently with one — so
+///   a hook can publish `e.w` to readers without perturbing the training
+///   trajectory. With all `None` this IS `run_asysvrg_on`, bit for bit.
+pub fn run_asysvrg_hooked(
+    pool: &WorkerPool,
+    obj: &Objective,
+    cfg: &RunConfig,
+    option: SvrgOption,
+    fstar: f64,
+    w0: Option<&[f32]>,
+    shared_ext: Option<&SharedParams>,
+    on_epoch_end: Option<&dyn Fn(&EpochEnd<'_>)>,
+) -> RunResult {
     let d = obj.dim();
     let n = obj.n();
     let p = cfg.threads;
@@ -92,13 +133,28 @@ pub fn run_asysvrg_on(
     let telem = (cfg.storage == Storage::Sparse).then(|| ContentionStats::new(d));
 
     let mut w = vec![0.0f32; d];
+    if let Some(w0) = w0 {
+        assert_eq!(w0.len(), d, "warm-start w0 dimension mismatch");
+        w.copy_from_slice(w0);
+    }
     let mut result = RunResult::default();
     let mut passes = 0.0f64;
 
     // ---- persistent epoch state: allocated once, reset in place per epoch
     // (the shared clock runs monotonically across epochs; `store` rewrites
     // the iterate without touching it)
-    let shared = SharedParams::zeros(d, cfg.scheme);
+    let shared_own;
+    let shared = match shared_ext {
+        Some(s) => {
+            assert_eq!(s.dim(), d, "external SharedParams dimension mismatch");
+            assert_eq!(s.scheme(), cfg.scheme, "external SharedParams scheme mismatch");
+            s
+        }
+        None => {
+            shared_own = SharedParams::zeros(d, cfg.scheme);
+            &shared_own
+        }
+    };
     let mut ws = EpochWorkspace::new(p, d, n, cfg.storage);
     let mut eg = EpochGradient { mu: vec![0.0f32; d], residuals: vec![0.0f32; n] };
     // sparse path: lazy clocks + closed-form constants (+ Σû for Option 2)
@@ -140,7 +196,7 @@ pub fn run_asysvrg_on(
                 state.reset(&w, &eg.mu, obj.lam, cfg.eta, clock_before);
                 let state: &LazyState = state;
                 let tm = telem.as_ref();
-                let (shared, eg, delays) = (&shared, &eg, &delays);
+                let (shared, eg, delays) = (shared, &eg, &delays);
                 pool.run_phase(p, |a| {
                     let mut rng = Pcg32::for_thread(seed, a);
                     run_inner_loop_sparse_telemetry(
@@ -162,7 +218,7 @@ pub fn run_asysvrg_on(
             }
             (None, SvrgOption::CurrentIterate) => {
                 let slots = dense_slots.as_ref().expect("dense slots exist on the dense path");
-                let (shared, eg, w, delays) = (&shared, &eg, &w, &delays);
+                let (shared, eg, w, delays) = (shared, &eg, &w, &delays);
                 pool.run_phase(p, |a| {
                     let mut rng = Pcg32::for_thread(seed, a);
                     let mut slot = slots.write(a);
@@ -190,7 +246,7 @@ pub fn run_asysvrg_on(
                 let parts = split_mut(&mut avg, &ranges);
                 let bar = pool.barrier();
                 let total = (p * m_per_thread) as f32;
-                let (shared, eg, w, delays) = (&shared, &eg, &w, &delays);
+                let (shared, eg, w, delays) = (shared, &eg, &w, &delays);
                 pool.run_phase(p, |a| {
                     {
                         let mut slot = slots.write(a);
@@ -250,6 +306,14 @@ pub fn run_asysvrg_on(
             updates: result.total_updates,
         });
         result.epochs_run = t + 1;
+        if let Some(hook) = on_epoch_end {
+            hook(&EpochEnd {
+                epoch: t,
+                w: &w,
+                loss,
+                total_updates: result.total_updates,
+            });
+        }
         crate::log!(
             Debug,
             "asysvrg epoch {t}: f={loss:.6} gap={:.3e} updates={updates_this_epoch}",
@@ -506,6 +570,60 @@ mod tests {
         assert_eq!(c.epoch_collision_rates.len(), sparse.epochs_run);
         assert!(c.epoch_collision_rates.iter().all(|r| (0.0..=1.0).contains(r)));
         assert!(sparse.to_json().get("contention").is_some());
+    }
+
+    #[test]
+    fn hooked_defaults_are_bit_identical_and_the_hook_observes_each_commit() {
+        let obj = small_obj();
+        let cfg =
+            RunConfig { threads: 1, eta: 0.2, epochs: 3, target_gap: 0.0, ..Default::default() };
+        let pool = WorkerPool::new(1);
+        let base = run_asysvrg_on(&pool, &obj, &cfg, SvrgOption::CurrentIterate, f64::NEG_INFINITY);
+        let seen: std::cell::RefCell<Vec<(usize, Vec<f32>, f64)>> = Default::default();
+        let hook = |e: &EpochEnd<'_>| seen.borrow_mut().push((e.epoch, e.w.to_vec(), e.loss));
+        let w0 = vec![0.0f32; obj.dim()];
+        let hooked = run_asysvrg_hooked(
+            &pool,
+            &obj,
+            &cfg,
+            SvrgOption::CurrentIterate,
+            f64::NEG_INFINITY,
+            Some(&w0),
+            None,
+            Some(&hook),
+        );
+        // zero warm start + hook must not perturb the trajectory at all
+        assert_eq!(base.final_w, hooked.final_w);
+        let seen = seen.into_inner();
+        assert_eq!(seen.len(), 3, "hook fires once per epoch commit");
+        assert_eq!(seen.iter().map(|s| s.0).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(seen.last().unwrap().1, hooked.final_w, "last commit IS the final iterate");
+    }
+
+    #[test]
+    fn warm_start_resumes_from_the_given_iterate() {
+        let obj = small_obj();
+        let pool = WorkerPool::new(1);
+        let cfg =
+            RunConfig { threads: 1, eta: 0.2, epochs: 2, target_gap: 0.0, ..Default::default() };
+        let first = run_asysvrg_on(&pool, &obj, &cfg, SvrgOption::CurrentIterate, f64::NEG_INFINITY);
+        let resumed = run_asysvrg_hooked(
+            &pool,
+            &obj,
+            &cfg,
+            SvrgOption::CurrentIterate,
+            f64::NEG_INFINITY,
+            Some(&first.final_w),
+            None,
+            None,
+        );
+        // training continues downhill from where the first run stopped
+        assert!(
+            resumed.final_loss() <= obj.loss(&first.final_w) + 1e-9,
+            "warm-started run regressed: {} -> {}",
+            obj.loss(&first.final_w),
+            resumed.final_loss()
+        );
     }
 
     #[test]

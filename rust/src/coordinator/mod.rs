@@ -25,7 +25,7 @@ pub mod step;
 pub mod telemetry;
 pub mod worker;
 
-pub use asysvrg::{run_asysvrg, SvrgOption};
+pub use asysvrg::{run_asysvrg, run_asysvrg_hooked, run_asysvrg_on, EpochEnd, SvrgOption};
 pub use hogwild::run_hogwild;
 pub use monitor::{HistoryPoint, RunResult};
 pub use shared::SharedParams;

@@ -44,6 +44,14 @@
 //! from one printed `SCHED_REPLAY` line, and CI gates merges on the
 //! pinned-seed interleaving suite (`repro sched --gate`, DESIGN.md §9).
 //!
+//! The trained model is servable *while it trains* ([`serving`]): an
+//! epoch-end hook hot-swaps each committed iterate into a seqlock-backed
+//! [`serving::SnapshotStore`], prediction readers answer Zipf-skewed
+//! requests behind a bounded shedding [`serving::AdmissionQueue`] at a
+//! latency SLO, and streaming ingest grows the corpus between rounds —
+//! continual AsySVRG with μ re-anchored per round (DESIGN.md §11,
+//! `BENCH_serving.json`).
+//!
 //! Sparse runs additionally carry **sampled contention telemetry**
 //! ([`coordinator::telemetry`]): lock-free write sets on text-shaped data
 //! collide on the Zipfian head features, and the measured collision rates
@@ -81,6 +89,7 @@ pub mod optim;
 pub mod propcheck;
 pub mod runtime;
 pub mod sched;
+pub mod serving;
 pub mod simcore;
 pub mod simdist;
 pub mod theory;

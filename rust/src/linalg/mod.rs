@@ -9,4 +9,4 @@ pub mod versioned;
 
 pub use atomic_vec::AtomicF32Vec;
 pub use sparse::SparseRow;
-pub use versioned::SeqlockVec;
+pub use versioned::{SeqlockReadStats, SeqlockVec, MAX_READ_RETRIES};

@@ -7,18 +7,78 @@
 //! a reader retries whenever the version was odd or changed across its
 //! copy. We benchmark this as `Scheme::Seqlock` in the ablation — it sits
 //! between consistent (no torn reads, readers block) and inconsistent
-//! (torn reads allowed, nobody blocks).
+//! (torn reads allowed, nobody blocks) — and the serving front end
+//! (DESIGN.md §11) reads its hot-swapped model snapshots through it.
+//!
+//! # The memory-ordering protocol
+//!
+//! Version stores alone cannot order the *data* writes: a `Release` store
+//! of the odd version only orders writes that come **before** it, so the
+//! data writes that follow could be reordered ahead of the odd store and a
+//! reader could validate a torn snapshot against an even/even version pair.
+//! The correct pairing is fence-based on both sides:
+//!
+//! ```text
+//! writer                                reader
+//! ------                                ------
+//! w1: version.store(odd, Relaxed)       r1: v1 = version.load(Acquire)
+//! w2: fence(Release)                    r2: data loads        (Relaxed)
+//! w3: data writes       (Relaxed)       r3: fence(Acquire)
+//! w4: version.store(even, Release)      r4: v2 = version.load(Relaxed)
+//!                                           accept iff v1 == v2 && even
+//! ```
+//!
+//! Two synchronization edges make a validated read tear-free:
+//!
+//! * If any reader load in r2 observes a value stored in w3 (i.e. after the
+//!   writer's release fence w2), the r3 acquire fence pairs with w2 and
+//!   makes every write sequenced before w2 — in particular the odd store
+//!   w1 — visible to r4. Then `v2` is odd (or later) and validation fails.
+//!   Contrapositive: a validated read observed no in-flight write.
+//! * `v1` loading an even version with `Acquire` pairs with the w4
+//!   `Release` store of that version, so all of that writer's data writes
+//!   are visible to r2. A validated read therefore sees exactly the
+//!   snapshot published by write `v1/2`.
+//!
+//! Everything the writer closure stores — including side metadata captured
+//! by reference, as the serving snapshot store does with its epoch stamp —
+//! sits between w2 and w4 and is covered by the same argument.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{fence, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use super::atomic_vec::AtomicF32Vec;
 
+/// Failed read attempts before a reader gives up spinning and serializes
+/// behind `write_lock` instead (see [`SeqlockVec::read_with`]). Under
+/// sane writer cadences a read validates on the first attempt; the bound
+/// only matters when writers saturate the version counter (overload) —
+/// exactly when unbounded optimistic spinning would livelock the serving
+/// hot path.
+pub const MAX_READ_RETRIES: usize = 64;
+
+/// Cumulative reader-side telemetry (relaxed counters; exact totals once
+/// the reading threads are quiescent).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SeqlockReadStats {
+    /// Completed reads (optimistic or via fallback).
+    pub reads: u64,
+    /// Failed validation attempts summed over all reads.
+    pub retries: u64,
+    /// Reads that exhausted [`MAX_READ_RETRIES`] and took `write_lock`.
+    pub lock_fallbacks: u64,
+}
+
 pub struct SeqlockVec {
     version: AtomicU64,
     data: AtomicF32Vec,
-    /// Serializes writers (readers never take it).
+    /// Serializes writers. Readers take it only on the bounded-retry
+    /// fallback path, where optimistic reading has already lost the race
+    /// `MAX_READ_RETRIES` times.
     write_lock: Mutex<()>,
+    reads: AtomicU64,
+    retries: AtomicU64,
+    lock_fallbacks: AtomicU64,
 }
 
 impl SeqlockVec {
@@ -27,6 +87,20 @@ impl SeqlockVec {
             version: AtomicU64::new(0),
             data: AtomicF32Vec::from_slice(xs),
             write_lock: Mutex::new(()),
+            reads: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            lock_fallbacks: AtomicU64::new(0),
+        }
+    }
+
+    pub fn new(dim: usize) -> Self {
+        SeqlockVec {
+            version: AtomicU64::new(0),
+            data: AtomicF32Vec::new(dim),
+            write_lock: Mutex::new(()),
+            reads: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            lock_fallbacks: AtomicU64::new(0),
         }
     }
 
@@ -38,46 +112,95 @@ impl SeqlockVec {
         self.data.is_empty()
     }
 
-    /// Writer: apply `f` to the vector under the seqlock write protocol.
+    /// Writer: apply `f` to the vector under the seqlock write protocol
+    /// (steps w1–w4 of the module-level diagram). The odd store itself can
+    /// be `Relaxed`: the release fence after it is what orders it against
+    /// the data writes, and the writer mutex already serializes
+    /// writer–writer access.
     pub fn write_with<F: FnOnce(&AtomicF32Vec)>(&self, f: F) {
         let _g = self.write_lock.lock().unwrap();
-        // Acquire/Release pairing on the version makes the data writes
-        // visible before the even version is observed.
         let v = self.version.load(Ordering::Relaxed);
-        self.version.store(v + 1, Ordering::Release);
-        std::sync::atomic::fence(Ordering::Release);
-        f(&self.data);
-        self.version.store(v + 2, Ordering::Release);
+        self.version.store(v + 1, Ordering::Relaxed); // w1: odd = in progress
+        fence(Ordering::Release); // w2: nothing from f sinks above w1
+        f(&self.data); // w3
+        self.version.store(v + 2, Ordering::Release); // w4: publish
     }
 
-    /// Reader: retry loop until a tear-free snapshot lands in `out`.
-    /// Returns the number of retries (instrumentation for the ablation).
-    pub fn read_into(&self, out: &mut [f32]) -> usize {
-        let mut retries = 0;
-        loop {
-            let v1 = self.version.load(Ordering::Acquire);
+    /// Reader: run `body` under seqlock validation (steps r1–r4) until a
+    /// tear-free execution lands, retrying at most [`MAX_READ_RETRIES`]
+    /// times before serializing behind `write_lock`. Returns `body`'s
+    /// result from the accepted execution plus the number of failed
+    /// attempts. `body` may run many times and must be idempotent (write
+    /// into a caller buffer, accumulate into locals it resets — it must
+    /// not fold a partial, possibly torn, execution into prior state).
+    pub fn read_with<R, F: FnMut(&AtomicF32Vec) -> R>(&self, mut body: F) -> (R, usize) {
+        let mut failed = 0;
+        while failed < MAX_READ_RETRIES {
+            let v1 = self.version.load(Ordering::Acquire); // r1
             if v1 % 2 == 0 {
-                self.data.read_into(out);
-                std::sync::atomic::fence(Ordering::Acquire);
-                let v2 = self.version.load(Ordering::Acquire);
+                let r = body(&self.data); // r2
+                fence(Ordering::Acquire); // r3
+                let v2 = self.version.load(Ordering::Relaxed); // r4
                 if v1 == v2 {
-                    return retries;
+                    self.reads.fetch_add(1, Ordering::Relaxed);
+                    self.retries.fetch_add(failed as u64, Ordering::Relaxed);
+                    return (r, failed);
                 }
             }
-            retries += 1;
+            failed += 1;
             std::hint::spin_loop();
         }
+        // Fallback: writers are locked out, so the version is stable and
+        // even and `body` runs exactly once, tear-free. Lock acquisition
+        // synchronizes with the previous writer's release, which is
+        // sequenced after its w4 publish — the data is fully visible.
+        let _g = self.write_lock.lock().unwrap();
+        debug_assert_eq!(self.version.load(Ordering::Relaxed) % 2, 0);
+        let r = body(&self.data);
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        self.retries.fetch_add(failed as u64, Ordering::Relaxed);
+        self.lock_fallbacks.fetch_add(1, Ordering::Relaxed);
+        (r, failed)
+    }
+
+    /// Reader: copy a tear-free snapshot into `out`. Returns the number of
+    /// failed attempts (instrumentation for the ablation; equals
+    /// [`MAX_READ_RETRIES`] when the read went through the lock fallback).
+    pub fn read_into(&self, out: &mut [f32]) -> usize {
+        self.read_with(|d| d.read_into(out)).1
+    }
+
+    /// Reader: gather `out[k] = data[idx[k]]` tear-free — the serving hot
+    /// path, O(nnz of one request) instead of O(d). Returns failed
+    /// attempts, as [`read_into`](Self::read_into).
+    pub fn read_indexed(&self, idx: &[u32], out: &mut [f32]) -> usize {
+        self.read_with(|d| {
+            for (o, &j) in out.iter_mut().zip(idx) {
+                *o = d.get(j as usize);
+            }
+        })
+        .1
     }
 
     /// Current version (even ⇔ no writer in progress).
     pub fn version(&self) -> u64 {
         self.version.load(Ordering::Acquire)
     }
+
+    /// Cumulative reader telemetry (reads / retries / lock fallbacks).
+    pub fn read_stats(&self) -> SeqlockReadStats {
+        SeqlockReadStats {
+            reads: self.reads.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            lock_fallbacks: self.lock_fallbacks.load(Ordering::Relaxed),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::mpsc;
     use std::sync::Arc;
 
     #[test]
@@ -90,6 +213,17 @@ mod tests {
         v.read_into(&mut out);
         assert_eq!(out, vec![4.0, 5.0, 6.0]);
         assert_eq!(v.version(), 2);
+        let st = v.read_stats();
+        assert_eq!(st, SeqlockReadStats { reads: 2, retries: 0, lock_fallbacks: 0 });
+    }
+
+    #[test]
+    fn indexed_gather_roundtrip() {
+        let v = SeqlockVec::from_slice(&[10.0, 11.0, 12.0, 13.0]);
+        let idx = [3u32, 0, 2];
+        let mut out = [0.0f32; 3];
+        assert_eq!(v.read_indexed(&idx, &mut out), 0);
+        assert_eq!(out, [13.0, 10.0, 12.0]);
     }
 
     #[test]
@@ -97,7 +231,8 @@ mod tests {
         // Writer alternates between two patterns whose mixture is
         // detectable; readers must only ever observe pure patterns.
         let dim = 64;
-        let v = Arc::new(SeqlockVec::from_slice(&vec![0.0; dim]));
+        let zeros = vec![0.0; dim];
+        let v = Arc::new(SeqlockVec::from_slice(&zeros));
         let w = v.clone();
         let writer = std::thread::spawn(move || {
             for k in 0..2_000u32 {
@@ -141,5 +276,42 @@ mod tests {
         v.read_into(&mut out);
         assert_eq!(out[0], 4_000.0);
         assert_eq!(v.version(), 8_000);
+    }
+
+    #[test]
+    fn bounded_retry_falls_back_to_the_writer_lock() {
+        // Park a writer mid-update (version odd) and read concurrently:
+        // optimistic attempts must exhaust MAX_READ_RETRIES, then the
+        // reader serializes behind write_lock, blocks until the writer
+        // finishes, and returns the fully written snapshot.
+        let v = Arc::new(SeqlockVec::from_slice(&[0.0, 0.0]));
+        let (in_closure_tx, in_closure_rx) = mpsc::channel::<()>();
+        let (go_tx, go_rx) = mpsc::channel::<()>();
+        let w = v.clone();
+        let writer = std::thread::spawn(move || {
+            w.write_with(|d| {
+                in_closure_tx.send(()).unwrap();
+                go_rx.recv().unwrap();
+                d.write_from(&[7.0, 8.0]);
+            });
+        });
+        in_closure_rx.recv().unwrap();
+        let r = v.clone();
+        let reader = std::thread::spawn(move || {
+            let mut out = vec![0.0; 2];
+            let retries = r.read_into(&mut out);
+            (retries, out)
+        });
+        // Give the reader time to burn through its optimistic attempts and
+        // block on the lock, then release the writer.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        go_tx.send(()).unwrap();
+        writer.join().unwrap();
+        let (retries, out) = reader.join().unwrap();
+        assert_eq!(retries, MAX_READ_RETRIES);
+        assert_eq!(out, vec![7.0, 8.0]);
+        let st = v.read_stats();
+        assert_eq!(st.lock_fallbacks, 1);
+        assert_eq!(st.retries, MAX_READ_RETRIES as u64);
     }
 }

@@ -19,6 +19,10 @@
 //! * `distributed`       — discrete-event cluster simulation: m nodes ×
 //!   p threads against a sharded parameter server over a configurable
 //!   network model (DESIGN.md §10)
+//! * `serving`           — train-while-serving: prediction readers answer
+//!   an open-loop Zipf request stream from seqlock snapshots (or the live
+//!   iterate) while AsySVRG trains, with streaming ingest between rounds
+//!   (DESIGN.md §11)
 //! * `e2e`               — XLA-backed dense end-to-end training driver
 
 use asysvrg::bench::{self, report, BenchEnv};
@@ -60,6 +64,7 @@ fn top_usage() -> String {
      \x20 calibrate          measure cost model; --contention fits the sparse collision model\n\
      \x20 sched              deterministic interleaving schedules: CI race gate, fuzz, replay\n\
      \x20 distributed        simulate an m-node cluster with a sharded parameter server\n\
+     \x20 serving            train-while-serving: SLO'd prediction readers + streaming ingest\n\
      \x20 e2e                XLA-backed dense end-to-end training\n\n\
      `repro <subcommand> --help` for options."
         .to_string()
@@ -82,6 +87,7 @@ fn dispatch(args: &[String]) -> Result<(), String> {
         "calibrate" => cmd_calibrate(rest),
         "sched" => cmd_sched(rest),
         "distributed" => cmd_distributed(rest),
+        "serving" => cmd_serving(rest),
         "e2e" => cmd_e2e(rest),
         "--help" | "-h" | "help" => Err(top_usage()),
         other => Err(format!("unknown subcommand '{other}'\n\n{}", top_usage())),
@@ -336,7 +342,8 @@ fn cmd_ablation(args: &[String]) -> Result<(), String> {
         .opt(
             "which",
             "eta,m,read-model,cores,storage,epoch,contention,pool,schedule,distributed",
-            "comma list of sweeps: eta|m|read-model|cores|storage|epoch|contention|pool|schedule|distributed",
+            "comma list of sweeps: eta|m|read-model|cores|storage|epoch|contention|pool|schedule|distributed|serving \
+             (serving runs real threads and is off the default list; nightly invokes it explicitly)",
         );
     let m = cmd.parse(args)?;
     let ds = data::resolve(m.str("dataset"), m.f64("scale")?, m.u64("seed")?)?;
@@ -387,6 +394,11 @@ fn cmd_ablation(args: &[String]) -> Result<(), String> {
             "distributed" => (
                 "distributed cluster: p x m surface + boundary x latency",
                 ablation::sweep_distributed(&obj, fstar, threads, epochs),
+            ),
+            "serving" => (
+                "train-while-serving: snapshot cadence x readers x offered load \
+                 (columns: sim_secs = p99 latency s, max_tau = shed count, DIVERGED = SLO violated)",
+                ablation::sweep_serving(&obj, fstar, threads.min(4), epochs),
             ),
             o => return Err(format!("unknown sweep '{o}'")),
         };
@@ -612,13 +624,20 @@ fn cmd_distributed(args: &[String]) -> Result<(), String> {
         storage: env.storage,
         ..Default::default()
     };
+    // A bandwidth must be positive; `inf` is the documented "no
+    // serialization term" escape hatch, but nan/0/negative would corrupt
+    // transfer times instead of failing here.
+    let gbps = m.f64("gbps")?;
+    if gbps.is_nan() || gbps <= 0.0 {
+        return Err(format!("--gbps must be > 0 (or 'inf'), got '{}'", m.str("gbps")));
+    }
     let dist = DistConfig {
         nodes,
         threads_per_node: threads,
         boundary: Boundary::parse(m.str("boundary"))?,
         net: NetworkModel {
             latency: LatencyDist::parse(m.str("latency"))?,
-            gbps: m.f64("gbps")?,
+            gbps,
             shared: !m.flag("dedicated"),
             bytes_per_coord: 8.0,
         },
@@ -673,6 +692,122 @@ fn cmd_distributed(args: &[String]) -> Result<(), String> {
             }
         }
     }
+    Ok(())
+}
+
+fn cmd_serving(args: &[String]) -> Result<(), String> {
+    use asysvrg::serving::{run_train_and_serve, ConsistencyMode, ServingConfig};
+    let cmd = env_opts(
+        Command::new("serving", "train-while-serving at SLO (DESIGN.md §11)")
+            .opt(
+                "dataset",
+                "rcv1",
+                "rcv1|real-sim|news20|zipf:<s>[:<n>:<d>:<nnz>]|<libsvm path>",
+            )
+            .opt("scheme", "unlock", "consistent|inconsistent|unlock|seqlock|atomic-cas")
+            .opt("threads", "2", "trainer worker threads")
+            .opt("readers", "2", "prediction reader threads (0 = training-only baseline)")
+            .opt("qps", "2000", "nominal request rate (requests/second)")
+            .opt("overload", "1", "rate multiplier (8 = the overload experiment)")
+            .opt("queue-cap", "256", "admission queue capacity (shed beyond)")
+            .opt("cadence", "1", "publish a snapshot every k-th epoch commit")
+            .opt("mode", "hotswap", "hotswap (seqlock snapshots) | live (relaxed reads mid-epoch)")
+            .opt("slo-ms", "50", "p99 latency SLO in milliseconds")
+            .opt("req-zipf", "1.0", "Zipf exponent of request popularity (0 = uniform)")
+            .opt("requests", "2000", "total requests in the open-loop plan")
+            .opt("ingest-batches", "0", "streaming-ingest rounds appended after round 0")
+            .opt("ingest-rows", "200", "rows per ingest batch"),
+    );
+    let m = cmd.parse(args)?;
+    let env = bench_env(&m)?;
+    let threads = m.usize("threads")?;
+    if threads == 0 {
+        return Err("--threads must be >= 1".into());
+    }
+    let ds = data::resolve(m.str("dataset"), env.scale, env.seed)?;
+    println!("{}", ds.describe());
+    let cfg = RunConfig {
+        dataset: m.str("dataset").into(),
+        scheme: Scheme::parse(m.str("scheme"))?,
+        threads,
+        eta: env.eta_svrg,
+        epochs: env.max_epochs,
+        target_gap: env.target_gap,
+        seed: env.seed,
+        scale: env.scale,
+        storage: env.storage,
+        ..Default::default()
+    };
+    let scfg = ServingConfig {
+        readers: m.usize("readers")?,
+        // rates and the SLO must be positive finite numbers, rejected at
+        // parse time (the satellite contract shared with --gbps)
+        qps: m.f64_pos("qps")?,
+        overload: m.f64_pos("overload")?,
+        queue_cap: m.usize("queue-cap")?,
+        snapshot_every: m.usize("cadence")?.max(1),
+        mode: ConsistencyMode::parse(m.str("mode"))?,
+        slo_ms: m.f64_pos("slo-ms")?,
+        req_zipf: m.f64("req-zipf")?,
+        requests: m.usize("requests")?,
+        ingest_batches: m.usize("ingest-batches")?,
+        ingest_batch_rows: m.usize("ingest-rows")?,
+        seed: env.seed,
+    };
+    println!(
+        "serving: {} reader(s) at {}x{} req/s ({}), queue cap {}, snapshot every {} epoch(s), SLO {} ms",
+        scfg.readers, scfg.qps, scfg.overload, scfg.mode.name(), scfg.queue_cap,
+        scfg.snapshot_every, scfg.slo_ms
+    );
+    let rep = run_train_and_serve(
+        ds,
+        &cfg,
+        coordinator::SvrgOption::CurrentIterate,
+        &scfg,
+        f64::NEG_INFINITY,
+    );
+    println!(
+        "admission: offered={} admitted={} shed={} served={} (overlap-with-training {})",
+        rep.offered, rep.admitted, rep.shed, rep.served, rep.overlap_requests
+    );
+    println!(
+        "latency:   p50={:.3} ms p99={:.3} ms max={:.3} ms -> SLO {} ms {}",
+        rep.p50_ms,
+        rep.p99_ms,
+        rep.max_ms,
+        rep.slo_ms,
+        if rep.slo_met() { "MET" } else { "VIOLATED" }
+    );
+    println!(
+        "training:  {} epoch(s) over {} round(s) in {:.3}s = {:.2} epochs/s; final loss {:.6}",
+        rep.epochs_total,
+        rep.rounds.len(),
+        rep.train_seconds,
+        rep.epochs_per_sec,
+        rep.final_loss
+    );
+    println!(
+        "snapshots: {} publishes; seqlock reads={} retries={} lock_fallbacks={}",
+        rep.publishes, rep.read_stats.reads, rep.read_stats.retries, rep.read_stats.lock_fallbacks
+    );
+    for r in &rep.rounds {
+        println!(
+            "  round {}: n={} start_loss={:.6} end_loss={:.6} ({})",
+            r.round,
+            r.n_examples,
+            r.start_loss,
+            r.losses.last().copied().unwrap_or(f64::NAN),
+            if r.improved() { "improved" } else { "REGRESSED" }
+        );
+    }
+    if !rep.rounds.is_empty() {
+        println!(
+            "continual: variance reduction {} ingest",
+            if rep.vr_survived() { "SURVIVED" } else { "did NOT survive" }
+        );
+    }
+    let path = report::write_json("serving", &rep.to_json()).map_err(|e| e.to_string())?;
+    println!("json -> {}", path.display());
     Ok(())
 }
 

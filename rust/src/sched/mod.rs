@@ -26,9 +26,11 @@
 
 pub mod policy;
 pub mod replay;
+pub mod seqlock;
 
 pub use policy::Policy;
 pub use replay::{parse_replay_line, replay, replay_from_line, replay_line};
+pub use seqlock::{hunt_tears, scripted_single_tear, TearHunt, WriterProtocol};
 
 use policy::{Chooser, WorkerView};
 

@@ -1,0 +1,148 @@
+//! Streaming ingest between epochs — online/continual AsySVRG
+//! (DESIGN.md §11).
+//!
+//! `Dataset` is immutable CSR on purpose (lock-free readers index it
+//! concurrently), so growth is a rebuild, not a mutation: between training
+//! rounds the coordinator assembles base + batch into a fresh dataset and
+//! a fresh `Objective`, then warm-starts the next round from the current
+//! iterate. The full-gradient pass at the top of every epoch re-anchors μ
+//! over the *grown* dataset automatically — that is the variance-reduction
+//! question the ROADMAP poses: does the anchor survive the shift? (The
+//! serving report answers it empirically with per-round loss traces.)
+//!
+//! Rebuild cost is O(total nnz) per round — the same order as the epoch
+//! pass itself, so ingest never dominates an epoch that follows it.
+
+use crate::data::dataset::Dataset;
+use crate::data::synthetic::SyntheticSpec;
+
+/// Deterministic stream of example batches drawn from the same planted
+/// separator family as the base corpus: batch r is a pure function of
+/// `(seed, r)`, so a continual run replays bit-identically.
+pub struct IngestStream {
+    dim: usize,
+    avg_nnz: usize,
+    batch_rows: usize,
+    seed: u64,
+    next_round: u64,
+}
+
+impl IngestStream {
+    pub fn new(dim: usize, avg_nnz: usize, batch_rows: usize, seed: u64) -> Self {
+        assert!(batch_rows > 0, "ingest batch must be >= 1 row");
+        let avg_nnz = avg_nnz.clamp(1, dim);
+        IngestStream { dim, avg_nnz, batch_rows, seed, next_round: 0 }
+    }
+
+    /// Matches the stream's example distribution to a base corpus.
+    pub fn matching(base: &Dataset, batch_rows: usize, seed: u64) -> Self {
+        let avg = (base.nnz() / base.n().max(1)).max(1);
+        IngestStream::new(base.dim, avg, batch_rows, seed)
+    }
+
+    /// Generate the next batch (round counter advances).
+    pub fn next_batch(&mut self) -> Dataset {
+        let r = self.next_round;
+        self.next_round += 1;
+        SyntheticSpec::new(
+            &format!("ingest-{r}"),
+            self.batch_rows,
+            self.dim,
+            self.avg_nnz,
+            // distinct stream per round, deterministic in (seed, round)
+            self.seed ^ (0x1A6E57 + r).wrapping_mul(0x9E3779B97F4A7C15),
+        )
+        .generate()
+    }
+
+    pub fn rounds_emitted(&self) -> u64 {
+        self.next_round
+    }
+}
+
+/// Append `batch` to `base`: same dim, rows and labels concatenated in
+/// order (base first). Errors on dimension mismatch.
+pub fn grow(base: &Dataset, batch: &Dataset) -> Result<Dataset, String> {
+    if base.dim != batch.dim {
+        return Err(format!("ingest dim mismatch: base {} vs batch {}", base.dim, batch.dim));
+    }
+    let total = base.n() + batch.n();
+    let mut rows = Vec::with_capacity(total);
+    let mut labels = Vec::with_capacity(total);
+    for src in [base, batch] {
+        for i in 0..src.n() {
+            let r = src.row(i);
+            rows.push((r.indices.to_vec(), r.values.to_vec()));
+            labels.push(src.label(i));
+        }
+    }
+    Dataset::from_rows(rows, labels, base.dim, &format!("{}+{}", base.name, batch.name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> Dataset {
+        SyntheticSpec::new("base", 100, 50, 8, 3).generate()
+    }
+
+    #[test]
+    fn grow_preserves_base_and_appends_batch() {
+        let b = base();
+        let mut stream = IngestStream::matching(&b, 25, 7);
+        let batch = stream.next_batch();
+        let grown = grow(&b, &batch).unwrap();
+        // growth invariants: n adds up, dim fixed, nnz adds up
+        assert_eq!(grown.n(), b.n() + batch.n());
+        assert_eq!(grown.dim, b.dim);
+        assert_eq!(grown.nnz(), b.nnz() + batch.nnz());
+        // base rows are a strict prefix, bit for bit
+        for i in 0..b.n() {
+            let (old, new) = (b.row(i), grown.row(i));
+            assert_eq!(old.indices, new.indices, "row {i} indices shifted");
+            assert_eq!(old.values, new.values, "row {i} values shifted");
+            assert_eq!(b.label(i), grown.label(i));
+        }
+        // batch rows follow
+        for i in 0..batch.n() {
+            let (src, new) = (batch.row(i), grown.row(b.n() + i));
+            assert_eq!(src.indices, new.indices);
+            assert_eq!(src.values, new.values);
+        }
+    }
+
+    #[test]
+    fn stream_is_deterministic_and_rounds_differ() {
+        let b = base();
+        let mut s1 = IngestStream::matching(&b, 10, 42);
+        let mut s2 = IngestStream::matching(&b, 10, 42);
+        let (a1, a2) = (s1.next_batch(), s2.next_batch());
+        assert_eq!(a1.indices, a2.indices);
+        assert_eq!(a1.values, a2.values);
+        assert_eq!(a1.labels, a2.labels);
+        let b1 = s1.next_batch();
+        assert_ne!(a1.values, b1.values, "successive rounds must differ");
+        assert_eq!(s1.rounds_emitted(), 2);
+    }
+
+    #[test]
+    fn grow_rejects_dim_mismatch() {
+        let b = base();
+        let other = SyntheticSpec::new("x", 5, 49, 4, 1).generate();
+        assert!(grow(&b, &other).is_err());
+    }
+
+    #[test]
+    fn grown_dataset_still_validates_as_an_objective_substrate() {
+        // from_rows re-validates: strictly increasing indices < dim, ±1
+        // labels — i.e. the grown dataset is as trainable as the base.
+        let b = base();
+        let mut stream = IngestStream::matching(&b, 30, 9);
+        let mut cur = b;
+        for _ in 0..3 {
+            cur = grow(&cur, &stream.next_batch()).unwrap();
+        }
+        assert_eq!(cur.n(), 100 + 3 * 30);
+    }
+}

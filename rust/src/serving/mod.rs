@@ -1,0 +1,574 @@
+//! Train-while-serving: a prediction front end over consistent snapshots
+//! of a model that AsySVRG is still training (DESIGN.md §11).
+//!
+//! The ROADMAP's online-serving question is an end-to-end one: can the
+//! repaired [`SeqlockVec`](crate::linalg::SeqlockVec) protocol actually
+//! carry a serving workload — tear-free reads at a latency SLO — while the
+//! persistent [`WorkerPool`](crate::runtime::WorkerPool) trains at full
+//! tilt, and does continual ingest between rounds keep variance reduction
+//! alive? This module is the answer machine:
+//!
+//! * **Trainer** — one thread running [`run_asysvrg_hooked`] round after
+//!   round: round 0 on the base corpus, then [`ingest::grow`]n corpora,
+//!   warm-started from the previous final iterate. μ re-anchors on the
+//!   first epoch pass of every round, so the per-round loss traces in the
+//!   report say directly whether variance reduction survives the shift.
+//!   The epoch-end hook publishes the committed iterate into a
+//!   [`SnapshotStore`] on the configured cadence.
+//! * **Producer** — an open-loop request generator: request k is *due* at
+//!   `k / (qps·overload)` regardless of how the system keeps up (no
+//!   coordinated omission), drawn Zipf-skewed over the base rows, and
+//!   offered to a bounded [`AdmissionQueue`] that sheds at the door.
+//! * **Readers** — `readers` threads popping requests and computing the
+//!   prediction margin xᵀw against either the seqlock snapshot
+//!   ([`ConsistencyMode::HotSwap`]) or the live training iterate
+//!   ([`ConsistencyMode::Live`] — freshest possible, tear-tolerant by
+//!   choice). Latency is completion time minus the request's *scheduled*
+//!   due time, so queue wait and overload are in the number.
+//!
+//! The whole rig is readers-don't-write by construction, which is what the
+//! parity gate in `BENCH_serving.json` checks: a p = 1 training run must be
+//! bit-identical with and without the serving load attached.
+
+pub mod ingest;
+pub mod queue;
+pub mod snapshot;
+
+pub use ingest::{grow, IngestStream};
+pub use queue::AdmissionQueue;
+pub use snapshot::{SnapMeta, SnapshotStore};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::{run_asysvrg_hooked, EpochEnd, SharedParams, SvrgOption};
+use crate::data::dataset::Dataset;
+use crate::linalg::SeqlockReadStats;
+use crate::objective::Objective;
+use crate::runtime::pool::WorkerPool;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use crate::util::stats::percentile;
+use crate::util::Stopwatch;
+use crate::config::RunConfig;
+
+/// Which parameter view answers predictions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConsistencyMode {
+    /// Epoch-boundary snapshots through the repaired seqlock: every read
+    /// is tear-free and stamped; freshness = last published epoch.
+    HotSwap,
+    /// Relaxed gathers straight from the training iterate (`SharedParams`)
+    /// mid-epoch: freshest view, tears tolerated — the §5.2 "unlock"
+    /// wager applied to serving.
+    Live,
+}
+
+impl ConsistencyMode {
+    pub fn parse(s: &str) -> Result<ConsistencyMode, String> {
+        match s {
+            "hotswap" | "snapshot" => Ok(ConsistencyMode::HotSwap),
+            "live" => Ok(ConsistencyMode::Live),
+            _ => Err(format!("unknown consistency mode '{s}' (hotswap|live)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConsistencyMode::HotSwap => "hotswap",
+            ConsistencyMode::Live => "live",
+        }
+    }
+
+    pub fn all() -> [ConsistencyMode; 2] {
+        [ConsistencyMode::HotSwap, ConsistencyMode::Live]
+    }
+}
+
+/// Serving-side knobs; training knobs stay in [`RunConfig`].
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    /// Prediction reader threads (0 = training-only baseline).
+    pub readers: usize,
+    /// Nominal request rate (requests/second).
+    pub qps: f64,
+    /// Rate multiplier: 1.0 = at nominal, 8.0 = overload experiment.
+    pub overload: f64,
+    /// Admission queue capacity (shed beyond this).
+    pub queue_cap: usize,
+    /// Publish a snapshot every k-th epoch commit (1 = every epoch).
+    pub snapshot_every: usize,
+    pub mode: ConsistencyMode,
+    /// Latency SLO the report's `slo_met` verdict is judged against.
+    pub slo_ms: f64,
+    /// Zipf exponent of request popularity over base rows (0 = uniform).
+    pub req_zipf: f64,
+    /// Total requests in the open-loop plan (0 = no serving load).
+    pub requests: usize,
+    /// Ingest rounds appended after round 0 (0 = plain one-shot training).
+    pub ingest_batches: usize,
+    /// Rows per ingest batch.
+    pub ingest_batch_rows: usize,
+    pub seed: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            readers: 2,
+            qps: 2_000.0,
+            overload: 1.0,
+            queue_cap: 256,
+            snapshot_every: 1,
+            mode: ConsistencyMode::HotSwap,
+            slo_ms: 50.0,
+            req_zipf: 1.0,
+            requests: 2_000,
+            ingest_batches: 0,
+            ingest_batch_rows: 0,
+            seed: 42,
+        }
+    }
+}
+
+/// Deterministic Zipf(s) request plan over `n_rows` rows: row ranked r
+/// (0-based, identity ranking) has weight 1/(r+1)^s. s = 0 is uniform.
+pub fn zipf_plan(n_rows: usize, s: f64, count: usize, seed: u64) -> Vec<u32> {
+    assert!(n_rows > 0, "request plan needs a non-empty corpus");
+    assert!(s >= 0.0 && s.is_finite(), "zipf exponent must be finite and >= 0");
+    let mut cum = Vec::with_capacity(n_rows);
+    let mut total = 0.0f64;
+    for r in 0..n_rows {
+        total += 1.0 / ((r + 1) as f64).powf(s);
+        cum.push(total);
+    }
+    let mut rng = Pcg32::new(seed, 0x217);
+    (0..count)
+        .map(|_| {
+            let u = rng.uniform() * total;
+            // first rank with cum > u
+            cum.partition_point(|&c| c <= u).min(n_rows - 1) as u32
+        })
+        .collect()
+}
+
+/// One admitted prediction request.
+#[derive(Clone, Copy, Debug)]
+struct Request {
+    row: u32,
+    /// Open-loop scheduled arrival, seconds since serving start.
+    due_s: f64,
+}
+
+/// Loss trajectory of one continual-training round.
+#[derive(Clone, Debug)]
+pub struct RoundTrace {
+    pub round: usize,
+    /// Corpus size the round trained over.
+    pub n_examples: usize,
+    /// Loss at the round's warm-start iterate, on the grown corpus —
+    /// i.e. the starting line μ re-anchors from.
+    pub start_loss: f64,
+    /// Per-epoch losses (same corpus).
+    pub losses: Vec<f64>,
+}
+
+impl RoundTrace {
+    /// Did this round make progress from its warm start?
+    pub fn improved(&self) -> bool {
+        match self.losses.last() {
+            Some(&last) => last <= self.start_loss + 1e-9,
+            None => false,
+        }
+    }
+}
+
+/// Everything the serving experiment measured.
+#[derive(Clone, Debug)]
+pub struct ServingReport {
+    pub mode: ConsistencyMode,
+    pub readers: usize,
+    pub qps: f64,
+    pub overload: f64,
+    pub slo_ms: f64,
+    // admission
+    pub offered: u64,
+    pub admitted: u64,
+    pub shed: u64,
+    pub served: u64,
+    /// Requests whose scheduled due time fell inside the training window —
+    /// the "while training" fraction of the latency sample.
+    pub overlap_requests: u64,
+    // latency (ms, vs scheduled due time)
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    // training throughput
+    pub train_seconds: f64,
+    pub epochs_total: usize,
+    pub epochs_per_sec: f64,
+    // snapshot / seqlock telemetry
+    pub publishes: u64,
+    pub read_stats: SeqlockReadStats,
+    // continual learning
+    pub rounds: Vec<RoundTrace>,
+    pub final_loss: f64,
+    /// FNV-1a over the final iterate's bit pattern — the parity gate
+    /// compares this across with/without-load runs.
+    pub fingerprint: u64,
+}
+
+impl ServingReport {
+    pub fn slo_met(&self) -> bool {
+        self.p99_ms <= self.slo_ms
+    }
+
+    /// Variance reduction survived continual ingest: every round improved
+    /// on its warm start, and the last round ended below where the first
+    /// began.
+    pub fn vr_survived(&self) -> bool {
+        let per_round = self.rounds.iter().all(|r| r.improved());
+        let end_to_end = match (self.rounds.first(), self.rounds.last()) {
+            (Some(first), Some(last)) => {
+                last.losses.last().copied().unwrap_or(f64::INFINITY) <= first.start_loss + 1e-9
+            }
+            _ => false,
+        };
+        per_round && end_to_end
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::Str(self.mode.name().into())),
+            ("readers", Json::Num(self.readers as f64)),
+            ("qps", Json::Num(self.qps)),
+            ("overload", Json::Num(self.overload)),
+            ("slo_ms", Json::Num(self.slo_ms)),
+            ("offered", Json::Num(self.offered as f64)),
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("served", Json::Num(self.served as f64)),
+            ("overlap_requests", Json::Num(self.overlap_requests as f64)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("max_ms", Json::Num(self.max_ms)),
+            ("slo_met", Json::Bool(self.slo_met())),
+            ("train_seconds", Json::Num(self.train_seconds)),
+            ("epochs_total", Json::Num(self.epochs_total as f64)),
+            ("epochs_per_sec", Json::Num(self.epochs_per_sec)),
+            ("publishes", Json::Num(self.publishes as f64)),
+            ("seqlock_reads", Json::Num(self.read_stats.reads as f64)),
+            ("seqlock_retries", Json::Num(self.read_stats.retries as f64)),
+            ("seqlock_lock_fallbacks", Json::Num(self.read_stats.lock_fallbacks as f64)),
+            (
+                "rounds",
+                Json::Arr(
+                    self.rounds
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("round", Json::Num(r.round as f64)),
+                                ("n_examples", Json::Num(r.n_examples as f64)),
+                                ("start_loss", Json::Num(r.start_loss)),
+                                (
+                                    "losses",
+                                    Json::Arr(r.losses.iter().map(|&l| Json::Num(l)).collect()),
+                                ),
+                                ("improved", Json::Bool(r.improved())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("vr_survived", Json::Bool(self.vr_survived())),
+            ("final_loss", Json::Num(self.final_loss)),
+            // hex string: Json::Num is an f64 and would round a u64
+            ("fingerprint", Json::Str(format!("{:016x}", self.fingerprint))),
+        ])
+    }
+}
+
+/// FNV-1a over the exact bit pattern — bit-identity, not approximate
+/// equality, is what the parity gate asserts.
+pub fn fingerprint(w: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &x in w {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Run the full train-while-serve experiment: trainer + open-loop producer
+/// + reader threads, all scoped to this call. Training knobs come from
+/// `cfg` (threads, eta, epochs per round, scheme, storage, λ, loss);
+/// serving knobs from `scfg`. Returns once training has finished **and**
+/// the request plan has drained.
+pub fn run_train_and_serve(
+    base: Arc<Dataset>,
+    cfg: &RunConfig,
+    option: SvrgOption,
+    scfg: &ServingConfig,
+    fstar: f64,
+) -> ServingReport {
+    assert!(scfg.snapshot_every >= 1, "snapshot cadence must be >= 1");
+    assert!(scfg.readers == 0 || scfg.requests == 0 || scfg.qps * scfg.overload > 0.0);
+    let dim = base.dim;
+    let store = SnapshotStore::new(dim);
+    let shared = SharedParams::zeros(dim, cfg.scheme);
+    let queue: AdmissionQueue<Request> = AdmissionQueue::new(scfg.queue_cap);
+    let plan = zipf_plan(base.n(), scfg.req_zipf, scfg.requests, scfg.seed ^ 0x5EAF);
+    let rate = (scfg.qps * scfg.overload).max(1e-9);
+    let sw = Stopwatch::start();
+    let train_done = AtomicBool::new(false);
+
+    let mut trainer_out: Option<(Vec<RoundTrace>, usize, f64, Vec<f32>, f64)> = None;
+    let mut reader_lat: Vec<Vec<f64>> = Vec::new();
+
+    std::thread::scope(|s| {
+        // ---- trainer: continual AsySVRG rounds, snapshots via the hook
+        let trainer = s.spawn(|| {
+            let pool = WorkerPool::new(cfg.threads);
+            let mut stream =
+                IngestStream::matching(&base, scfg.ingest_batch_rows.max(1), scfg.seed ^ 0x16E);
+            let mut cur: Arc<Dataset> = base.clone();
+            let mut w_prev: Option<Vec<f32>> = None;
+            let mut rounds = Vec::new();
+            let mut epochs_total = 0usize;
+            let mut updates_total = 0u64;
+            for round in 0..=scfg.ingest_batches {
+                if round > 0 {
+                    let batch = stream.next_batch();
+                    cur = Arc::new(grow(&cur, &batch).expect("ingest grow failed"));
+                }
+                let obj = Objective::new(cur.clone(), cfg.lambda, cfg.loss);
+                let start_loss = match &w_prev {
+                    Some(w) => obj.loss(w),
+                    None => {
+                        let zeros = vec![0.0f32; dim];
+                        obj.loss(&zeros)
+                    }
+                };
+                let (epoch_base, updates_base) = (epochs_total as u64, updates_total);
+                let hook = |e: &EpochEnd<'_>| {
+                    if (e.epoch + 1) % scfg.snapshot_every == 0 {
+                        store.publish(
+                            e.w,
+                            epoch_base + e.epoch as u64 + 1,
+                            updates_base + e.total_updates,
+                        );
+                    }
+                };
+                let res = run_asysvrg_hooked(
+                    &pool,
+                    &obj,
+                    cfg,
+                    option,
+                    fstar,
+                    w_prev.as_deref(),
+                    Some(&shared),
+                    Some(&hook),
+                );
+                epochs_total += res.epochs_run;
+                updates_total += res.total_updates;
+                rounds.push(RoundTrace {
+                    round,
+                    n_examples: cur.n(),
+                    start_loss,
+                    losses: res.history.iter().map(|h| h.loss).collect(),
+                });
+                w_prev = Some(res.final_w);
+            }
+            let w_final = w_prev.expect("at least round 0 ran");
+            // the served model always ends fresh, whatever the cadence
+            store.publish(&w_final, epochs_total as u64, updates_total);
+            let train_seconds = sw.seconds();
+            train_done.store(true, Ordering::Release);
+            let obj = Objective::new(cur, cfg.lambda, cfg.loss);
+            (rounds, epochs_total, obj.loss(&w_final), w_final, train_seconds)
+        });
+
+        // ---- open-loop producer: request k is due at k/rate, late or not
+        s.spawn(|| {
+            for (k, &row) in plan.iter().enumerate() {
+                let due = k as f64 / rate;
+                loop {
+                    let ahead = due - sw.seconds();
+                    if ahead <= 0.0 {
+                        break;
+                    }
+                    std::thread::sleep(std::time::Duration::from_secs_f64(ahead.min(0.002)));
+                }
+                queue.offer(Request { row, due_s: due });
+            }
+            queue.close();
+        });
+
+        // ---- prediction readers
+        let readers: Vec<_> = (0..scfg.readers)
+            .map(|_| {
+                let (base, store, shared, queue, sw) = (&base, &store, &shared, &queue, &sw);
+                s.spawn(move || {
+                    let mut lat = Vec::new();
+                    while let Some(req) = queue.pop() {
+                        let row = base.row(req.row as usize);
+                        let m = match scfg.mode {
+                            ConsistencyMode::HotSwap => store.margin(row).0,
+                            ConsistencyMode::Live => {
+                                let d = shared.data();
+                                let mut s = 0.0f32;
+                                for (k, &j) in row.indices.iter().enumerate() {
+                                    s += row.values[k] * d.get(j as usize);
+                                }
+                                s
+                            }
+                        };
+                        std::hint::black_box(m);
+                        lat.push((sw.seconds() - req.due_s) * 1e3);
+                    }
+                    lat
+                })
+            })
+            .collect();
+
+        trainer_out = Some(trainer.join().expect("trainer thread panicked"));
+        reader_lat =
+            readers.into_iter().map(|h| h.join().expect("reader thread panicked")).collect();
+    });
+
+    let (rounds, epochs_total, final_loss, w_final, train_seconds) =
+        trainer_out.expect("trainer joined");
+    let lat: Vec<f64> = reader_lat.into_iter().flatten().collect();
+    let overlap_requests =
+        (0..plan.len()).filter(|&k| k as f64 / rate <= train_seconds).count() as u64;
+    ServingReport {
+        mode: scfg.mode,
+        readers: scfg.readers,
+        qps: scfg.qps,
+        overload: scfg.overload,
+        slo_ms: scfg.slo_ms,
+        offered: queue.offered(),
+        admitted: queue.admitted(),
+        shed: queue.shed(),
+        served: lat.len() as u64,
+        overlap_requests,
+        p50_ms: percentile(&lat, 50.0),
+        p99_ms: percentile(&lat, 99.0),
+        max_ms: lat.iter().cloned().fold(0.0, f64::max),
+        train_seconds,
+        epochs_total,
+        epochs_per_sec: if train_seconds > 0.0 { epochs_total as f64 / train_seconds } else { 0.0 },
+        publishes: store.stamp().publish,
+        read_stats: store.read_stats(),
+        rounds,
+        final_loss,
+        fingerprint: fingerprint(&w_final),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+
+    fn tiny() -> Arc<Dataset> {
+        Arc::new(SyntheticSpec::new("serve-tiny", 120, 24, 6, 11).generate())
+    }
+
+    fn tiny_cfg(epochs: usize) -> RunConfig {
+        RunConfig {
+            threads: 1,
+            eta: 0.2,
+            epochs,
+            target_gap: 0.0, // never early-stop: epoch counts stay exact
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn zipf_plan_is_deterministic_skewed_and_in_range() {
+        let a = zipf_plan(50, 1.2, 4_000, 9);
+        let b = zipf_plan(50, 1.2, 4_000, 9);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&r| (r as usize) < 50));
+        let head = a.iter().filter(|&&r| r == 0).count();
+        let tail = a.iter().filter(|&&r| r == 49).count();
+        assert!(head > 10 * tail.max(1), "zipf skew missing: head={head} tail={tail}");
+        // uniform at s = 0: the head loses its monopoly
+        let u = zipf_plan(50, 0.0, 4_000, 9);
+        let head_u = u.iter().filter(|&&r| r == 0).count();
+        assert!(head_u < head / 2, "s=0 should flatten the plan");
+    }
+
+    #[test]
+    fn readers_zero_with_requests_sheds_deterministically() {
+        // nobody pops: the queue fills to cap, everything else sheds at
+        // the door — the admission-control contract, with no timing in it
+        let scfg = ServingConfig {
+            readers: 0,
+            requests: 300,
+            queue_cap: 16,
+            qps: 1e6,
+            ..Default::default()
+        };
+        let rep = run_train_and_serve(
+            tiny(),
+            &tiny_cfg(1),
+            SvrgOption::CurrentIterate,
+            &scfg,
+            f64::NEG_INFINITY,
+        );
+        assert_eq!(rep.offered, 300);
+        assert_eq!(rep.admitted, 16);
+        assert_eq!(rep.shed, 300 - 16);
+        assert_eq!(rep.served, 0);
+        assert_eq!(rep.epochs_total, 1);
+        assert!(rep.publishes >= 1);
+    }
+
+    #[test]
+    fn continual_rounds_grow_and_report_roundtrips_through_json() {
+        let scfg = ServingConfig {
+            readers: 1,
+            requests: 50,
+            qps: 50_000.0,
+            ingest_batches: 2,
+            ingest_batch_rows: 30,
+            ..Default::default()
+        };
+        let rep = run_train_and_serve(
+            tiny(),
+            &tiny_cfg(2),
+            SvrgOption::CurrentIterate,
+            &scfg,
+            f64::NEG_INFINITY,
+        );
+        assert_eq!(rep.rounds.len(), 3);
+        assert_eq!(
+            rep.rounds.iter().map(|r| r.n_examples).collect::<Vec<_>>(),
+            vec![120, 150, 180]
+        );
+        assert_eq!(rep.epochs_total, 6);
+        assert_eq!(rep.served, 50, "plan fully drains once the queue closes");
+        let j = rep.to_json();
+        assert_eq!(j.get("mode").and_then(|m| m.as_str()), Some("hotswap"));
+        assert_eq!(j.get("rounds").and_then(|r| r.as_arr()).map(|r| r.len()), Some(3));
+        assert_eq!(
+            j.get("fingerprint").and_then(|f| f.as_str()).map(|s| s.len()),
+            Some(16),
+            "fingerprint serializes as a 16-hex-digit string"
+        );
+    }
+
+    #[test]
+    fn fingerprint_is_bit_sensitive() {
+        let w = vec![1.0f32, -2.5, 3.25];
+        let mut w2 = w.clone();
+        assert_eq!(fingerprint(&w), fingerprint(&w2));
+        w2[1] = f32::from_bits(w2[1].to_bits() ^ 1);
+        assert_ne!(fingerprint(&w), fingerprint(&w2));
+        assert_ne!(fingerprint(&[0.0]), fingerprint(&[-0.0]), "±0.0 differ bitwise");
+    }
+}

@@ -1,0 +1,142 @@
+//! Bounded admission queue for the serving front end (DESIGN.md §11).
+//!
+//! Overload policy is *shed at the door*: an arrival finding the queue at
+//! capacity is dropped and counted, so admitted requests keep a bounded
+//! queue-wait and the reported p99 stays meaningful while the drop rate —
+//! not the latency of everything — absorbs the overload. The alternative
+//! (an unbounded queue) converts overload into unbounded latency for
+//! every request: the collapse mode the ROADMAP's serving item names.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+/// MPMC bounded queue: `offer` never blocks (it sheds), `pop` blocks until
+/// an item arrives or the queue is closed and drained.
+pub struct AdmissionQueue<T> {
+    inner: Mutex<Inner<T>>,
+    ready: Condvar,
+    cap: usize,
+    offered: AtomicU64,
+    admitted: AtomicU64,
+    shed: AtomicU64,
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "admission queue capacity must be >= 1");
+        AdmissionQueue {
+            inner: Mutex::new(Inner { q: VecDeque::with_capacity(cap), closed: false }),
+            ready: Condvar::new(),
+            cap,
+            offered: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        }
+    }
+
+    /// Non-blocking admit-or-shed. Returns whether the item was admitted.
+    /// Offers after `close` are counted as shed (the door is shut).
+    pub fn offer(&self, item: T) -> bool {
+        self.offered.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.q.len() >= self.cap {
+            drop(g);
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        g.q.push_back(item);
+        drop(g);
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        self.ready.notify_one();
+        true
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.ready.wait(g).unwrap();
+        }
+    }
+
+    /// Shut the door: queued items still drain, new offers shed, blocked
+    /// poppers wake.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    pub fn offered(&self) -> u64 {
+        self.offered.load(Ordering::Relaxed)
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn sheds_when_full_and_counts_everything() {
+        let q = AdmissionQueue::new(2);
+        assert!(q.offer(1));
+        assert!(q.offer(2));
+        assert!(!q.offer(3), "third offer must shed at cap 2");
+        assert_eq!((q.offered(), q.admitted(), q.shed()), (3, 2, 1));
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.offer(4), "pop frees a slot");
+        q.close();
+        assert!(!q.offer(5), "offers after close shed");
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(4));
+        assert_eq!(q.pop(), None, "closed + drained");
+    }
+
+    #[test]
+    fn close_wakes_blocked_poppers() {
+        let q = Arc::new(AdmissionQueue::<u32>::new(4));
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || q.pop())
+            })
+            .collect();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.offer(9);
+        q.close();
+        let got: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(got.iter().filter(|x| x.is_some()).count(), 1);
+        assert_eq!(got.iter().filter(|x| x.is_none()).count(), 2);
+    }
+
+    #[test]
+    fn fifo_order_single_consumer() {
+        let q = AdmissionQueue::new(16);
+        for i in 0..10 {
+            assert!(q.offer(i));
+        }
+        q.close();
+        let drained: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(drained, (0..10).collect::<Vec<_>>());
+    }
+}

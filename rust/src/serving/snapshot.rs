@@ -1,0 +1,191 @@
+//! Hot-swap snapshot store: the double-buffered bridge between the
+//! training loop and prediction readers (DESIGN.md §11).
+//!
+//! The trainer owns buffer A — the epoch iterate assembled by
+//! `SharedParams::snapshot_into_pool` at the epoch boundary. `publish`
+//! copies it into buffer B — a [`SeqlockVec`] — under the repaired seqlock
+//! write protocol, stamping the epoch/update metadata *inside* the write
+//! window so a validated read returns data and stamp from the same
+//! publish (the fence pairing in `linalg::versioned` covers every store
+//! the writer closure makes). Readers never block the trainer; the
+//! trainer never blocks readers beyond a validation retry, bounded by the
+//! seqlock's lock fallback.
+//!
+//! Freshness is monotone per reader: versions are read from one atomic,
+//! so a later validated read can never observe an older publish than an
+//! earlier one — the hot-swap can only move forward.
+
+use crate::linalg::sparse::SparseRow;
+use crate::linalg::versioned::{SeqlockReadStats, SeqlockVec};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Metadata stamped with each publish and returned with each read.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SnapMeta {
+    /// Publish sequence number (0 = the initial model, before training).
+    pub publish: u64,
+    /// Global training epoch the snapshot was committed at.
+    pub epoch: u64,
+    /// Total inner updates folded into the snapshot.
+    pub updates: u64,
+}
+
+pub struct SnapshotStore {
+    vec: SeqlockVec,
+    // Stamped inside the seqlock write window; read inside the validated
+    // read window — consistent with the data by the protocol argument.
+    publish: AtomicU64,
+    epoch: AtomicU64,
+    updates: AtomicU64,
+}
+
+impl SnapshotStore {
+    /// Starts at the all-zeros model, publish 0 — readers can answer
+    /// (with the trivial model) before the first epoch commits.
+    pub fn new(dim: usize) -> Self {
+        SnapshotStore {
+            vec: SeqlockVec::new(dim),
+            publish: AtomicU64::new(0),
+            epoch: AtomicU64::new(0),
+            updates: AtomicU64::new(0),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.vec.len()
+    }
+
+    /// Hot-swap in a new model. Called from the trainer's epoch-end hook;
+    /// writers are serialized by the seqlock's internal write lock.
+    pub fn publish(&self, w: &[f32], epoch: u64, updates: u64) {
+        assert_eq!(w.len(), self.vec.len(), "snapshot dimension mismatch");
+        self.vec.write_with(|d| {
+            d.write_from(w);
+            let p = self.publish.load(Ordering::Relaxed);
+            self.publish.store(p + 1, Ordering::Relaxed);
+            self.epoch.store(epoch, Ordering::Relaxed);
+            self.updates.store(updates, Ordering::Relaxed);
+        });
+    }
+
+    #[inline]
+    fn meta_relaxed(&self) -> SnapMeta {
+        SnapMeta {
+            publish: self.publish.load(Ordering::Relaxed),
+            epoch: self.epoch.load(Ordering::Relaxed),
+            updates: self.updates.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Prediction margin xᵀw against a consistent snapshot — O(nnz of the
+    /// request), the serving hot path. Returns the margin, the stamp of
+    /// the snapshot that answered, and the seqlock retry count.
+    pub fn margin(&self, row: SparseRow<'_>) -> (f32, SnapMeta, usize) {
+        let ((m, meta), retries) = self.vec.read_with(|d| {
+            let mut s = 0.0f32;
+            for (k, &j) in row.indices.iter().enumerate() {
+                s += row.values[k] * d.get(j as usize);
+            }
+            (s, self.meta_relaxed())
+        });
+        (m, meta, retries)
+    }
+
+    /// Full consistent snapshot copy (tests, model export). Returns the
+    /// stamp and retry count.
+    pub fn read_full(&self, out: &mut [f32]) -> (SnapMeta, usize) {
+        let (meta, retries) = self.vec.read_with(|d| {
+            d.read_into(out);
+            self.meta_relaxed()
+        });
+        (meta, retries)
+    }
+
+    /// Latest stamp without touching the data (monitoring only — not
+    /// consistent with any particular read).
+    pub fn stamp(&self) -> SnapMeta {
+        self.meta_relaxed()
+    }
+
+    /// Reader-side seqlock telemetry: reads / retries / lock fallbacks.
+    pub fn read_stats(&self) -> SeqlockReadStats {
+        self.vec.read_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn publish_then_read_roundtrip() {
+        let s = SnapshotStore::new(4);
+        let mut out = vec![9.0f32; 4];
+        let (meta, _) = s.read_full(&mut out);
+        assert_eq!(out, vec![0.0; 4]);
+        assert_eq!(meta, SnapMeta::default());
+        s.publish(&[1.0, 2.0, 3.0, 4.0], 5, 1000);
+        let (meta, _) = s.read_full(&mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(meta, SnapMeta { publish: 1, epoch: 5, updates: 1000 });
+    }
+
+    #[test]
+    fn margin_gathers_sparse_coordinates() {
+        let s = SnapshotStore::new(6);
+        s.publish(&[1.0, 0.0, 0.0, 0.5, 0.0, 4.0], 1, 10);
+        let row = SparseRow { indices: &[0, 3, 5], values: &[1.0, 2.0, -1.0] };
+        let (m, meta, _) = s.margin(row);
+        assert_eq!(m, 1.0 + 1.0 - 4.0);
+        assert_eq!(meta.publish, 1);
+    }
+
+    #[test]
+    fn concurrent_reads_observe_monotone_freshness() {
+        // One publisher hot-swapping 500 snapshots; readers assert that
+        // (a) data and stamp always agree (cell pattern == publish id) and
+        // (b) per-reader observed publish ids never go backward.
+        let dim = 32;
+        let s = Arc::new(SnapshotStore::new(dim));
+        let pubber = {
+            let s = s.clone();
+            std::thread::spawn(move || {
+                for k in 1..=500u64 {
+                    let w = vec![k as f32; dim];
+                    s.publish(&w, k, k * 10);
+                }
+            })
+        };
+        let readers: Vec<_> = (0..3)
+            .map(|_| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    let mut out = vec![0.0f32; dim];
+                    let mut last = 0u64;
+                    for _ in 0..2_000 {
+                        let (meta, _) = s.read_full(&mut out);
+                        assert!(
+                            out.iter().all(|&x| x == meta.publish as f32),
+                            "stamp/data mismatch: publish {} data {:?}",
+                            meta.publish,
+                            &out[..4]
+                        );
+                        assert!(meta.publish >= last, "freshness went backward");
+                        assert_eq!(meta.epoch * 10, meta.updates);
+                        last = meta.publish;
+                    }
+                    last
+                })
+            })
+            .collect();
+        pubber.join().unwrap();
+        for r in readers {
+            r.join().unwrap();
+        }
+        let mut out = vec![0.0f32; dim];
+        let (meta, _) = s.read_full(&mut out);
+        assert_eq!(meta.publish, 500);
+        assert_eq!(out, vec![500.0; dim]);
+    }
+}

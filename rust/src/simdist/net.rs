@@ -53,8 +53,21 @@ impl LatencyDist {
     pub fn parse(s: &str) -> Result<LatencyDist, String> {
         let us = 1_000.0; // µs → ns
         let parts: Vec<&str> = s.split(':').collect();
+        // Reject bad magnitudes here, with the offending spec in the
+        // message — not later, as an event-queue retrograde/non-finite
+        // push panic deep inside the simulator. A latency is a duration:
+        // finite and non-negative, no exceptions.
         let num = |x: &str| -> Result<f64, String> {
-            x.parse::<f64>().map_err(|_| format!("bad latency number '{x}' in '{s}'"))
+            let v = x
+                .parse::<f64>()
+                .map_err(|_| format!("bad latency number '{x}' in '{s}'"))?;
+            if !v.is_finite() {
+                return Err(format!("latency must be finite, got '{x}' in '{s}'"));
+            }
+            if v < 0.0 {
+                return Err(format!("latency must be >= 0 µs, got '{x}' in '{s}'"));
+            }
+            Ok(v)
         };
         match parts.as_slice() {
             ["zero"] => Ok(LatencyDist::Zero),
@@ -172,6 +185,28 @@ mod tests {
         assert!(LatencyDist::parse("uniform:80:20").is_err());
         assert!(LatencyDist::parse("gaussian:5").is_err());
         assert!(LatencyDist::parse("fixed:abc").is_err());
+        // Durations must be finite and non-negative *at parse time* —
+        // previously these parsed fine and only blew up later as an
+        // event-queue retrograde/non-finite push panic.
+        for bad in [
+            "fixed:-5",
+            "fixed:inf",
+            "fixed:nan",
+            "exp:inf",
+            "exp:-1",
+            "exp:nan",
+            "uniform:-10:50",
+            "uniform:10:inf",
+            "uniform:nan:50",
+        ] {
+            let err = LatencyDist::parse(bad).unwrap_err();
+            assert!(
+                err.contains(bad) || err.contains("latency"),
+                "unhelpful error for '{bad}': {err}"
+            );
+        }
+        // zero is a legal duration
+        assert_eq!(LatencyDist::parse("fixed:0").unwrap(), LatencyDist::Fixed(0.0));
     }
 
     #[test]

@@ -27,8 +27,9 @@ use asysvrg::data::synthetic::SyntheticSpec;
 use asysvrg::objective::Objective;
 use asysvrg::propcheck::{forall_res, Gen};
 use asysvrg::sched::{
-    self, parse_replay_line, replay_from_line, replay_line, run_phase_timed_on, run_schedule_on,
-    run_virtual, Policy, SchedAlgo, SchedConfig,
+    self, hunt_tears, parse_replay_line, replay_from_line, replay_line, run_phase_timed_on,
+    run_schedule_on, run_virtual, scripted_single_tear, Policy, SchedAlgo, SchedConfig,
+    WriterProtocol,
 };
 use std::sync::Arc;
 
@@ -190,6 +191,33 @@ fn prop_schedules_drain_deterministically_across_the_grid() {
         }
         Ok(())
     });
+}
+
+/// The §11 seqlock regression, hunted with the §9 scheduler: the repaired
+/// write protocol never validates a torn snapshot under ANY policy × seed,
+/// while the pre-fix missing-fence writer is caught deterministically —
+/// by the round-robin hunt (tear guaranteed by construction: the drift
+/// window exceeds two full reader attempts) and by the minimal scripted
+/// interleaving from the bug report. Same (policy, seed) twice gives the
+/// same counts bit for bit, so this regression test cannot flake.
+#[test]
+fn seqlock_tear_hunt_convicts_only_the_unfenced_writer() {
+    for policy in Policy::all() {
+        for seed in [11u64, 71, 2024] {
+            let h = hunt_tears(policy, seed, WriterProtocol::Fenced, 30, 3);
+            assert_eq!(h.torn_reads, 0, "{} seed {seed}: fenced writer tore", policy.name());
+            assert_eq!(h.rounds, 30, "{} seed {seed}: hunt stopped early", policy.name());
+            assert!(h.validated_reads > 0, "{} seed {seed}: hunt made no reads", policy.name());
+            let again = hunt_tears(policy, seed, WriterProtocol::MissingFence, 30, 3);
+            let twice = hunt_tears(policy, seed, WriterProtocol::MissingFence, 30, 3);
+            assert_eq!(again.torn_reads, twice.torn_reads, "{}", policy.name());
+            assert_eq!(again.steps, twice.steps, "{}", policy.name());
+        }
+    }
+    let rr = hunt_tears(Policy::RoundRobin, 7, WriterProtocol::MissingFence, 30, 1);
+    assert!(rr.torn_reads > 0, "round-robin must catch the drift window: {rr:?}");
+    assert_eq!(scripted_single_tear(WriterProtocol::MissingFence), (1, 1));
+    assert_eq!(scripted_single_tear(WriterProtocol::Fenced), (0, 0));
 }
 
 /// Theorem 1 at measured staleness: the gate constants are feasible at the

@@ -1,0 +1,207 @@
+//! Train-while-serving integration tests (DESIGN.md §11).
+//!
+//! The serving subsystem is three thread roles around one repaired
+//! seqlock: a trainer hot-swapping epoch snapshots into a
+//! [`SnapshotStore`], an open-loop request producer, and prediction
+//! readers answering from consistent snapshots. These tests pin the
+//! cross-module contract from outside the crate:
+//!
+//! * **Parity** — at one worker the trainer is deterministic, so the
+//!   trained bits must be identical with zero readers, hot-swap readers,
+//!   and live (relaxed-gather) readers. Readers may never perturb
+//!   training.
+//! * **Freshness** — per reader, validated snapshot stamps are monotone
+//!   and always agree with the data they arrived with.
+//! * **Ingest** — growth invariants (n adds up, dim fixed, base rows a
+//!   bit-identical prefix) and the continual-learning verdict: every
+//!   round improves on its warm start and variance reduction survives
+//!   the μ re-anchor on the grown corpus.
+//! * **Admission** — with no readers draining, the bounded queue sheds
+//!   exactly `offered - capacity`, deterministically.
+
+use asysvrg::config::RunConfig;
+use asysvrg::coordinator::SvrgOption;
+use asysvrg::data::dataset::Dataset;
+use asysvrg::data::synthetic::SyntheticSpec;
+use asysvrg::serving::{
+    grow, run_train_and_serve, ConsistencyMode, IngestStream, ServingConfig, SnapshotStore,
+};
+use std::sync::Arc;
+
+fn base() -> Arc<Dataset> {
+    Arc::new(SyntheticSpec::new("serve-int", 160, 32, 6, 13).generate())
+}
+
+/// One deterministic trainer: p = 1, fixed eta/epochs, no early stop.
+fn cfg_p1(epochs: usize) -> RunConfig {
+    RunConfig { threads: 1, eta: 0.2, epochs, target_gap: 0.0, ..Default::default() }
+}
+
+/// Serving load must be invisible to the trajectory: quiet, hot-swap, and
+/// live runs of the same seed land on bit-identical final iterates.
+#[test]
+fn readers_never_change_the_trained_bits_at_one_worker() {
+    let ds = base();
+    let run = |readers: usize, requests: usize, mode: ConsistencyMode| {
+        let scfg = ServingConfig {
+            readers,
+            requests,
+            qps: 50_000.0,
+            mode,
+            ingest_batches: 1,
+            ingest_batch_rows: 40,
+            seed: 9,
+            ..Default::default()
+        };
+        let cfg = cfg_p1(3);
+        run_train_and_serve(ds.clone(), &cfg, SvrgOption::CurrentIterate, &scfg, f64::NEG_INFINITY)
+    };
+    let quiet = run(0, 0, ConsistencyMode::HotSwap);
+    let hot = run(2, 250, ConsistencyMode::HotSwap);
+    let live = run(2, 250, ConsistencyMode::Live);
+    assert_eq!(quiet.fingerprint, hot.fingerprint, "hot-swap readers perturbed training");
+    assert_eq!(quiet.fingerprint, live.fingerprint, "live readers perturbed training");
+    assert_eq!(quiet.final_loss.to_bits(), hot.final_loss.to_bits());
+    assert!(hot.served > 0 && live.served > 0, "loaded runs must actually serve");
+    assert_eq!(quiet.served, 0);
+}
+
+/// With no readers draining the queue, admission control is exact: the
+/// first `queue_cap` requests are admitted, everything past that is shed.
+#[test]
+fn admission_sheds_exactly_past_capacity() {
+    let scfg = ServingConfig {
+        readers: 0,
+        requests: 200,
+        queue_cap: 32,
+        qps: 1e6,
+        overload: 8.0,
+        ingest_batches: 0,
+        ..Default::default()
+    };
+    let cfg = cfg_p1(2);
+    let rep = run_train_and_serve(base(), &cfg, SvrgOption::CurrentIterate, &scfg, f64::NEG_INFINITY);
+    assert_eq!(rep.offered, 200);
+    assert_eq!(rep.admitted, 32);
+    assert_eq!(rep.shed, 168);
+    assert_eq!(rep.served, 0);
+    assert_eq!(rep.offered, rep.admitted + rep.shed);
+}
+
+/// Continual AsySVRG over a growing corpus: rounds train over strictly
+/// more examples, every round improves on its warm start (μ re-anchored
+/// over the grown data), and the end-to-end trajectory still descends —
+/// variance reduction survives ingest.
+#[test]
+fn continual_ingest_grows_the_corpus_and_keeps_variance_reduction_alive() {
+    let scfg = ServingConfig {
+        readers: 1,
+        requests: 80,
+        qps: 20_000.0,
+        ingest_batches: 2,
+        ingest_batch_rows: 50,
+        ..Default::default()
+    };
+    let cfg = cfg_p1(3);
+    let rep = run_train_and_serve(base(), &cfg, SvrgOption::CurrentIterate, &scfg, f64::NEG_INFINITY);
+    assert_eq!(rep.rounds.len(), 3, "1 base round + 2 ingest rounds");
+    let ns: Vec<usize> = rep.rounds.iter().map(|r| r.n_examples).collect();
+    assert_eq!(ns, vec![160, 210, 260], "corpus must grow by exactly the batch size");
+    for r in &rep.rounds {
+        assert_eq!(r.losses.len(), 3, "round {} ran a short round", r.round);
+        assert!(r.improved(), "round {} regressed from its warm start", r.round);
+    }
+    assert!(rep.vr_survived(), "variance reduction did not survive the ingest rounds");
+    assert_eq!(rep.epochs_total, 9);
+}
+
+/// The latency/admission/snapshot numbers the report carries must be
+/// internally consistent: readers drain every admitted request, the
+/// percentile ladder is ordered, cadence-1 publishes at least one
+/// snapshot per epoch, and every served request completed a seqlock read.
+#[test]
+fn loaded_run_accounting_is_coherent() {
+    let scfg = ServingConfig {
+        readers: 2,
+        requests: 300,
+        qps: 30_000.0,
+        snapshot_every: 1,
+        ingest_batches: 1,
+        ingest_batch_rows: 40,
+        ..Default::default()
+    };
+    let cfg = cfg_p1(2);
+    let rep = run_train_and_serve(base(), &cfg, SvrgOption::CurrentIterate, &scfg, f64::NEG_INFINITY);
+    assert_eq!(rep.offered, 300);
+    assert_eq!(rep.admitted + rep.shed, rep.offered);
+    assert_eq!(rep.served, rep.admitted, "readers must drain every admitted request");
+    assert!(rep.served > 0);
+    assert!(rep.p50_ms >= 0.0 && rep.p50_ms <= rep.p99_ms && rep.p99_ms <= rep.max_ms);
+    assert!(rep.publishes as usize >= rep.epochs_total, "cadence 1 must publish every epoch");
+    assert!(rep.read_stats.reads >= rep.served, "every served request is a validated read");
+    assert!(rep.train_seconds > 0.0 && rep.epochs_per_sec > 0.0);
+}
+
+/// Hot-swap freshness from the reader's seat: stamps move only forward,
+/// and a validated read's data always matches the stamp it came with —
+/// the property the repaired seqlock protocol exists to provide.
+#[test]
+fn hot_swap_stamps_are_monotone_and_agree_with_their_data() {
+    let dim = 16;
+    let store = Arc::new(SnapshotStore::new(dim));
+    let publisher = {
+        let store = store.clone();
+        std::thread::spawn(move || {
+            for k in 1..=300u64 {
+                let w = vec![k as f32; dim];
+                store.publish(&w, k, k * 3);
+            }
+        })
+    };
+    let readers: Vec<_> = (0..2)
+        .map(|_| {
+            let store = store.clone();
+            std::thread::spawn(move || {
+                let mut out = vec![0.0f32; dim];
+                let mut last = 0u64;
+                for _ in 0..1_500 {
+                    let (meta, _) = store.read_full(&mut out);
+                    assert!(out.iter().all(|&x| x == meta.publish as f32), "torn snapshot");
+                    assert!(meta.publish >= last, "freshness went backward");
+                    assert_eq!(meta.updates, meta.epoch * 3, "stamp fields torn apart");
+                    last = meta.publish;
+                }
+            })
+        })
+        .collect();
+    publisher.join().unwrap();
+    for r in readers {
+        r.join().unwrap();
+    }
+    let final_stamp = store.stamp();
+    assert_eq!(final_stamp.publish, 300);
+    // every read_full completed (optimistically or via the bounded-retry
+    // lock fallback) — none were silently dropped
+    assert_eq!(store.read_stats().reads, 2 * 1_500);
+}
+
+/// Growth invariants through the public API: sizes add up, the base rows
+/// are a bit-identical prefix, and dimension mismatches are rejected.
+#[test]
+fn ingest_growth_invariants_hold_from_the_public_api() {
+    let b = SyntheticSpec::new("grow-int", 90, 40, 7, 21).generate();
+    let mut stream = IngestStream::matching(&b, 30, 5);
+    let batch = stream.next_batch();
+    let grown = grow(&b, &batch).unwrap();
+    assert_eq!(grown.n(), b.n() + batch.n());
+    assert_eq!(grown.dim, b.dim);
+    assert_eq!(grown.nnz(), b.nnz() + batch.nnz());
+    for i in [0, b.n() / 2, b.n() - 1] {
+        let (old, new) = (b.row(i), grown.row(i));
+        assert_eq!(old.indices, new.indices, "base row {i} shifted");
+        assert_eq!(old.values, new.values, "base row {i} shifted");
+        assert_eq!(b.label(i), grown.label(i));
+    }
+    let wrong_dim = SyntheticSpec::new("bad", 4, b.dim + 1, 3, 1).generate();
+    assert!(grow(&b, &wrong_dim).is_err(), "dim mismatch must be rejected");
+}
