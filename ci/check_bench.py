@@ -25,6 +25,11 @@ bench_micro` against the repo's performance contracts:
   the report states, train bit-identical with and without readers (both
   consistency modes), shed deterministically at the admission cap, and
   keep variance reduction alive across ingest rounds (DESIGN.md §11).
+* simd — the 8-lane kernels must beat their strict scalar twins by the
+  target factor on the reduction-dominated inner-loop composites, stay
+  bit-identical on the elementwise kernels (fingerprint equality), keep
+  reductions inside the derived ulp envelope, and the fused b=4 batch
+  must train bit-identical to b=1 at one thread (DESIGN.md §12).
 
 Usage: check_bench.py [--results rust/results] [--only sparse,pool]
 
@@ -185,6 +190,43 @@ def check_serving(rep, log):
         raise GateFailure("serving bench reported overall FAIL")
 
 
+def check_simd(rep, log):
+    # thresholds live in the report so the bench and the gate can't drift
+    target = rep["target_speedup"]
+    log(
+        f"simd inner-loop speedups: dense {rep['dense_inner_speedup']:.2f}x "
+        f"sparse {rep['sparse_inner_speedup']:.2f}x (target >= {target:.1f}x)"
+    )
+    if rep["dense_inner_speedup"] < target:
+        raise GateFailure(
+            f"dense inner loop only {rep['dense_inner_speedup']:.2f}x "
+            f"(target >= {target:.1f}x)"
+        )
+    if rep["sparse_inner_speedup"] < target:
+        raise GateFailure(
+            f"sparse inner loop only {rep['sparse_inner_speedup']:.2f}x "
+            f"(target >= {target:.1f}x)"
+        )
+    for kernel in ("axpy", "fused", "scatter"):
+        if rep[f"{kernel}_fp_ref"] != rep[f"{kernel}_fp_lanes"]:
+            raise GateFailure(
+                f"{kernel} lanes not bit-identical to ref: "
+                f"{rep[f'{kernel}_fp_ref']} vs {rep[f'{kernel}_fp_lanes']}"
+            )
+    if not rep["dot_within_tol"]:
+        raise GateFailure("dot reduction outside its ulp envelope")
+    if not rep["gather_dot_within_tol"]:
+        raise GateFailure("gather_dot reduction outside its ulp envelope")
+    if rep["batch_parity_b1"] != rep["batch_parity_b4"]:
+        raise GateFailure(
+            f"fused b=4 batch diverged from b=1 at p=1: "
+            f"{rep['batch_parity_b1']} vs {rep['batch_parity_b4']}"
+        )
+    log(f"simd parity: elementwise bit-identical, batch b=4 == b=1 ({rep['batch_parity_b1']})")
+    if not rep["pass"]:
+        raise GateFailure("simd bench reported overall FAIL")
+
+
 # gate name -> (report filename, checker)
 GATES = {
     "sparse": ("BENCH_sparse_vs_dense.json", check_sparse_vs_dense),
@@ -193,6 +235,7 @@ GATES = {
     "pool": ("BENCH_pool.json", check_pool),
     "distributed": ("BENCH_distributed.json", check_distributed),
     "serving": ("BENCH_serving.json", check_serving),
+    "simd": ("BENCH_simd.json", check_simd),
 }
 
 

@@ -96,6 +96,30 @@ def passing_reports():
             "vr_pass": True,
             "pass": True,
         },
+        "BENCH_simd.json": {
+            "d": 4096,
+            "sparse_nnz": 512,
+            "dot_ref_ns": 3.8,
+            "dot_lanes_ns": 0.6,
+            "dense_inner_ref_ns": 4.4,
+            "dense_inner_lanes_ns": 1.1,
+            "dense_inner_speedup": 4.0,
+            "sparse_inner_ref_ns": 6.0,
+            "sparse_inner_lanes_ns": 2.2,
+            "sparse_inner_speedup": 2.7,
+            "target_speedup": 2.0,
+            "axpy_fp_ref": "1111aaaa2222bbbb",
+            "axpy_fp_lanes": "1111aaaa2222bbbb",
+            "fused_fp_ref": "3333cccc4444dddd",
+            "fused_fp_lanes": "3333cccc4444dddd",
+            "scatter_fp_ref": "5555eeee6666ffff",
+            "scatter_fp_lanes": "5555eeee6666ffff",
+            "dot_within_tol": True,
+            "gather_dot_within_tol": True,
+            "batch_parity_b1": "7777000088881111",
+            "batch_parity_b4": "7777000088881111",
+            "pass": True,
+        },
     }
 
 
@@ -140,6 +164,14 @@ def test_all_gates_pass_on_canned_reports(results_dir, capsys):
         ("BENCH_serving.json", {"overload_shed": 447}, "serving"),
         ("BENCH_serving.json", {"vr_pass": False}, "serving"),
         ("BENCH_serving.json", {"pass": False}, "serving"),
+        ("BENCH_simd.json", {"dense_inner_speedup": 1.4}, "simd"),
+        ("BENCH_simd.json", {"sparse_inner_speedup": 1.9}, "simd"),
+        ("BENCH_simd.json", {"axpy_fp_lanes": "deadbeefdeadbeef"}, "simd"),
+        ("BENCH_simd.json", {"scatter_fp_ref": "deadbeefdeadbeef"}, "simd"),
+        ("BENCH_simd.json", {"dot_within_tol": False}, "simd"),
+        ("BENCH_simd.json", {"gather_dot_within_tol": False}, "simd"),
+        ("BENCH_simd.json", {"batch_parity_b4": "deadbeefdeadbeef"}, "simd"),
+        ("BENCH_simd.json", {"pass": False}, "simd"),
     ],
 )
 def test_threshold_violations_fail(results_dir, capsys, filename, mutate, expect):

@@ -17,7 +17,7 @@ use asysvrg::coordinator::telemetry::ContentionStats;
 use asysvrg::coordinator::worker::{run_inner_loop, WorkerScratch};
 use asysvrg::coordinator::{run_asysvrg, SvrgOption};
 use asysvrg::data::synthetic::SyntheticSpec;
-use asysvrg::linalg::{dense, AtomicF32Vec};
+use asysvrg::linalg::{dense, simd, AtomicF32Vec};
 use asysvrg::objective::Objective;
 use asysvrg::runtime::pool::WorkerPool;
 use asysvrg::serving::{run_train_and_serve, ConsistencyMode, ServingConfig};
@@ -27,6 +27,19 @@ use asysvrg::util::json::Json;
 use asysvrg::util::rng::Pcg32;
 use asysvrg::util::Stopwatch;
 use std::sync::Arc;
+
+/// FNV-1a over the IEEE-754 bit patterns — equal strings ⇔ bit-identical
+/// vectors, the comparison form the serving gate already uses.
+fn fnv_fingerprint(w: &[f32]) -> String {
+    let mut h = 0xcbf29ce484222325u64;
+    for v in w {
+        for byte in v.to_bits().to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    format!("{h:016x}")
+}
 
 fn time_per<F: FnMut()>(label: &str, units: usize, reps: usize, mut f: F) -> f64 {
     // warmup
@@ -59,6 +72,155 @@ fn main() {
         dense::fused_svrg_step(&mut c, &a, &g0, &mu, 0.01);
         std::hint::black_box(&c);
     });
+
+    // ------------------------------------------------------------------
+    // SIMD lane kernels vs their strict scalar twins (DESIGN.md §12). The
+    // refs are the single-accumulator IEEE loops the differential harness
+    // (tests/kernel_test.rs) compares against; their reductions are serial
+    // fp-add chains LLVM must not reassociate — exactly the latency wall
+    // the 8-lane kernels break. Elementwise kernels auto-vectorize in
+    // either form, so only the reduction-dominated inner-loop composites
+    // are gated (>= 2x); the CI gate also pins the parity fingerprints
+    // recorded below.
+    // ------------------------------------------------------------------
+    println!("\n== micro: lane kernels vs strict scalar refs (d = 4096) ==");
+    let t_dot_ref = time_per("dot [strict ref]", d, 2000, || {
+        std::hint::black_box(simd::dot_ref(&a, &b));
+    });
+    let t_dot_lanes = time_per("dot [8-lane]", d, 2000, || {
+        std::hint::black_box(simd::dot_lanes(&a, &b));
+    });
+    time_per("axpy [strict ref]", d, 2000, || {
+        simd::axpy_ref(1e-7, &a, &mut c);
+        std::hint::black_box(&c);
+    });
+    time_per("axpy [8-lane]", d, 2000, || {
+        simd::axpy_lanes(1e-7, &a, &mut c);
+        std::hint::black_box(&c);
+    });
+    let t_dense_ref = time_per("dense inner (dot+axpy) [strict ref]", d, 2000, || {
+        let s = simd::dot_ref(&a, &b);
+        simd::axpy_ref(s * 1e-9, &a, &mut c);
+        std::hint::black_box(&c);
+    });
+    let t_dense_lanes = time_per("dense inner (dot+axpy) [8-lane]", d, 2000, || {
+        let s = simd::dot_lanes(&a, &b);
+        simd::axpy_lanes(s * 1e-9, &a, &mut c);
+        std::hint::black_box(&c);
+    });
+    let dense_speedup = t_dense_ref / t_dense_lanes;
+    println!("dense inner-loop speedup: {dense_speedup:.2}x");
+
+    // sparse composite at rcv1-class shape: 512 nnz gathered from d = 10k
+    let sdim = 10_000usize;
+    let snnz = 512usize;
+    let sidx: Vec<u32> = (0..snnz).map(|k| (k * 19 + 3) as u32).collect();
+    let svals: Vec<f32> = (0..snnz).map(|k| (k as f32 * 0.37).sin()).collect();
+    let mut sweights: Vec<f32> = (0..sdim).map(|j| (j as f32 * 0.11).cos()).collect();
+    let t_sparse_ref = time_per("sparse inner (gather+scatter) [strict ref]", snnz, 4000, || {
+        let s = simd::gather_dot_ref(&sidx, &svals, &sweights);
+        simd::scatter_axpy_ref(&sidx, &svals, s * -1e-9, &mut sweights);
+        std::hint::black_box(&sweights);
+    });
+    let t_sparse_lanes = time_per("sparse inner (gather+scatter) [8-lane]", snnz, 4000, || {
+        let s = simd::gather_dot_lanes(&sidx, &svals, &sweights);
+        simd::scatter_axpy_lanes(&sidx, &svals, s * -1e-9, &mut sweights);
+        std::hint::black_box(&sweights);
+    });
+    let sparse_speedup = t_sparse_ref / t_sparse_lanes;
+    println!("sparse inner-loop speedup: {sparse_speedup:.2}x");
+
+    // Parity fingerprints the CI gate pins: elementwise kernels must be
+    // bit-identical to their refs; reductions must land inside the derived
+    // ulp envelope (linalg::simd module docs).
+    let base_y: Vec<f32> = (0..d).map(|i| (i as f32 * 0.013).sin() * 3.0).collect();
+    let (mut y_ref, mut y_lanes) = (base_y.clone(), base_y.clone());
+    simd::axpy_ref(-0.125, &a, &mut y_ref);
+    simd::axpy_lanes(-0.125, &a, &mut y_lanes);
+    let (fp_axpy_ref, fp_axpy_lanes) = (fnv_fingerprint(&y_ref), fnv_fingerprint(&y_lanes));
+    let (mut u_ref, mut u_lanes) = (base_y.clone(), base_y.clone());
+    simd::fused_step_ref(&mut u_ref, &a, &g0, &mu, 0.05);
+    simd::fused_step_lanes(&mut u_lanes, &a, &g0, &mu, 0.05);
+    let (fp_fused_ref, fp_fused_lanes) = (fnv_fingerprint(&u_ref), fnv_fingerprint(&u_lanes));
+    // duplicate-heavy index stream: scatter application order is part of
+    // the bit-parity contract, so exercise it here too
+    let dup_idx: Vec<u32> = (0..256).map(|k| ((k / 2) * 37) as u32).collect();
+    let dup_vals: Vec<f32> = (0..256).map(|k| (k as f32 * 0.7).cos()).collect();
+    let (mut w_ref, mut w_lanes) = (sweights.clone(), sweights.clone());
+    simd::scatter_axpy_ref(&dup_idx, &dup_vals, 0.375, &mut w_ref);
+    simd::scatter_axpy_lanes(&dup_idx, &dup_vals, 0.375, &mut w_lanes);
+    let (fp_scatter_ref, fp_scatter_lanes) = (fnv_fingerprint(&w_ref), fnv_fingerprint(&w_lanes));
+    let dot_ok =
+        (simd::dot_lanes(&a, &b) - simd::dot_ref(&a, &b)).abs() <= simd::dot_tolerance(&a, &b);
+    let gdot_ok = (simd::gather_dot_lanes(&sidx, &svals, &sweights)
+        - simd::gather_dot_ref(&sidx, &svals, &sweights))
+    .abs()
+        <= simd::gather_dot_tolerance(&sidx, &svals, &sweights);
+
+    // Fused-batch parity at p = 1: the b = 4 trajectory must be
+    // bit-identical to b = 1 (the contract tests/batch_test.rs proves over
+    // the full scheme grid); the gate compares the fingerprints as strings.
+    let (fp_b1, fp_b4) = {
+        let bds = SyntheticSpec::new("bench-fused", 64, 48, 6, 9).generate();
+        let bobj = Objective::paper(Arc::new(bds));
+        let mk = |batch: usize| RunConfig {
+            threads: 1,
+            eta: 0.15,
+            epochs: 2,
+            target_gap: 0.0,
+            storage: Storage::Sparse,
+            seed: 5,
+            batch,
+            ..Default::default()
+        };
+        let r1 = run_asysvrg(&bobj, &mk(1), SvrgOption::Average, f64::NEG_INFINITY);
+        let r4 = run_asysvrg(&bobj, &mk(4), SvrgOption::Average, f64::NEG_INFINITY);
+        (fnv_fingerprint(&r1.final_w), fnv_fingerprint(&r4.final_w))
+    };
+    let simd_target = 2.0;
+    let elementwise_ok = fp_axpy_ref == fp_axpy_lanes
+        && fp_fused_ref == fp_fused_lanes
+        && fp_scatter_ref == fp_scatter_lanes;
+    let simd_pass = dense_speedup >= simd_target
+        && sparse_speedup >= simd_target
+        && elementwise_ok
+        && dot_ok
+        && gdot_ok
+        && fp_b1 == fp_b4;
+    println!(
+        "simd gate: dense {dense_speedup:.2}x sparse {sparse_speedup:.2}x parity {} batch {} -> pass={simd_pass}",
+        elementwise_ok && dot_ok && gdot_ok,
+        fp_b1 == fp_b4
+    );
+    let json = Json::obj(vec![
+        ("bench", Json::Str("simd_kernels".into())),
+        ("d", Json::Num(d as f64)),
+        ("sparse_nnz", Json::Num(snnz as f64)),
+        ("dot_ref_ns", Json::Num(t_dot_ref)),
+        ("dot_lanes_ns", Json::Num(t_dot_lanes)),
+        ("dense_inner_ref_ns", Json::Num(t_dense_ref)),
+        ("dense_inner_lanes_ns", Json::Num(t_dense_lanes)),
+        ("dense_inner_speedup", Json::Num(dense_speedup)),
+        ("sparse_inner_ref_ns", Json::Num(t_sparse_ref)),
+        ("sparse_inner_lanes_ns", Json::Num(t_sparse_lanes)),
+        ("sparse_inner_speedup", Json::Num(sparse_speedup)),
+        ("target_speedup", Json::Num(simd_target)),
+        ("axpy_fp_ref", Json::Str(fp_axpy_ref)),
+        ("axpy_fp_lanes", Json::Str(fp_axpy_lanes)),
+        ("fused_fp_ref", Json::Str(fp_fused_ref)),
+        ("fused_fp_lanes", Json::Str(fp_fused_lanes)),
+        ("scatter_fp_ref", Json::Str(fp_scatter_ref)),
+        ("scatter_fp_lanes", Json::Str(fp_scatter_lanes)),
+        ("dot_within_tol", Json::Bool(dot_ok)),
+        ("gather_dot_within_tol", Json::Bool(gdot_ok)),
+        ("batch_parity_b1", Json::Str(fp_b1)),
+        ("batch_parity_b4", Json::Str(fp_b4)),
+        ("pass", Json::Bool(simd_pass)),
+    ]);
+    match report::write_json("BENCH_simd", &json) {
+        Ok(path) => println!("json -> {}", path.display()),
+        Err(e) => eprintln!("BENCH_simd write failed: {e}"),
+    }
 
     println!("\n== micro: shared-vector apply_step per scheme (d = 4096) ==");
     let v = vec![0.01f32; d];
@@ -105,7 +267,7 @@ fn main() {
         let delays = DelayStats::new();
         let iters = 2000;
         let sw = Stopwatch::start();
-        run_inner_loop(&obj, &shared, &w0, &eg, 0.01, iters, &mut rng, &mut scratch, &delays);
+        run_inner_loop(&obj, &shared, &w0, &eg, 0.01, iters, &mut rng, &mut scratch, &delays, 1);
         let us = sw.seconds() * 1e6 / iters as f64;
         println!("inner update [{:<12}] {us:>10.2} µs/update  (d={})", scheme.name(), obj.dim());
     }
@@ -129,7 +291,7 @@ fn main() {
     let mut scratch = WorkerScratch::new(obj.dim());
     let delays = DelayStats::new();
     let sw = Stopwatch::start();
-    run_inner_loop(&obj, &shared, &w0, &eg, 0.01, iters, &mut rng, &mut scratch, &delays);
+    run_inner_loop(&obj, &shared, &w0, &eg, 0.01, iters, &mut rng, &mut scratch, &delays, 1);
     let dense_us = sw.seconds() * 1e6 / iters as f64;
 
     let shared = SharedParams::new(&w0, Scheme::Unlock);
@@ -327,7 +489,7 @@ fn main() {
                     s.spawn(move || {
                         let mut rng = Pcg32::for_thread(cfg.seed ^ (t as u64) << 20, a);
                         run_inner_loop_sparse_telemetry(
-                            obj, shared, lazy, eg, m, &mut rng, delays, tm,
+                            obj, shared, lazy, eg, m, &mut rng, delays, tm, 1,
                         );
                     });
                 }

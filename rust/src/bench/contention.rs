@@ -145,6 +145,7 @@ pub fn measure_point(
                     &mut rng,
                     delays,
                     Some(stats),
+                    1,
                 );
             });
         }
@@ -189,6 +190,7 @@ pub fn telemetry_overhead(obj: &Objective, iters: usize, trials: usize, seed: u6
             &mut rng,
             &delays,
             telemetry.then_some(&stats),
+            1,
         );
         sw.seconds()
     };

@@ -163,6 +163,20 @@ impl Matches {
         Ok(v)
     }
 
+    /// Strictly positive integer — for counts (batch widths, thread pools)
+    /// where `0`, `-3`, or `2.5` must fail at parse time, not later as a
+    /// modulo-by-zero panic or a silently empty run.
+    pub fn usize_pos(&self, name: &str) -> Result<usize, String> {
+        let v = self.usize(name)?;
+        if v == 0 {
+            return Err(format!(
+                "--{name}: expected a positive integer, got '{}'",
+                self.str(name)
+            ));
+        }
+        Ok(v)
+    }
+
     /// Comma-separated usize list, e.g. `--threads 1,2,4,8,10`.
     pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, String> {
         self.str(name)
@@ -228,6 +242,15 @@ mod tests {
         {
             let m = c.parse(&args(&["--qps", val])).unwrap();
             assert_eq!(m.f64_pos("qps").is_ok(), ok, "--qps {val}");
+        }
+    }
+
+    #[test]
+    fn positive_integers() {
+        let c = Command::new("x", "y").opt("batch", "1", "width");
+        for (val, ok) in [("1", true), ("8", true), ("0", false), ("-2", false), ("2.5", false)] {
+            let m = c.parse(&args(&["--batch", val])).unwrap();
+            assert_eq!(m.usize_pos("batch").is_ok(), ok, "--batch {val}");
         }
     }
 

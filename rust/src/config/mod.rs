@@ -178,6 +178,12 @@ pub struct RunConfig {
     pub loss: LossKind,
     /// Per-update coordinate footprint: dense O(d) or sparse O(nnz).
     pub storage: Storage,
+    /// Fused mini-batch width b: each worker reads û once and flushes once
+    /// per b inner updates (1 = the paper's per-example schedule). At p=1
+    /// the fused trajectory is bit-identical to b sequential updates; at
+    /// p>1 it widens the effective delay window by a factor of b (see
+    /// `theory::max_feasible_tau_batched`).
+    pub batch: usize,
 }
 
 impl Default for RunConfig {
@@ -197,6 +203,7 @@ impl Default for RunConfig {
             lambda: 1e-4,
             loss: LossKind::Logistic,
             storage: Storage::Dense,
+            batch: 1,
         }
     }
 }
@@ -228,12 +235,13 @@ impl RunConfig {
             ("lambda", Json::Num(self.lambda as f64)),
             ("loss", Json::Str(self.loss.name().into())),
             ("storage", Json::Str(self.storage.name().into())),
+            ("batch", Json::Num(self.batch as f64)),
         ])
     }
 
     pub fn describe(&self) -> String {
         format!(
-            "{}-{} on {} (scale {}): p={} eta={} epochs={} seed={} storage={}",
+            "{}-{} on {} (scale {}): p={} eta={} epochs={} seed={} storage={} batch={}",
             self.algo.name(),
             self.scheme.name(),
             self.dataset,
@@ -242,7 +250,8 @@ impl RunConfig {
             self.eta,
             self.epochs,
             self.seed,
-            self.storage.name()
+            self.storage.name(),
+            self.batch
         )
     }
 }
@@ -284,7 +293,7 @@ mod tests {
     #[test]
     fn json_has_all_fields() {
         let j = RunConfig::default().to_json();
-        for k in ["dataset", "threads", "scheme", "algo", "eta", "target_gap", "storage"] {
+        for k in ["dataset", "threads", "scheme", "algo", "eta", "target_gap", "storage", "batch"] {
             assert!(j.get(k).is_some(), "missing {k}");
         }
     }
@@ -310,5 +319,7 @@ mod tests {
         assert!(Storage::parse("csc").is_err());
         assert_eq!(RunConfig::default().storage, Storage::Dense);
         assert!(RunConfig::default().describe().contains("storage=dense"));
+        assert_eq!(RunConfig::default().batch, 1);
+        assert!(RunConfig::default().describe().contains("batch=1"));
     }
 }

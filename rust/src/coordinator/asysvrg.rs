@@ -208,6 +208,7 @@ pub fn run_asysvrg_hooked(
                         &mut rng,
                         delays,
                         tm,
+                        cfg.batch,
                     );
                 });
                 state.flush_pool(shared, pool, p);
@@ -232,6 +233,7 @@ pub fn run_asysvrg_hooked(
                         &mut rng,
                         &mut slot.scratch,
                         delays,
+                        cfg.batch,
                     );
                 });
             }
@@ -264,6 +266,7 @@ pub fn run_asysvrg_hooked(
                             scratch,
                             delays,
                             acc,
+                            cfg.batch,
                         );
                     } // drop the write guard before the rendezvous
                     bar.wait();

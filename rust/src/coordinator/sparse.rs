@@ -413,10 +413,22 @@ impl SparseIter {
     /// Segment 1 (sample): pin the read clock for instance `i`.
     #[inline]
     pub(crate) fn start(shared: &SharedParams, i: usize, r0: f32) -> Self {
+        Self::start_at(i, r0, shared.clock())
+    }
+
+    /// `start` with an explicitly pinned read clock — the fused mini-batch
+    /// path (DESIGN.md §12) loads the clock once per batch and advances it
+    /// locally (`batch_now + k` for update k), which at p = 1 is exactly
+    /// the value a per-update load would return. Mid-batch `now` can lag
+    /// the true clock at p > 1; the `fetch_max` catch-up protocol already
+    /// tolerates that (a fresher coordinate reads through, counted as a
+    /// clock-overlap collision when sampled).
+    #[inline]
+    pub(crate) fn start_at(i: usize, r0: f32, now: u64) -> Self {
         SparseIter {
             i,
             r0,
-            now: shared.clock(),
+            now,
             dot: 0.0,
             dr: 0.0,
             t_writes: 0,
@@ -600,13 +612,13 @@ pub fn run_inner_loop_sparse(
     rng: &mut Pcg32,
     delays: &DelayStats,
 ) -> usize {
-    run_inner_loop_sparse_telemetry(obj, shared, lazy, eg, iters, rng, delays, None)
+    run_inner_loop_sparse_telemetry(obj, shared, lazy, eg, iters, rng, delays, None, 1)
 }
 
 /// `run_inner_loop_sparse` with optional sampled contention telemetry:
 /// 1-in-period iterations (per worker stream) record touched coordinates,
 /// write collisions and lock conflicts into `telem`. `None` is the plain
-/// fast path.
+/// fast path. `batch` is the fused mini-batch width (1 = unbatched).
 #[allow(clippy::too_many_arguments)]
 pub fn run_inner_loop_sparse_telemetry(
     obj: &Objective,
@@ -617,8 +629,10 @@ pub fn run_inner_loop_sparse_telemetry(
     rng: &mut Pcg32,
     delays: &DelayStats,
     telem: Option<&ContentionStats>,
+    batch: usize,
 ) -> usize {
     crate::coordinator::step::WorkerStep::sparse_svrg(obj, shared, lazy, eg, iters, rng, delays, telem)
+        .with_batch(batch)
         .run_to_end()
 }
 
@@ -719,7 +733,7 @@ mod tests {
             let mut scratch = WorkerScratch::new(obj.dim());
             let delays = DelayStats::new();
             run_inner_loop(
-                &obj, &dense_shared, &w0, &eg, 0.2, 80, &mut rng, &mut scratch, &delays,
+                &obj, &dense_shared, &w0, &eg, 0.2, 80, &mut rng, &mut scratch, &delays, 1,
             );
             let dense = dense_shared.snapshot();
 
@@ -826,7 +840,7 @@ mod tests {
             let mut acc = vec![0.0f32; obj.dim()];
             run_inner_loop_averaging(
                 &obj, &dense_shared, &w0, &eg, eta, iters, &mut rng, &mut scratch, &delays,
-                &mut acc,
+                &mut acc, 1,
             );
             let want_avg: Vec<f32> = acc.iter().map(|&a| a / iters as f32).collect();
             let want_w = dense_shared.snapshot();
@@ -921,7 +935,7 @@ mod tests {
                 let mut rng = Pcg32::new(21, 1);
                 let delays = DelayStats::new();
                 run_inner_loop_sparse_telemetry(
-                    &obj, &shared, &lazy, &eg, 60, &mut rng, &delays, telem,
+                    &obj, &shared, &lazy, &eg, 60, &mut rng, &delays, telem, 1,
                 );
                 lazy.flush(&shared);
                 shared.snapshot()
@@ -948,7 +962,7 @@ mod tests {
             let mut rng = Pcg32::new(5, 1);
             let delays = DelayStats::new();
             run_inner_loop_sparse_telemetry(
-                &obj, &shared, &lazy, &eg, 80, &mut rng, &delays, Some(&stats),
+                &obj, &shared, &lazy, &eg, 80, &mut rng, &delays, Some(&stats), 1,
             );
             let s = stats.summary();
             assert_eq!(s.collisions, 0, "{scheme:?}");
@@ -977,7 +991,7 @@ mod tests {
                 s.spawn(move || {
                     let mut rng = Pcg32::for_thread(17, t);
                     run_inner_loop_sparse_telemetry(
-                        obj, shared, lazy, eg, 100, &mut rng, delays, Some(stats),
+                        obj, shared, lazy, eg, 100, &mut rng, delays, Some(stats), 1,
                     );
                 });
             }
@@ -1009,7 +1023,7 @@ mod tests {
                 s.spawn(move || {
                     let mut rng = Pcg32::for_thread(19, t);
                     run_inner_loop_sparse_telemetry(
-                        obj, shared, lazy, eg, 100, &mut rng, delays, Some(stats),
+                        obj, shared, lazy, eg, 100, &mut rng, delays, Some(stats), 1,
                     );
                 });
             }

@@ -41,6 +41,15 @@
 //! (the holder is always a distinct runnable worker, so some pick always
 //! makes progress). Threaded drivers never see `Blocked` — `run_to_end`
 //! falls back to a genuinely blocking acquire.
+//!
+//! Fused mini-batches (`with_batch`, DESIGN.md §12) keep the same yield-
+//! point map for the first update of each batch; mid-batch updates skip
+//! the amortized work — the dense read segment becomes a no-op against the
+//! local mirror, and locked sparse updates skip the acquire segment
+//! entirely (Ready advances straight to `Acquired` inside the held
+//! session, a 5-segment cycle). A mid-batch holder is therefore never at
+//! `Sampled`, so `would_block` never reports a worker blocked on its own
+//! held lock.
 
 use crate::coordinator::delay::DelayStats;
 use crate::coordinator::epoch::EpochGradient;
@@ -138,6 +147,15 @@ pub struct WorkerStep<'a> {
     read_clock: u64,
     locked: bool,
     cas: bool,
+    /// Fused mini-batch width b (DESIGN.md §12): one snapshot read (dense) /
+    /// one lock acquire (locked sparse) / one pinned clock window (sparse)
+    /// is amortized across b consecutive updates. b = 1 is byte-for-byte
+    /// the unbatched path.
+    batch: usize,
+    /// Sparse paths: the clock pinned at the current batch's start; update
+    /// k of the batch reads at `batch_now + k`, which at p = 1 is exactly
+    /// the clock a fresh load would return (each finish bumps it by one).
+    batch_now: u64,
 }
 
 impl<'a> WorkerStep<'a> {
@@ -168,6 +186,8 @@ impl<'a> WorkerStep<'a> {
             read_clock: 0,
             locked: false,
             cas: false,
+            batch: 1,
+            batch_now: 0,
         }
     }
 
@@ -195,6 +215,8 @@ impl<'a> WorkerStep<'a> {
             read_clock: 0,
             locked: false,
             cas: false,
+            batch: 1,
+            batch_now: 0,
         }
     }
 
@@ -264,7 +286,21 @@ impl<'a> WorkerStep<'a> {
             read_clock: 0,
             locked,
             cas,
+            batch: 1,
+            batch_now: 0,
         }
+    }
+
+    /// Set the fused mini-batch width (builder-style; 0 is clamped to 1).
+    /// Affects the SVRG kinds: the dense path re-reads the shared snapshot
+    /// only at batch boundaries and maintains a local mirror in between;
+    /// the sparse path pins one clock window per batch, and locked sparse
+    /// schemes hold their `WriteSession` across the whole batch (one
+    /// acquire per b updates). Hogwild kinds ignore widths > 1 on the
+    /// dense read (their update has no snapshot to amortize).
+    pub fn with_batch(mut self, b: usize) -> Self {
+        self.batch = b.max(1);
+        self
     }
 
     /// All updates applied?
@@ -356,7 +392,15 @@ impl<'a> WorkerStep<'a> {
                     self.stage = Stage::Sampled;
                 }
                 Stage::Sampled => {
-                    self.read_clock = dense_read(shared, scratch);
+                    // batched: only the first update of a batch pays the
+                    // O(d) shared read; the rest work on the local mirror
+                    // maintained below, against the read clock pinned at
+                    // the batch start (delay window scaled by b — see
+                    // theory::max_feasible_tau_batched). The segment stays
+                    // a yield point so the §9 schedule shapes are stable.
+                    if self.done % self.batch == 0 {
+                        self.read_clock = dense_read(shared, scratch);
+                    }
                     self.stage = Stage::ReadDone;
                 }
                 Stage::ReadDone => {
@@ -368,6 +412,16 @@ impl<'a> WorkerStep<'a> {
                     let apply = dense_write(shared, scratch, *eta);
                     self.delays.record(self.read_clock, apply);
                     self.done += 1;
+                    if self.batch > 1 && self.done % self.batch != 0 && self.done < self.iters {
+                        // mid-batch: mirror our own write locally. Per
+                        // element this is u_hat[j] + (−η)·v[j] — the same
+                        // IEEE expression every write scheme applies to the
+                        // shared cell ((−η)·v = −(η·v) exactly), so at
+                        // p = 1 the mirror is bit-identical to a re-read
+                        // and the batched trajectory matches b unbatched
+                        // steps (tests/batch_test.rs).
+                        crate::linalg::dense::axpy(-*eta, &scratch.v, &mut scratch.u_hat);
+                    }
                     self.stage = Stage::Ready;
                 }
             },
@@ -403,15 +457,40 @@ impl<'a> WorkerStep<'a> {
                         // made once at sample time like the loop did
                         *sampled =
                             telem.filter(|t| t.should_sample(self.done as u64)).is_some();
+                        let offset = (self.done % self.batch) as u64;
                         if self.locked {
-                            // clock pin waits for the acquire segment (the
-                            // capture must happen inside the lock); the
-                            // contended-acquire flag resets per update
-                            *lock_waited = false;
+                            if let Some(_held) = session.as_ref() {
+                                // mid-batch: the session acquired at the
+                                // batch start is still held, so there is no
+                                // acquire segment — start the iter directly
+                                // inside the critical section at the
+                                // locally-advanced clock (our own finishes
+                                // are the only bumps while we hold the
+                                // lock, so batch_now + offset is exact even
+                                // at p > 1) and skip straight to Acquired.
+                                debug_assert!(offset != 0);
+                                *iter =
+                                    Some(SparseIter::start_at(i, *r0, self.batch_now + offset));
+                                self.stage = Stage::Acquired;
+                            } else {
+                                // batch start: clock pin waits for the
+                                // acquire segment (the capture must happen
+                                // inside the lock); the contended-acquire
+                                // flag resets per batch
+                                *lock_waited = false;
+                                self.stage = Stage::Sampled;
+                            }
                         } else {
-                            *iter = Some(SparseIter::start(shared, i, *r0));
+                            if offset == 0 {
+                                self.batch_now = shared.clock();
+                            }
+                            // at p = 1, batch_now + offset is exactly the
+                            // clock a fresh load would return (each finish
+                            // bumped it once), so b = 1 and batch starts
+                            // reduce to the unbatched SparseIter::start
+                            *iter = Some(SparseIter::start_at(i, *r0, self.batch_now + offset));
+                            self.stage = Stage::Sampled;
                         }
-                        self.stage = Stage::Sampled;
                     }
                     // the locked acquire was intercepted before the
                     // dispatch; reaching here at Sampled means free path
@@ -439,12 +518,16 @@ impl<'a> WorkerStep<'a> {
                         let tm = if *sampled { *telem } else { None };
                         let it = iter.take().unwrap();
                         let (read, apply) = it.finish(obj, shared, lazy, tm);
-                        // release only after the clock bump: the whole
-                        // update stays inside the critical section, exactly
-                        // like the closure-based locked loop
-                        *session = None;
                         self.delays.record(read, apply);
                         self.done += 1;
+                        // release only after the clock bump, and only at a
+                        // batch boundary (or when the budget ends with a
+                        // partial batch): the held session across b updates
+                        // is the locked path's amortization — one acquire
+                        // per batch instead of per update.
+                        if self.done % self.batch == 0 || self.done >= self.iters {
+                            *session = None;
+                        }
                         self.stage = Stage::Ready;
                     }
                 }
@@ -469,7 +552,11 @@ impl<'a> WorkerStep<'a> {
                 tm.record_lock(s.conflicted() || *lock_waited);
             }
         }
-        *iter = Some(SparseIter::start(self.shared, self.i, *r0));
+        // only batch starts acquire (mid-batch updates reuse the held
+        // session from Ready), so the batch clock is pinned here, inside
+        // the critical section
+        self.batch_now = self.shared.clock();
+        *iter = Some(SparseIter::start_at(self.i, *r0, self.batch_now));
         *session = Some(s);
         self.stage = Stage::Acquired;
     }
@@ -615,5 +702,84 @@ mod tests {
         }
         assert_eq!(step.updates_done(), 1);
         assert_eq!(step.advance(), StepEvent::Finished);
+    }
+
+    /// Batched dense worker: one shared read per batch (observable as the
+    /// pinned read clock — at p = 1 the second update of a batch of 2 is
+    /// exactly one tick stale), same 4-advance cycle, same update count.
+    #[test]
+    fn dense_batched_pins_read_clock_per_batch() {
+        let (obj, w0) = setup();
+        let eg = parallel_full_grad(&obj, &w0, 1);
+        let shared = SharedParams::new(&w0, Scheme::Unlock);
+        let mut rng = Pcg32::new(3, 1);
+        let mut scratch = WorkerScratch::new(obj.dim());
+        let delays = DelayStats::new();
+        let step = WorkerStep::dense_svrg(
+            &obj, &shared, &w0, &eg, 0.05, 4, &mut rng, &mut scratch, &delays, None,
+        )
+        .with_batch(2);
+        assert_eq!(step.run_to_end(), 4);
+        assert_eq!(shared.clock(), 4);
+        assert_eq!(delays.count(), 4);
+        // updates 2 and 4 read at their batch-start clock: delay exactly 1
+        assert_eq!(delays.max_delay(), 1);
+    }
+
+    /// Batched locked sparse worker: the session spans the batch — held
+    /// across the intermediate Ready, released at the boundary — and the
+    /// mid-batch update skips the acquire segment (5-advance cycle).
+    #[test]
+    fn sparse_locked_batch_holds_session_across_updates() {
+        let (obj, w0) = setup();
+        let eg = parallel_full_grad(&obj, &w0, 1);
+        let shared = SharedParams::new(&w0, Scheme::Consistent);
+        let lazy = LazyState::new(&w0, &eg.mu, obj.lam, 0.05, shared.clock());
+        let mut rng = Pcg32::new(3, 1);
+        let delays = DelayStats::new();
+        let mut step =
+            WorkerStep::sparse_svrg(&obj, &shared, &lazy, &eg, 2, &mut rng, &delays, None)
+                .with_batch(2);
+        // update 1: full 6-segment locked cycle, but no release at the end
+        for want in [
+            Stage::Sampled,
+            Stage::Acquired,
+            Stage::ReadDone,
+            Stage::GradDone,
+            Stage::WriteDone,
+            Stage::Ready,
+        ] {
+            assert_eq!(step.advance(), StepEvent::Advanced(want));
+        }
+        assert_eq!(step.updates_done(), 1);
+        assert!(shared.write_lock_held(), "session must span the batch");
+        // update 2 (mid-batch): Ready jumps straight into the held session
+        assert_eq!(step.advance(), StepEvent::Advanced(Stage::Acquired));
+        assert!(step.in_flight_clock().is_some());
+        for want in [Stage::ReadDone, Stage::GradDone, Stage::WriteDone, Stage::Ready] {
+            assert_eq!(step.advance(), StepEvent::Advanced(want));
+        }
+        assert!(!shared.write_lock_held(), "released at the batch boundary");
+        assert_eq!(step.updates_done(), 2);
+        assert_eq!(step.advance(), StepEvent::Finished);
+        assert_eq!(shared.clock(), 2);
+    }
+
+    /// A budget that ends mid-batch still releases the session (no leaked
+    /// lock when iters % batch != 0).
+    #[test]
+    fn sparse_locked_partial_batch_releases_lock() {
+        let (obj, w0) = setup();
+        let eg = parallel_full_grad(&obj, &w0, 1);
+        let shared = SharedParams::new(&w0, Scheme::Seqlock);
+        let lazy = LazyState::new(&w0, &eg.mu, obj.lam, 0.05, shared.clock());
+        let mut rng = Pcg32::new(3, 1);
+        let delays = DelayStats::new();
+        let step =
+            WorkerStep::sparse_svrg(&obj, &shared, &lazy, &eg, 3, &mut rng, &delays, None)
+                .with_batch(2);
+        assert_eq!(step.run_to_end(), 3);
+        assert!(!shared.write_lock_held());
+        assert_eq!(shared.clock(), 3);
     }
 }

@@ -86,8 +86,10 @@ pub(crate) fn dense_write(shared: &SharedParams, scratch: &WorkerScratch, eta: f
 }
 
 /// Run M inner updates of AsySVRG on `shared`. `u0` is the epoch snapshot
-/// w_t, `eg` the epoch gradient (μ̄ + residual cache). Returns the number
-/// of updates applied (== iters).
+/// w_t, `eg` the epoch gradient (μ̄ + residual cache). `batch` is the fused
+/// mini-batch width (1 = unbatched; one shared read amortized across b
+/// updates otherwise — DESIGN.md §12). Returns the number of updates
+/// applied (== iters).
 #[allow(clippy::too_many_arguments)]
 pub fn run_inner_loop(
     obj: &Objective,
@@ -99,10 +101,12 @@ pub fn run_inner_loop(
     rng: &mut Pcg32,
     scratch: &mut WorkerScratch,
     delays: &DelayStats,
+    batch: usize,
 ) -> usize {
     crate::coordinator::step::WorkerStep::dense_svrg(
         obj, shared, u0, eg, eta, iters, rng, scratch, delays, None,
     )
+    .with_batch(batch)
     .run_to_end()
 }
 
@@ -120,6 +124,7 @@ pub fn run_inner_loop_averaging(
     scratch: &mut WorkerScratch,
     delays: &DelayStats,
     avg_acc: &mut [f32],
+    batch: usize,
 ) -> usize {
     crate::coordinator::step::WorkerStep::dense_svrg(
         obj,
@@ -133,6 +138,7 @@ pub fn run_inner_loop_averaging(
         delays,
         Some(avg_acc),
     )
+    .with_batch(batch)
     .run_to_end()
 }
 
@@ -160,7 +166,7 @@ mod tests {
         let mut rng = Pcg32::new(7, 1);
         let mut scratch = WorkerScratch::new(obj.dim());
         let delays = DelayStats::new();
-        run_inner_loop(&obj, &shared, &w0, &eg, 0.05, 50, &mut rng, &mut scratch, &delays);
+        run_inner_loop(&obj, &shared, &w0, &eg, 0.05, 50, &mut rng, &mut scratch, &delays, 1);
         let got = shared.snapshot();
 
         // reference: same rng stream, explicit dense gradients
@@ -194,7 +200,7 @@ mod tests {
         let mut rng = Pcg32::new(1, 1);
         let mut scratch = WorkerScratch::new(obj.dim());
         let delays = DelayStats::new();
-        run_inner_loop(&obj, &shared, &w0, &eg, 0.2, 400, &mut rng, &mut scratch, &delays);
+        run_inner_loop(&obj, &shared, &w0, &eg, 0.2, 400, &mut rng, &mut scratch, &delays, 1);
         let f1 = obj.loss(&shared.snapshot());
         assert!(f1 < f0, "f went {f0} -> {f1}");
     }
@@ -210,7 +216,7 @@ mod tests {
         let delays = DelayStats::new();
         let mut acc = vec![0.0f32; obj.dim()];
         run_inner_loop_averaging(
-            &obj, &shared, &w0, &eg, 0.05, 10, &mut rng, &mut scratch, &delays, &mut acc,
+            &obj, &shared, &w0, &eg, 0.05, 10, &mut rng, &mut scratch, &delays, &mut acc, 1,
         );
         // first read is of w0 = 0, so acc magnitude stays small but nonzero
         assert!(acc.iter().any(|&x| x != 0.0));
@@ -245,7 +251,7 @@ mod tests {
                         let mut rng = Pcg32::for_thread(9, t);
                         let mut scratch = WorkerScratch::new(obj.dim());
                         run_inner_loop(
-                            obj, shared, w0, eg, 0.1, iters, &mut rng, &mut scratch, delays,
+                            obj, shared, w0, eg, 0.1, iters, &mut rng, &mut scratch, delays, 1,
                         );
                     });
                 }

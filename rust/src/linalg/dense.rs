@@ -1,37 +1,57 @@
 //! Dense f32 vector kernels for the L3 hot path.
 //!
-//! These are the BLAS-1 primitives the inner loop leans on. They are written
-//! as 4-way unrolled scalar loops — on this host LLVM auto-vectorizes them
-//! to SSE/AVX; the unrolling breaks the fp-add dependence chain so the
-//! reductions pipeline (measured in `benches/bench_micro.rs`).
+//! These are the BLAS-1 primitives the inner loop leans on. The default
+//! build keeps the original 4-way unrolled scalar loops — on this host LLVM
+//! auto-vectorizes them to SSE/AVX; the unrolling breaks the fp-add
+//! dependence chain so the reductions pipeline (measured in
+//! `benches/bench_micro.rs`). With `--features simd` the reduction and
+//! elementwise entry points dispatch to the 8-lane kernels in
+//! [`crate::linalg::simd`] instead (DESIGN.md §12); the elementwise ones
+//! are bit-identical either way, the dot reassociates within the
+//! 1-ulp-per-accumulation envelope documented there.
 
-/// dot(x, y) with four independent accumulators.
+/// dot(x, y) with four independent accumulators (default build) or the
+/// 8-lane `simd::dot_lanes` kernel (`--features simd`).
 #[inline]
 pub fn dot(x: &[f32], y: &[f32]) -> f32 {
-    debug_assert_eq!(x.len(), y.len());
-    let n = x.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += x[i] * y[i];
-        s1 += x[i + 1] * y[i + 1];
-        s2 += x[i + 2] * y[i + 2];
-        s3 += x[i + 3] * y[i + 3];
+    #[cfg(feature = "simd")]
+    {
+        crate::linalg::simd::dot_lanes(x, y)
     }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for i in chunks * 4..n {
-        s += x[i] * y[i];
+    #[cfg(not(feature = "simd"))]
+    {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for c in 0..chunks {
+            let i = c * 4;
+            s0 += x[i] * y[i];
+            s1 += x[i + 1] * y[i + 1];
+            s2 += x[i + 2] * y[i + 2];
+            s3 += x[i + 3] * y[i + 3];
+        }
+        let mut s = (s0 + s1) + (s2 + s3);
+        for i in chunks * 4..n {
+            s += x[i] * y[i];
+        }
+        s
     }
-    s
 }
 
-/// y += a * x.
+/// y += a * x. Elementwise, so the lane dispatch is bit-identical.
 #[inline]
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += a * *xi;
+    #[cfg(feature = "simd")]
+    {
+        crate::linalg::simd::axpy_lanes(a, x, y)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        debug_assert_eq!(x.len(), y.len());
+        for (yi, xi) in y.iter_mut().zip(x.iter()) {
+            *yi += a * *xi;
+        }
     }
 }
 
@@ -84,9 +104,16 @@ pub fn copy(src: &[f32], dst: &mut [f32]) {
 ///   u -= η · (g − g₀ + μ̄)
 #[inline]
 pub fn fused_svrg_step(u: &mut [f32], g: &[f32], g0: &[f32], mu: &[f32], eta: f32) {
-    debug_assert!(u.len() == g.len() && g.len() == g0.len() && g0.len() == mu.len());
-    for i in 0..u.len() {
-        u[i] -= eta * (g[i] - g0[i] + mu[i]);
+    #[cfg(feature = "simd")]
+    {
+        crate::linalg::simd::fused_step_lanes(u, g, g0, mu, eta)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        debug_assert!(u.len() == g.len() && g.len() == g0.len() && g0.len() == mu.len());
+        for i in 0..u.len() {
+            u[i] -= eta * (g[i] - g0[i] + mu[i]);
+        }
     }
 }
 

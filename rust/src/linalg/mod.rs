@@ -4,6 +4,7 @@
 
 pub mod atomic_vec;
 pub mod dense;
+pub mod simd;
 pub mod sparse;
 pub mod versioned;
 

@@ -1,0 +1,315 @@
+//! Lane-width-generic kernels for the raw-speed pass (S23, DESIGN.md §12).
+//!
+//! Portable "SIMD" without intrinsics or nightly `std::simd`: each kernel is
+//! written over `[f32; LANES]` chunks so LLVM's loop vectorizer can emit
+//! SSE/AVX directly — the lane arrays give it `LANES` independent data
+//! streams, which is exactly the shape the auto-vectorizer proves safe. The
+//! kernels compile unconditionally (the differential harness in
+//! `tests/kernel_test.rs` runs against them in *every* build); the `simd`
+//! cargo feature only switches whether the public hot-path entry points in
+//! `linalg::{dense,sparse}` dispatch here or to the original scalar bodies.
+//!
+//! Two kernel classes with different parity contracts:
+//!
+//! - **Elementwise** (`axpy_lanes`, `fused_step_lanes`, `scatter_axpy_lanes`):
+//!   every output element is computed by the same scalar expression as the
+//!   reference twin, in the same order where order matters (the scatter
+//!   processes duplicate indices in row order). These are **bit-identical**
+//!   to their references by construction and the tests assert `==` on bits.
+//! - **Reductions** (`dot_lanes`, `gather_dot_lanes`): the `LANES`
+//!   accumulators reassociate the sum, so results differ from the strict
+//!   left-to-right reference by rounding. Tolerance derivation: a strict
+//!   sum of n terms t_k carries error ≤ (n−1)·ε·Σ|t_k| (each of the n−1
+//!   additions contributes at most one half-ulp of the running magnitude,
+//!   ε = `f32::EPSILON` bounds one ulp relative); the lane kernel performs
+//!   ⌈n/LANES⌉ additions per accumulator plus LANES−1 tree adds plus the
+//!   tail, also ≤ (n−1) additions against the same magnitude envelope. The
+//!   difference of the two orderings is therefore ≤ 2·(n−1)·ε·Σ|t_k| — i.e.
+//!   at most one ulp **per accumulation** on each side. `dot_tolerance`
+//!   evaluates that envelope (Σ|t_k| in f64) with a denormal floor so the
+//!   bound stays meaningful when every term is subnormal.
+//!
+//! What is deliberately *not* vectorized: the relaxed-atomic read/scatter
+//! streams of `coordinator::sparse::SparseIter`. PR 5 measured that fusing
+//! arithmetic into atomic access loops costs ~15% (see the NOTE in
+//! `coordinator::worker::dense_read`); the atomics stay scalar and the lane
+//! kernels serve the plain-slice paths (dense inner loop, epoch pass,
+//! serving readers).
+
+/// Lane width of the portable kernels. 8 × f32 = one AVX2 register; on
+/// SSE-only or NEON hosts LLVM splits each lane array into two 4-wide ops,
+/// which still pipelines the reduction chains. Runtime lane-width dispatch
+/// is a ROADMAP follow-on.
+pub const LANES: usize = 8;
+
+// ---------------------------------------------------------------------------
+// Strict scalar reference twins. These are the semantics the differential
+// harness checks against: the exact loops the pre-SIMD kernels ran (single
+// accumulator, left-to-right, in row order). They are `pub` so the harness
+// and bench_micro can call them in every build.
+// ---------------------------------------------------------------------------
+
+/// Strict left-to-right dot product — the mathematical reference ordering.
+#[inline]
+pub fn dot_ref(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut s = 0.0f32;
+    for i in 0..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// Reference y += a·x (one fma-able expression per element).
+#[inline]
+pub fn axpy_ref(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// Reference fused SVRG step: u −= η·(g − g₀ + μ̄) per element.
+#[inline]
+pub fn fused_step_ref(u: &mut [f32], g: &[f32], g0: &[f32], mu: &[f32], eta: f32) {
+    debug_assert!(u.len() == g.len() && g.len() == g0.len() && g0.len() == mu.len());
+    for i in 0..u.len() {
+        u[i] -= eta * (g[i] - g0[i] + mu[i]);
+    }
+}
+
+/// Strict sparse gather-dot: Σ_k v_k · w[j_k], left to right — byte-for-byte
+/// the loop `SparseRow::dot_dense` ran before this pass.
+#[inline]
+pub fn gather_dot_ref(indices: &[u32], values: &[f32], w: &[f32]) -> f32 {
+    debug_assert_eq!(indices.len(), values.len());
+    let mut s = 0.0f32;
+    for (k, &j) in indices.iter().enumerate() {
+        s += values[k] * w[j as usize];
+    }
+    s
+}
+
+/// Reference sparse scatter: w[j_k] += a·v_k in row order (duplicate
+/// indices accumulate in order, exactly like `SparseRow::axpy_into`).
+#[inline]
+pub fn scatter_axpy_ref(indices: &[u32], values: &[f32], a: f32, w: &mut [f32]) {
+    debug_assert_eq!(indices.len(), values.len());
+    for (k, &j) in indices.iter().enumerate() {
+        w[j as usize] += a * values[k];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lane kernels.
+// ---------------------------------------------------------------------------
+
+/// Reduce a lane accumulator with a fixed balanced tree:
+/// ((a₀+a₁)+(a₂+a₃)) + ((a₄+a₅)+(a₆+a₇)). The order is pinned so the
+/// kernel is deterministic across runs and the tolerance derivation above
+/// describes exactly this ordering.
+#[inline]
+fn tree_reduce(acc: [f32; LANES]) -> f32 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// dot(x, y) with `LANES` independent accumulators: acc[l] sums terms
+/// l, l+LANES, l+2·LANES, …; the tail (n mod LANES terms) is added strictly
+/// after the tree reduction. Breaking the single fp-add dependence chain is
+/// what unlocks both vectorization and pipelining — a strict chain retires
+/// one add per ~4 cycles regardless of ALU width.
+#[inline]
+pub fn dot_lanes(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f32; LANES];
+    let chunks = x.len() / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            acc[l] += x[base + l] * y[base + l];
+        }
+    }
+    let mut s = tree_reduce(acc);
+    for i in chunks * LANES..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// y += a·x over `LANES`-wide chunks. Elementwise — each y[i] gets the same
+/// `y[i] + a*x[i]` rounding as the reference, so the result is bit-identical
+/// in any processing order; the chunking only shapes the loop for the
+/// vectorizer.
+#[inline]
+pub fn axpy_lanes(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let chunks = x.len() / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            y[base + l] += a * x[base + l];
+        }
+    }
+    for i in chunks * LANES..x.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// Fused SVRG step u −= η·(g − g₀ + μ̄) over lane chunks; elementwise and
+/// bit-identical to `fused_step_ref` (same per-element expression).
+#[inline]
+pub fn fused_step_lanes(u: &mut [f32], g: &[f32], g0: &[f32], mu: &[f32], eta: f32) {
+    debug_assert!(u.len() == g.len() && g.len() == g0.len() && g0.len() == mu.len());
+    let chunks = u.len() / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            let i = base + l;
+            u[i] -= eta * (g[i] - g0[i] + mu[i]);
+        }
+    }
+    for i in chunks * LANES..u.len() {
+        u[i] -= eta * (g[i] - g0[i] + mu[i]);
+    }
+}
+
+/// Sparse gather-dot with `LANES` accumulators over the nnz stream. The
+/// gather itself (w[j_k]) stays scalar loads — portable code has no
+/// conflict-free gather instruction to lean on (an AVX-512 `vgatherdps`
+/// probe is a ROADMAP follow-on) — but the accumulator split still removes
+/// the serial fp-add chain, which dominates the strict kernel's latency.
+#[inline]
+pub fn gather_dot_lanes(indices: &[u32], values: &[f32], w: &[f32]) -> f32 {
+    debug_assert_eq!(indices.len(), values.len());
+    let mut acc = [0.0f32; LANES];
+    let nnz = indices.len();
+    let chunks = nnz / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            acc[l] += values[base + l] * w[indices[base + l] as usize];
+        }
+    }
+    let mut s = tree_reduce(acc);
+    for k in chunks * LANES..nnz {
+        s += values[k] * w[indices[k] as usize];
+    }
+    s
+}
+
+/// Sparse scatter w[j_k] += a·v_k, unrolled by `LANES` but applied strictly
+/// in row order: scatters with duplicate indices are load-modify-store
+/// chains, and reordering them would change both the result bits and the
+/// semantics. In-order unrolling keeps bit-identity with the reference
+/// while still letting the CPU overlap the independent (distinct-index)
+/// chains.
+#[inline]
+pub fn scatter_axpy_lanes(indices: &[u32], values: &[f32], a: f32, w: &mut [f32]) {
+    debug_assert_eq!(indices.len(), values.len());
+    let nnz = indices.len();
+    let chunks = nnz / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            let k = base + l;
+            w[indices[k] as usize] += a * values[k];
+        }
+    }
+    for k in chunks * LANES..nnz {
+        w[indices[k] as usize] += a * values[k];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tolerance envelopes for the reassociated reductions (derivation in the
+// module docs: |lanes − ref| ≤ 2·(n−1)·ε·Σ|t_k|).
+// ---------------------------------------------------------------------------
+
+/// Allowed |dot_lanes − dot_ref| for the given inputs. The term-magnitude
+/// sum Σ|x_i·y_i| is taken in f64 so the envelope itself carries no f32
+/// rounding; `f32::MIN_POSITIVE` floors the bound when every term is
+/// subnormal (ε·Σ|t_k| underflows to 0 there, but each accumulation can
+/// still be off by one denormal ulp).
+pub fn dot_tolerance(x: &[f32], y: &[f32]) -> f32 {
+    let sum_abs: f64 =
+        x.iter().zip(y.iter()).map(|(&a, &b)| (a as f64 * b as f64).abs()).sum();
+    let n = x.len().max(1) as f64;
+    (2.0 * (n - 1.0) * f32::EPSILON as f64 * sum_abs) as f32 + f32::MIN_POSITIVE
+}
+
+/// Same envelope for the sparse gather-dot (terms v_k·w[j_k]).
+pub fn gather_dot_tolerance(indices: &[u32], values: &[f32], w: &[f32]) -> f32 {
+    let sum_abs: f64 = indices
+        .iter()
+        .zip(values.iter())
+        .map(|(&j, &v)| (v as f64 * w[j as usize] as f64).abs())
+        .sum();
+    let n = indices.len().max(1) as f64;
+    (2.0 * (n - 1.0) * f32::EPSILON as f64 * sum_abs) as f32 + f32::MIN_POSITIVE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (i as f32) * 0.25 - 2.0).collect()
+    }
+
+    #[test]
+    fn dot_lanes_within_tolerance_of_ref() {
+        for n in [0, 1, 7, 8, 9, 63, 64, 65, 200] {
+            let x = seq(n);
+            let y: Vec<f32> = x.iter().map(|v| v * -1.5 + 0.3).collect();
+            let got = dot_lanes(&x, &y);
+            let want = dot_ref(&x, &y);
+            assert!(
+                (got - want).abs() <= dot_tolerance(&x, &y),
+                "n={n}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn elementwise_lanes_bit_identical() {
+        for n in [0, 1, 7, 8, 9, 65] {
+            let x = seq(n);
+            let mut y1 = seq(n);
+            let mut y2 = y1.clone();
+            axpy_lanes(0.37, &x, &mut y1);
+            axpy_ref(0.37, &x, &mut y2);
+            assert_eq!(y1, y2, "axpy n={n}");
+
+            let g = seq(n);
+            let g0: Vec<f32> = g.iter().map(|v| v * 0.3).collect();
+            let mu: Vec<f32> = g.iter().map(|v| -v * 0.7).collect();
+            let mut u1 = seq(n);
+            let mut u2 = u1.clone();
+            fused_step_lanes(&mut u1, &g, &g0, &mu, 0.05);
+            fused_step_ref(&mut u2, &g, &g0, &mu, 0.05);
+            assert_eq!(u1, u2, "fused n={n}");
+        }
+    }
+
+    #[test]
+    fn scatter_with_duplicates_bit_identical() {
+        // duplicate indices inside one lane chunk: order must be preserved
+        let idx = [3u32, 3, 3, 1, 0, 3, 1, 3, 3, 2];
+        let val = [1.0f32, 0.5, -2.0, 4.0, 1.5, 0.25, -1.0, 8.0, 0.125, 3.0];
+        let mut w1 = vec![0.5f32; 4];
+        let mut w2 = w1.clone();
+        scatter_axpy_lanes(&idx, &val, -0.3, &mut w1);
+        scatter_axpy_ref(&idx, &val, -0.3, &mut w2);
+        assert_eq!(w1, w2);
+    }
+
+    #[test]
+    fn gather_dot_within_tolerance() {
+        let idx: Vec<u32> = (0..100).map(|k| (k * 7 % 64) as u32).collect();
+        let val = seq(100);
+        let w = seq(64);
+        let got = gather_dot_lanes(&idx, &val, &w);
+        let want = gather_dot_ref(&idx, &val, &w);
+        assert!((got - want).abs() <= gather_dot_tolerance(&idx, &val, &w));
+    }
+}

@@ -13,21 +13,39 @@ impl<'a> SparseRow<'a> {
         self.indices.len()
     }
 
-    /// xᵢᵀ w against a dense vector.
+    /// xᵢᵀ w against a dense vector. With `--features simd` this dispatches
+    /// to the 8-accumulator gather-dot in [`crate::linalg::simd`]
+    /// (reassociated within the documented ulp envelope); the default build
+    /// keeps the strict left-to-right loop.
     #[inline]
     pub fn dot_dense(&self, w: &[f32]) -> f32 {
-        let mut s = 0.0f32;
-        for (k, &j) in self.indices.iter().enumerate() {
-            s += self.values[k] * w[j as usize];
+        #[cfg(feature = "simd")]
+        {
+            crate::linalg::simd::gather_dot_lanes(self.indices, self.values, w)
         }
-        s
+        #[cfg(not(feature = "simd"))]
+        {
+            let mut s = 0.0f32;
+            for (k, &j) in self.indices.iter().enumerate() {
+                s += self.values[k] * w[j as usize];
+            }
+            s
+        }
     }
 
-    /// w += a · xᵢ scatter.
+    /// w += a · xᵢ scatter. Elementwise in row order — the lane dispatch is
+    /// bit-identical (duplicate indices accumulate in the same order).
     #[inline]
     pub fn axpy_into(&self, a: f32, w: &mut [f32]) {
-        for (k, &j) in self.indices.iter().enumerate() {
-            w[j as usize] += a * self.values[k];
+        #[cfg(feature = "simd")]
+        {
+            crate::linalg::simd::scatter_axpy_lanes(self.indices, self.values, a, w)
+        }
+        #[cfg(not(feature = "simd"))]
+        {
+            for (k, &j) in self.indices.iter().enumerate() {
+                w[j as usize] += a * self.values[k];
+            }
         }
     }
 

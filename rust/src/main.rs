@@ -155,6 +155,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             .opt("algo", "asysvrg", "asysvrg|hogwild")
             .opt("scheme", "inconsistent", "consistent|inconsistent|unlock|seqlock|atomic-cas")
             .opt("threads", "10", "worker threads / simulated cores")
+            .opt("batch", "1", "fused mini-batch width b (updates per snapshot read / flush)")
             .opt("engine", "sim", "sim (simulated p cores) | threads (real OS threads)"),
     );
     let m = cmd.parse(args)?;
@@ -162,7 +163,15 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     if m.usize("threads")? == 0 {
         return Err("--threads must be >= 1".into());
     }
+    let batch = m.usize_pos("batch")?;
     let ds = data::resolve(m.str("dataset"), env.scale, env.seed)?;
+    if batch > ds.n() {
+        return Err(format!(
+            "--batch {batch} exceeds the dataset size n = {} — a fused batch samples \
+             with replacement per update, but a width beyond n cannot be what you meant",
+            ds.n()
+        ));
+    }
     println!("{}", ds.describe());
     let obj = Objective::paper(ds);
     let cfg = RunConfig {
@@ -176,6 +185,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         seed: env.seed,
         scale: env.scale,
         storage: env.storage,
+        batch,
         ..Default::default()
     };
     println!("{}", cfg.describe());
@@ -477,12 +487,14 @@ fn cmd_sched(args: &[String]) -> Result<(), String> {
         .opt("seed-base", "1", "base seed for --fuzz case generation")
         .opt("replay", "", "re-execute a printed SCHED_REPLAY line bit-exactly")
         .opt("seeds", "42,1337,2024", "gate seeds (comma list)")
-        .opt("threads", "4", "virtual workers per schedule");
+        .opt("threads", "4", "virtual workers per schedule")
+        .opt("batch", "1", "fused mini-batch width b for the summary table");
     let m = cmd.parse(args)?;
     let threads = m.usize("threads")?;
     if threads == 0 {
         return Err("--threads must be >= 1".into());
     }
+    let batch = m.usize_pos("batch")?;
     let seeds: Vec<u64> = m
         .str("seeds")
         .split(',')
@@ -547,6 +559,7 @@ fn cmd_sched(args: &[String]) -> Result<(), String> {
     for policy in sched::Policy::all() {
         let mut cfg = sched::SchedConfig::gate_default(policy, seed);
         cfg.threads = threads;
+        cfg.batch = batch;
         let rep = sched::run_schedule(&cfg)?;
         rep.check().map_err(|e| format!("{e}\n  replay: {}", rep.replay))?;
         worst_tau = worst_tau.max(rep.max_staleness);

@@ -42,7 +42,9 @@ use crate::coordinator::epoch::{
 };
 use crate::coordinator::monitor::{HistoryPoint, RunResult};
 use crate::coordinator::shared::SharedParams;
-use crate::coordinator::sparse::{run_hogwild_inner_sparse, run_inner_loop_sparse, LazyState};
+use crate::coordinator::sparse::{
+    run_hogwild_inner_sparse, run_inner_loop_sparse_telemetry, LazyState,
+};
 use crate::coordinator::step::WorkerStep;
 use crate::coordinator::telemetry::ContentionStats;
 use crate::coordinator::worker::{run_inner_loop, run_inner_loop_averaging, WorkerScratch};
@@ -105,6 +107,11 @@ pub struct SchedConfig {
     pub storage: Storage,
     pub algo: SchedAlgo,
     pub eta: f32,
+    /// Fused mini-batch width b (1 = unbatched). Batched SVRG workers have
+    /// different yield-point shapes (DESIGN.md §12): mid-batch dense reads
+    /// are no-ops against the local mirror, mid-batch locked sparse updates
+    /// skip the acquire segment inside the held session.
+    pub batch: usize,
 }
 
 impl SchedConfig {
@@ -123,6 +130,7 @@ impl SchedConfig {
             storage: Storage::Sparse,
             algo: SchedAlgo::Svrg1,
             eta: 0.2,
+            batch: 1,
         }
     }
 }
@@ -395,16 +403,19 @@ pub fn run_schedule_on(obj: &Objective, cfg: &SchedConfig) -> ScheduleReport {
             (Storage::Sparse, SchedAlgo::Svrg1 | SchedAlgo::Svrg2) => {
                 let lz = lazy.as_ref().expect("sparse path has lazy state");
                 for rng in rngs.iter_mut() {
-                    steps.push(WorkerStep::sparse_svrg(
-                        obj,
-                        &shared,
-                        lz,
-                        &eg,
-                        cfg.iters,
-                        rng,
-                        &delays,
-                        Some(&telem),
-                    ));
+                    steps.push(
+                        WorkerStep::sparse_svrg(
+                            obj,
+                            &shared,
+                            lz,
+                            &eg,
+                            cfg.iters,
+                            rng,
+                            &delays,
+                            Some(&telem),
+                        )
+                        .with_batch(cfg.batch),
+                    );
                 }
             }
             (Storage::Sparse, SchedAlgo::Hogwild) => {
@@ -423,28 +434,34 @@ pub fn run_schedule_on(obj: &Objective, cfg: &SchedConfig) -> ScheduleReport {
             }
             (Storage::Dense, SchedAlgo::Svrg1) => {
                 for (rng, scratch) in rngs.iter_mut().zip(scratches.iter_mut()) {
-                    steps.push(WorkerStep::dense_svrg(
-                        obj, &shared, &w0, &eg, cfg.eta, cfg.iters, rng, scratch, &delays,
-                        None,
-                    ));
+                    steps.push(
+                        WorkerStep::dense_svrg(
+                            obj, &shared, &w0, &eg, cfg.eta, cfg.iters, rng, scratch, &delays,
+                            None,
+                        )
+                        .with_batch(cfg.batch),
+                    );
                 }
             }
             (Storage::Dense, SchedAlgo::Svrg2) => {
                 for ((rng, scratch), acc) in
                     rngs.iter_mut().zip(scratches.iter_mut()).zip(accs.iter_mut())
                 {
-                    steps.push(WorkerStep::dense_svrg(
-                        obj,
-                        &shared,
-                        &w0,
-                        &eg,
-                        cfg.eta,
-                        cfg.iters,
-                        rng,
-                        scratch,
-                        &delays,
-                        Some(acc.as_mut_slice()),
-                    ));
+                    steps.push(
+                        WorkerStep::dense_svrg(
+                            obj,
+                            &shared,
+                            &w0,
+                            &eg,
+                            cfg.eta,
+                            cfg.iters,
+                            rng,
+                            scratch,
+                            &delays,
+                            Some(acc.as_mut_slice()),
+                        )
+                        .with_batch(cfg.batch),
+                    );
                 }
             }
             (Storage::Dense, SchedAlgo::Hogwild) => {
@@ -579,7 +596,9 @@ pub fn run_phase_timed_on(obj: &Objective, cfg: &SchedConfig) -> TimedPhase {
             let (shared, eg, delays) = (&shared, &eg, &delays);
             pool.run_phase(p, |a| {
                 let mut rng = Pcg32::for_thread(cfg.seed, a);
-                run_inner_loop_sparse(obj, shared, lz, eg, cfg.iters, &mut rng, delays);
+                run_inner_loop_sparse_telemetry(
+                    obj, shared, lz, eg, cfg.iters, &mut rng, delays, None, cfg.batch,
+                );
             });
         }
         (Storage::Sparse, SchedAlgo::Hogwild) => {
@@ -606,6 +625,7 @@ pub fn run_phase_timed_on(obj: &Objective, cfg: &SchedConfig) -> TimedPhase {
                     &mut rng,
                     &mut scratch,
                     delays,
+                    cfg.batch,
                 );
             });
         }
@@ -629,6 +649,7 @@ pub fn run_phase_timed_on(obj: &Objective, cfg: &SchedConfig) -> TimedPhase {
                         scratch,
                         delays,
                         acc,
+                        cfg.batch,
                     );
                 });
             }
@@ -778,6 +799,7 @@ fn virtual_asysvrg(
                                 &delays,
                                 None,
                             )
+                            .with_batch(cfg.batch)
                         })
                         .collect();
                     drive(&mut steps, &mut chooser, head, None);
@@ -803,6 +825,7 @@ fn virtual_asysvrg(
                             &delays,
                             None,
                         )
+                        .with_batch(cfg.batch)
                     })
                     .collect();
                 drive(&mut steps, &mut chooser, head, None);
@@ -814,18 +837,21 @@ fn virtual_asysvrg(
                         rngs.iter_mut().zip(scratches.iter_mut()).zip(accs.iter_mut())
                     {
                         acc.fill(0.0);
-                        steps.push(WorkerStep::dense_svrg(
-                            obj,
-                            &shared,
-                            &w,
-                            &eg,
-                            cfg.eta,
-                            m_per_thread,
-                            rng,
-                            scratch,
-                            &delays,
-                            Some(acc.as_mut_slice()),
-                        ));
+                        steps.push(
+                            WorkerStep::dense_svrg(
+                                obj,
+                                &shared,
+                                &w,
+                                &eg,
+                                cfg.eta,
+                                m_per_thread,
+                                rng,
+                                scratch,
+                                &delays,
+                                Some(acc.as_mut_slice()),
+                            )
+                            .with_batch(cfg.batch),
+                        );
                     }
                     drive(&mut steps, &mut chooser, head, None);
                 }
@@ -1191,6 +1217,47 @@ pub fn run_gate(seeds: &[u64], threads: usize) -> Result<Json, String> {
         spot_rows.push(rep.to_json());
     }
 
+    // fused mini-batch coverage (DESIGN.md §12): the batched yield-point
+    // shapes — mid-batch dense reads against the local mirror, locked
+    // sparse sessions held across b updates — run under the same
+    // deterministic multi-thread schedules and structural checks as the
+    // unbatched grid, so the race gate covers batching.
+    let batch_spots = [
+        (Scheme::Unlock, Storage::Sparse, SchedAlgo::Svrg1, 4usize),
+        (Scheme::Consistent, Storage::Sparse, SchedAlgo::Svrg1, 4),
+        (Scheme::Unlock, Storage::Dense, SchedAlgo::Svrg1, 3),
+    ];
+    let mut batch_rows = Vec::new();
+    for (scheme, storage, algo, batch) in batch_spots {
+        let mut cfg = SchedConfig::gate_default(Policy::SeededRandom, seeds[0]);
+        cfg.threads = threads;
+        cfg.scheme = scheme;
+        cfg.storage = storage;
+        cfg.algo = algo;
+        cfg.iters = 60;
+        cfg.batch = batch;
+        let rep = run_checked(&obj, &cfg, "gate")?;
+        batch_rows.push(rep.to_json());
+    }
+    // batched p = 1 parity: the virtual executor's fused path must match
+    // the threaded fused path bit for bit (iters deliberately not a
+    // multiple of batch — the partial final batch is covered too)
+    {
+        let mut cfg = SchedConfig::gate_default(Policy::RoundRobin, seeds[0]);
+        cfg.threads = 1;
+        cfg.iters = 100;
+        cfg.batch = 3;
+        let virt = run_schedule_on(&obj, &cfg);
+        let timed = run_phase_timed_on(&obj, &cfg);
+        if virt.final_w != timed.final_w || virt.avg != timed.avg {
+            return Err(sched_fail(
+                "gate",
+                &virt,
+                "batched p=1 parity broken: virtual fused path differs bitwise from the threaded fused path",
+            ));
+        }
+    }
+
     // p = 1: the virtual executor IS the sequential path, bit for bit
     let mut parity_rows = Vec::new();
     for (storage, algo) in [(Storage::Sparse, SchedAlgo::Svrg1), (Storage::Dense, SchedAlgo::Svrg2)]
@@ -1248,6 +1315,7 @@ pub fn run_gate(seeds: &[u64], threads: usize) -> Result<Json, String> {
         ("seeds", Json::Arr(seeds.iter().map(|&s| Json::Num(s as f64)).collect())),
         ("seed_runs", Json::Arr(seed_rows)),
         ("determinism_spots", Json::Arr(spot_rows)),
+        ("batched", Json::Arr(batch_rows)),
         ("parity", Json::Arr(parity_rows)),
         (
             "theory",
@@ -1298,6 +1366,9 @@ pub fn run_fuzz(cases: usize, seed_base: u64, max_threads: usize) -> Result<Json
         cfg.algo = SchedAlgo::all()[g.below(3)];
         cfg.threads = 2 + g.below(max_threads.saturating_sub(1).max(1));
         cfg.iters = 40 + g.below(111);
+        // batch-biased toward 1 (the common shape), with fused widths that
+        // do and do not divide the budget
+        cfg.batch = [1, 1, 2, 3, 4][g.below(5)];
         let rep = run_checked(&obj, &cfg, "fuzz")?;
         rows.push(rep.to_json());
     }

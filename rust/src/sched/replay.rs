@@ -21,7 +21,7 @@ use crate::config::{Scheme, Storage};
 /// inverts this exactly; both sides live here so they cannot drift.
 pub fn replay_line(cfg: &SchedConfig) -> String {
     format!(
-        "SCHED_REPLAY policy={} seed={} threads={} iters={} scheme={} storage={} algo={} eta={} dataset={} scale={}",
+        "SCHED_REPLAY policy={} seed={} threads={} iters={} scheme={} storage={} algo={} eta={} dataset={} scale={} batch={}",
         cfg.policy.name(),
         cfg.seed,
         cfg.threads,
@@ -32,6 +32,7 @@ pub fn replay_line(cfg: &SchedConfig) -> String {
         cfg.eta,
         cfg.dataset,
         cfg.scale,
+        cfg.batch,
     )
 }
 
@@ -64,6 +65,11 @@ pub fn parse_replay_line(line: &str) -> Result<SchedConfig, String> {
             "scale" => {
                 cfg.scale = v.parse().map_err(|_| format!("replay line: bad scale '{v}'"))?
             }
+            // Additive token: old replay lines without `batch=` still parse
+            // (gate_default seeds batch = 1, the pre-fusion behaviour).
+            "batch" => {
+                cfg.batch = v.parse().map_err(|_| format!("replay line: bad batch '{v}'"))?
+            }
             _ => return Err(format!("replay line: unknown key '{k}'")),
         }
     }
@@ -72,6 +78,9 @@ pub fn parse_replay_line(line: &str) -> Result<SchedConfig, String> {
     }
     if cfg.threads == 0 || cfg.iters == 0 {
         return Err("replay line: threads and iters must be >= 1".into());
+    }
+    if cfg.batch == 0 {
+        return Err("replay line: batch must be >= 1".into());
     }
     Ok(cfg)
 }
@@ -100,6 +109,7 @@ mod tests {
         cfg.storage = Storage::Dense;
         cfg.algo = SchedAlgo::Svrg2;
         cfg.eta = 0.125; // dyadic: formats/parses exactly
+        cfg.batch = 3;
         let line = replay_line(&cfg);
         let back = parse_replay_line(&line).unwrap();
         assert_eq!(replay_line(&back), line);
@@ -113,6 +123,13 @@ mod tests {
         assert_eq!(back.eta, cfg.eta);
         assert_eq!(back.dataset, cfg.dataset);
         assert_eq!(back.scale, cfg.scale);
+        assert_eq!(back.batch, cfg.batch);
+    }
+
+    #[test]
+    fn old_lines_without_batch_default_to_one() {
+        let back = parse_replay_line("threads=2 iters=10").unwrap();
+        assert_eq!(back.batch, 1);
     }
 
     #[test]
@@ -122,5 +139,6 @@ mod tests {
         assert!(parse_replay_line("policy=warp-speed").is_err());
         assert!(parse_replay_line("frobnicate=1").is_err());
         assert!(parse_replay_line("threads=0 iters=5").is_err());
+        assert!(parse_replay_line("threads=2 iters=5 batch=0").is_err());
     }
 }

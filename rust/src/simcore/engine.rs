@@ -84,6 +84,14 @@ pub struct EngineOpts {
     /// sim drivers via `CostModel::epoch_setup_cost`; the inner-loop
     /// event schedule itself is identical either way.
     pub runtime: RuntimeDispatch,
+    /// Fused mini-batch width b (0 is normalized to 1): each core bills the
+    /// snapshot read — and, under a read-locking scheme, the lock
+    /// acquisition — only on the first update of every b, mirroring its own
+    /// updates into the pinned snapshot in between, exactly like the fused
+    /// `coordinator::step` path. At p = 1 the trajectory is bit-identical
+    /// to b = 1 (the mirror equals the shared vector when nobody else
+    /// writes); only the billed time shrinks.
+    pub batch: usize,
 }
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -244,6 +252,7 @@ pub fn simulate_inner_opts(
     let row_nnz = |i: usize| obj.data.row(i).nnz();
     let read_dur = |i: usize| bill.read_ns(row_nnz(i));
     let update_dur = |i: usize, writers: usize| bill.update_ns(row_nnz(i), writers);
+    let batch = opts.batch.max(1);
 
     let push = |heap: &mut BinaryHeap<Event>, seq: &mut u64, time: f64, tid: usize, phase: Phase| {
         *seq += 1;
@@ -260,6 +269,20 @@ pub fn simulate_inner_opts(
             let now = $now;
             if threads[tid].iters_done == iters_per_thread {
                 finished += 1;
+            } else if threads[tid].iters_done % batch != 0 {
+                // mid-batch: no shared read, no read lock. The snapshot is
+                // advanced by this core's own just-applied step (the local
+                // mirror of the fused path); read_clock stays pinned at the
+                // batch start, so recorded delays widen with b.
+                let th = &mut threads[tid];
+                th.cur_i = th.rng.below(n);
+                for j in 0..d {
+                    th.u_hat[j] -= eta * th.v[j];
+                }
+                let i = th.cur_i;
+                let dur =
+                    bill.compute_ns(row_nnz(i), matches!(task, SimTask::Svrg { .. })) * speed(tid);
+                push(&mut heap, &mut seq, now + dur, tid, Phase::ComputeDone);
             } else {
                 threads[tid].cur_i = threads[tid].rng.below(n);
                 let dur = read_dur(threads[tid].cur_i) * speed(tid);
@@ -491,7 +514,7 @@ mod tests {
         let mut rng = Pcg32::for_thread(7, 0);
         let mut scratch = WorkerScratch::new(o.dim());
         let dl = DelayStats::new();
-        run_inner_loop(&o, &shared, &w0, &eg, 0.05, 50, &mut rng, &mut scratch, &dl);
+        run_inner_loop(&o, &shared, &w0, &eg, 0.05, 50, &mut rng, &mut scratch, &dl, 1);
         let real = shared.snapshot();
         for j in 0..o.dim() {
             assert!((u[j] - real[j]).abs() < 1e-6, "coord {j}: sim {} real {}", u[j], real[j]);
@@ -666,6 +689,63 @@ mod tests {
         };
         let (flat, mild, steep) = (per_update(0.0), per_update(0.9), per_update(1.6));
         assert!(flat < mild && mild < steep, "{flat} !< {mild} !< {steep}");
+    }
+
+    // ------------------------------------------------------ fused batches
+
+    /// p = 1: the mirror equals the shared vector, so a fused batch is
+    /// bit-identical to the unbatched run — only the billed reads vanish.
+    #[test]
+    fn batched_p1_bit_identical_and_cheaper() {
+        let o = obj();
+        let w0 = vec![0.0f32; o.dim()];
+        let eg = parallel_full_grad(&o, &w0, 1);
+        let costs = CostModel::default_host();
+        let task = SimTask::Svrg { u0: &w0, eg: &eg };
+        let run = |b: usize| {
+            let opts = EngineOpts { batch: b, ..Default::default() };
+            let mut u = w0.clone();
+            let r = simulate_inner_opts(&o, &task, Scheme::Unlock, &costs, &mut u, 0.05, 1, 51, 7, &opts);
+            (u, r.elapsed_ns)
+        };
+        let (u1, t1) = run(1);
+        let (u4, t4) = run(4); // 51 % 4 != 0: partial final batch covered
+        assert_eq!(u1, u4, "p=1 fused batch must not change the trajectory");
+        assert!(t4 < t1, "batched billing should drop read time: {t4} !< {t1}");
+        // batch 0 is normalized to 1
+        let (u0b, t0b) = run(0);
+        assert_eq!(u0b, u1);
+        assert_eq!(t0b, t1);
+    }
+
+    /// p > 1: batching pins the snapshot across b updates, so recorded
+    /// staleness widens while the schedule still drains deterministically.
+    #[test]
+    fn batched_multicore_widens_staleness_deterministically() {
+        let o = obj();
+        let w0 = vec![0.0f32; o.dim()];
+        let eg = parallel_full_grad(&o, &w0, 1);
+        let costs = CostModel::default_host();
+        let task = SimTask::Svrg { u0: &w0, eg: &eg };
+        let run = |b: usize| {
+            let opts = EngineOpts { batch: b, ..Default::default() };
+            let mut u = w0.clone();
+            let r = simulate_inner_opts(&o, &task, Scheme::Unlock, &costs, &mut u, 0.05, 4, 100, 7, &opts);
+            (u, r)
+        };
+        let (ua, ra) = run(3);
+        let (ub, rb) = run(3);
+        assert_eq!(ua, ub, "deterministic");
+        assert_eq!(ra.elapsed_ns, rb.elapsed_ns);
+        assert_eq!(ra.updates, 400);
+        let (_, r1) = run(1);
+        assert!(
+            ra.max_delay >= r1.max_delay,
+            "pinned snapshots cannot shrink staleness: {} < {}",
+            ra.max_delay,
+            r1.max_delay
+        );
+        assert!(o.loss(&ua) < o.loss(&w0), "batched run should still make progress");
     }
 
     // ------------------------------------------------------ window model

@@ -154,7 +154,7 @@ fn sim_asysvrg(obj: &Objective, cfg: &RunConfig, costs: &CostModel, fstar: f64) 
     // it once and charge per epoch; likewise the boundary setup (2 parallel
     // phases per AsySVRG epoch: full-gradient pass + inner loop)
     let epoch_phase_ns = full_grad_phase_ns(obj, p, costs, cfg.storage);
-    let opts = EngineOpts { storage: cfg.storage, ..Default::default() };
+    let opts = EngineOpts { storage: cfg.storage, batch: cfg.batch, ..Default::default() };
     let epoch_setup_ns = costs.epoch_setup_cost(p, d, 2, opts.runtime);
 
     for t in 0..cfg.epochs {

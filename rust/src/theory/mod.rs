@@ -187,6 +187,38 @@ pub fn max_feasible_tau(
     best
 }
 
+/// Batched variant of [`max_feasible_tau`]: with a fused mini-batch of
+/// width b, a worker pins its snapshot for b consecutive updates, so a raw
+/// scheduling delay of τ updates is seen by the analysis as a staleness of
+/// up to τ·b (every in-flight update the snapshot misses is itself b-wide
+/// in the worst case). We therefore certify feasibility of the *scaled*
+/// delay: the scan accepts τ only while the theorem still gives α < 1 at
+/// τ·b. At b = 1 this is definitionally `max_feasible_tau`; since the
+/// feasible set of the theorem is downward-closed in delay (α grows with
+/// the ρ^τ amplification), the answer is monotone non-increasing in b.
+pub fn max_feasible_tau_batched(
+    mu: f64,
+    l: f64,
+    eta: f64,
+    m_tilde: u64,
+    b: usize,
+    theorem: fn(&RateParams) -> Option<RateReport>,
+) -> Option<u32> {
+    let b = b.max(1) as u64;
+    let mut best = None;
+    for tau in 0..=512u32 {
+        // saturate rather than wrap: a scaled delay beyond u32 is far past
+        // any feasible region anyway and must read as "huge", not "tiny"
+        let scaled = u32::try_from(tau as u64 * b).unwrap_or(u32::MAX);
+        let p = RateParams { mu, l, eta, tau: scaled, m_tilde };
+        match theorem(&p) {
+            Some(rep) if rep.alpha < 1.0 => best = Some(tau),
+            _ => break,
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -256,6 +288,46 @@ mod tests {
         // must itself admit the τ it was searched at
         let eta = max_feasible_eta(1e-2, 0.2501, 8, 40_000, theorem1_alpha).unwrap();
         assert!(max_feasible_tau(1e-2, 0.2501, eta, 40_000, theorem1_alpha).unwrap() >= 8);
+    }
+
+    #[test]
+    fn batched_tau_reduces_to_unbatched_at_b1() {
+        for (eta, thm) in [
+            (0.02, theorem1_alpha as fn(&RateParams) -> Option<RateReport>),
+            (0.2, theorem1_alpha),
+            (0.02, theorem2_alpha),
+        ] {
+            assert_eq!(
+                max_feasible_tau_batched(1e-2, 0.2501, eta, 40_000, 1, thm),
+                max_feasible_tau(1e-2, 0.2501, eta, 40_000, thm),
+                "b=1 must be the identity (eta={eta})"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_tau_monotone_non_increasing_in_b() {
+        let taus: Vec<Option<u32>> = [1usize, 2, 4, 8, 16]
+            .iter()
+            .map(|&b| max_feasible_tau_batched(1e-2, 0.2501, 0.02, 40_000, b, theorem1_alpha))
+            .collect();
+        assert!(taus[0].unwrap() >= 1, "b=1 should tolerate some staleness");
+        for w in taus.windows(2) {
+            let (a, b) = (w[0].unwrap_or(0), w[1].unwrap_or(0));
+            assert!(a >= b, "feasible tau must not grow with batch width: {taus:?}");
+        }
+        // a genuinely wide batch eats real delay budget at this step size
+        let t1 = max_feasible_tau_batched(1e-2, 0.2501, 0.2, 40_000, 1, theorem1_alpha);
+        let t8 = max_feasible_tau_batched(1e-2, 0.2501, 0.2, 40_000, 8, theorem1_alpha);
+        assert!(t8.unwrap_or(0) <= t1.unwrap_or(0));
+    }
+
+    #[test]
+    fn batched_tau_treats_b0_as_b1() {
+        assert_eq!(
+            max_feasible_tau_batched(1e-2, 0.2501, 0.02, 40_000, 0, theorem1_alpha),
+            max_feasible_tau(1e-2, 0.2501, 0.02, 40_000, theorem1_alpha),
+        );
     }
 
     #[test]

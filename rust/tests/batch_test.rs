@@ -1,0 +1,204 @@
+//! Fused mini-batch equivalence suite (DESIGN.md §12).
+//!
+//! The fused inner step (`--batch b`) amortizes one snapshot read and one
+//! flush across b examples. Its correctness contract is exact, not
+//! approximate: at p = 1 every update still applies the same IEEE
+//! expression to the same operands as b sequential b = 1 steps — the dense
+//! path mirrors each write into the pinned snapshot via
+//! `u_hat[j] + (−η)·v[j]`, which is bit-identical to what a fresh read
+//! would have returned, and the sparse path pins `batch_now` and offsets
+//! it by the in-batch position, which at one thread equals the clock a
+//! fresh load would observe. So the whole trajectory — final w, loss
+//! history, update accounting — must be **bit-identical** to the
+//! unbatched run, for every storage × option × scheme combination,
+//! including partial final batches (M mod b ≠ 0).
+//!
+//! At p > 1 exact equality is impossible (the schedule itself changes);
+//! there the virtual scheduler pins determinism and the yield-point
+//! structure instead.
+
+use asysvrg::config::{RunConfig, Scheme, Storage};
+use asysvrg::coordinator::{run_asysvrg, SvrgOption};
+use asysvrg::data::synthetic::SyntheticSpec;
+use asysvrg::objective::{LossKind, Objective};
+use asysvrg::propcheck::{forall_res, Gen};
+use asysvrg::sched::{self, Policy, SchedAlgo, SchedConfig};
+use std::sync::Arc;
+
+fn small_obj(n: usize, d: usize, nnz: usize, seed: u64) -> Objective {
+    let ds = SyntheticSpec::new("batch-t", n, d, nnz, seed).generate();
+    Objective::new(Arc::new(ds), 1e-2, LossKind::Logistic)
+}
+
+fn cfg_p1(storage: Storage, scheme: Scheme, batch: usize) -> RunConfig {
+    RunConfig {
+        threads: 1,
+        scheme,
+        eta: 0.2,
+        epochs: 2,
+        target_gap: 0.0, // fixed epoch budget so trajectories line up
+        storage,
+        seed: 7,
+        batch,
+        ..Default::default()
+    }
+}
+
+/// The headline guarantee over the full grid: storage × option × scheme,
+/// fused widths 2 and 3 (3 leaves a partial final batch for most M).
+#[test]
+fn fused_batch_bit_identical_to_sequential_at_p1() {
+    let obj = small_obj(96, 64, 6, 11);
+    for storage in [Storage::Dense, Storage::Sparse] {
+        for option in [SvrgOption::CurrentIterate, SvrgOption::Average] {
+            for scheme in [
+                Scheme::Unlock,
+                Scheme::Consistent,
+                Scheme::Inconsistent,
+                Scheme::Seqlock,
+                Scheme::AtomicCas,
+            ] {
+                let base = run_asysvrg(&obj, &cfg_p1(storage, scheme, 1), option, f64::NEG_INFINITY);
+                for b in [2usize, 3] {
+                    let fused =
+                        run_asysvrg(&obj, &cfg_p1(storage, scheme, b), option, f64::NEG_INFINITY);
+                    assert_eq!(
+                        fused.final_w, base.final_w,
+                        "{storage:?}/{option:?}/{scheme:?} b={b}: final w diverged"
+                    );
+                    assert_eq!(
+                        fused.total_updates, base.total_updates,
+                        "{storage:?}/{option:?}/{scheme:?} b={b}: update count"
+                    );
+                    let fl: Vec<f64> = fused.history.iter().map(|h| h.loss).collect();
+                    let bl: Vec<f64> = base.history.iter().map(|h| h.loss).collect();
+                    assert_eq!(fl, bl, "{storage:?}/{option:?}/{scheme:?} b={b}: loss history");
+                }
+            }
+        }
+    }
+}
+
+/// Partial final batch, explicitly: M = ⌈2n⌉ per epoch at p = 1; b = 5
+/// leaves M mod 5 trailing updates that must neither be dropped nor leak a
+/// held write lock (the locked sparse schemes hold the session across the
+/// batch and must release it at end-of-phase too).
+#[test]
+fn partial_final_batch_drops_nothing_and_releases_locks() {
+    let obj = small_obj(101, 48, 5, 3); // M = 202, 202 % 5 = 2
+    for storage in [Storage::Dense, Storage::Sparse] {
+        for scheme in [Scheme::Consistent, Scheme::Seqlock, Scheme::Unlock] {
+            let base = run_asysvrg(
+                &obj,
+                &cfg_p1(storage, scheme, 1),
+                SvrgOption::Average,
+                f64::NEG_INFINITY,
+            );
+            let fused = run_asysvrg(
+                &obj,
+                &cfg_p1(storage, scheme, 5),
+                SvrgOption::Average,
+                f64::NEG_INFINITY,
+            );
+            assert_eq!(fused.final_w, base.final_w, "{storage:?}/{scheme:?} b=5 w diverged");
+            assert_eq!(
+                fused.total_updates, base.total_updates,
+                "{storage:?}/{scheme:?} b=5 dropped updates"
+            );
+        }
+    }
+}
+
+/// Property sweep: random problem shapes, steps, seeds, widths. Checks the
+/// same exact-equality contract the fixed grids pin, over the space the
+/// grids cannot enumerate.
+#[test]
+fn prop_fused_batch_equivalence() {
+    forall_res("fused batch ≡ sequential at p=1", 20, |g: &mut Gen| {
+        let n = g.usize_in(20..120);
+        let d = g.usize_in(16..128);
+        let nnz = g.usize_in(2..9);
+        let obj = small_obj(n, d, nnz, g.u64());
+        let storage = *g.choose(&[Storage::Dense, Storage::Sparse]);
+        let scheme = *g.choose(&[
+            Scheme::Unlock,
+            Scheme::Consistent,
+            Scheme::Inconsistent,
+            Scheme::Seqlock,
+            Scheme::AtomicCas,
+        ]);
+        let option = *g.choose(&[SvrgOption::CurrentIterate, SvrgOption::Average]);
+        let b = g.usize_in(2..7);
+        let mut base_cfg = cfg_p1(storage, scheme, 1);
+        base_cfg.eta = g.f32_in(0.02..0.3);
+        base_cfg.seed = g.u64();
+        base_cfg.epochs = g.usize_in(1..3);
+        let mut fused_cfg = base_cfg.clone();
+        fused_cfg.batch = b;
+        let base = run_asysvrg(&obj, &base_cfg, option, f64::NEG_INFINITY);
+        let fused = run_asysvrg(&obj, &fused_cfg, option, f64::NEG_INFINITY);
+        if fused.final_w != base.final_w {
+            return Err(format!("{storage:?}/{option:?}/{scheme:?} b={b}: w diverged"));
+        }
+        if fused.total_updates != base.total_updates {
+            return Err(format!("b={b}: update counts diverged"));
+        }
+        Ok(())
+    });
+}
+
+/// Multi-thread fused steps under the virtual scheduler: the batch changes
+/// the yield-point shape (mid-batch dense reads are pinned-snapshot no-ops;
+/// mid-batch locked-sparse updates skip the acquire segment), so drive the
+/// batched machines through every policy and assert the schedule drains
+/// deterministically with all invariants intact.
+#[test]
+fn batched_schedules_drain_deterministically_across_policies() {
+    let obj = small_obj(96, 64, 6, 5);
+    for (scheme, storage) in [
+        (Scheme::Unlock, Storage::Sparse),
+        (Scheme::Consistent, Storage::Sparse),
+        (Scheme::Unlock, Storage::Dense),
+    ] {
+        for policy in Policy::all() {
+            let mut cfg = SchedConfig::gate_default(policy, 23);
+            cfg.threads = 3;
+            cfg.iters = 25; // 25 % 3 != 0: partial batches inside the schedule
+            cfg.scheme = scheme;
+            cfg.storage = storage;
+            cfg.algo = SchedAlgo::Svrg1;
+            cfg.batch = 3;
+            let a = sched::run_schedule_on(&obj, &cfg);
+            let b = sched::run_schedule_on(&obj, &cfg);
+            a.check()
+                .unwrap_or_else(|e| panic!("{}/{scheme:?}/{storage:?}: {e}", policy.name()));
+            assert_eq!(a.fingerprint, b.fingerprint, "{}/{scheme:?}", policy.name());
+            assert_eq!(a.final_w, b.final_w, "{}/{scheme:?}", policy.name());
+            // batching must not change how many updates the schedule applies
+            let mut c1 = cfg.clone();
+            c1.batch = 1;
+            let r1 = sched::run_schedule_on(&obj, &c1);
+            assert_eq!(a.clock, r1.clock, "{}/{scheme:?} update accounting", policy.name());
+        }
+    }
+}
+
+/// Replay lines carry the batch width: a batched schedule reproduced from
+/// its printed line lands on the identical fingerprint.
+#[test]
+fn batched_replay_roundtrip_reproduces_fingerprint() {
+    let obj = small_obj(80, 48, 5, 9);
+    let mut cfg = SchedConfig::gate_default(Policy::RoundRobin, 77);
+    cfg.threads = 2;
+    cfg.iters = 20;
+    cfg.storage = Storage::Sparse;
+    cfg.scheme = Scheme::Consistent;
+    cfg.batch = 4;
+    let rep = sched::run_schedule_on(&obj, &cfg);
+    let line = sched::replay_line(&cfg);
+    assert!(line.contains("batch=4"), "replay line must carry the width: {line}");
+    let back = sched::parse_replay_line(&line).expect("replay line parses");
+    assert_eq!(back.batch, 4);
+    let rep2 = sched::run_schedule_on(&obj, &back);
+    assert_eq!(rep.fingerprint, rep2.fingerprint, "replayed batched schedule diverged");
+}

@@ -93,7 +93,7 @@ fn measured_collision_rate_monotone_in_thread_count() {
                 s.spawn(move || {
                     let mut rng = Pcg32::for_thread(29, t);
                     run_inner_loop_sparse_telemetry(
-                        obj, shared, lazy, eg, 2_000, &mut rng, delays, Some(stats),
+                        obj, shared, lazy, eg, 2_000, &mut rng, delays, Some(stats), 1,
                     );
                 });
             }

@@ -1,0 +1,311 @@
+//! Differential kernel-test harness (DESIGN.md §12).
+//!
+//! Every lane kernel in `linalg::simd` is fuzzed against its strict scalar
+//! reference twin over adversarial shapes and values. The lane kernels
+//! compile unconditionally, so this suite exercises the same code in the
+//! default build and under `--features simd`; what the feature changes is
+//! only which body the public `linalg::{dense,sparse}` entry points
+//! dispatch to — and the dispatch tests at the bottom pin those contracts
+//! in both builds.
+//!
+//! Parity contracts (derivation in `linalg::simd` module docs):
+//!
+//! - elementwise kernels (axpy, fused step, scatter) are **bit-identical**
+//!   to the references: same per-element IEEE expression, same order where
+//!   order matters (duplicate scatter indices);
+//! - reductions (dot, gather-dot) reassociate the sum across LANES
+//!   accumulators and may differ by at most one ulp per accumulation on
+//!   each side: |lanes − ref| ≤ 2·(n−1)·ε·Σ|t_k| with ε = f32::EPSILON and
+//!   Σ|t_k| evaluated in f64, floored by one denormal ulp
+//!   (`f32::MIN_POSITIVE`) so the envelope stays meaningful when every
+//!   term is subnormal.
+
+use asysvrg::linalg::dense;
+use asysvrg::linalg::simd::{
+    axpy_lanes, axpy_ref, dot_lanes, dot_ref, dot_tolerance, fused_step_lanes, fused_step_ref,
+    gather_dot_lanes, gather_dot_ref, gather_dot_tolerance, scatter_axpy_lanes, scatter_axpy_ref,
+    LANES,
+};
+use asysvrg::linalg::sparse::SparseRow;
+use asysvrg::propcheck::{forall_res, Gen};
+
+/// Adversarial lengths: empty, singleton, straddling the lane width from
+/// both sides, multi-chunk, and a random filler. Every case cycles through
+/// the pinned shapes so d = 0 / d = 1 / d ≢ 0 (mod LANES) are hit on every
+/// run, not only when the rng feels like it.
+fn adversarial_len(g: &mut Gen, case_hint: usize) -> usize {
+    const PINNED: &[usize] =
+        &[0, 1, LANES - 1, LANES, LANES + 1, 2 * LANES - 1, 3 * LANES, 65];
+    if case_hint % (PINNED.len() + 1) < PINNED.len() {
+        PINNED[case_hint % (PINNED.len() + 1)]
+    } else {
+        g.usize_in(0..200)
+    }
+}
+
+/// Adversarial f32: ±0.0, subnormals (including the smallest), exact
+/// powers of two, and ordinary values. No NaN/inf — the kernel contract is
+/// over finite inputs (the trainers never produce non-finite features).
+fn adversarial_f32(g: &mut Gen) -> f32 {
+    match g.usize_in(0..8) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => f32::MIN_POSITIVE, // smallest normal
+        3 => f32::from_bits(g.usize_in(1..0x0080_0000) as u32), // subnormal
+        4 => -f32::from_bits(g.usize_in(1..0x0080_0000) as u32),
+        5 => {
+            // exact powers of two: products/sums stay exactly representable
+            let e = g.usize_in(0..10) as i32 - 5;
+            let s = if g.bool() { 1.0f32 } else { -1.0 };
+            s * (2.0f32).powi(e)
+        }
+        _ => g.f32_in(-3.0..3.0),
+    }
+}
+
+fn adversarial_vec(g: &mut Gen, n: usize) -> Vec<f32> {
+    (0..n).map(|_| adversarial_f32(g)).collect()
+}
+
+/// Sparse index pattern that deliberately includes empty rows, singleton
+/// rows, and rows with duplicate indices (the scatter's order-sensitive
+/// case). Indices are NOT required sorted or distinct — `SparseRow` only
+/// assumes in-bounds.
+fn adversarial_indices(g: &mut Gen, dim: usize, case_hint: usize) -> Vec<u32> {
+    match case_hint % 4 {
+        0 => Vec::new(),
+        1 => vec![g.usize_in(0..dim) as u32],
+        2 => {
+            // heavy duplicates: few distinct targets, many hits each
+            let hot = g.usize_in(0..dim) as u32;
+            let nnz = g.usize_in(2..3 * LANES);
+            (0..nnz)
+                .map(|_| if g.bool() { hot } else { g.usize_in(0..dim) as u32 })
+                .collect()
+        }
+        _ => {
+            let nnz = g.usize_in(0..40);
+            (0..nnz).map(|_| g.usize_in(0..dim) as u32).collect()
+        }
+    }
+}
+
+// ------------------------------------------------------------- reductions
+
+#[test]
+fn prop_dot_lanes_within_ulp_envelope_of_ref() {
+    let mut case = 0usize;
+    forall_res("dot_lanes vs dot_ref", 300, |g| {
+        case += 1;
+        let n = adversarial_len(g, case);
+        let x = adversarial_vec(g, n);
+        let y = adversarial_vec(g, n);
+        let got = dot_lanes(&x, &y);
+        let want = dot_ref(&x, &y);
+        let tol = dot_tolerance(&x, &y);
+        if !(got - want).abs().le(&tol) {
+            return Err(format!("n={n}: lanes {got} vs ref {want}, tol {tol}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gather_dot_lanes_within_ulp_envelope_of_ref() {
+    let mut case = 0usize;
+    forall_res("gather_dot_lanes vs ref", 300, |g| {
+        case += 1;
+        let dim = g.usize_in(1..64);
+        let idx = adversarial_indices(g, dim, case);
+        let val = adversarial_vec(g, idx.len());
+        let w = adversarial_vec(g, dim);
+        let got = gather_dot_lanes(&idx, &val, &w);
+        let want = gather_dot_ref(&idx, &val, &w);
+        let tol = gather_dot_tolerance(&idx, &val, &w);
+        if !(got - want).abs().le(&tol) {
+            return Err(format!(
+                "nnz={}: lanes {got} vs ref {want}, tol {tol}",
+                idx.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// The reduction envelope must be tight enough to mean something: at n ≤
+/// LANES + 1 the lane kernel degenerates to (almost) the strict order, and
+/// an all-equal-sign stream of identical powers of two sums exactly —
+/// zero-slack cases where sloppy kernels would still pass a loose epsilon.
+#[test]
+fn dot_lanes_exact_on_exactly_representable_streams() {
+    for n in [0, 1, 2, LANES, 2 * LANES, 64] {
+        let x: Vec<f32> = vec![0.25; n];
+        let y: Vec<f32> = vec![2.0; n];
+        // 0.25·2 = 0.5 per term; up to 64 terms sums are exact in f32
+        assert_eq!(dot_lanes(&x, &y), dot_ref(&x, &y), "n={n}");
+        assert_eq!(dot_lanes(&x, &y), 0.5 * n as f32, "n={n}");
+    }
+}
+
+// ------------------------------------------------------------ elementwise
+
+#[test]
+fn prop_axpy_lanes_bit_identical_to_ref() {
+    let mut case = 0usize;
+    forall_res("axpy_lanes bit parity", 300, |g| {
+        case += 1;
+        let n = adversarial_len(g, case);
+        let a = adversarial_f32(g);
+        let x = adversarial_vec(g, n);
+        let y0 = adversarial_vec(g, n);
+        let (mut y1, mut y2) = (y0.clone(), y0);
+        axpy_lanes(a, &x, &mut y1);
+        axpy_ref(a, &x, &mut y2);
+        for i in 0..n {
+            if y1[i].to_bits() != y2[i].to_bits() {
+                return Err(format!(
+                    "n={n} a={a} i={i}: {:#010x} vs {:#010x}",
+                    y1[i].to_bits(),
+                    y2[i].to_bits()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fused_step_lanes_bit_identical_to_ref() {
+    let mut case = 0usize;
+    forall_res("fused_step_lanes bit parity", 300, |g| {
+        case += 1;
+        let n = adversarial_len(g, case);
+        let eta = adversarial_f32(g);
+        let gvec = adversarial_vec(g, n);
+        let g0 = adversarial_vec(g, n);
+        let mu = adversarial_vec(g, n);
+        let u0 = adversarial_vec(g, n);
+        let (mut u1, mut u2) = (u0.clone(), u0);
+        fused_step_lanes(&mut u1, &gvec, &g0, &mu, eta);
+        fused_step_ref(&mut u2, &gvec, &g0, &mu, eta);
+        for i in 0..n {
+            if u1[i].to_bits() != u2[i].to_bits() {
+                return Err(format!("n={n} i={i}: bits differ"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scatter_axpy_lanes_bit_identical_incl_duplicates() {
+    let mut case = 0usize;
+    forall_res("scatter_axpy_lanes bit parity", 300, |g| {
+        case += 1;
+        let dim = g.usize_in(1..48);
+        let idx = adversarial_indices(g, dim, case);
+        let val = adversarial_vec(g, idx.len());
+        let a = adversarial_f32(g);
+        let w0 = adversarial_vec(g, dim);
+        let (mut w1, mut w2) = (w0.clone(), w0);
+        scatter_axpy_lanes(&idx, &val, a, &mut w1);
+        scatter_axpy_ref(&idx, &val, a, &mut w2);
+        for j in 0..dim {
+            if w1[j].to_bits() != w2[j].to_bits() {
+                return Err(format!(
+                    "nnz={} dim={dim} j={j}: lanes {:?} ref {:?}",
+                    idx.len(),
+                    w1[j],
+                    w2[j]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// -------------------------------------------------------------- dispatch
+//
+// The public hot-path entry points must honour the same contracts in BOTH
+// builds: without `simd` they *are* the references; with `simd` they are
+// the lane kernels, whose elementwise bit-identity / reduction envelope
+// the properties above establish. Testing through the public API keeps a
+// future dispatch refactor from silently dropping either body.
+
+#[test]
+fn prop_public_dense_entry_points_honour_kernel_contracts() {
+    let mut case = 0usize;
+    forall_res("dense::{dot,axpy,fused_svrg_step} dispatch", 200, |g| {
+        case += 1;
+        let n = adversarial_len(g, case);
+        let x = adversarial_vec(g, n);
+        let y = adversarial_vec(g, n);
+        let got = dense::dot(&x, &y);
+        let want = dot_ref(&x, &y);
+        if !(got - want).abs().le(&dot_tolerance(&x, &y)) {
+            return Err(format!("dot n={n}: {got} vs {want}"));
+        }
+
+        let a = adversarial_f32(g);
+        let (mut y1, mut y2) = (y.clone(), y.clone());
+        dense::axpy(a, &x, &mut y1);
+        axpy_ref(a, &x, &mut y2);
+        if y1.iter().zip(&y2).any(|(p, q)| p.to_bits() != q.to_bits()) {
+            return Err(format!("axpy n={n}: bits differ"));
+        }
+
+        let g0 = adversarial_vec(g, n);
+        let mu = adversarial_vec(g, n);
+        let (mut u1, mut u2) = (x.clone(), x.clone());
+        dense::fused_svrg_step(&mut u1, &y, &g0, &mu, a);
+        fused_step_ref(&mut u2, &y, &g0, &mu, a);
+        if u1.iter().zip(&u2).any(|(p, q)| p.to_bits() != q.to_bits()) {
+            return Err(format!("fused_svrg_step n={n}: bits differ"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_public_sparse_entry_points_honour_kernel_contracts() {
+    let mut case = 0usize;
+    forall_res("SparseRow::{dot_dense,axpy_into} dispatch", 200, |g| {
+        case += 1;
+        let dim = g.usize_in(1..48);
+        let idx = adversarial_indices(g, dim, case);
+        let val = adversarial_vec(g, idx.len());
+        let row = SparseRow { indices: &idx, values: &val };
+        let w = adversarial_vec(g, dim);
+        let got = row.dot_dense(&w);
+        let want = gather_dot_ref(&idx, &val, &w);
+        if !(got - want).abs().le(&gather_dot_tolerance(&idx, &val, &w)) {
+            return Err(format!("dot_dense nnz={}: {got} vs {want}", idx.len()));
+        }
+
+        let a = adversarial_f32(g);
+        let (mut w1, mut w2) = (w.clone(), w);
+        row.axpy_into(a, &mut w1);
+        scatter_axpy_ref(&idx, &val, a, &mut w2);
+        if w1.iter().zip(&w2).any(|(p, q)| p.to_bits() != q.to_bits()) {
+            return Err(format!("axpy_into nnz={}: bits differ", idx.len()));
+        }
+        Ok(())
+    });
+}
+
+/// ±0.0 is preserved per IEEE through the elementwise kernels: adding
+/// a·x = 0 to y = −0.0 must keep the reference's sign behaviour
+/// (−0.0 + 0.0 = +0.0), and both twins must agree on the bits.
+#[test]
+fn signed_zero_agreement() {
+    let x = vec![0.0f32, -0.0, 1.0, -1.0, 0.0, -0.0, 2.0, -2.0, 0.0];
+    let y0 = vec![-0.0f32; 9];
+    let (mut y1, mut y2) = (y0.clone(), y0);
+    axpy_lanes(0.0, &x, &mut y1);
+    axpy_ref(0.0, &x, &mut y2);
+    let b1: Vec<u32> = y1.iter().map(|v| v.to_bits()).collect();
+    let b2: Vec<u32> = y2.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(b1, b2);
+    // and the reductions treat −0.0 terms identically
+    assert_eq!(dot_lanes(&x, &x).to_bits(), dot_ref(&x, &x).to_bits());
+}

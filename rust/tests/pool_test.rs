@@ -97,6 +97,7 @@ fn legacy_asysvrg(
                                 &mut rng,
                                 &mut scratch,
                                 delays,
+                                1,
                             );
                         });
                     }
@@ -124,6 +125,7 @@ fn legacy_asysvrg(
                                 &mut scratch,
                                 delays,
                                 &mut acc,
+                                1,
                             );
                             acc
                         }));

@@ -54,7 +54,7 @@ fn prop_sparse_updates_match_dense_updates() {
         let mut scratch = WorkerScratch::new(obj.dim());
         let delays = DelayStats::new();
         run_inner_loop(
-            &obj, &dense_shared, &w0, &eg, eta, iters, &mut rng, &mut scratch, &delays,
+            &obj, &dense_shared, &w0, &eg, eta, iters, &mut rng, &mut scratch, &delays, 1,
         );
         let dense = dense_shared.snapshot();
 
@@ -249,6 +249,7 @@ fn prop_flush_drains_clocks_and_matches_eager_reference() {
             let mut rng = Pcg32::for_thread(seed, a);
             run_inner_loop_averaging(
                 &obj, &dshared, &w0, &eg, eta, iters, &mut rng, &mut scratch, &ddelays, &mut acc,
+                1,
             );
         }
         let want_w = dshared.snapshot();
