@@ -1,0 +1,28 @@
+# Convenience targets; everything here is a thin wrapper over cargo /
+# python3, so CI and humans run the exact same commands.
+
+.PHONY: build test bench gate data clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Emits BENCH_*.json under rust/results/ (bench binaries run with
+# CWD = package root), then applies the CI thresholds locally.
+bench:
+	cargo bench --bench bench_micro
+
+gate: bench
+	python3 ci/check_bench.py --results rust/results
+
+# Download the paper's LIBSVM datasets (rcv1, real-sim, news20) into
+# data/. Optional: without them every command falls back to the
+# Table-1-shaped synthetic stand-ins, and the script exits 0 offline.
+data:
+	bash data/fetch.sh
+
+clean:
+	cargo clean
+	rm -rf rust/results

@@ -30,6 +30,13 @@ bench_micro` against the repo's performance contracts:
   bit-identical on the elementwise kernels (fingerprint equality), keep
   reductions inside the derived ulp envelope, and the fused b=4 batch
   must train bit-identical to b=1 at one thread (DESIGN.md §12).
+* numa — on a simulated 2-socket machine over Zipfian data the hot-head
+  replica sharding must beat the unsharded billing by the report's ratio
+  floor, each placement effect (cross-socket collisions, false sharing,
+  interconnect bandwidth) must bill a strictly positive delta in
+  isolation, and the real replica layer must have genuinely sharded with
+  a non-trivial head cut (DESIGN.md §13). Host-wider SIMD is a warning in
+  the simd report, never a failure here.
 
 Usage: check_bench.py [--results rust/results] [--only sparse,pool]
 
@@ -227,6 +234,43 @@ def check_simd(rep, log):
         raise GateFailure("simd bench reported overall FAIL")
 
 
+def check_numa(rep, log):
+    # thresholds live in the report so the bench and the gate can't drift
+    floor = rep["ratio_floor"]
+    log(
+        f"numa sharded speedup: {rep['sharded_speedup']:.3f}x "
+        f"(floor >= {floor:.2f}x; flat {rep['flat_sim_seconds']:.4f}s, "
+        f"all-effects {rep['numa_all_sim_seconds']:.4f}s, "
+        f"sharded {rep['sharded_sim_seconds']:.4f}s)"
+    )
+    if rep["sharded_speedup"] < floor:
+        raise GateFailure(
+            f"hot-head sharding only {rep['sharded_speedup']:.3f}x over unsharded "
+            f"(floor >= {floor:.2f}x)"
+        )
+    for effect in ("placement", "false_sharing", "bandwidth"):
+        delta = rep[f"{effect}_delta_s"]
+        log(f"  {effect} delta: {delta:+.4f} sim s")
+        if delta <= 0.0:
+            raise GateFailure(
+                f"{effect} effect billed {delta:+.4f}s in isolation (must be > 0: "
+                f"an ablatable effect that prices nothing is not modeling anything)"
+            )
+    if not rep["real_sharded"] or int(rep["real_cut"]) <= 0:
+        raise GateFailure(
+            f"real replica layer did not shard (sharded={rep['real_sharded']}, "
+            f"cut={int(rep['real_cut'])})"
+        )
+    log(
+        f"  real replica run: cut={int(rep['real_cut'])} "
+        f"replica_tau={int(rep['real_replica_tau'])} "
+        f"effective_tau={int(rep['real_effective_tau'])} "
+        f"feasible={rep['real_tau_feasible']}"
+    )
+    if not rep["pass"]:
+        raise GateFailure("numa bench reported overall FAIL")
+
+
 # gate name -> (report filename, checker)
 GATES = {
     "sparse": ("BENCH_sparse_vs_dense.json", check_sparse_vs_dense),
@@ -236,6 +280,7 @@ GATES = {
     "distributed": ("BENCH_distributed.json", check_distributed),
     "serving": ("BENCH_serving.json", check_serving),
     "simd": ("BENCH_simd.json", check_simd),
+    "numa": ("BENCH_numa.json", check_numa),
 }
 
 

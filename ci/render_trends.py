@@ -1,0 +1,155 @@
+#!/usr/bin/env python3
+"""Render nightly BENCH_*.json artifact series into a TRENDS.md page.
+
+nightly.yml uploads one date-stamped results directory per run (the
+BENCH_*.json reports plus NIGHTLY_STAMP.txt). Point this script at any
+number of those directories — e.g. a handful of downloaded artifacts —
+and it renders one markdown page of trend tables: throughput
+(epochs/sec), contention calibration (fitted kappa / collision_ns /
+peak measured collision rate), the gated speedups (sparse, epoch pass,
+pool dispatch, SIMD inner loops, NUMA hot-head sharding), the NUMA
+per-effect billing deltas, and serving latency. Missing reports render
+as an em dash, never an error: early artifacts predate newer benches.
+
+Zero-dependency (stdlib only), like everything else in ci/. Usage:
+
+    python3 ci/render_trends.py --results rust/results --out TRENDS.md
+    python3 ci/render_trends.py --results night1 --results night2 ...
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+# column label -> (report filename, extractor over the parsed report).
+# Extractors may assume nothing about the report beyond dict-ness: any
+# KeyError/TypeError means "metric absent in this run" and renders as —.
+METRICS = {
+    "throughput": [
+        ("pool eps", "BENCH_pool.json", lambda r: r["pool_epochs_per_sec"]),
+        ("legacy eps", "BENCH_pool.json", lambda r: r["legacy_epochs_per_sec"]),
+        ("async eps", "BENCH_distributed.json", lambda r: r["async_epochs_per_sec"]),
+        ("sync eps", "BENCH_distributed.json", lambda r: r["sync_epochs_per_sec"]),
+        ("loaded eps", "BENCH_serving.json", lambda r: r["loaded_epochs_per_sec"]),
+        ("quiet eps", "BENCH_serving.json", lambda r: r["quiet_epochs_per_sec"]),
+    ],
+    "contention calibration": [
+        ("kappa", "BENCH_contention.json", lambda r: r["fitted"]["kappa"]),
+        ("collision_ns", "BENCH_contention.json", lambda r: r["fitted"]["collision_ns"]),
+        (
+            "peak rate",
+            "BENCH_contention.json",
+            lambda r: max(p["collision_rate"] for p in r["points"]),
+        ),
+        ("telemetry ovh", "BENCH_contention.json", lambda r: r["telemetry_overhead"]),
+    ],
+    "gated speedups": [
+        ("sparse", "BENCH_sparse_vs_dense.json", lambda r: r["sparse_speedup"]),
+        ("epoch pass", "BENCH_epoch_pass.json", lambda r: r["epoch_speedup"]),
+        ("pool dispatch", "BENCH_pool.json", lambda r: r["dispatch_speedup"]),
+        ("simd dense", "BENCH_simd.json", lambda r: r["dense_inner_speedup"]),
+        ("simd sparse", "BENCH_simd.json", lambda r: r["sparse_inner_speedup"]),
+        ("numa sharded", "BENCH_numa.json", lambda r: r["sharded_speedup"]),
+    ],
+    "numa placement billing (sim s)": [
+        ("flat", "BENCH_numa.json", lambda r: r["flat_sim_seconds"]),
+        ("placement Δ", "BENCH_numa.json", lambda r: r["placement_delta_s"]),
+        ("false sharing Δ", "BENCH_numa.json", lambda r: r["false_sharing_delta_s"]),
+        ("bandwidth Δ", "BENCH_numa.json", lambda r: r["bandwidth_delta_s"]),
+        ("all effects", "BENCH_numa.json", lambda r: r["numa_all_sim_seconds"]),
+        ("sharded", "BENCH_numa.json", lambda r: r["sharded_sim_seconds"]),
+    ],
+    "serving latency (ms)": [
+        ("p50", "BENCH_serving.json", lambda r: r["p50_ms"]),
+        ("p99", "BENCH_serving.json", lambda r: r["p99_ms"]),
+        ("slo", "BENCH_serving.json", lambda r: r["slo_ms"]),
+    ],
+}
+
+
+def run_label(d: Path) -> str:
+    """Date + short sha from NIGHTLY_STAMP.txt, else the directory name."""
+    stamp = d / "NIGHTLY_STAMP.txt"
+    if stamp.is_file():
+        lines = stamp.read_text().splitlines()
+        when = lines[0].strip() if lines else ""
+        sha = lines[1].strip()[:9] if len(lines) > 1 else ""
+        if when:
+            return f"{when} {sha}".strip()
+    return d.name
+
+
+def load_reports(d: Path):
+    """filename -> parsed dict for every readable BENCH_*.json in `d`."""
+    out = {}
+    for f in sorted(d.glob("BENCH_*.json")):
+        try:
+            rep = json.loads(f.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"render_trends: skipping unreadable {f}: {e}", file=sys.stderr)
+            continue
+        if isinstance(rep, dict):
+            out[f.name] = rep
+    return out
+
+
+def cell(reports, filename, extract) -> str:
+    rep = reports.get(filename)
+    if rep is None:
+        return "—"
+    try:
+        v = extract(rep)
+    except (KeyError, TypeError, ValueError):
+        return "—"
+    if isinstance(v, bool):
+        return "yes" if v else "no"
+    if isinstance(v, (int, float)):
+        return f"{v:.3f}" if isinstance(v, float) else str(v)
+    return str(v)
+
+
+def render(dirs) -> str:
+    runs = [(run_label(d), load_reports(d)) for d in dirs]
+    runs.sort(key=lambda t: t[0])
+    lines = [
+        "# Bench trends",
+        "",
+        "Rendered by `ci/render_trends.py` from nightly BENCH_*.json",
+        f"artifacts; {len(runs)} run(s). Missing reports show as —.",
+    ]
+    for section, cols in METRICS.items():
+        lines += ["", f"## {section}", ""]
+        header = ["run"] + [name for name, _, _ in cols]
+        lines.append("| " + " | ".join(header) + " |")
+        lines.append("|" + "---|" * len(header))
+        for label, reports in runs:
+            row = [label] + [cell(reports, fname, ex) for _, fname, ex in cols]
+            lines.append("| " + " | ".join(row) + " |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--results",
+        action="append",
+        required=True,
+        help="results directory holding BENCH_*.json (repeatable, one per nightly run)",
+    )
+    ap.add_argument("--out", default="TRENDS.md", help="output markdown path")
+    args = ap.parse_args(argv)
+
+    dirs = [Path(d) for d in args.results]
+    missing = [d for d in dirs if not d.is_dir()]
+    if missing:
+        print(f"render_trends: not a directory: {missing}", file=sys.stderr)
+        return 1
+    page = render(dirs)
+    Path(args.out).write_text(page)
+    print(f"render_trends: wrote {args.out} ({len(dirs)} run(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -120,6 +120,25 @@ def passing_reports():
             "batch_parity_b4": "7777000088881111",
             "pass": True,
         },
+        "BENCH_numa.json": {
+            "bench": "numa",
+            "threads": 8,
+            "sockets": 2,
+            "flat_sim_seconds": 2.0,
+            "placement_delta_s": 0.4,
+            "false_sharing_delta_s": 0.08,
+            "bandwidth_delta_s": 0.05,
+            "numa_all_sim_seconds": 2.55,
+            "sharded_sim_seconds": 2.2,
+            "sharded_speedup": 1.16,
+            "ratio_floor": 1.05,
+            "real_sharded": True,
+            "real_cut": 12,
+            "real_replica_tau": 3,
+            "real_effective_tau": 5,
+            "real_tau_feasible": True,
+            "pass": True,
+        },
     }
 
 
@@ -172,6 +191,13 @@ def test_all_gates_pass_on_canned_reports(results_dir, capsys):
         ("BENCH_simd.json", {"gather_dot_within_tol": False}, "simd"),
         ("BENCH_simd.json", {"batch_parity_b4": "deadbeefdeadbeef"}, "simd"),
         ("BENCH_simd.json", {"pass": False}, "simd"),
+        ("BENCH_numa.json", {"sharded_speedup": 1.01}, "numa"),
+        ("BENCH_numa.json", {"placement_delta_s": 0.0}, "numa"),
+        ("BENCH_numa.json", {"false_sharing_delta_s": -0.01}, "numa"),
+        ("BENCH_numa.json", {"bandwidth_delta_s": 0.0}, "numa"),
+        ("BENCH_numa.json", {"real_sharded": False}, "numa"),
+        ("BENCH_numa.json", {"real_cut": 0}, "numa"),
+        ("BENCH_numa.json", {"pass": False}, "numa"),
     ],
 )
 def test_threshold_violations_fail(results_dir, capsys, filename, mutate, expect):

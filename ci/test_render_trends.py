@@ -1,0 +1,86 @@
+"""Tests for the nightly trend renderer (ci/render_trends.py)."""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+import render_trends  # noqa: E402
+from test_check_bench import passing_reports  # noqa: E402
+
+
+def make_run(tmp_path, name, stamp=None, reports=None):
+    d = tmp_path / name
+    d.mkdir()
+    for fname, rep in (reports if reports is not None else passing_reports()).items():
+        (d / fname).write_text(json.dumps(rep))
+    if stamp:
+        (d / "NIGHTLY_STAMP.txt").write_text(stamp)
+    return d
+
+
+def run_main(dirs, out):
+    argv = []
+    for d in dirs:
+        argv += ["--results", str(d)]
+    argv += ["--out", str(out)]
+    return render_trends.main(argv)
+
+
+def test_renders_all_sections_from_canned_reports(tmp_path):
+    d = make_run(tmp_path, "night1", stamp="2026-08-07T03:47:00Z\nabcdef0123456789\n")
+    out = tmp_path / "TRENDS.md"
+    assert run_main([d], out) == 0
+    page = out.read_text()
+    for section in render_trends.METRICS:
+        assert f"## {section}" in page
+    # stamp label: date + 9-char sha
+    assert "2026-08-07T03:47:00Z abcdef012" in page
+    # a few values carried through with 3-decimal formatting
+    assert "12.500" in page  # sparse_speedup
+    assert "0.310" in page  # fitted kappa
+    rep = passing_reports()["BENCH_numa.json"]
+    assert f"{rep['sharded_speedup']:.3f}" in page
+
+
+def test_runs_sort_by_label_and_missing_reports_dash(tmp_path):
+    newer = make_run(tmp_path, "b", stamp="2026-08-07T03:47:00Z\nbbbb\n")
+    # older artifact predates the numa/simd benches entirely
+    partial = {
+        k: v
+        for k, v in passing_reports().items()
+        if k in ("BENCH_sparse_vs_dense.json", "BENCH_pool.json")
+    }
+    older = make_run(tmp_path, "a", stamp="2026-08-01T03:47:00Z\naaaa\n", reports=partial)
+    out = tmp_path / "TRENDS.md"
+    assert run_main([newer, older], out) == 0
+    page = out.read_text()
+    assert page.index("2026-08-01") < page.index("2026-08-07"), "rows sort chronologically"
+    older_speedup_row = next(
+        line for line in page.splitlines() if line.startswith("| 2026-08-01") and "12.500" in line
+    )
+    assert "—" in older_speedup_row, "absent benches render as em dash, not an error"
+
+
+def test_unstamped_dir_uses_its_name(tmp_path):
+    d = make_run(tmp_path, "nightly-bench-41")
+    out = tmp_path / "TRENDS.md"
+    assert run_main([d], out) == 0
+    assert "| nightly-bench-41 |" in out.read_text()
+
+
+def test_malformed_report_skipped_not_crash(tmp_path, capsys):
+    d = make_run(tmp_path, "night1")
+    (d / "BENCH_numa.json").write_text("{not json")
+    out = tmp_path / "TRENDS.md"
+    assert run_main([d], out) == 0
+    assert "skipping unreadable" in capsys.readouterr().err
+    # numa columns degrade to dashes; other sections still render
+    assert "12.500" in out.read_text()
+
+
+def test_missing_directory_is_an_error(tmp_path, capsys):
+    out = tmp_path / "TRENDS.md"
+    assert run_main([tmp_path / "no-such"], out) == 1
+    assert "not a directory" in capsys.readouterr().err
+    assert not out.exists()

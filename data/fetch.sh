@@ -1,0 +1,93 @@
+#!/usr/bin/env bash
+# Fetch the paper's three LIBSVM datasets (Table 1 of arXiv:1508.05711):
+#
+#   rcv1      20,242 x 47,236   (binary rcv1.binary train split)
+#   real-sim  72,309 x 20,958
+#   news20    19,996 x 1,355,191
+#
+# Files land as plain LibSVM text at data/<name>, which is exactly where
+# `data::resolve` looks first (rust/src/data/mod.rs); when a file is
+# absent the Rust side falls back to the Table-1-shaped synthetic
+# stand-in, so fetching is always optional.
+#
+# Integrity: trust-on-first-use. If data/SHA256SUMS has an entry for a
+# file we verify against it; otherwise we record the digest of what we
+# downloaded so later fetches (and other machines) are pinned.
+#
+# Offline-friendly: if neither curl nor wget can reach the mirror the
+# script says so and exits 0 — `make data` must never break an air-gapped
+# build, because nothing in the repo *requires* the real data.
+set -u
+
+cd "$(dirname "$0")"
+SUMS=SHA256SUMS
+BASE="https://www.csie.ntu.edu.tw/~cjlin/libsvmtools/datasets/binary"
+
+fetch() { # fetch <url> <out>
+    if command -v curl >/dev/null 2>&1; then
+        curl -fsSL --retry 2 -o "$2" "$1"
+    elif command -v wget >/dev/null 2>&1; then
+        wget -q -O "$2" "$1"
+    else
+        echo "fetch.sh: neither curl nor wget available" >&2
+        return 1
+    fi
+}
+
+digest() { # digest <file> -> hex
+    if command -v sha256sum >/dev/null 2>&1; then
+        sha256sum "$1" | awk '{print $1}'
+    else
+        shasum -a 256 "$1" | awk '{print $1}'
+    fi
+}
+
+verify_or_record() { # verify_or_record <file> <fresh: 1 if just downloaded>
+    local f="$1" fresh="${2:-0}" have want
+    have=$(digest "$f")
+    if [ -f "$SUMS" ] && want=$(awk -v f="$f" '$2 == f {print $1}' "$SUMS") && [ -n "${want:-}" ]; then
+        if [ "$have" != "$want" ]; then
+            echo "fetch.sh: sha256 mismatch for $f" >&2
+            echo "  pinned: $want" >&2
+            echo "  actual: $have" >&2
+            # only discard what we just fetched — never a hand-placed file
+            [ "$fresh" = 1 ] && rm -f "$f"
+            return 1
+        fi
+        echo "  $f: sha256 ok"
+    else
+        echo "$have  $f" >>"$SUMS"
+        echo "  $f: sha256 recorded (trust-on-first-use) -> $SUMS"
+    fi
+}
+
+get_one() { # get_one <name> <remote-bz2-name>
+    local name="$1" remote="$2"
+    if [ -f "$name" ]; then
+        echo "  $name: already present, skipping download"
+        verify_or_record "$name" || return 1
+        return 0
+    fi
+    echo "  $name: downloading $remote ..."
+    if ! fetch "$BASE/$remote" "$name.bz2"; then
+        rm -f "$name.bz2"
+        echo "  $name: download failed (offline?) — synthetic stand-in will be used"
+        return 0
+    fi
+    if ! bunzip2 -f "$name.bz2"; then
+        rm -f "$name.bz2" "$name"
+        echo "fetch.sh: bunzip2 failed for $name" >&2
+        return 1
+    fi
+    verify_or_record "$name" 1
+}
+
+rc=0
+get_one rcv1 rcv1_train.binary.bz2 || rc=1
+get_one real-sim real-sim.bz2 || rc=1
+get_one news20 news20.binary.bz2 || rc=1
+
+if [ "$rc" -eq 0 ]; then
+    echo "fetch.sh: done. 'repro run --dataset rcv1' now uses the real file."
+fi
+exit "$rc"

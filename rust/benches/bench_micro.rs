@@ -178,6 +178,23 @@ fn main() {
         (fnv_fingerprint(&r1.final_w), fnv_fingerprint(&r4.final_w))
     };
     let simd_target = 2.0;
+    // host capability vs compiled width — a WARNING, not a gate (satellite
+    // of ISSUE 10): a nightly on an AVX-512 box should say so out loud, but
+    // failing the run would punish correct code for portable lane choice
+    let host = simd::host_report();
+    if host.host_wider() {
+        println!(
+            "WARNING: host {} supports {}-wide f32 SIMD but kernels are compiled \
+             for LANES = {} — headroom left on the table (runtime dispatch is a \
+             ROADMAP follow-on)",
+            host.isa, host.host_f32_lanes, host.lanes
+        );
+    } else {
+        println!(
+            "host simd: {} ({}-wide f32) vs compiled LANES = {} — fully used",
+            host.isa, host.host_f32_lanes, host.lanes
+        );
+    }
     let elementwise_ok = fp_axpy_ref == fp_axpy_lanes
         && fp_fused_ref == fp_fused_lanes
         && fp_scatter_ref == fp_scatter_lanes;
@@ -215,11 +232,103 @@ fn main() {
         ("gather_dot_within_tol", Json::Bool(gdot_ok)),
         ("batch_parity_b1", Json::Str(fp_b1)),
         ("batch_parity_b4", Json::Str(fp_b4)),
+        ("lanes", Json::Num(host.lanes as f64)),
+        ("host_f32_lanes", Json::Num(host.host_f32_lanes as f64)),
+        ("host_isa", Json::Str(host.isa.into())),
+        ("host_wider_warning", Json::Bool(host.host_wider())),
         ("pass", Json::Bool(simd_pass)),
     ]);
     match report::write_json("BENCH_simd", &json) {
         Ok(path) => println!("json -> {}", path.display()),
         Err(e) => eprintln!("BENCH_simd write failed: {e}"),
+    }
+
+    // ------------------------------------------------------------------
+    // NUMA placement billing + hot-head replica sharding (S25). Simulated
+    // ratios via the ablation axis (same trajectory, only billing moves),
+    // plus one REAL run through the replica layer on a forced 2-socket
+    // synthetic topology for the staleness account.
+    // ------------------------------------------------------------------
+    println!("\n== numa: placement billing + hot-head sharding (zipf, p = 8 on 2x4) ==");
+    let numa_obj = {
+        let ds = SyntheticSpec::new("bench-numa", 400, 2000, 20, 31).with_zipf(1.2).generate();
+        Objective::paper(Arc::new(ds))
+    };
+    let pts = asysvrg::bench::ablation::sweep_numa(&numa_obj, 0.0, 8, 2);
+    let by = |l: &str| pts.iter().find(|p| p.label == l).expect(l);
+    let flat = by("flat-machine").sim_seconds;
+    let placement_delta = by("placement").sim_seconds - flat;
+    let false_sharing_delta = by("false-sharing").sim_seconds - flat;
+    let bandwidth_delta = by("bandwidth").sim_seconds - flat;
+    let all_s = by("numa-all").sim_seconds;
+    let sharded_s = by("numa-all-sharded").sim_seconds;
+    let shard_ratio = all_s / sharded_s;
+    let ratio_floor = 1.05;
+    println!("flat-machine        {flat:>10.4} sim s");
+    println!("placement delta     {placement_delta:>+10.4} sim s");
+    println!("false-sharing delta {false_sharing_delta:>+10.4} sim s");
+    println!("bandwidth delta     {bandwidth_delta:>+10.4} sim s");
+    println!("numa-all            {all_s:>10.4} sim s");
+    println!("numa-all-sharded    {sharded_s:>10.4} sim s");
+    println!("sharded speedup: {shard_ratio:.3}x (floor: >= {ratio_floor}x)");
+
+    // the real replica layer at p = 4 on a forced 2x2 topology: honest
+    // staleness account (replica lag on top of scheduling delay) checked
+    // against the Theorem 1 budget
+    let numa_cfg = RunConfig {
+        threads: 4,
+        scheme: Scheme::Unlock,
+        eta: 0.1,
+        epochs: 3,
+        target_gap: 0.0,
+        storage: Storage::Sparse,
+        seed: 11,
+        ..Default::default()
+    };
+    let topo = asysvrg::runtime::Topology::synthetic(2, 2);
+    let nopts = asysvrg::coordinator::NumaOptions::new(topo);
+    let nr = asysvrg::coordinator::run_numa(
+        &numa_obj,
+        &numa_cfg,
+        SvrgOption::CurrentIterate,
+        f64::NEG_INFINITY,
+        &nopts,
+    );
+    println!(
+        "real replica run: sharded={} cut={} replica_tau={} effective_tau={} budget={:?} feasible={}",
+        nr.sharded, nr.cut, nr.replica_tau, nr.effective_tau, nr.tau_budget, nr.tau_feasible
+    );
+    let effects_positive =
+        placement_delta > 0.0 && false_sharing_delta > 0.0 && bandwidth_delta > 0.0;
+    let numa_pass = shard_ratio >= ratio_floor && effects_positive && nr.sharded && nr.cut > 0;
+    println!(
+        "numa gate: ratio {} effects {} real-shard {} -> pass={numa_pass}",
+        if shard_ratio >= ratio_floor { "ok" } else { "FAIL" },
+        if effects_positive { "ok" } else { "FAIL" },
+        if nr.sharded && nr.cut > 0 { "ok" } else { "FAIL" },
+    );
+    let numa_json = Json::obj(vec![
+        ("bench", Json::Str("numa_placement".into())),
+        ("threads", Json::Num(8.0)),
+        ("sockets", Json::Num(2.0)),
+        ("flat_sim_seconds", Json::Num(flat)),
+        ("placement_delta_s", Json::Num(placement_delta)),
+        ("false_sharing_delta_s", Json::Num(false_sharing_delta)),
+        ("bandwidth_delta_s", Json::Num(bandwidth_delta)),
+        ("numa_all_sim_seconds", Json::Num(all_s)),
+        ("sharded_sim_seconds", Json::Num(sharded_s)),
+        ("sharded_speedup", Json::Num(shard_ratio)),
+        ("ratio_floor", Json::Num(ratio_floor)),
+        ("real_sharded", Json::Bool(nr.sharded)),
+        ("real_cut", Json::Num(nr.cut as f64)),
+        ("real_replica_tau", Json::Num(nr.replica_tau as f64)),
+        ("real_effective_tau", Json::Num(nr.effective_tau as f64)),
+        ("real_tau_feasible", Json::Bool(nr.tau_feasible)),
+        ("pass", Json::Bool(numa_pass)),
+    ]);
+    match report::write_json("BENCH_numa", &numa_json) {
+        Ok(path) => println!("json -> {}", path.display()),
+        Err(e) => eprintln!("BENCH_numa write failed: {e}"),
     }
 
     println!("\n== micro: shared-vector apply_step per scheme (d = 4096) ==");

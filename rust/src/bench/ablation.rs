@@ -17,8 +17,8 @@ use crate::coordinator::monitor::RunResult;
 use crate::objective::Objective;
 use crate::sched::{run_virtual, Policy};
 use crate::simcore::{
-    full_grad_phase_ns, sim_asysvrg_epoch, ContentionBilling, CostModel, EngineOpts, ReadModel,
-    RuntimeDispatch,
+    full_grad_phase_ns, sim_asysvrg_epoch, ContentionBilling, CostModel, EngineOpts, NumaCost,
+    ReadModel, RuntimeDispatch,
 };
 use crate::simdist::{sim_dist_run, DistConfig, LatencyDist, NetworkModel};
 use crate::util::json::Json;
@@ -287,6 +287,57 @@ pub fn sweep_contention(
         run_config(obj, &cfg, &costs, &opts, fstar, label)
     })
     .collect()
+}
+
+/// NUMA placement ablation (S25, DESIGN.md §13): the identical sparse
+/// schedule billed on a flat machine, then with each placement effect
+/// (cross-socket collision factor, 64 B-line false sharing, interconnect
+/// read bandwidth) enabled in isolation, all three together, and all three
+/// with the hot-head replica sharding active. The trajectory never changes
+/// — same seeds, same arithmetic — so every sim-seconds delta is exactly
+/// the priced effect, and the `numa-all` − `numa-all-sharded` gap is the
+/// simulated win the replica layer buys (net of its epoch merge).
+pub fn sweep_numa(
+    obj: &Objective,
+    fstar: f64,
+    threads: usize,
+    epochs: usize,
+) -> Vec<AblationPoint> {
+    let costs = CostModel::default_host();
+    let sockets = 2usize;
+    let base = NumaCost::default_host(sockets, threads.div_ceil(sockets)).with_objective(obj);
+    // hot head + its touch mass from the actual dataset shape
+    let cut = crate::coordinator::pick_hot_cut(obj);
+    let head_mass = if cut > 0 {
+        obj.data.indices.iter().filter(|&&j| (j as usize) < cut).count() as f64
+            / obj.data.nnz().max(1) as f64
+    } else {
+        0.0
+    };
+    let variants: Vec<(&str, Option<NumaCost>)> = vec![
+        ("flat-machine", None),
+        ("placement", Some(base.with_effects(true, false, false))),
+        ("false-sharing", Some(base.with_effects(false, true, false))),
+        ("bandwidth", Some(base.with_effects(false, false, true))),
+        ("numa-all", Some(base)),
+        ("numa-all-sharded", Some(base.with_sharding(cut, head_mass))),
+    ];
+    variants
+        .into_iter()
+        .map(|(label, numa)| {
+            let cfg = RunConfig {
+                threads,
+                scheme: Scheme::Unlock,
+                eta: 0.4,
+                epochs,
+                target_gap: 0.0,
+                storage: Storage::Sparse,
+                ..Default::default()
+            };
+            let opts = EngineOpts { storage: Storage::Sparse, numa, ..Default::default() };
+            run_config(obj, &cfg, &costs, &opts, fstar, label)
+        })
+        .collect()
 }
 
 /// Worker-runtime ablation (DESIGN.md §8): the identical sparse schedule
@@ -671,6 +722,47 @@ mod tests {
             "pool billing {} !< spawn billing {}",
             pool.sim_seconds,
             spawn.sim_seconds
+        );
+    }
+
+    #[test]
+    fn numa_sweep_isolates_placement_effects() {
+        // Zipfian head so both the collision and false-sharing terms have
+        // mass, and pick_hot_cut finds a genuine head. fstar = 0: the sweep
+        // asserts relative billing, not convergence.
+        let ds = SyntheticSpec::new("numa-abl", 300, 2000, 20, 31).with_zipf(1.2).generate();
+        let o = Objective::new(Arc::new(ds), 1e-2, LossKind::Logistic);
+        let pts = sweep_numa(&o, 0.0, 8, 2);
+        assert_eq!(pts.len(), 6);
+        let by = |l: &str| pts.iter().find(|p| p.label == l).unwrap();
+        let flat = by("flat-machine");
+        // identical trajectory on every point — the axis only moves billing
+        for p in &pts {
+            assert!(!p.diverged, "{} diverged", p.label);
+            assert_eq!(p.final_gap, flat.final_gap, "{} changed the trajectory", p.label);
+            assert_eq!(p.max_delay, flat.max_delay, "{} changed the schedule", p.label);
+        }
+        // each effect bills real extra time on a 2-socket machine
+        for l in ["placement", "false-sharing", "bandwidth"] {
+            assert!(
+                by(l).sim_seconds > flat.sim_seconds,
+                "{l} {} !> flat {}",
+                by(l).sim_seconds,
+                flat.sim_seconds
+            );
+        }
+        // the combined model is at least the worst single effect…
+        let all = by("numa-all");
+        for l in ["placement", "false-sharing", "bandwidth"] {
+            assert!(all.sim_seconds >= by(l).sim_seconds, "{l} exceeds numa-all");
+        }
+        // …and sharding claws simulated time back despite paying the merge
+        let sharded = by("numa-all-sharded");
+        assert!(
+            sharded.sim_seconds < all.sim_seconds,
+            "sharded {} !< unsharded {}",
+            sharded.sim_seconds,
+            all.sim_seconds
         );
     }
 

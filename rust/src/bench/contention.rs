@@ -359,7 +359,14 @@ pub fn calibrate_contention(
 
 impl CalibrationReport {
     pub fn to_json(&self) -> Json {
+        // the fitted coefficients depend on the inner-loop codegen: a SIMD
+        // kernel shrinks the vulnerability window per touch, so a fit made
+        // under one feature set must not silently overwrite the other's
         Json::obj(vec![
+            (
+                "features",
+                Json::Str(if cfg!(feature = "simd") { "simd" } else { "scalar" }.into()),
+            ),
             ("dataset", Json::Str(self.dataset.clone())),
             ("overlap", Json::Num(self.overlap)),
             ("avg_nnz", Json::Num(self.avg_nnz)),

@@ -1,0 +1,808 @@
+//! S25: NUMA-aware hot-head replica sharding (DESIGN.md §13).
+//!
+//! The calibrated contention model (DESIGN.md §6) says where the
+//! asynchronous inner loop burns its cycles at high thread counts: on the
+//! *hot head* — the few hundred low-index coordinates the paper's sparse
+//! corpora touch in almost every row. Every one of those touches is a
+//! shared-cache-line transfer, and once workers span sockets each transfer
+//! crosses the interconnect. This module gives each **socket** a private
+//! replica of the head coordinates so the per-update write traffic stays
+//! intra-socket, and reconciles the replicas only at the epoch barrier:
+//!
+//! * the head cut `[0, cut)` comes from the dataset's touch histogram
+//!   ([`pick_hot_cut`]: the smallest power-of-two prefix absorbing ≥ half
+//!   of all touches, or 0 when the distribution is too flat to shard);
+//! * workers are assigned sockets by the contiguous-fill placement of
+//!   [`Topology`] — worker identities are stable for the life of the pool
+//!   (DESIGN.md §8), so the assignment is too, and `--features numa` can
+//!   additionally pin them to physical cores;
+//! * each update runs the *identical* five-segment arithmetic of
+//!   `sparse::SparseIter`, but head coordinates resolve against the
+//!   worker's socket replica (its own `SharedParams` + `LazyState`, with a
+//!   socket-local clock) while tail coordinates resolve against the global
+//!   pair. Both clocks bump once per update, so Σ_s M_s = M and the lazy
+//!   dense-correction accounting stays exact per domain;
+//! * at the epoch barrier the replicas are flushed and folded back:
+//!   u[j] = u₀[j] + Σ_s (r_s[j] − u₀[j]) for head j — a delta sum in f64 —
+//!   then the global head clocks are stamped to the current clock *without*
+//!   drift (the merged value already includes every correction) and the
+//!   ordinary tail flush runs. With exactly one active replica the merge
+//!   degenerates to a bitwise copy, which is what makes the p = 1 /
+//!   single-socket trajectory **bit-identical** to the unsharded driver
+//!   (`tests/numa_test.rs` enforces this).
+//!
+//! **Honest staleness account.** Between merges, socket s never sees the
+//! other sockets' head writes: its replica lags the global update stream by
+//! up to M − M_s updates per epoch. That lag is real staleness and is
+//! charged as such: τ̂_eff = (measured max scheduling delay) + (max replica
+//! lag), checked against `theory::max_feasible_tau` at the configured step
+//! size. When the Theorem-1 certificate cannot absorb the observed lag the
+//! run reports `tau_feasible = false` — or panics loudly with
+//! [`NumaOptions::enforce_feasibility`] set.
+//!
+//! **When sharding is off.** Dense storage (no per-coordinate clocks),
+//! locked schemes (the whole-iteration `WriteSession` already serializes —
+//! replicating under a global lock buys nothing), a single active socket,
+//! or a flat touch distribution (cut = 0) all delegate verbatim to
+//! [`run_asysvrg_on`] — same pool, same trajectory, same result, plus the
+//! staleness bookkeeping with replica lag 0.
+
+use crate::config::{RunConfig, Scheme, Storage};
+use crate::coordinator::asysvrg::{run_asysvrg_on, SvrgOption};
+use crate::coordinator::delay::DelayStats;
+use crate::coordinator::epoch::{parallel_full_grad_pool, EpochGradient, EpochWorkspace};
+use crate::coordinator::monitor::{HistoryPoint, RunResult};
+use crate::coordinator::shared::SharedParams;
+use crate::coordinator::sparse::LazyState;
+use crate::coordinator::telemetry::ContentionStats;
+use crate::linalg::AtomicF32Vec;
+use crate::objective::Objective;
+use crate::runtime::pool::WorkerPool;
+use crate::runtime::topology::Topology;
+use crate::theory;
+use crate::util::rng::Pcg32;
+use crate::util::Stopwatch;
+
+/// How the NUMA-aware driver should run.
+#[derive(Clone, Debug)]
+pub struct NumaOptions {
+    /// Socket layout (probed, or the `--numa "s×c"` synthetic override).
+    pub topology: Topology,
+    /// Explicit head cut override; `None` derives it from the dataset's
+    /// touch histogram via [`pick_hot_cut`]. `Some(0)` forces fully-cold
+    /// (unsharded), `Some(d)` forces fully-hot.
+    pub cut: Option<usize>,
+    /// Shard even when only one socket is active — the parity tests use
+    /// this to run the replica machinery at p = 1 where its trajectory
+    /// must be bit-identical to the unsharded driver.
+    pub force_shard: bool,
+    /// Panic (instead of warn) when the measured τ̂ — scheduling delay plus
+    /// replica lag — exceeds what Theorem 1 certifies at the configured η.
+    pub enforce_feasibility: bool,
+    /// Recover from a worker panic inside an inner phase: count it, merge
+    /// the partial epoch, and keep training (the merge-after-panic
+    /// resilience contract). Off: the panic propagates as usual.
+    pub continue_after_panic: bool,
+    /// Pin pool workers to their topology cores before running
+    /// (best-effort; a no-op without `--features numa`).
+    pub pin: bool,
+    /// Test-only fault injection: panic a specific worker mid-epoch.
+    #[doc(hidden)]
+    pub fault: Option<FaultSpec>,
+}
+
+impl NumaOptions {
+    pub fn new(topology: Topology) -> Self {
+        NumaOptions {
+            topology,
+            cut: None,
+            force_shard: false,
+            enforce_feasibility: false,
+            continue_after_panic: false,
+            pin: true,
+            fault: None,
+        }
+    }
+}
+
+/// Test-only: worker `worker` panics after `after_updates` updates of
+/// epoch `epoch` (between updates, so all clocks stay consistent — the
+/// recovery contract covers worker loss, not torn updates).
+#[doc(hidden)]
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    pub epoch: usize,
+    pub worker: usize,
+    pub after_updates: usize,
+}
+
+/// [`RunResult`] plus the NUMA layer's own accounting.
+#[derive(Debug)]
+pub struct NumaRunResult {
+    pub run: RunResult,
+    /// Did the replica-sharded path actually run (vs delegate)?
+    pub sharded: bool,
+    /// The head cut used (0 when unsharded because the head was flat).
+    pub cut: usize,
+    /// Sockets that actually hosted workers (= number of replicas).
+    pub sockets_used: usize,
+    /// Workers successfully pinned to cores (0 without `--features numa`).
+    pub pinned_workers: usize,
+    /// Max per-epoch replica lag: max_s (M − M_s) over all epochs — the
+    /// head staleness the merge protocol introduces on top of scheduling.
+    pub replica_tau: u64,
+    /// τ̂_eff = run.max_delay + replica_tau, the staleness Theorem 1 must
+    /// absorb.
+    pub effective_tau: u64,
+    /// Largest τ Theorem 1 certifies (α < 1) at the configured η; `None`
+    /// when even τ = 0 is infeasible.
+    pub tau_budget: Option<u32>,
+    /// `effective_tau ≤ tau_budget`?
+    pub tau_feasible: bool,
+    /// Worker panics recovered under [`NumaOptions::continue_after_panic`].
+    pub recovered_panics: usize,
+}
+
+/// Pick the hot-head cut from the dataset's touch histogram: bucket every
+/// nonzero's coordinate index by ⌈log₂⌉ (the same power-of-two bucketing as
+/// `ContentionStats::touch_histogram`) and return the smallest prefix
+/// boundary 2^b absorbing at least half of all touches. Returns 0 — "don't
+/// shard" — when that boundary exceeds 4·⌈√d⌉: a head that wide has no
+/// concentration worth privatizing (replica merge is O(sockets·cut) per
+/// epoch, and a flat distribution never amortizes it).
+pub fn pick_hot_cut(obj: &Objective) -> usize {
+    let d = obj.dim();
+    let mut counts = [0u64; 64];
+    let mut total = 0u64;
+    for i in 0..obj.n() {
+        for &j in obj.data.row(i).indices {
+            counts[(64 - (j as u64).leading_zeros()) as usize] += 1;
+            total += 1;
+        }
+    }
+    if total == 0 {
+        return 0;
+    }
+    let limit = 4 * (d as f64).sqrt().ceil() as u64;
+    let mut cum = 0u64;
+    for (b, &c) in counts.iter().enumerate() {
+        cum += c;
+        if cum * 2 >= total {
+            let boundary = 1u64 << b; // bucket b covers indices [2^(b−1), 2^b)
+            return if boundary > limit { 0 } else { boundary.min(d as u64) as usize };
+        }
+    }
+    0
+}
+
+/// NUMA-aware AsySVRG on a caller-provided pool. Decides per the options
+/// whether to run the per-socket hot-head replica path or delegate to the
+/// unsharded [`run_asysvrg_on`]; either way the result carries the full
+/// staleness/feasibility account.
+pub fn run_asysvrg_numa(
+    pool: &WorkerPool,
+    obj: &Objective,
+    cfg: &RunConfig,
+    option: SvrgOption,
+    fstar: f64,
+    opts: &NumaOptions,
+) -> NumaRunResult {
+    let d = obj.dim();
+    let p = cfg.threads;
+    assert!(p >= 1 && p <= pool.threads(), "cfg.threads {p} exceeds pool {}", pool.threads());
+    let pinned = if opts.pin { pool.pin_workers(&opts.topology, p) } else { 0 };
+    let sockets_used = opts.topology.active_sockets(p);
+    let cut = opts.cut.unwrap_or_else(|| pick_hot_cut(obj)).min(d);
+    let lock_free = matches!(cfg.scheme, Scheme::Unlock | Scheme::AtomicCas);
+    let shard = (sockets_used >= 2 || opts.force_shard)
+        && lock_free
+        && cfg.storage == Storage::Sparse
+        && cut > 0;
+
+    let m_per_thread = cfg.inner_iters(obj.n());
+    let (run, replica_tau, recovered) = if shard {
+        assert!(
+            cfg.batch == 1,
+            "hot-shard replicas support batch = 1 only (a fused batch pins one clock window \
+             per domain; widen after the two-domain window analysis exists)"
+        );
+        run_sharded(pool, obj, cfg, option, fstar, opts, cut, sockets_used)
+    } else {
+        (run_asysvrg_on(pool, obj, cfg, option, fstar), 0, 0)
+    };
+
+    // ---- honest staleness account: replica lag is real delay
+    let effective_tau = run.max_delay + replica_tau;
+    let tau_budget = theory::max_feasible_tau(
+        obj.strong_convexity() as f64,
+        obj.lipschitz() as f64,
+        cfg.eta as f64,
+        (p * m_per_thread) as u64,
+        theory::theorem1_alpha,
+    );
+    let tau_feasible = tau_budget.is_some_and(|b| effective_tau <= b as u64);
+    if !tau_feasible {
+        let msg = format!(
+            "NUMA staleness infeasible: observed tau_hat = {effective_tau} \
+             (max_delay {} + replica lag {replica_tau}) exceeds the Theorem-1 budget {:?} \
+             at eta = {} — lower eta, shrink the cut, or reduce sockets",
+            run.max_delay, tau_budget, cfg.eta
+        );
+        if opts.enforce_feasibility {
+            panic!("{msg}");
+        }
+        crate::log!(Warn, "{msg}");
+    }
+
+    NumaRunResult {
+        run,
+        sharded: shard,
+        cut: if shard { cut } else { cut.min(d) },
+        sockets_used,
+        pinned_workers: pinned,
+        replica_tau,
+        effective_tau,
+        tau_budget,
+        tau_feasible,
+        recovered_panics: recovered,
+    }
+}
+
+/// Convenience wrapper owning its pool.
+pub fn run_numa(
+    obj: &Objective,
+    cfg: &RunConfig,
+    option: SvrgOption,
+    fstar: f64,
+    opts: &NumaOptions,
+) -> NumaRunResult {
+    let pool = WorkerPool::new(cfg.threads);
+    run_asysvrg_numa(&pool, obj, cfg, option, fstar, opts)
+}
+
+/// The replica-sharded driver: mirrors `run_asysvrg_hooked`'s epoch
+/// structure with the head/tail domain split described in the module docs.
+/// Returns (result, max replica lag, recovered panics).
+#[allow(clippy::too_many_arguments)]
+fn run_sharded(
+    pool: &WorkerPool,
+    obj: &Objective,
+    cfg: &RunConfig,
+    option: SvrgOption,
+    fstar: f64,
+    opts: &NumaOptions,
+    cut: usize,
+    n_rep: usize,
+) -> (RunResult, u64, usize) {
+    let d = obj.dim();
+    let n = obj.n();
+    let p = cfg.threads;
+    let m_per_thread = cfg.inner_iters(n);
+    let passes_per_epoch = 1.0 + cfg.m_factor;
+    let delays = DelayStats::new();
+    let sw = Stopwatch::start();
+    let telem = ContentionStats::new(d);
+    let cas = cfg.scheme == Scheme::AtomicCas;
+    let averaging = option == SvrgOption::Average;
+
+    let mut w = vec![0.0f32; d];
+    let mut result = RunResult::default();
+    let mut passes = 0.0f64;
+    let mut replica_tau = 0u64;
+    let mut recovered = 0usize;
+
+    // persistent state, reset in place per epoch (DESIGN.md §8): the global
+    // pair covers the full dimension (its head range is only written at the
+    // merge), one cut-sized replica pair per active socket
+    let shared = SharedParams::zeros(d, cfg.scheme);
+    let mut ws = EpochWorkspace::new(p, d, n, cfg.storage);
+    let mut eg = EpochGradient { mu: vec![0.0f32; d], residuals: vec![0.0f32; n] };
+    let build_lazy = |u0: &[f32], mu: &[f32]| {
+        if averaging {
+            LazyState::new_averaging(u0, mu, obj.lam, cfg.eta, 0)
+        } else {
+            LazyState::new(u0, mu, obj.lam, cfg.eta, 0)
+        }
+    };
+    let mut g_lazy = build_lazy(&w, &eg.mu);
+    let rep_shared: Vec<SharedParams> =
+        (0..n_rep).map(|_| SharedParams::zeros(cut, cfg.scheme)).collect();
+    let mut rep_lazy: Vec<LazyState> =
+        (0..n_rep).map(|_| build_lazy(&w[..cut], &eg.mu[..cut])).collect();
+
+    for t in 0..cfg.epochs {
+        // (1) full gradient at w_t
+        parallel_full_grad_pool(obj, &w, pool, &mut ws, &mut eg);
+        // (2) arm all domains at u = w_t
+        shared.store(&w);
+        let clock_before = shared.clock();
+        g_lazy.reset(&w, &eg.mu, obj.lam, cfg.eta, clock_before);
+        let rep_clock_before: Vec<u64> = rep_shared.iter().map(|r| r.clock()).collect();
+        for s in 0..n_rep {
+            rep_shared[s].store(&w[..cut]);
+            rep_lazy[s].reset(&w[..cut], &eg.mu[..cut], obj.lam, cfg.eta, rep_clock_before[s]);
+        }
+        let seed = cfg.seed ^ (t as u64) << 20;
+        let fault = opts.fault.filter(|f| f.epoch == t);
+
+        // (3) sharded inner phase
+        {
+            let (g_lazy, rep_lazy, shared, rep_shared, eg, delays, telem, topo) =
+                (&g_lazy, &rep_lazy, &shared, &rep_shared, &eg, &delays, &telem, &opts.topology);
+            let phase = || {
+                pool.run_phase(p, |a| {
+                    let s = topo.socket_of_worker(a);
+                    let fault_after =
+                        fault.filter(|f| f.worker == a).map(|f| f.after_updates);
+                    let mut rng = Pcg32::for_thread(seed, a);
+                    run_inner_sharded(
+                        obj,
+                        shared,
+                        g_lazy,
+                        &rep_shared[s],
+                        &rep_lazy[s],
+                        cut,
+                        eg,
+                        m_per_thread,
+                        &mut rng,
+                        delays,
+                        Some(telem),
+                        cas,
+                        fault_after,
+                    );
+                })
+            };
+            if opts.continue_after_panic {
+                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(phase)).is_err() {
+                    recovered += 1;
+                    crate::log!(
+                        Warn,
+                        "hotshard epoch {t}: worker panic recovered; merging partial epoch"
+                    );
+                }
+            } else {
+                phase();
+            }
+        }
+
+        // (4) epoch-barrier merge (workers joined; plain stores race-free)
+        let m_global = shared.clock() - clock_before;
+        for s in 0..n_rep {
+            rep_lazy[s].flush(&rep_shared[s]);
+            let m_s = rep_shared[s].clock() - rep_clock_before[s];
+            replica_tau = replica_tau.max(m_global - m_s);
+        }
+        let gdata = shared.data();
+        if n_rep == 1 {
+            // single active replica: its head IS the head — bitwise copy,
+            // the p = 1 / single-socket parity contract's foundation
+            let rdata = rep_shared[0].data();
+            for j in 0..cut {
+                gdata.set(j, rdata.get(j));
+            }
+        } else {
+            // delta sum in f64: u[j] = u₀[j] + Σ_s (r_s[j] − u₀[j])
+            for j in 0..cut {
+                let base = w[j] as f64;
+                let mut acc = base;
+                for r in &rep_shared {
+                    acc += r.data().get(j) as f64 - base;
+                }
+                gdata.set(j, acc as f32);
+            }
+        }
+        // stamp global head clocks WITHOUT drift — the merged values already
+        // carry every dense correction; only the tail still owes its flush
+        let now = shared.clock();
+        for j in 0..cut {
+            g_lazy.fetch_max_clock(j, now);
+        }
+        g_lazy.flush_pool(&shared, pool, p);
+        debug_assert!(g_lazy.fully_drained(now));
+
+        // (5) w_{t+1}
+        match option {
+            SvrgOption::CurrentIterate => shared.snapshot_into_pool(&mut w, pool, p),
+            SvrgOption::Average => {
+                // Σû head sums live in the replicas, tail sums in the global
+                // state; both divide by the GLOBAL tick count M (identical
+                // arithmetic to LazyState::take_average_into)
+                let total = now - clock_before;
+                let inv = if total == 0 { 0.0 } else { 1.0 / total as f64 };
+                for (j, wj) in w.iter_mut().enumerate() {
+                    let sum = if j < cut {
+                        rep_lazy.iter().map(|r| r.take_sum(j)).sum::<f64>()
+                    } else {
+                        g_lazy.take_sum(j)
+                    };
+                    *wj = (sum * inv) as f32;
+                }
+            }
+        }
+        telem.mark_epoch();
+
+        passes += passes_per_epoch;
+        let loss = obj.loss(&w);
+        result.total_updates += m_global;
+        result.history.push(HistoryPoint {
+            passes,
+            loss,
+            seconds: sw.seconds(),
+            updates: result.total_updates,
+        });
+        result.epochs_run = t + 1;
+        crate::log!(
+            Debug,
+            "hotshard epoch {t}: f={loss:.6} gap={:.3e} updates={m_global} replicas={n_rep} cut={cut}",
+            loss - fstar
+        );
+        if loss - fstar < cfg.target_gap {
+            result.converged = true;
+            break;
+        }
+    }
+
+    result.final_w = w;
+    result.total_seconds = sw.seconds();
+    result.max_delay = delays.max_delay();
+    result.mean_delay = delays.mean_delay();
+    result.contention = Some(telem.summary());
+    (result, replica_tau, recovered)
+}
+
+/// One worker's share of a sharded inner phase: `iters` updates, each the
+/// exact `SparseIter` five-segment arithmetic with head coordinates routed
+/// to this socket's replica. Same rng stream shape as the unsharded loop
+/// (one `below(n)` per update), so p = 1 trajectories are comparable
+/// bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+fn run_inner_sharded(
+    obj: &Objective,
+    g_shared: &SharedParams,
+    g_lazy: &LazyState,
+    r_shared: &SharedParams,
+    r_lazy: &LazyState,
+    cut: usize,
+    eg: &EpochGradient,
+    iters: usize,
+    rng: &mut Pcg32,
+    delays: &DelayStats,
+    telem: Option<&ContentionStats>,
+    cas: bool,
+    fault_after: Option<usize>,
+) {
+    for k in 0..iters {
+        if fault_after == Some(k) {
+            panic!("injected hot-shard fault: worker dies after {k} updates");
+        }
+        let i = rng.below(obj.n());
+        let r0 = eg.residuals[i];
+        // per-update sampling decision, same as the unsharded step machine
+        let tm = telem.filter(|t| t.should_sample(k as u64));
+        sharded_update(obj, i, r0, g_shared, g_lazy, r_shared, r_lazy, cut, cas, delays, tm);
+    }
+}
+
+/// Telemetry locals for one update (registers until the final flush).
+#[derive(Default)]
+struct TelemLocals {
+    writes: u64,
+    colls: u64,
+    retries: u64,
+    touches: u64,
+    head: u64,
+}
+
+/// One sharded update — `SparseIter`'s segments with a two-domain split:
+/// segment 1 pins BOTH clocks, segments 2/4 route each coordinate to its
+/// domain, segment 5 bumps both clocks and stamps per-domain.
+#[allow(clippy::too_many_arguments)]
+fn sharded_update(
+    obj: &Objective,
+    i: usize,
+    r0: f32,
+    g_shared: &SharedParams,
+    g_lazy: &LazyState,
+    r_shared: &SharedParams,
+    r_lazy: &LazyState,
+    cut: usize,
+    cas: bool,
+    delays: &DelayStats,
+    tm: Option<&ContentionStats>,
+) {
+    let row = obj.data.row(i);
+    // segment 1: pin the read clocks (the staleness windows' left edges)
+    let g_now = g_shared.clock();
+    let r_now = r_shared.clock();
+    let (gd, rd) = (g_shared.data(), r_shared.data());
+    let mut tl = TelemLocals::default();
+
+    // segment 2: fused catch-up + margin pass
+    let mut dot = 0.0f32;
+    for (k, &j) in row.indices.iter().enumerate() {
+        let ju = j as usize;
+        if let Some(t) = tm {
+            tl.touches += 1;
+            if ju < t.head_boundary() {
+                tl.head += 1;
+            }
+            t.record_touch_hist(ju);
+        }
+        let u = if ju < cut {
+            read_coord(rd, r_lazy, ju, r_now, cas, tm, &mut tl)
+        } else {
+            read_coord(gd, g_lazy, ju, g_now, cas, tm, &mut tl)
+        };
+        dot += u * row.values[k];
+    }
+
+    // segment 3: residual difference on the fresh margin
+    let y = obj.data.label(i);
+    let dr = obj.kind.dphi(y * dot) * y - r0;
+
+    // segment 4: scatter the combined sparse + dense step
+    let eta = g_lazy.eta();
+    for (k, &j) in row.indices.iter().enumerate() {
+        let ju = j as usize;
+        let xij = row.values[k];
+        if ju < cut {
+            write_coord(rd, r_lazy, ju, eta, dr, xij, cas, tm, &mut tl);
+        } else {
+            write_coord(gd, g_lazy, ju, eta, dr, xij, cas, tm, &mut tl);
+        }
+    }
+
+    // segment 5: bump both clocks — every update is one tick of its socket's
+    // replica stream AND one tick of the global stream (Σ_s M_s = M) — and
+    // stamp the touched coordinates in their own domain
+    let g_apply = g_shared.bump_clock();
+    let r_apply = r_shared.bump_clock();
+    for &j in row.indices {
+        let ju = j as usize;
+        if ju < cut {
+            r_lazy.fetch_max_clock(ju, r_apply);
+        } else {
+            g_lazy.fetch_max_clock(ju, g_apply);
+        }
+    }
+    if let Some(t) = tm {
+        // same clamp as SparseIter: collisions are 0/1 per write
+        t.record_update(tl.writes, tl.colls.min(tl.writes), tl.retries);
+        t.record_touches(tl.touches, tl.head);
+    }
+    delays.record(g_now, g_apply);
+}
+
+/// Segment-2 body for one coordinate in one domain: fetch_max the clock,
+/// catch up if stale (CAS or racy, with Σû drift accounting), record the
+/// touch tick. Identical arithmetic to `SparseIter::read_pass`.
+#[inline]
+fn read_coord(
+    data: &AtomicF32Vec,
+    lazy: &LazyState,
+    ju: usize,
+    now: u64,
+    cas: bool,
+    tm: Option<&ContentionStats>,
+    tl: &mut TelemLocals,
+) -> f32 {
+    let prev = lazy.fetch_max_clock(ju, now);
+    if tm.is_some() && prev > now {
+        tl.colls += 1; // foreign write inside this update's window
+    }
+    let u = if prev < now {
+        let steps = now - prev;
+        if cas {
+            lazy.record_drift(ju, data.get(ju), steps);
+            if tm.is_some() {
+                tl.writes += 1;
+                let (fresh, retries) =
+                    data.update_cas_counted(ju, |u| lazy.caught_up(ju, u, steps));
+                tl.retries += retries as u64;
+                if retries > 0 {
+                    tl.colls += 1;
+                }
+                fresh
+            } else {
+                data.update_cas(ju, |u| lazy.caught_up(ju, u, steps))
+            }
+        } else {
+            let fresh = lazy.advance(ju, data.get(ju), steps);
+            data.set(ju, fresh);
+            if tm.is_some() {
+                tl.writes += 1;
+            }
+            fresh
+        }
+    } else {
+        data.get(ju)
+    };
+    lazy.record_touch(ju, u);
+    u
+}
+
+/// Segment-4 body for one coordinate in one domain: apply
+/// −η(dr·x_ij + dense term) under the CAS or racy discipline. Identical
+/// arithmetic to `SparseIter::scatter`.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn write_coord(
+    data: &AtomicF32Vec,
+    lazy: &LazyState,
+    ju: usize,
+    eta: f32,
+    dr: f32,
+    xij: f32,
+    cas: bool,
+    tm: Option<&ContentionStats>,
+    tl: &mut TelemLocals,
+) {
+    if tm.is_some() {
+        tl.writes += 1;
+    }
+    if cas {
+        if tm.is_some() {
+            let (_, retries) =
+                data.update_cas_counted(ju, |u| u - eta * (lazy.dense_term(ju, u) + dr * xij));
+            tl.retries += retries as u64;
+            if retries > 0 {
+                tl.colls += 1;
+            }
+        } else {
+            data.update_cas(ju, |u| u - eta * (lazy.dense_term(ju, u) + dr * xij));
+        }
+    } else {
+        let u = data.get(ju);
+        let fresh = u - eta * (lazy.dense_term(ju, u) + dr * xij);
+        data.set(ju, fresh);
+        if tm.is_some() && data.get(ju).to_bits() != fresh.to_bits() {
+            tl.colls += 1; // sampled write-after-write detector
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use std::sync::Arc;
+
+    fn small_obj() -> Objective {
+        let ds = SyntheticSpec::new("numa", 256, 128, 8, 7).generate();
+        Objective::new(Arc::new(ds), 1e-2, crate::objective::LossKind::Logistic)
+    }
+
+    fn cfg(threads: usize, scheme: Scheme) -> RunConfig {
+        RunConfig {
+            threads,
+            scheme,
+            storage: Storage::Sparse,
+            eta: 0.1,
+            epochs: 3,
+            seed: 42,
+            target_gap: 0.0,
+            ..Default::default()
+        }
+    }
+
+    /// The two-tier synthetic generator concentrates touches on a √d head:
+    /// the picker must find a nonzero power-of-two cut within the 4·⌈√d⌉
+    /// sanity limit.
+    #[test]
+    fn cut_picker_finds_concentrated_head() {
+        let obj = small_obj();
+        let cut = pick_hot_cut(&obj);
+        assert!(cut > 0, "two-tier data must yield a head");
+        assert!(cut.is_power_of_two() || cut == obj.dim());
+        assert!(cut as u64 <= 4 * (obj.dim() as f64).sqrt().ceil() as u64, "cut {cut}");
+    }
+
+    /// Forced shard at p = 1 (one replica): trajectory is bit-identical to
+    /// the unsharded driver — the merge is a bitwise copy and both clock
+    /// domains tick in lockstep.
+    #[test]
+    fn forced_shard_p1_is_bit_identical_to_unsharded() {
+        let obj = small_obj();
+        for scheme in [Scheme::Unlock, Scheme::AtomicCas] {
+            for option in [SvrgOption::CurrentIterate, SvrgOption::Average] {
+                let c = cfg(1, scheme);
+                let want = crate::coordinator::asysvrg::run_asysvrg(
+                    &obj,
+                    &c,
+                    option,
+                    f64::NEG_INFINITY,
+                );
+                let mut o = NumaOptions::new(Topology::single_socket(4));
+                o.force_shard = true;
+                let got = run_numa(&obj, &c, option, f64::NEG_INFINITY, &o);
+                assert!(got.sharded, "{scheme:?}/{option:?}: must take the replica path");
+                assert_eq!(got.sockets_used, 1);
+                assert_eq!(
+                    got.run.final_w, want.final_w,
+                    "{scheme:?}/{option:?}: sharded p=1 diverged from unsharded"
+                );
+                assert_eq!(got.run.total_updates, want.total_updates);
+            }
+        }
+    }
+
+    /// Without force_shard, a single-socket topology delegates (sharded =
+    /// false) and still reproduces the unsharded result exactly.
+    #[test]
+    fn single_socket_delegates_verbatim() {
+        let obj = small_obj();
+        let c = cfg(2, Scheme::Unlock);
+        let o = NumaOptions::new(Topology::single_socket(8));
+        let got = run_numa(&obj, &c, SvrgOption::CurrentIterate, f64::NEG_INFINITY, &o);
+        assert!(!got.sharded);
+        assert_eq!(got.replica_tau, 0);
+    }
+
+    /// Locked schemes and dense storage never shard even across sockets.
+    #[test]
+    fn locked_and_dense_delegate() {
+        let obj = small_obj();
+        for (scheme, storage) in [
+            (Scheme::Consistent, Storage::Sparse),
+            (Scheme::Seqlock, Storage::Sparse),
+            (Scheme::Unlock, Storage::Dense),
+        ] {
+            let mut c = cfg(4, scheme);
+            c.storage = storage;
+            let mut o = NumaOptions::new(Topology::synthetic(2, 2));
+            o.force_shard = true; // even forced: the path must refuse
+            let got = run_numa(&obj, &c, SvrgOption::CurrentIterate, f64::NEG_INFINITY, &o);
+            assert!(!got.sharded, "{scheme:?}/{storage:?} must delegate");
+        }
+    }
+
+    /// cut = 0 (flat head) delegates even on a multi-socket run.
+    #[test]
+    fn zero_cut_delegates() {
+        let obj = small_obj();
+        let c = cfg(4, Scheme::Unlock);
+        let mut o = NumaOptions::new(Topology::synthetic(2, 2));
+        o.cut = Some(0);
+        let got = run_numa(&obj, &c, SvrgOption::CurrentIterate, f64::NEG_INFINITY, &o);
+        assert!(!got.sharded);
+    }
+
+    /// Two active sockets genuinely shard, converge, and account replica
+    /// lag into the staleness report.
+    #[test]
+    fn two_socket_shard_converges_and_accounts_lag() {
+        let obj = small_obj();
+        let w0 = vec![0.0f32; obj.dim()];
+        let f0 = obj.loss(&w0);
+        let c = cfg(4, Scheme::Unlock);
+        let o = NumaOptions::new(Topology::synthetic(2, 2));
+        let got = run_numa(&obj, &c, SvrgOption::CurrentIterate, f64::NEG_INFINITY, &o);
+        assert!(got.sharded);
+        assert_eq!(got.sockets_used, 2);
+        assert!(got.cut > 0);
+        assert!(got.run.final_loss() < f0, "sharded run must reduce the loss");
+        assert_eq!(
+            got.effective_tau,
+            got.run.max_delay + got.replica_tau,
+            "tau accounting must be additive"
+        );
+        // contention telemetry rode along
+        assert!(got.run.contention.is_some());
+    }
+
+    /// An infeasible η + enforce panics loudly instead of silently training
+    /// on a certificate that does not exist.
+    #[test]
+    fn enforce_feasibility_panics_on_infeasible_eta() {
+        let obj = small_obj();
+        let mut c = cfg(4, Scheme::Unlock);
+        c.eta = 3.9; // far beyond 1/(2L): even tau = 0 is infeasible
+        c.epochs = 1;
+        let mut o = NumaOptions::new(Topology::synthetic(2, 2));
+        o.enforce_feasibility = true;
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_numa(&obj, &c, SvrgOption::CurrentIterate, f64::NEG_INFINITY, &o)
+        }));
+        assert!(r.is_err(), "infeasible staleness must panic under enforce");
+    }
+}

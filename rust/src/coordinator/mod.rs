@@ -6,6 +6,8 @@
 //! * [`sparse`] — the sparse fast path (O(nnz) per update, lazy dense
 //!   corrections via per-coordinate clocks)
 //! * [`asysvrg`] — Algorithm 1 driver (Options 1 & 2)
+//! * [`hotshard`] — NUMA-aware per-socket hot-head replica sharding over
+//!   the same driver (S25, DESIGN.md §13)
 //! * [`hogwild`] — the Hogwild! baseline under identical disciplines
 //! * [`step`] — the resumable worker-step state machine both the thread
 //!   pool and the virtual scheduler (`crate::sched`) drive
@@ -18,6 +20,7 @@ pub mod asysvrg;
 pub mod delay;
 pub mod epoch;
 pub mod hogwild;
+pub mod hotshard;
 pub mod monitor;
 pub mod shared;
 pub mod sparse;
@@ -27,6 +30,7 @@ pub mod worker;
 
 pub use asysvrg::{run_asysvrg, run_asysvrg_hooked, run_asysvrg_on, EpochEnd, SvrgOption};
 pub use hogwild::run_hogwild;
+pub use hotshard::{pick_hot_cut, run_asysvrg_numa, run_numa, NumaOptions, NumaRunResult};
 pub use monitor::{HistoryPoint, RunResult};
 pub use shared::SharedParams;
 pub use sparse::LazyState;

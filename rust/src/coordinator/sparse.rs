@@ -220,7 +220,7 @@ impl LazyState {
     /// corrections (closed form, f64-evaluated to bound drift vs the
     /// step-by-step dense arithmetic).
     #[inline]
-    fn caught_up(&self, j: usize, u: f32, steps: u64) -> f32 {
+    pub(crate) fn caught_up(&self, j: usize, u: f32, steps: u64) -> f32 {
         if steps == 0 {
             return u;
         }
@@ -235,7 +235,7 @@ impl LazyState {
     /// The dense correction term λ(u_j − u₀_j) + μ̄_j at the current value —
     /// identical arithmetic to the dense worker's v-build for touched j.
     #[inline]
-    fn dense_term(&self, j: usize, u: f32) -> f32 {
+    pub(crate) fn dense_term(&self, j: usize, u: f32) -> f32 {
         self.lam * (u - self.u0[j]) + self.mu[j]
     }
 
@@ -258,7 +258,7 @@ impl LazyState {
     /// Fold the missed ticks [prev, prev+steps) of coordinate j into Σû.
     /// No-op unless this state is averaging.
     #[inline]
-    fn record_drift(&self, j: usize, u: f32, steps: u64) {
+    pub(crate) fn record_drift(&self, j: usize, u: f32, steps: u64) {
         if let Some(sums) = &self.sums {
             atomic_f64_add(&sums[j], self.drift_sum(j, u, steps));
         }
@@ -269,7 +269,7 @@ impl LazyState {
     /// geometric factor a^k once instead of once per consumer. Identical
     /// arithmetic to `record_drift` + `caught_up`.
     #[inline]
-    fn advance(&self, j: usize, u: f32, steps: u64) -> f32 {
+    pub(crate) fn advance(&self, j: usize, u: f32, steps: u64) -> f32 {
         if steps == 0 {
             return u;
         }
@@ -291,9 +291,35 @@ impl LazyState {
     /// Record coordinate j's value at the current tick (touched coordinates
     /// absorb their own tick eagerly). No-op unless averaging.
     #[inline]
-    fn record_touch(&self, j: usize, u: f32) {
+    pub(crate) fn record_touch(&self, j: usize, u: f32) {
         if let Some(sums) = &self.sums {
             atomic_f64_add(&sums[j], u as f64);
+        }
+    }
+
+    /// `fetch_max` on coordinate j's last-touched clock — the primitive
+    /// both the catch-up protocol (stale: returned prev < now) and the
+    /// hot-shard merge's no-drift stamping use. Exposed crate-wide so
+    /// `coordinator::hotshard` drives the identical clock discipline over
+    /// its replica-split coordinate ranges (DESIGN.md §13).
+    #[inline]
+    pub(crate) fn fetch_max_clock(&self, j: usize, now: u64) -> u64 {
+        self.last[j].fetch_max(now, Ordering::Relaxed)
+    }
+
+    /// True when built with `new_averaging` (Σû accumulators present).
+    pub(crate) fn is_averaging(&self) -> bool {
+        self.sums.is_some()
+    }
+
+    /// Drain coordinate j's raw Σû accumulator (hot-shard merge: replica
+    /// partial sums are combined and divided by the GLOBAL tick count, so
+    /// the per-replica `take_average_into` denominator does not apply).
+    /// 0.0 for non-averaging states.
+    pub(crate) fn take_sum(&self, j: usize) -> f64 {
+        match &self.sums {
+            Some(sums) => f64::from_bits(sums[j].swap(0.0f64.to_bits(), Ordering::Relaxed)),
+            None => 0.0,
         }
     }
 

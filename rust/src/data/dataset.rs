@@ -20,6 +20,9 @@ pub struct Dataset {
     /// simulator prices this once per inner phase, so the O(nnz + d) pass
     /// must not repeat per epoch.
     touch_concentration: OnceLock<f64>,
+    /// Memoized cache-line-granular variant (64 B = 16 f32 coordinates) —
+    /// the false-sharing input of `simcore::cost::NumaCost`.
+    line_concentration: OnceLock<f64>,
 }
 
 impl Dataset {
@@ -95,6 +98,7 @@ impl Dataset {
             dim,
             name: name.to_string(),
             touch_concentration: OnceLock::new(),
+            line_concentration: OnceLock::new(),
         })
     }
 
@@ -140,6 +144,34 @@ impl Dataset {
             let mut counts = vec![0u32; self.dim];
             for &j in &self.indices {
                 counts[j as usize] += 1;
+            }
+            counts
+                .iter()
+                .map(|&c| {
+                    let f = c as f64 / total;
+                    f * f
+                })
+                .sum()
+        })
+    }
+
+    /// [`coord_touch_concentration`](Dataset::coord_touch_concentration) at
+    /// 64-byte cache-line granularity: Σ_L (c_L/nnz)² with lines of 16 f32
+    /// coordinates. Merging buckets can only raise a Simpson index, so this
+    /// is always ≥ the coordinate concentration; the *gap* is the collision
+    /// mass available only to **false sharing** — two concurrent writes on
+    /// one line that touch different coordinates still ping-pong the line.
+    /// Input of the NUMA placement billing (`simcore::cost::NumaCost`).
+    pub fn line_touch_concentration(&self) -> f64 {
+        *self.line_concentration.get_or_init(|| {
+            let total = self.nnz() as f64;
+            if total == 0.0 {
+                return 0.0;
+            }
+            let lines = self.dim.div_ceil(16);
+            let mut counts = vec![0u32; lines];
+            for &j in &self.indices {
+                counts[j as usize / 16] += 1;
             }
             counts
                 .iter()

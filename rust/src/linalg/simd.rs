@@ -248,12 +248,78 @@ pub fn gather_dot_tolerance(indices: &[u32], values: &[f32], w: &[f32]) -> f32 {
     (2.0 * (n - 1.0) * f32::EPSILON as f64 * sum_abs) as f32 + f32::MIN_POSITIVE
 }
 
+// ---------------------------------------------------------------------------
+// Host capability report (ISSUE 10 satellite c).
+// ---------------------------------------------------------------------------
+
+/// Compiled lane width vs what the host's ISA could do — surfaced through
+/// `bench_micro` into `BENCH_simd.json` so a nightly on wider hardware
+/// *warns* about the headroom instead of silently leaving it on the table.
+/// A warning, not a gate: runtime lane-width dispatch is the ROADMAP
+/// follow-on, and the portable kernels are correct at any width.
+#[derive(Clone, Copy, Debug)]
+pub struct HostSimdReport {
+    /// Lane width the portable kernels are compiled for (= [`LANES`]).
+    pub lanes: usize,
+    /// Widest f32 SIMD width the host ISA exposes.
+    pub host_f32_lanes: usize,
+    /// Detected ISA level label.
+    pub isa: &'static str,
+}
+
+impl HostSimdReport {
+    /// Host vectors are wider than the compiled kernels — headroom exists.
+    pub fn host_wider(&self) -> bool {
+        self.host_f32_lanes > self.lanes
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_host_simd() -> (usize, &'static str) {
+    if is_x86_feature_detected!("avx512f") {
+        (16, "avx512f")
+    } else if is_x86_feature_detected!("avx2") {
+        (8, "avx2")
+    } else {
+        // SSE2 is baseline on x86_64
+        (4, "sse2")
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_host_simd() -> (usize, &'static str) {
+    // NEON is baseline on aarch64: 128-bit = 4 × f32
+    (4, "neon")
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_host_simd() -> (usize, &'static str) {
+    (1, "scalar")
+}
+
+/// Probe the host's widest f32 SIMD width and pair it with the compiled
+/// [`LANES`]. Cheap enough to call per report.
+pub fn host_report() -> HostSimdReport {
+    let (host_f32_lanes, isa) = detect_host_simd();
+    HostSimdReport { lanes: LANES, host_f32_lanes, isa }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn seq(n: usize) -> Vec<f32> {
         (0..n).map(|i| (i as f32) * 0.25 - 2.0).collect()
+    }
+
+    #[test]
+    fn host_report_is_sane() {
+        let r = host_report();
+        assert_eq!(r.lanes, LANES);
+        assert!(r.host_f32_lanes >= 1);
+        assert!(!r.isa.is_empty());
+        // host_wider is pure arithmetic over the two widths
+        assert_eq!(r.host_wider(), r.host_f32_lanes > r.lanes);
     }
 
     #[test]

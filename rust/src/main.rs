@@ -60,7 +60,7 @@ fn top_usage() -> String {
      \x20 fig1-speedup       regenerate Figure 1 left column\n\
      \x20 fig1-convergence   regenerate Figure 1 right column\n\
      \x20 theory             Theorem 1/2 contraction factors\n\
-     \x20 ablation           sweep eta / M / read-model / cores / storage / epoch / pool / schedule / distributed\n\
+     \x20 ablation           sweep eta / M / read-model / cores / storage / epoch / pool / numa / schedule / distributed\n\
      \x20 calibrate          measure cost model; --contention fits the sparse collision model\n\
      \x20 sched              deterministic interleaving schedules: CI race gate, fuzz, replay\n\
      \x20 distributed        simulate an m-node cluster with a sharded parameter server\n\
@@ -156,7 +156,14 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             .opt("scheme", "inconsistent", "consistent|inconsistent|unlock|seqlock|atomic-cas")
             .opt("threads", "10", "worker threads / simulated cores")
             .opt("batch", "1", "fused mini-batch width b (updates per snapshot read / flush)")
-            .opt("engine", "sim", "sim (simulated p cores) | threads (real OS threads)"),
+            .opt("engine", "sim", "sim (simulated p cores) | threads (real OS threads)")
+            .opt(
+                "numa",
+                "",
+                "NUMA-aware run (engine=threads, asysvrg only): 'probe' reads \
+                 /sys/devices/system/node, 'SxC' forces a synthetic S-socket layout; \
+                 shards the hot head per socket when >= 2 sockets are active (S25)",
+            ),
     );
     let m = cmd.parse(args)?;
     let env = bench_env(&m)?;
@@ -191,10 +198,48 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     println!("{}", cfg.describe());
     let (_, fstar) = coordinator::asysvrg::solve_fstar(&obj, env.eta_svrg, env.max_epochs * 3, 7);
     println!("f* = {fstar:.8} (long sequential SVRG)");
-    let r = match m.str("engine") {
-        "threads" => coordinator::run(&obj, &cfg, fstar),
-        "sim" => simcore::sim_run(&obj, &cfg, &env.costs, fstar),
-        e => return Err(format!("unknown engine '{e}'")),
+    let numa_spec = m.str("numa");
+    let r = match (m.str("engine"), numa_spec.is_empty()) {
+        ("threads", true) => coordinator::run(&obj, &cfg, fstar),
+        ("threads", false) => {
+            if cfg.algo != Algo::AsySvrg {
+                return Err("--numa requires --algo asysvrg".into());
+            }
+            let topo = if numa_spec == "probe" {
+                asysvrg::runtime::Topology::probe()
+            } else {
+                asysvrg::runtime::Topology::parse(numa_spec)?
+            };
+            println!("topology: {topo}");
+            let opts = coordinator::NumaOptions::new(topo);
+            let nr = coordinator::run_numa(
+                &obj,
+                &cfg,
+                coordinator::asysvrg::SvrgOption::CurrentIterate,
+                fstar,
+                &opts,
+            );
+            println!(
+                "numa: sharded={} cut={} sockets_used={} pinned={} replica_tau={} \
+                 effective_tau={} tau_budget={:?} feasible={}",
+                nr.sharded,
+                nr.cut,
+                nr.sockets_used,
+                nr.pinned_workers,
+                nr.replica_tau,
+                nr.effective_tau,
+                nr.tau_budget,
+                nr.tau_feasible
+            );
+            nr.run
+        }
+        ("sim", true) => simcore::sim_run(&obj, &cfg, &env.costs, fstar),
+        ("sim", false) => {
+            return Err("--numa needs --engine threads (the sim engine prices NUMA via \
+                        `repro ablation --which numa` instead)"
+                .into())
+        }
+        (e, _) => return Err(format!("unknown engine '{e}'")),
     };
     println!("{:>7} {:>12} {:>12} {:>10}", "passes", "loss", "gap", "seconds");
     for h in &r.history {
@@ -351,8 +396,8 @@ fn cmd_ablation(args: &[String]) -> Result<(), String> {
         .opt("epochs", "25", "epoch budget per point")
         .opt(
             "which",
-            "eta,m,read-model,cores,storage,epoch,contention,pool,schedule,distributed",
-            "comma list of sweeps: eta|m|read-model|cores|storage|epoch|contention|pool|schedule|distributed|serving \
+            "eta,m,read-model,cores,storage,epoch,contention,pool,numa,schedule,distributed",
+            "comma list of sweeps: eta|m|read-model|cores|storage|epoch|contention|pool|numa|schedule|distributed|serving \
              (serving runs real threads and is off the default list; nightly invokes it explicitly)",
         );
     let m = cmd.parse(args)?;
@@ -396,6 +441,10 @@ fn cmd_ablation(args: &[String]) -> Result<(), String> {
             "pool" => (
                 "worker runtime: per-epoch thread spawn vs persistent pool",
                 ablation::sweep_pool(&obj, fstar, threads, epochs),
+            ),
+            "numa" => (
+                "NUMA placement: flat machine vs per-effect billing vs hot-head sharding",
+                ablation::sweep_numa(&obj, fstar, threads, epochs),
             ),
             "schedule" => (
                 "interleaving policy: virtual scheduler vs real threads",
@@ -474,7 +523,15 @@ fn cmd_calibrate(args: &[String]) -> Result<(), String> {
         "to pin these coefficients, set CostModel.contention = SparseContention {{ kappa: {:.4}, collision_ns: {:.2} }}",
         rep.fitted.kappa, rep.fitted.collision_ns
     );
-    let path = report::write_json("calibration_contention", &rep.to_json())
+    // SIMD inner loops collide differently (shorter windows per touch), so
+    // a fit under --features simd lands in its own file and never clobbers
+    // the scalar coefficients (or vice versa)
+    let calib_name = if cfg!(feature = "simd") {
+        "calibration_contention_simd"
+    } else {
+        "calibration_contention"
+    };
+    let path = report::write_json(calib_name, &rep.to_json())
         .map_err(|e| e.to_string())?;
     println!("json -> {}", path.display());
     Ok(())

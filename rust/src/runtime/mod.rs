@@ -9,14 +9,20 @@
 //! * [`pool`] — condvar-parked worker threads with a scoped `run_phase`
 //!   API and a reusable barrier, replacing per-epoch `thread::scope`
 //!   churn in the coordinator's hot paths.
+//! * [`topology`] — the NUMA socket probe (`/sys/devices/system/node`) and
+//!   the `--numa "s×c"` synthetic override, plus feature-gated best-effort
+//!   core pinning of the pool's stable worker identities (S22,
+//!   DESIGN.md §13).
 
 pub mod artifact;
 pub mod backend;
 pub mod pool;
+pub mod topology;
 
 pub use artifact::{EntrySpec, Manifest, Runtime};
 pub use backend::{full_grad_streamed, loss_streamed, DenseBackend, NativeDense, XlaDense};
 pub use pool::{CachePadded, PhaseBarrier, WorkerPool, WorkerSlots};
+pub use topology::Topology;
 
 use std::path::PathBuf;
 

@@ -298,6 +298,25 @@ impl WorkerPool {
             panic!("pool worker panicked during phase");
         }
     }
+
+    /// Best-effort pin of workers `0..p` to the cores the topology assigns
+    /// them (`Topology::cpu_of_worker`), dispatched as one phase so each
+    /// worker pins *itself* (affinity is per-thread). Returns how many
+    /// workers were actually pinned: 0 without `--features numa` (the
+    /// syscall is compiled out), and possibly fewer than `p` when the
+    /// kernel refuses a cpu. Pinning is an optimization only — callers
+    /// must not treat a low count as an error (DESIGN.md §13).
+    pub fn pin_workers(&self, topo: &crate::runtime::topology::Topology, p: usize) -> usize {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let p = p.clamp(1, self.threads);
+        let pinned = AtomicUsize::new(0);
+        self.run_phase(p, |a| {
+            if crate::runtime::topology::pin_current_thread(topo.cpu_of_worker(a)) {
+                pinned.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        pinned.into_inner()
+    }
 }
 
 impl Drop for WorkerPool {

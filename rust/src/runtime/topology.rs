@@ -1,0 +1,403 @@
+//! S24: NUMA topology probe + worker → socket placement (DESIGN.md §13).
+//!
+//! The pool (DESIGN.md §8) keeps worker identities stable across epochs,
+//! which makes them pinnable: worker `a` can be bound to one core for the
+//! life of a run, and — more importantly for the hot-shard layer
+//! (`coordinator::hotshard`) — assigned a *socket*, so per-socket replicas
+//! of the hot head coordinates are written only by same-socket workers.
+//!
+//! Three ways to obtain a [`Topology`]:
+//!
+//! * [`Topology::probe`] — parse `/sys/devices/system/node/node*/cpulist`
+//!   on Linux (zero dependencies: plain `std::fs` reads). Hosts without
+//!   that sysfs tree (containers, macOS) fall back to one socket holding
+//!   every visible core.
+//! * [`Topology::parse`]`("2x4")` — the `--numa "s×c"` CLI override: a
+//!   deterministic synthetic topology for CI containers, the simulator and
+//!   the parity tests (`1x<c>` forces the single-socket contract).
+//! * [`Topology::synthetic`]`(s, c)` — the same, programmatically.
+//!
+//! Worker ids fill sockets contiguously (`worker 0..c` on socket 0, `c..2c`
+//! on socket 1, …), so any run with `p ≤ cores_per_socket` is single-socket
+//! by construction — the bit-parity configurations need no special casing.
+//!
+//! **Pinning** is best-effort and feature-gated: `--features numa` enables
+//! a raw `sched_setaffinity(2)` syscall (no libc dependency — an inline
+//! `syscall` instruction on x86_64/aarch64 Linux); every other build is a
+//! no-op returning `false`, keeping the default build byte-for-byte free of
+//! platform calls. Pinning never affects correctness or trajectories —
+//! only which physical core executes a worker.
+
+use std::fmt;
+
+/// A machine's socket layout: which cpu ids live on which NUMA node.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// Per-socket cpu id lists, sorted by node id then cpu id. Never empty;
+    /// every inner list is non-empty.
+    sockets: Vec<Vec<usize>>,
+    /// True when this topology was synthesized (CLI override or test) as
+    /// opposed to probed from the host.
+    synthetic: bool,
+}
+
+impl Topology {
+    /// Probe the host topology from `/sys/devices/system/node`. Falls back
+    /// to a single socket containing every core `std::thread` can see when
+    /// the sysfs tree is absent or unreadable (non-Linux, sandboxes).
+    pub fn probe() -> Self {
+        match probe_sysfs("/sys/devices/system/node") {
+            Some(sockets) if !sockets.is_empty() => Topology { sockets, synthetic: false },
+            _ => Topology::single_socket(host_cores()),
+        }
+    }
+
+    /// One socket holding cores `0..cores` (the probe fallback and the
+    /// degenerate `--numa 1xC` shape).
+    pub fn single_socket(cores: usize) -> Self {
+        Topology::synthetic(1, cores.max(1))
+    }
+
+    /// Deterministic synthetic topology: `sockets` sockets of
+    /// `cores_per_socket` cores each, cpu ids numbered contiguously.
+    pub fn synthetic(sockets: usize, cores_per_socket: usize) -> Self {
+        assert!(sockets >= 1, "topology needs at least one socket");
+        assert!(cores_per_socket >= 1, "topology needs at least one core per socket");
+        let sockets = (0..sockets)
+            .map(|s| (s * cores_per_socket..(s + 1) * cores_per_socket).collect())
+            .collect();
+        Topology { sockets, synthetic: true }
+    }
+
+    /// Parse the `--numa "s×c"` override: sockets × cores-per-socket, with
+    /// `x`, `X` or `×` as the separator (e.g. `2x4`, `2×4`).
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let norm = spec.trim().replace(['×', 'X'], "x");
+        let (s, c) = norm
+            .split_once('x')
+            .ok_or_else(|| format!("--numa expects \"SxC\" (e.g. 2x4), got {spec:?}"))?;
+        let sockets: usize = s
+            .trim()
+            .parse()
+            .map_err(|_| format!("--numa socket count {:?} is not a positive integer", s.trim()))?;
+        let cores: usize = c
+            .trim()
+            .parse()
+            .map_err(|_| format!("--numa cores-per-socket {:?} is not a positive integer", c.trim()))?;
+        if sockets == 0 || cores == 0 {
+            return Err(format!("--numa {spec:?}: both factors must be >= 1"));
+        }
+        Ok(Topology::synthetic(sockets, cores))
+    }
+
+    /// Number of sockets (NUMA nodes).
+    pub fn sockets(&self) -> usize {
+        self.sockets.len()
+    }
+
+    /// Cores on socket `s`.
+    pub fn cores_on(&self, s: usize) -> usize {
+        self.sockets[s].len()
+    }
+
+    /// Total cores across all sockets.
+    pub fn total_cores(&self) -> usize {
+        self.sockets.iter().map(|s| s.len()).sum()
+    }
+
+    /// Smallest per-socket core count (synthetic topologies are uniform, so
+    /// this is just `c`; probed ones may be ragged).
+    pub fn cores_per_socket(&self) -> usize {
+        self.sockets.iter().map(|s| s.len()).min().unwrap_or(1)
+    }
+
+    /// True when built by [`Topology::synthetic`] / [`Topology::parse`].
+    pub fn is_synthetic(&self) -> bool {
+        self.synthetic
+    }
+
+    /// Socket hosting worker `w`: workers fill sockets contiguously and
+    /// oversubscription wraps around the machine, so `p ≤ cores_on(0)`
+    /// keeps every worker on socket 0.
+    pub fn socket_of_worker(&self, w: usize) -> usize {
+        let mut idx = w % self.total_cores();
+        for (s, cores) in self.sockets.iter().enumerate() {
+            if idx < cores.len() {
+                return s;
+            }
+            idx -= cores.len();
+        }
+        unreachable!("worker index reduced modulo total_cores");
+    }
+
+    /// Physical cpu id worker `w` pins to (same contiguous-fill order as
+    /// [`socket_of_worker`](Topology::socket_of_worker)).
+    pub fn cpu_of_worker(&self, w: usize) -> usize {
+        let mut idx = w % self.total_cores();
+        for cores in &self.sockets {
+            if idx < cores.len() {
+                return cores[idx];
+            }
+            idx -= cores.len();
+        }
+        unreachable!("worker index reduced modulo total_cores");
+    }
+
+    /// How many distinct sockets the workers `0..p` occupy.
+    pub fn active_sockets(&self, p: usize) -> usize {
+        if p == 0 {
+            return 0;
+        }
+        let mut seen = vec![false; self.sockets()];
+        for w in 0..p {
+            seen[self.socket_of_worker(w)] = true;
+        }
+        seen.iter().filter(|&&b| b).count()
+    }
+
+    /// Expected fraction of ordered distinct worker pairs `(w, w')` in
+    /// `0..p` that sit on different sockets — the cross-socket blend the
+    /// placement billing uses (`simcore::cost::NumaCost`). 0 at `p ≤ 1` or
+    /// on one socket; → `(s−1)/s` as p grows across s balanced sockets.
+    pub fn cross_pair_fraction(&self, p: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let mut occupancy = vec![0usize; self.sockets()];
+        for w in 0..p {
+            occupancy[self.socket_of_worker(w)] += 1;
+        }
+        let same: usize = occupancy.iter().map(|&n| n * n).sum();
+        (p * p - same) as f64 / (p * (p - 1)) as f64
+    }
+}
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let shape: Vec<String> = self.sockets.iter().map(|s| s.len().to_string()).collect();
+        write!(
+            f,
+            "{} socket(s) x [{}] cores{}",
+            self.sockets(),
+            shape.join(","),
+            if self.synthetic { " (synthetic)" } else { "" }
+        )
+    }
+}
+
+/// Cores `std::thread` reports, defaulting to 1 when unavailable.
+fn host_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Parse `node*/cpulist` files under `root`. Returns `None` when the tree
+/// is absent/unreadable or yields no nodes.
+fn probe_sysfs(root: &str) -> Option<Vec<Vec<usize>>> {
+    let entries = std::fs::read_dir(root).ok()?;
+    let mut nodes: Vec<(usize, Vec<usize>)> = Vec::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let Some(id) = name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok()) else {
+            continue;
+        };
+        let list = std::fs::read_to_string(entry.path().join("cpulist")).ok()?;
+        let cpus = parse_cpulist(&list)?;
+        if !cpus.is_empty() {
+            nodes.push((id, cpus));
+        }
+    }
+    if nodes.is_empty() {
+        return None;
+    }
+    nodes.sort_by_key(|(id, _)| *id);
+    Some(nodes.into_iter().map(|(_, cpus)| cpus).collect())
+}
+
+/// Parse the kernel's cpulist format: comma-separated ids and inclusive
+/// ranges, e.g. `"0-3,8-11"` or `"0,2,4"`.
+fn parse_cpulist(list: &str) -> Option<Vec<usize>> {
+    let mut cpus = Vec::new();
+    for part in list.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((lo, hi)) = part.split_once('-') {
+            let lo: usize = lo.trim().parse().ok()?;
+            let hi: usize = hi.trim().parse().ok()?;
+            if hi < lo {
+                return None;
+            }
+            cpus.extend(lo..=hi);
+        } else {
+            cpus.push(part.trim().parse().ok()?);
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    Some(cpus)
+}
+
+// ------------------------------------------------------------- pinning
+
+/// Pin the calling thread to `cpu`, best-effort. Returns `true` only when
+/// the affinity call succeeded — which requires the `numa` feature, a
+/// Linux x86_64/aarch64 target, and kernel permission. Every other build
+/// is a no-op returning `false`: the default build carries no platform
+/// calls at all, and pinning failures are never errors (affinity is an
+/// optimization, not a correctness requirement).
+pub fn pin_current_thread(cpu: usize) -> bool {
+    let words = cpu / 64 + 1;
+    let mut mask = vec![0u64; words.max(16)]; // >= kernel's 1024-bit set
+    mask[cpu / 64] = 1u64 << (cpu % 64);
+    sched_setaffinity_raw(&mask)
+}
+
+/// Raw `sched_setaffinity(0, len, mask)` — pid 0 = calling thread. Inline
+/// syscall so the zero-dependency policy holds (no libc crate).
+#[cfg(all(feature = "numa", target_os = "linux", target_arch = "x86_64"))]
+fn sched_setaffinity_raw(mask: &[u64]) -> bool {
+    let ret: i64;
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 203i64 => ret, // __NR_sched_setaffinity
+            in("rdi") 0usize,
+            in("rsi") std::mem::size_of_val(mask),
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+#[cfg(all(feature = "numa", target_os = "linux", target_arch = "aarch64"))]
+fn sched_setaffinity_raw(mask: &[u64]) -> bool {
+    let ret: i64;
+    unsafe {
+        std::arch::asm!(
+            "svc 0",
+            in("x8") 122i64, // __NR_sched_setaffinity
+            inlateout("x0") 0i64 => ret,
+            in("x1") std::mem::size_of_val(mask),
+            in("x2") mask.as_ptr(),
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+#[cfg(not(all(
+    feature = "numa",
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+)))]
+fn sched_setaffinity_raw(_mask: &[u64]) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_x_and_unicode_times() {
+        for spec in ["2x4", "2X4", "2×4", " 2 x 4 "] {
+            let t = Topology::parse(spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+            assert_eq!(t.sockets(), 2);
+            assert_eq!(t.cores_per_socket(), 4);
+            assert_eq!(t.total_cores(), 8);
+            assert!(t.is_synthetic());
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in ["", "4", "0x4", "2x0", "2x", "x4", "ax b", "2*4"] {
+            assert!(Topology::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn contiguous_fill_keeps_small_p_on_one_socket() {
+        let t = Topology::synthetic(2, 4);
+        for w in 0..4 {
+            assert_eq!(t.socket_of_worker(w), 0, "worker {w}");
+        }
+        for w in 4..8 {
+            assert_eq!(t.socket_of_worker(w), 1, "worker {w}");
+        }
+        // oversubscription wraps deterministically
+        assert_eq!(t.socket_of_worker(8), 0);
+        assert_eq!(t.socket_of_worker(13), 1);
+        assert_eq!(t.active_sockets(1), 1);
+        assert_eq!(t.active_sockets(4), 1);
+        assert_eq!(t.active_sockets(5), 2);
+        assert_eq!(t.active_sockets(0), 0);
+    }
+
+    #[test]
+    fn cpu_assignment_matches_socket_assignment() {
+        let t = Topology::synthetic(3, 2);
+        for w in 0..9 {
+            let cpu = t.cpu_of_worker(w);
+            let s = t.socket_of_worker(w);
+            assert_eq!(cpu / 2, s, "worker {w}: cpu {cpu} on socket {s}");
+        }
+    }
+
+    #[test]
+    fn cross_pair_fraction_tracks_occupancy() {
+        let t = Topology::synthetic(2, 4);
+        assert_eq!(t.cross_pair_fraction(0), 0.0);
+        assert_eq!(t.cross_pair_fraction(1), 0.0);
+        assert_eq!(t.cross_pair_fraction(4), 0.0, "single socket: no cross pairs");
+        // p=8, 4+4 split: cross ordered pairs = 64-32 = 32 of 56
+        let f = t.cross_pair_fraction(8);
+        assert!((f - 32.0 / 56.0).abs() < 1e-12, "{f}");
+        // p=5, 4+1 split: cross = 25-17 = 8 of 20
+        let f5 = t.cross_pair_fraction(5);
+        assert!((f5 - 8.0 / 20.0).abs() < 1e-12, "{f5}");
+        let single = Topology::single_socket(8);
+        assert_eq!(single.cross_pair_fraction(8), 0.0);
+    }
+
+    #[test]
+    fn cpulist_parser_handles_ranges_and_singles() {
+        assert_eq!(parse_cpulist("0-3,8-11").unwrap(), vec![0, 1, 2, 3, 8, 9, 10, 11]);
+        assert_eq!(parse_cpulist("0,2,4\n").unwrap(), vec![0, 2, 4]);
+        assert_eq!(parse_cpulist("5").unwrap(), vec![5]);
+        assert_eq!(parse_cpulist("").unwrap(), Vec::<usize>::new());
+        assert!(parse_cpulist("3-1").is_none());
+        assert!(parse_cpulist("a-b").is_none());
+    }
+
+    #[test]
+    fn probe_never_panics_and_has_at_least_one_core() {
+        let t = Topology::probe();
+        assert!(t.sockets() >= 1);
+        assert!(t.total_cores() >= 1);
+        assert_eq!(t.socket_of_worker(0), 0);
+    }
+
+    #[test]
+    fn pin_is_a_silent_noop_without_the_feature() {
+        // with `numa` off this must be false; with it on, best-effort —
+        // either outcome is legal, the call just must not crash
+        let ok = pin_current_thread(0);
+        if !cfg!(feature = "numa") {
+            assert!(!ok, "pinning must be inert without --features numa");
+        }
+    }
+
+    #[test]
+    fn display_is_informative() {
+        let t = Topology::synthetic(2, 4);
+        let s = format!("{t}");
+        assert!(s.contains("2 socket"), "{s}");
+        assert!(s.contains("synthetic"), "{s}");
+    }
+}

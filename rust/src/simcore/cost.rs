@@ -453,6 +453,179 @@ pub enum ContentionBilling {
     PerNnz,
 }
 
+/// Placement-aware billing extension (S25, DESIGN.md §13): prices WHERE
+/// contention happens, not just whether it happens. Three individually
+/// ablatable effects on top of the calibrated collision model:
+///
+/// * **placement** — a collision between workers on different sockets
+///   pays `cross_socket_factor ×` the calibrated `collision_ns` (the
+///   cache line crosses the interconnect instead of the shared LLC). The
+///   cross-socket probability of a random collision follows the
+///   contiguous-fill worker placement of `runtime::topology`:
+///   `(p² − Σ_s n_s²) / (p(p−1))` over per-socket occupancies n_s.
+/// * **false sharing** — adjacent coordinates share 64 B lines, so writes
+///   that never collide coordinate-wise still ping-pong lines. Billed as
+///   the *extra* collision rate obtained by re-evaluating the calibrated
+///   model at line-granular concentration (`line_overlap` ≥ `overlap`;
+///   the gap is definitionally the false-sharing mass), at
+///   `false_sharing_ns` per event (no retry arithmetic — pure transfer).
+/// * **bandwidth** — cross-socket read traffic saturates the interconnect
+///   before local channels: the read phase pays an extra
+///   `remote_bw_penalty · cross_fraction · (p−1)` factor.
+///
+/// With `sharded` set (the hot-head replica layer is on), head-coordinate
+/// traffic — `head_touch_fraction` of all touches — is confined to its
+/// socket: its collision population shrinks to the per-socket worker
+/// count and its placement factor drops to intra-socket; the tail keeps
+/// the full cross-socket blend. The per-epoch replica merge the layer
+/// performs is billed separately via [`NumaCost::merge_ns`].
+#[derive(Clone, Copy, Debug)]
+pub struct NumaCost {
+    /// Simulated socket count (uniform synthetic shape, like `--numa SxC`).
+    pub sockets: usize,
+    /// Cores per socket.
+    pub cores_per_socket: usize,
+    /// Interconnect multiplier on `collision_ns` for cross-socket
+    /// collisions (QPI/UPI hop vs shared-LLC transfer; ≥ 1).
+    pub cross_socket_factor: f64,
+    /// Nanoseconds per false-sharing event (line transfer without a
+    /// coordinate-level conflict).
+    pub false_sharing_ns: f64,
+    /// Extra per-core read-bandwidth tax applied at the cross-socket
+    /// fraction (on top of the base `bw_penalty`).
+    pub remote_bw_penalty: f64,
+    /// Hot-head replica sharding active: head collisions go intra-socket.
+    pub sharded: bool,
+    /// Head cut in coordinates (only meaningful when `sharded`).
+    pub head_cut: usize,
+    /// Fraction of coordinate touches landing in `[0, head_cut)`.
+    pub head_touch_fraction: f64,
+    /// Line-granular touch concentration (≥ `UpdateBilling::overlap`).
+    pub line_overlap: f64,
+    /// Ablation switches — each effect can be billed in isolation.
+    pub bill_placement: bool,
+    pub bill_false_sharing: bool,
+    pub bill_bandwidth: bool,
+}
+
+impl NumaCost {
+    /// Reference multi-socket shape: 2×4 with interconnect constants in
+    /// the published Xeon range (remote-hit latency ≈ 2–3× local LLC, a
+    /// full line transfer for every false share, a few %/core of remote
+    /// bandwidth tax). All effects billed; unsharded.
+    pub fn default_host(sockets: usize, cores_per_socket: usize) -> Self {
+        NumaCost {
+            sockets: sockets.max(1),
+            cores_per_socket: cores_per_socket.max(1),
+            cross_socket_factor: 2.5,
+            false_sharing_ns: 6.0,
+            remote_bw_penalty: 0.03,
+            sharded: false,
+            head_cut: 0,
+            head_touch_fraction: 0.0,
+            line_overlap: 0.0,
+            bill_placement: true,
+            bill_false_sharing: true,
+            bill_bandwidth: true,
+        }
+    }
+
+    /// Take the line-granular touch concentration from the dataset (the
+    /// false-sharing skew input; `Dataset::line_touch_concentration`).
+    pub fn with_objective(mut self, obj: &Objective) -> Self {
+        self.line_overlap = obj.data.line_touch_concentration();
+        self
+    }
+
+    /// Turn on hot-head replica sharding billing: head-coordinate
+    /// collisions confine to one socket. `head_touch_fraction` is the
+    /// fraction of coordinate touches landing in `[0, head_cut)`
+    /// (telemetry `head_touch_fraction`, or the dataset prefix mass).
+    pub fn with_sharding(mut self, head_cut: usize, head_touch_fraction: f64) -> Self {
+        self.sharded = true;
+        self.head_cut = head_cut;
+        self.head_touch_fraction = head_touch_fraction.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Keep only the selected effects (the `ablation --which numa` axis).
+    pub fn with_effects(mut self, placement: bool, false_sharing: bool, bandwidth: bool) -> Self {
+        self.bill_placement = placement;
+        self.bill_false_sharing = false_sharing;
+        self.bill_bandwidth = bandwidth;
+        self
+    }
+
+    /// Cross-socket fraction of ordered distinct worker pairs under the
+    /// contiguous-fill placement (`Topology::cross_pair_fraction` for the
+    /// uniform synthetic shape): 0 while p fits one socket, → (s−1)/s as p
+    /// fills the machine.
+    pub fn cross_fraction(&self, p: usize) -> f64 {
+        if p <= 1 || self.sockets <= 1 {
+            return 0.0;
+        }
+        let mut left = p;
+        let mut same = 0usize;
+        for _ in 0..self.sockets {
+            let n_s = left.min(self.cores_per_socket);
+            same += n_s * n_s;
+            left -= n_s;
+            if left == 0 {
+                break;
+            }
+        }
+        // oversubscription beyond the machine wraps like the topology does;
+        // approximate with balanced occupancy in that regime
+        if left > 0 {
+            let n = p as f64 / self.sockets as f64;
+            let same = self.sockets as f64 * n * n;
+            return (p as f64 * p as f64 - same) / (p as f64 * (p - 1) as f64);
+        }
+        (p * p - same) as f64 / (p * (p - 1)) as f64
+    }
+
+    /// Lock-free writer population a head-coordinate collision sees when
+    /// sharded: only the workers of one socket write a given replica.
+    pub fn head_writers(&self, p: usize) -> usize {
+        if self.sharded {
+            p.div_ceil(self.sockets).min(p).max(1)
+        } else {
+            p
+        }
+    }
+
+    /// Placement multiplier on `collision_ns` for a collision population
+    /// whose cross-socket fraction is `cross`: blends the intra-socket
+    /// baseline (1×) with the interconnect factor.
+    pub fn placement_factor(&self, cross: f64) -> f64 {
+        if !self.bill_placement {
+            return 1.0;
+        }
+        1.0 + cross.clamp(0.0, 1.0) * (self.cross_socket_factor - 1.0)
+    }
+
+    /// Read-phase bandwidth multiplier at p cores (≥ 1; exactly 1 with the
+    /// effect ablated or on one socket).
+    pub fn read_bw_factor(&self, p: usize) -> f64 {
+        if !self.bill_bandwidth {
+            return 1.0;
+        }
+        1.0 + self.remote_bw_penalty * self.cross_fraction(p) * p.saturating_sub(1) as f64
+    }
+
+    /// Serial epoch-barrier cost of the replica merge: every socket's
+    /// replica contributes `head_cut` coordinate reads + the fold write
+    /// (0 unless `sharded`).
+    pub fn merge_ns(&self, costs: &CostModel) -> f64 {
+        if !self.sharded {
+            return 0.0;
+        }
+        self.sockets as f64
+            * self.head_cut as f64
+            * (costs.read_coord_ns + costs.write_coord_ns)
+    }
+}
+
 /// The ONE per-update cost entry point (ISSUE 7 satellite): the scheme →
 /// lock-discipline mapping and the per-phase duration formulas shared by
 /// the single-box engine (`engine::simulate_inner_opts`), the ablation
@@ -482,6 +655,9 @@ pub struct UpdateBilling {
     pub d: usize,
     /// Active cores on the (simulated) machine — the bandwidth factor.
     pub p: usize,
+    /// Placement-aware extension (S25): bills WHERE the collisions land.
+    /// `None` keeps every formula bit-identical to the flat-machine model.
+    pub numa: Option<NumaCost>,
 }
 
 impl UpdateBilling {
@@ -515,7 +691,14 @@ impl UpdateBilling {
             avg_nnz: obj.data.avg_nnz(),
             d: obj.dim(),
             p,
+            numa: None,
         }
+    }
+
+    /// Attach the placement-aware NUMA extension (S25, DESIGN.md §13).
+    pub fn with_numa(mut self, numa: NumaCost) -> Self {
+        self.numa = Some(numa);
+        self
     }
 
     /// Concurrent lock-free writers the collision model sees: serialized
@@ -536,14 +719,18 @@ impl UpdateBilling {
         self.costs.lock_ns
     }
 
-    /// Read-phase duration for a row with `nnz` nonzeros.
+    /// Read-phase duration for a row with `nnz` nonzeros. With the NUMA
+    /// extension attached, cross-socket read traffic pays the interconnect
+    /// bandwidth tax on top of the base per-core factor.
     #[inline]
     pub fn read_ns(&self, nnz: usize) -> f64 {
-        if self.sparse {
-            self.costs.sparse_read_cost(nnz, self.p)
-        } else {
-            self.costs.read_cost(self.d, self.p)
-        }
+        let numa_bw = self.numa.map_or(1.0, |nc| nc.read_bw_factor(self.p));
+        numa_bw
+            * if self.sparse {
+                self.costs.sparse_read_cost(nnz, self.p)
+            } else {
+                self.costs.read_cost(self.d, self.p)
+            }
     }
 
     /// Compute-phase duration; `svrg` selects the AsySVRG v-build vs the
@@ -568,6 +755,9 @@ impl UpdateBilling {
     pub fn update_ns(&self, nnz: usize, writers: usize) -> f64 {
         if self.sparse {
             if self.per_nnz {
+                if let Some(nc) = self.numa {
+                    return self.sparse_update_ns_numa(nnz, &nc);
+                }
                 self.costs.sparse_update_cost_contended(
                     nnz,
                     self.p,
@@ -582,6 +772,45 @@ impl UpdateBilling {
         } else {
             self.costs.update_cost(self.d, self.p, writers, self.cas)
         }
+    }
+
+    /// Placement-aware variant of `sparse_update_cost_contended` (S25): the
+    /// base per-coordinate store is unchanged; the collision term splits
+    /// into the hot-head and tail touch populations, each priced with its
+    /// own writer count and placement factor; an extra false-sharing term
+    /// bills the collision mass visible only at 64 B-line granularity.
+    /// With all three effect switches off (and unsharded) this reduces
+    /// exactly to the flat formula.
+    fn sparse_update_ns_numa(&self, nnz: usize, nc: &NumaCost) -> f64 {
+        let c = &self.costs;
+        let casf = if self.cas { c.cas_factor } else { 1.0 };
+        let w = self.lockfree_writers();
+        let cross = nc.cross_fraction(self.p);
+        // tail: the full lock-free writer population, cross-socket blend
+        let tail_rate = c.contention.collision_rate(w, self.overlap, self.avg_nnz);
+        let tail_pf = nc.placement_factor(cross);
+        // head: confined to one socket's workers when sharded (replica
+        // writes never cross the interconnect), else same as the tail
+        let (head_rate, head_pf) = if nc.sharded {
+            let hw = nc.head_writers(w);
+            (c.contention.collision_rate(hw, self.overlap, self.avg_nnz), nc.placement_factor(0.0))
+        } else {
+            (tail_rate, tail_pf)
+        };
+        let h = nc.head_touch_fraction.clamp(0.0, 1.0);
+        let coll = h * head_rate * head_pf + (1.0 - h) * tail_rate * tail_pf;
+        // false sharing: re-evaluate the calibrated model at line-granular
+        // concentration; the rate GAP is definitionally the line conflicts
+        // with no coordinate conflict. Pure line transfer, no retry math —
+        // and the ping-pong crosses sockets at the same blend as the tail.
+        let fs = if nc.bill_false_sharing {
+            let line_rate =
+                c.contention.collision_rate(w, nc.line_overlap.max(self.overlap), self.avg_nnz);
+            (line_rate - tail_rate).max(0.0) * nc.false_sharing_ns * tail_pf
+        } else {
+            0.0
+        };
+        nnz as f64 * (c.write_coord_ns * c.bw(self.p) * casf + coll * c.contention.collision_ns + fs)
     }
 }
 
@@ -890,5 +1119,115 @@ mod tests {
         let quiet = c.sparse_update_cost_contended(nnz, p, p, false, 1.0 / 1_000_000.0, 50.0);
         let base = nnz as f64 * c.write_coord_ns * c.bw(p);
         assert!(quiet < base * 1.05, "quiet {quiet} vs base {base}");
+    }
+
+    // ------------------------------------------------ NUMA placement (S25)
+
+    fn numa_obj() -> crate::objective::Objective {
+        use crate::data::synthetic::SyntheticSpec;
+        use std::sync::Arc;
+        let ds = SyntheticSpec::new("numa", 128, 256, 12, 9).generate();
+        crate::objective::Objective::new(Arc::new(ds), 1e-2, crate::objective::LossKind::Logistic)
+    }
+
+    fn numa_bill(p: usize, nc: NumaCost) -> UpdateBilling {
+        UpdateBilling::new(
+            &CostModel::default_host(),
+            Scheme::Unlock,
+            Storage::Sparse,
+            ContentionBilling::PerNnz,
+            p,
+            &numa_obj(),
+        )
+        .with_numa(nc)
+    }
+
+    #[test]
+    fn numa_cross_fraction_follows_contiguous_fill() {
+        let nc = NumaCost::default_host(2, 4);
+        // p ≤ 1 or one socket: never cross
+        assert_eq!(nc.cross_fraction(1), 0.0);
+        assert_eq!(NumaCost::default_host(1, 8).cross_fraction(8), 0.0);
+        // p = 4 fills socket 0 only under contiguous placement
+        assert_eq!(nc.cross_fraction(4), 0.0);
+        // p = 8 splits 4/4: (64 − 32) / 56
+        assert!((nc.cross_fraction(8) - 32.0 / 56.0).abs() < 1e-12);
+        // fraction is monotone as workers spill over
+        assert!(nc.cross_fraction(5) > 0.0 && nc.cross_fraction(5) < nc.cross_fraction(8));
+        // oversubscription past the machine stays a valid probability
+        let f = nc.cross_fraction(32);
+        assert!(f > 0.0 && f < 1.0, "oversubscribed cross fraction {f}");
+    }
+
+    #[test]
+    fn numa_reduces_to_flat_model_when_all_effects_off() {
+        let c = CostModel::default_host();
+        let o = numa_obj();
+        let p = 8;
+        let nnz = 12;
+        let off = NumaCost::default_host(2, 4).with_objective(&o).with_effects(false, false, false);
+        let b = numa_bill(p, off);
+        let flat = c.sparse_update_cost_contended(
+            nnz,
+            p,
+            p,
+            false,
+            o.data.coord_touch_concentration(),
+            o.data.avg_nnz(),
+        );
+        assert_eq!(b.update_ns(nnz, p), flat, "ablated NUMA must be bit-identical to flat");
+        assert_eq!(b.read_ns(nnz), c.sparse_read_cost(nnz, p));
+    }
+
+    #[test]
+    fn numa_effects_isolate_and_point_the_right_way() {
+        let o = numa_obj();
+        let (p, nnz) = (8usize, 12usize);
+        let base = NumaCost::default_host(2, 4).with_objective(&o);
+        let off = numa_bill(p, base.with_effects(false, false, false));
+        // placement: cross-socket collisions cost more, updates only
+        let pl = numa_bill(p, base.with_effects(true, false, false));
+        assert!(pl.update_ns(nnz, p) > off.update_ns(nnz, p));
+        assert_eq!(pl.read_ns(nnz), off.read_ns(nnz));
+        // false sharing: line concentration ≥ coord concentration ⇒ extra
+        // update mass; reads untouched
+        assert!(o.data.line_touch_concentration() >= o.data.coord_touch_concentration());
+        let fs = numa_bill(p, base.with_effects(false, true, false));
+        assert!(fs.update_ns(nnz, p) > off.update_ns(nnz, p));
+        assert_eq!(fs.read_ns(nnz), off.read_ns(nnz));
+        // bandwidth: read phase only
+        let bw = numa_bill(p, base.with_effects(false, false, true));
+        assert_eq!(bw.update_ns(nnz, p), off.update_ns(nnz, p));
+        assert!(bw.read_ns(nnz) > off.read_ns(nnz));
+        // all effects on a single socket: nothing to bill beyond false
+        // sharing (which is placement-independent intra-socket)
+        let one = numa_bill(p, NumaCost::default_host(1, 8).with_objective(&o));
+        assert_eq!(one.read_ns(nnz), off.read_ns(nnz));
+    }
+
+    #[test]
+    fn numa_sharding_confines_hot_head_collisions() {
+        let o = numa_obj();
+        let (p, nnz) = (8usize, 12usize);
+        let flat = NumaCost::default_host(2, 4).with_objective(&o);
+        // a hot head carrying 80% of the touches: sharding confines that
+        // mass to one socket's writers at the intra-socket transfer price
+        let sharded = flat.with_sharding(32, 0.8);
+        let bu = numa_bill(p, flat);
+        let bs = numa_bill(p, sharded);
+        assert!(
+            bs.update_ns(nnz, p) < bu.update_ns(nnz, p),
+            "sharded {} !< unsharded {}",
+            bs.update_ns(nnz, p),
+            bu.update_ns(nnz, p)
+        );
+        // …but the epoch merge is the price of admission
+        let c = CostModel::default_host();
+        assert_eq!(flat.merge_ns(&c), 0.0);
+        let m = sharded.merge_ns(&c);
+        assert!((m - 2.0 * 32.0 * (c.read_coord_ns + c.write_coord_ns)).abs() < 1e-9);
+        // head writer population: ⌈8/2⌉ = 4 when sharded, 8 otherwise
+        assert_eq!(sharded.head_writers(8), 4);
+        assert_eq!(flat.head_writers(8), 8);
     }
 }

@@ -38,7 +38,7 @@ use crate::coordinator::epoch::EpochGradient;
 use crate::objective::Objective;
 use crate::util::rng::Pcg32;
 
-use super::cost::{CostModel, RuntimeDispatch, UpdateBilling};
+use super::cost::{CostModel, NumaCost, RuntimeDispatch, UpdateBilling};
 
 pub use super::cost::ContentionBilling;
 
@@ -92,6 +92,13 @@ pub struct EngineOpts {
     /// to b = 1 (the mirror equals the shared vector when nobody else
     /// writes); only the billed time shrinks.
     pub batch: usize,
+    /// Placement-aware NUMA billing (S23, DESIGN.md §13): prices cross- vs
+    /// intra-socket collisions, 64 B-line false sharing and interconnect
+    /// read bandwidth on the calibrated sparse path. `None` (default)
+    /// keeps the flat-machine formulas bit-identical. The sharded replica
+    /// merge is billed per epoch by the sim drivers via
+    /// [`NumaCost::merge_ns`](super::cost::NumaCost::merge_ns), not here.
+    pub numa: Option<NumaCost>,
 }
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -245,7 +252,10 @@ pub fn simulate_inner_opts(
     // Inconsistent/Seqlock too. (Approximation: the simulator still
     // releases the lock between a thread's read and update phases, where
     // the real sparse path holds it across the iteration.)
-    let bill = UpdateBilling::new(costs, scheme, opts.storage, opts.contention, p, obj);
+    let mut bill = UpdateBilling::new(costs, scheme, opts.storage, opts.contention, p, obj);
+    if let Some(nc) = opts.numa {
+        bill = bill.with_numa(nc);
+    }
     let read_locked = bill.read_locked;
     let update_locked = bill.update_locked;
     let window = opts.read_model == ReadModel::Window && !read_locked;

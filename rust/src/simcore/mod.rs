@@ -17,7 +17,7 @@ pub mod cost;
 pub mod engine;
 
 pub use cost::{
-    ContentionBilling, ContentionSample, CostModel, RuntimeDispatch, SparseContention,
+    ContentionBilling, ContentionSample, CostModel, NumaCost, RuntimeDispatch, SparseContention,
     UpdateBilling,
 };
 pub use engine::{
@@ -135,7 +135,10 @@ pub fn sim_asysvrg_epoch(
         opts,
     );
     *w = u;
-    (epoch_phase_ns + epoch_setup_ns + r.elapsed_ns, r)
+    // the sharded hot-head layer folds every socket's replica at the epoch
+    // barrier — serial O(sockets · cut) on top of the phase costs
+    let merge_ns = opts.numa.map_or(0.0, |nc| nc.merge_ns(costs));
+    (epoch_phase_ns + epoch_setup_ns + merge_ns + r.elapsed_ns, r)
 }
 
 fn sim_asysvrg(obj: &Objective, cfg: &RunConfig, costs: &CostModel, fstar: f64) -> RunResult {

@@ -1,0 +1,216 @@
+//! Integration: the NUMA hot-head replica layer (S25, DESIGN.md §13)
+//! through the public crate surface — the parity contract a `--numa 1×c`
+//! run must honor, the merge protocol's edge cases (cut = 0, cut = d,
+//! idle sockets, merge after a worker panic), and a randomized sweep of
+//! the whole option space.
+
+use asysvrg::config::{RunConfig, Scheme, Storage};
+use asysvrg::coordinator::asysvrg::{run_asysvrg, SvrgOption};
+use asysvrg::coordinator::hotshard::FaultSpec;
+use asysvrg::coordinator::{run_numa, NumaOptions};
+use asysvrg::data::synthetic::SyntheticSpec;
+use asysvrg::objective::{LossKind, Objective};
+use asysvrg::propcheck::forall_res;
+use asysvrg::runtime::Topology;
+use std::sync::Arc;
+
+fn obj() -> Objective {
+    let ds = SyntheticSpec::new("numa-int", 200, 128, 8, 5).generate();
+    Objective::new(Arc::new(ds), 1e-2, LossKind::Logistic)
+}
+
+fn cfg(threads: usize, scheme: Scheme, storage: Storage) -> RunConfig {
+    RunConfig {
+        threads,
+        scheme,
+        storage,
+        eta: 0.1,
+        epochs: 3,
+        seed: 99,
+        target_gap: 0.0,
+        ..Default::default()
+    }
+}
+
+/// The `--numa "1xC"` CLI path at p = 1 must be byte-for-byte the plain
+/// driver across the full {dense, sparse} × {Option 1, Option 2} grid:
+/// one socket never shards, and the delegation must be verbatim.
+#[test]
+fn numa_1xc_parity_grid() {
+    let obj = obj();
+    for storage in [Storage::Dense, Storage::Sparse] {
+        for option in [SvrgOption::CurrentIterate, SvrgOption::Average] {
+            let c = cfg(1, Scheme::Unlock, storage);
+            let want = run_asysvrg(&obj, &c, option, f64::NEG_INFINITY);
+            let o = NumaOptions::new(Topology::parse("1x4").unwrap());
+            let got = run_numa(&obj, &c, option, f64::NEG_INFINITY, &o);
+            assert!(!got.sharded, "{storage:?}/{option:?}: one socket must not shard");
+            assert_eq!(got.replica_tau, 0);
+            assert_eq!(
+                got.run.final_w, want.final_w,
+                "{storage:?}/{option:?}: --numa 1x4 diverged from the plain driver"
+            );
+            assert_eq!(got.run.total_updates, want.total_updates);
+        }
+    }
+}
+
+/// cut = Some(0) forces fully-cold: delegates even across sockets, and the
+/// trajectory at p = 1 still matches the plain driver exactly.
+#[test]
+fn explicit_zero_cut_is_the_unsharded_driver() {
+    let obj = obj();
+    let c = cfg(1, Scheme::Unlock, Storage::Sparse);
+    let want = run_asysvrg(&obj, &c, SvrgOption::CurrentIterate, f64::NEG_INFINITY);
+    let mut o = NumaOptions::new(Topology::synthetic(2, 2));
+    o.cut = Some(0);
+    o.force_shard = true; // even forced: cut = 0 means there is nothing to replicate
+    let got = run_numa(&obj, &c, SvrgOption::CurrentIterate, f64::NEG_INFINITY, &o);
+    assert!(!got.sharded);
+    assert_eq!(got.cut, 0);
+    assert_eq!(got.run.final_w, want.final_w);
+}
+
+/// cut = Some(d) forces fully-hot: the tail is empty, every coordinate
+/// lives in a replica, and the merge must still reconstruct a trajectory
+/// that trains. At p = 1 it must stay bit-identical to unsharded (the
+/// one-replica merge is a bitwise copy over the whole vector).
+#[test]
+fn full_dimension_cut_merges_whole_vector() {
+    let obj = obj();
+    let d = obj.dim();
+    // p = 1, forced: bitwise parity even when EVERYTHING is replicated
+    let c1 = cfg(1, Scheme::Unlock, Storage::Sparse);
+    let want = run_asysvrg(&obj, &c1, SvrgOption::CurrentIterate, f64::NEG_INFINITY);
+    let mut o1 = NumaOptions::new(Topology::single_socket(4));
+    o1.cut = Some(d);
+    o1.force_shard = true;
+    let got1 = run_numa(&obj, &c1, SvrgOption::CurrentIterate, f64::NEG_INFINITY, &o1);
+    assert!(got1.sharded);
+    assert_eq!(got1.cut, d);
+    assert_eq!(got1.run.final_w, want.final_w, "fully-hot p=1 must be bit-identical");
+
+    // p = 4 across 2 sockets: trains and accounts staleness additively
+    let w0 = vec![0.0f32; d];
+    let f0 = obj.loss(&w0);
+    let c4 = cfg(4, Scheme::Unlock, Storage::Sparse);
+    let mut o4 = NumaOptions::new(Topology::synthetic(2, 2));
+    o4.cut = Some(d);
+    let got4 = run_numa(&obj, &c4, SvrgOption::CurrentIterate, f64::NEG_INFINITY, &o4);
+    assert!(got4.sharded);
+    assert!(got4.run.final_loss() < f0, "fully-hot multi-socket run must train");
+    assert_eq!(got4.effective_tau, got4.run.max_delay + got4.replica_tau);
+}
+
+/// Sockets with no workers host no replicas: a 4×1 topology with p = 2
+/// fills sockets {0, 1} and leaves {2, 3} idle — the merge must fold
+/// exactly the two live replicas, not four.
+#[test]
+fn idle_sockets_host_no_replicas() {
+    let obj = obj();
+    let w0 = vec![0.0f32; obj.dim()];
+    let f0 = obj.loss(&w0);
+    let c = cfg(2, Scheme::Unlock, Storage::Sparse);
+    let o = NumaOptions::new(Topology::synthetic(4, 1));
+    let got = run_numa(&obj, &c, SvrgOption::CurrentIterate, f64::NEG_INFINITY, &o);
+    assert!(got.sharded, "two live sockets must shard");
+    assert_eq!(got.sockets_used, 2, "contiguous fill of 4x1 at p=2 uses 2 sockets");
+    assert!(got.run.final_loss() < f0);
+}
+
+/// Merge-after-panic resilience: a worker dies mid-epoch, the partial
+/// epoch merges, and training continues to completion with the panic
+/// counted — the replica layer must never wedge the pool or corrupt the
+/// clock accounting.
+#[test]
+fn merge_after_worker_panic_continues_training() {
+    let obj = obj();
+    let w0 = vec![0.0f32; obj.dim()];
+    let f0 = obj.loss(&w0);
+    let c = cfg(4, Scheme::Unlock, Storage::Sparse);
+    let mut o = NumaOptions::new(Topology::synthetic(2, 2));
+    o.continue_after_panic = true;
+    o.fault = Some(FaultSpec { epoch: 1, worker: 1, after_updates: 5 });
+    let got = run_numa(&obj, &c, SvrgOption::CurrentIterate, f64::NEG_INFINITY, &o);
+    assert_eq!(got.recovered_panics, 1, "the injected fault must be recovered, once");
+    assert_eq!(got.run.epochs_run, c.epochs, "training must run past the faulted epoch");
+    assert!(got.run.final_loss().is_finite());
+    assert!(got.run.final_loss() < f0, "losing one worker for one epoch must not stop training");
+    // the faulted epoch produced fewer updates, never more
+    assert!(got.run.total_updates > 0);
+
+    // without the option the same fault propagates
+    let mut strict = NumaOptions::new(Topology::synthetic(2, 2));
+    strict.fault = Some(FaultSpec { epoch: 1, worker: 1, after_updates: 5 });
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_numa(&obj, &c, SvrgOption::CurrentIterate, f64::NEG_INFINITY, &strict)
+    }));
+    assert!(r.is_err(), "without continue_after_panic the fault must propagate");
+}
+
+/// Randomized sweep over the option space: any (threads, scheme, option,
+/// topology, cut) combination must complete with a consistent staleness
+/// account, and every p = 1 forced-shard draw must be bit-identical to
+/// the unsharded driver.
+#[test]
+fn propcheck_option_space_sweep() {
+    let obj = obj();
+    let d = obj.dim();
+    forall_res("numa option space", 12, |g| {
+        let threads = g.usize_in(1..5);
+        let scheme = *g.choose(&[Scheme::Unlock, Scheme::AtomicCas]);
+        let option = *g.choose(&[SvrgOption::CurrentIterate, SvrgOption::Average]);
+        let sockets = g.usize_in(1..4);
+        let cores = g.usize_in(1..4);
+        let cut = if g.bool() { None } else { Some(g.usize_in(0..d + 1)) };
+        let mut c = cfg(threads, scheme, Storage::Sparse);
+        c.epochs = 2;
+        let mut o = NumaOptions::new(Topology::synthetic(sockets, cores));
+        o.cut = cut;
+        o.force_shard = g.bool();
+        let got = run_numa(&obj, &c, option, f64::NEG_INFINITY, &o);
+        if !got.run.final_loss().is_finite() {
+            return Err(format!("non-finite loss: {got:?}"));
+        }
+        if got.effective_tau != got.run.max_delay + got.replica_tau {
+            return Err(format!(
+                "tau account not additive: {} != {} + {}",
+                got.effective_tau, got.run.max_delay, got.replica_tau
+            ));
+        }
+        if !got.sharded && got.replica_tau != 0 {
+            return Err("unsharded run reported replica lag".into());
+        }
+        if threads == 1 && got.sharded {
+            let want = run_asysvrg(&obj, &c, option, f64::NEG_INFINITY);
+            if got.run.final_w != want.final_w {
+                return Err(format!(
+                    "p=1 sharded (cut {:?}) diverged from unsharded",
+                    got.cut
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The staleness certificate fails loudly: an η far beyond 1/(2L) has no
+/// Theorem-1 budget at any τ, and `enforce_feasibility` must panic rather
+/// than train on a certificate that does not exist.
+#[test]
+fn infeasible_staleness_fails_loudly() {
+    let obj = obj();
+    let mut c = cfg(4, Scheme::Unlock, Storage::Sparse);
+    c.eta = 3.9;
+    c.epochs = 1;
+    let mut o = NumaOptions::new(Topology::synthetic(2, 2));
+    o.enforce_feasibility = true;
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_numa(&obj, &c, SvrgOption::CurrentIterate, f64::NEG_INFINITY, &o)
+    }));
+    assert!(r.is_err());
+    // without enforce the same run completes and reports the infeasibility
+    o.enforce_feasibility = false;
+    let got = run_numa(&obj, &c, SvrgOption::CurrentIterate, f64::NEG_INFINITY, &o);
+    assert!(!got.tau_feasible, "tau_feasible must report the broken certificate");
+}
